@@ -1,0 +1,93 @@
+//! Quickstart: the three-layer pipeline in one file.
+//!
+//! 1. Load the Pallas-lowered artifact (`quickstart_pallas.hlo.txt` — the
+//!    L1 crossbar kernel, lowered in interpret mode through the L2 vggmini
+//!    graph) and execute it through PJRT from rust: proves the
+//!    python-authors/rust-runs contract end to end.
+//! 2. Load a trained experiment artifact and reproduce the paper's core
+//!    claim on it: variation destroys accuracy; HybridAC's channel-wise
+//!    protection restores it at a fraction of the weights.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::report::pct;
+use hybridac::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use hybridac::tensor::Tensor;
+use hybridac::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let dir = hybridac::artifacts_dir();
+
+    // --- 1. execute the Pallas-kernel artifact ---------------------------
+    let pallas = dir.join("quickstart_pallas.hlo.txt");
+    let mut engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    if pallas.exists() {
+        // the quickstart graph follows the same contract as every model
+        // graph: [x, then wa1/wa2/wd/b/lsb/clip per layer]; feed random
+        // weights — this is a wiring check, not an accuracy run.
+        let art = Artifact::load(&dir, "vggmini_c10s")?;
+        let mut rng = Rng::new(1);
+        let mut inputs: Vec<Tensor> = Vec::new();
+        let mut x = Tensor::zeros(vec![8, 16, 16, 3]);
+        rng.fill_normal(&mut x.data);
+        inputs.push(x);
+        for li in 0..art.layers.len() {
+            let l = &art.layers[li];
+            let mut w = Tensor::zeros(vec![l.rows(), l.cout]);
+            rng.fill_normal(&mut w.data);
+            for v in w.data.iter_mut() {
+                *v *= 0.05;
+            }
+            inputs.push(w.clone()); // wa1
+            inputs.push(Tensor::zeros(vec![l.rows(), l.cout])); // wa2
+            inputs.push(Tensor::zeros(vec![l.rows(), l.cout])); // wd
+            inputs.push(Tensor::zeros(vec![l.cout])); // b
+            inputs.push(Tensor::scalar(0.01)); // lsb: exercise the ADC path
+            inputs.push(Tensor::scalar(50.0)); // clip
+        }
+        let exe = engine.load(&pallas)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Engine::literal_of)
+            .collect::<Result<_>>()?;
+        let logits = Engine::run_literals(exe, &lits)?;
+        println!(
+            "pallas artifact executed: {} logits, first row {:?}",
+            logits.len(),
+            &logits[..4.min(logits.len())]
+        );
+    } else {
+        println!("(quickstart_pallas.hlo.txt not built yet — run `make artifacts`)");
+    }
+    drop(engine);
+
+    // --- 2. the paper's core claim on a trained artifact ------------------
+    let tag = "resnet18m_c10s";
+    let mut ev = Evaluator::new(&dir, tag)?;
+    let clean = ev.clean_accuracy(500)?;
+    let noisy = ev.accuracy(&ExperimentConfig::paper_default(Method::NoProtection))?;
+    let protected =
+        ev.accuracy(&ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 }))?;
+    println!("\n{tag} under conductance variation (sigma = 50%):");
+    println!("  clean accuracy:            {}", pct(clean));
+    println!("  no protection:             {}", pct(noisy.mean));
+    println!("  HybridAC (16% protected):  {}", pct(protected.mean));
+
+    // --- 3. a single batched inference through the executor ---------------
+    let art = Artifact::load(&dir, tag)?;
+    let data = DatasetBlob::load(&dir, &art.dataset)?;
+    let mut engine = Engine::cpu()?;
+    let mut exec = ModelExecutor::new(&mut engine, &art, &data, 250, art.group)?;
+    let mut rng = Rng::new(42);
+    let model = hybridac::eval::prepare(
+        &art,
+        &ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 }),
+        &mut rng,
+    );
+    let acc = exec.accuracy(&model)?;
+    println!("  one prepared instance:     {}", pct(acc));
+    Ok(())
+}

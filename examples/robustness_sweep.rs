@@ -1,0 +1,55 @@
+//! Robustness sweep: Algorithm 1 in action on one model.
+//!
+//! Sweeps the protected-weight fraction for both selection methods, prints
+//! the recovery curves, then runs the paper's pop-until-accuracy loop to
+//! find each method's crossing point.
+//!
+//! Run: `cargo run --release --example robustness_sweep [tag]`
+
+use anyhow::Result;
+use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::report;
+
+fn main() -> Result<()> {
+    let tag = std::env::args().nth(1).unwrap_or_else(|| "resnet18m_c10s".into());
+    let dir = hybridac::artifacts_dir();
+    let mut ev = Evaluator::new(&dir, &tag)?;
+
+    let clean = ev.clean_accuracy(500)?;
+    println!("{tag}: clean accuracy {}", report::pct(clean));
+
+    let points = [0.0, 0.02, 0.04, 0.08, 0.12, 0.16, 0.20, 0.25];
+    let mut hyb = Vec::new();
+    let mut iws = Vec::new();
+    for &p in &points {
+        hyb.push(100.0 * ev.accuracy(&ExperimentConfig::paper_default(
+            Method::Hybrid { frac: p }))?.mean);
+        iws.push(100.0 * ev.accuracy(&ExperimentConfig::paper_default(
+            Method::Iws { frac: p }))?.mean);
+    }
+    let xs: Vec<f64> = points.iter().map(|p| p * 100.0).collect();
+    print!(
+        "{}",
+        report::series_plot(
+            &format!("{tag}: recovery curves (sigma 50%/10%)"),
+            "%protected",
+            &xs,
+            &[("HybridAC", hyb), ("IWS", iws)]
+        )
+    );
+
+    // Algorithm 1's outer loop for both methods
+    let base = ExperimentConfig::paper_default(Method::NoProtection);
+    for (name, mk) in [
+        ("HybridAC", Box::new(|f| Method::Hybrid { frac: f }) as Box<dyn Fn(f64) -> Method>),
+        ("IWS", Box::new(|f| Method::Iws { frac: f })),
+    ] {
+        let (frac, acc) = ev.find_protection(&base, mk, clean - 0.02, 0.40)?;
+        println!(
+            "{name}: reaches {} at {:.0}% protected (target: clean - 2%)",
+            report::pct(acc.mean),
+            100.0 * frac
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Serving demo: the L3 coordinator as a batched-inference server.
+//!
+//! Spawns the batch server (worker thread owns the PJRT engine and one
+//! noisy HybridAC-protected model instance), then drives it from several
+//! client threads at a fixed request rate and reports throughput, latency
+//! percentiles and batch occupancy.
+//!
+//! Run: `cargo run --release --example serve [tag] [n_requests]`
+
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+use hybridac::coordinator::BatchServer;
+use hybridac::eval::{ExperimentConfig, Method};
+use hybridac::runtime::{Artifact, DatasetBlob};
+
+fn main() -> Result<()> {
+    let tag = std::env::args().nth(1).unwrap_or_else(|| "resnet18m_c10s".into());
+    let n_requests: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let dir = hybridac::artifacts_dir();
+    let data = {
+        let art = Artifact::load(&dir, &tag)?;
+        DatasetBlob::load(&dir, &art.dataset)?
+    };
+    let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
+    let server = BatchServer::start(dir, tag.clone(), cfg, Duration::from_millis(15))?;
+    println!("serving {tag} with HybridAC@16% protection, batch window 15 ms");
+
+    let per = data.image_elems();
+    let n_clients = 4;
+    let t0 = Instant::now();
+    let images = std::sync::Arc::new(data);
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let handle_data = images.clone();
+        let srv = server.handle();
+        clients.push(std::thread::spawn(move || -> (usize, usize) {
+            let mut hits = 0;
+            let mut total = 0;
+            for i in (c..n_requests).step_by(n_clients) {
+                let idx = i % handle_data.n;
+                let (tx, rx) = std::sync::mpsc::channel();
+                let _ = srv.send(hybridac::coordinator::InferenceRequest {
+                    image: handle_data.images[idx * per..(idx + 1) * per].to_vec(),
+                    reply: tx,
+                    enqueued: Instant::now(),
+                });
+                if let Ok(pred) = rx.recv() {
+                    hits += (pred == handle_data.labels[idx]) as usize;
+                    total += 1;
+                }
+            }
+            (hits, total)
+        }));
+    }
+    let (mut hits, mut total) = (0, 0);
+    for c in clients {
+        let (h, t) = c.join().expect("client panicked");
+        hits += h;
+        total += t;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{total} requests from {n_clients} clients in {dt:.2}s = {:.0} req/s",
+        total as f64 / dt
+    );
+    println!(
+        "accuracy {:.2}%  |  latency mean {:.1} ms  p99 {:.1} ms  |  mean batch {:.0}",
+        100.0 * hits as f64 / total.max(1) as f64,
+        server.metrics.mean_latency_ms(),
+        server.metrics.latency_percentile_ms(0.99),
+        server.metrics.mean_batch_occupancy()
+    );
+    server.shutdown()
+}

@@ -1,0 +1,1 @@
+"""HybridAC compile-time (build-path) python package."""

@@ -1,0 +1,236 @@
+"""AOT build: train -> calibrate -> Hessian ranking -> export artifacts.
+
+Run as `python -m compile.aot --out-dir ../artifacts` (the Makefile does).
+Python ends here: everything under artifacts/ is consumed by the rust
+coordinator at run time; no python on the request path.
+
+Artifacts per (family, dataset) combo:
+    {tag}.hlo.txt      inference graph (model.py contract), batch=BATCH
+    {tag}.weights.bin  f32 blob: per layer [rows*cout] matrix then [cout] bias
+    {tag}.sens.bin     f32 blob: per-weight eq.-1 scores, matrix layout
+                       (no bias entries) -- the IWS baseline ranking signal
+    {tag}.meta.json    layers, offsets, act ranges, psum anchors, channel
+                       ranking, accuracies, Fig.-3 stats
+plus per dataset:
+    {ds}.data.bin      test set: f32 images then i32 labels
+and the Fig.-11 wordline variants + the Pallas-lowered quickstart artifact.
+
+Everything is cached: a combo is skipped when its meta.json already matches
+SCHEMA_VERSION, so `make artifacts` is a no-op on a built tree.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from .datasets import make_dataset
+from .layers import CalibExec, LayerMeta, init_params
+from .model import arg_names, arg_shapes, export_fn, lower_to_hlo_text
+from .models import build, forward
+from .kernels.im2col import weight_to_matrix_np
+from .selection import (iws_threshold_stats, rank_channels, selection_stats,
+                        protected_fraction_for_channels)
+from .sensitivity import model_sensitivities
+from .train import train_model
+
+SCHEMA_VERSION = 3
+BATCH = 250          # eval batch baked into the exported graphs
+GROUP = 128          # wordlines activated simultaneously (paper: up to 128)
+
+COMBOS = [
+    ("vggmini", "c10s"), ("resnet18m", "c10s"), ("resnet34m", "c10s"),
+    ("densenetm", "c10s"), ("effnetm", "c10s"),
+    ("vggmini", "c100s"), ("resnet18m", "c100s"), ("resnet34m", "c100s"),
+    ("densenetm", "c100s"), ("effnetm", "c100s"),
+    ("resnet18m", "in50s"), ("resnet34m", "in50s"), ("densenetm", "in50s"),
+]
+FIG11_GROUPS = (16, 32, 64)  # extra wordline variants for resnet18m/c10s
+
+EPOCHS = {"c10s": 18, "c100s": 24, "in50s": 22}
+FAST = os.environ.get("HYBRIDAC_FAST", "") == "1"
+
+
+def tag_of(family: str, ds: str) -> str:
+    return f"{family}_{ds}"
+
+
+def write_dataset_blob(out: pathlib.Path, ds) -> None:
+    path = out / f"{ds.spec.name}.data.bin"
+    if path.exists():
+        return
+    with open(path, "wb") as f:
+        f.write(ds.x_test.astype("<f4").tobytes())
+        f.write(ds.y_test.astype("<i4").tobytes())
+    meta = {
+        "n": int(len(ds.x_test)),
+        "shape": list(ds.spec.input_shape),
+        "num_classes": ds.spec.num_classes,
+    }
+    (out / f"{ds.spec.name}.data.json").write_text(json.dumps(meta))
+
+
+def weight_blob(layers: list[LayerMeta], params) -> tuple[bytes, list[dict]]:
+    """Serialize weights in the matrix layout + record per-layer offsets."""
+    chunks, index, off = [], [], 0
+    for lm in layers:
+        w = np.asarray(params[lm.name + "/w"], dtype=np.float32)
+        if lm.kind == "conv":
+            w = weight_to_matrix_np(w)
+        b = np.asarray(params[lm.name + "/b"], dtype=np.float32)
+        entry = lm.to_json()
+        entry["w_off"] = off
+        entry["w_len"] = int(w.size)
+        off += w.size
+        entry["b_off"] = int(off)
+        entry["b_len"] = int(b.size)
+        off += b.size
+        index.append(entry)
+        chunks += [np.ascontiguousarray(w).tobytes(), b.tobytes()]
+    return b"".join(chunks), index
+
+
+def sens_blob(layers: list[LayerMeta], per_weight) -> bytes:
+    """Per-weight sensitivities, matrix layout, in layer order (no biases)."""
+    chunks = []
+    for lm in layers:
+        s = per_weight[lm.name]
+        if lm.kind == "conv":
+            s = weight_to_matrix_np(s)
+        chunks.append(np.ascontiguousarray(s, dtype=np.float32).tobytes())
+    return b"".join(chunks)
+
+
+def build_combo(family: str, dsname: str, out: pathlib.Path, log=print) -> None:
+    tag = tag_of(family, dsname)
+    meta_path = out / f"{tag}.meta.json"
+    if meta_path.exists():
+        try:
+            if json.loads(meta_path.read_text())["schema"] == SCHEMA_VERSION:
+                log(f"[skip] {tag} (cached)")
+                return
+        except Exception:
+            pass
+    t0 = time.time()
+    log(f"[build] {tag}")
+    ds = make_dataset(dsname)
+    write_dataset_blob(out, ds)
+    spec = ds.spec
+
+    epochs = 6 if FAST else EPOCHS[dsname]
+    params, layers, tr_acc, te_acc = train_model(family, ds, epochs=epochs, log=log)
+
+    # ---- calibration: activation ranges + ADC full-scale anchors ----------
+    calib_x = jnp.asarray(ds.x_train[:256])
+    cal = CalibExec(params, group=GROUP)
+    forward(family, cal, calib_x, spec.num_classes)
+
+    # ---- Hessian sensitivity (eq. 1-2) ------------------------------------
+    hx = jnp.asarray(ds.x_train[:192])
+    hy = jnp.asarray(ds.y_train[:192])
+    n_pairs, iters = (2, 4) if FAST else (5, 10)
+    per_weight, per_channel = model_sensitivities(
+        params, layers, family, hx, hy, spec.num_classes,
+        n_pairs=n_pairs, iters=iters,
+        log=(lambda *_: None) if FAST else log)
+
+    ranked = rank_channels(layers, per_channel)
+
+    # ---- blobs -------------------------------------------------------------
+    wb, index = weight_blob(layers, params)
+    (out / f"{tag}.weights.bin").write_bytes(wb)
+    (out / f"{tag}.sens.bin").write_bytes(sens_blob(layers, per_weight))
+
+    # ---- HLO graphs --------------------------------------------------------
+    def lower(group: int, suffix: str = "") -> None:
+        fn = export_fn(family, spec.num_classes, layers, cal.act_ranges,
+                       group=group, use_pallas=False)
+        shapes = arg_shapes(layers, BATCH, spec.input_shape)
+        text = lower_to_hlo_text(fn, shapes)
+        (out / f"{tag}{suffix}.hlo.txt").write_text(text)
+        log(f"    wrote {tag}{suffix}.hlo.txt ({len(text)//1024} KiB)")
+
+    lower(GROUP)
+    if (family, dsname) == ("resnet18m", "c10s"):
+        for g in FIG11_GROUPS:
+            lower(g, f"_r{g}")
+
+    # ---- Fig. 3 selection-distribution stats -------------------------------
+    n16 = next((i for i in range(1, len(ranked))
+                if protected_fraction_for_channels(layers, ranked, i) >= 0.16),
+               len(ranked))
+    hyb_stats = selection_stats(layers, ranked, n16)
+    iws_stats = iws_threshold_stats(layers, per_weight, 0.16)
+
+    meta = {
+        "schema": SCHEMA_VERSION,
+        "family": family,
+        "dataset": dsname,
+        "num_classes": spec.num_classes,
+        "input_shape": list(spec.input_shape),
+        "batch": BATCH,
+        "group": GROUP,
+        "train_acc": tr_acc,
+        "test_acc": te_acc,
+        "act_bits": 8,
+        "layers": index,
+        "arg_names": arg_names(layers),
+        "act_ranges": {k: list(v) for k, v in cal.act_ranges.items()},
+        "psum_p999": cal.psum_p999,
+        "ranking": [[rc.layer, rc.channel, rc.score, rc.n_weights]
+                    for rc in ranked],
+        "fig3": {"hybridac": hyb_stats, "iws": iws_stats},
+        "total_weights": int(sum(lm.n_weights for lm in layers)),
+        "pinned_weights": int(sum(lm.n_weights for lm in layers
+                                  if lm.always_digital)),
+    }
+    meta_path.write_text(json.dumps(meta))
+    log(f"[done] {tag} in {time.time()-t0:.0f}s")
+
+
+def build_quickstart(out: pathlib.Path, log=print) -> None:
+    """Small artifact lowered through the REAL Pallas kernel (interpret=True):
+    proves the L1->L2->HLO->rust path end to end (examples/quickstart)."""
+    path = out / "quickstart_pallas.hlo.txt"
+    if path.exists():
+        return
+    ds = make_dataset("c10s")
+    spec = ds.spec
+    layers = build("vggmini", spec.input_shape, spec.num_classes)
+    params = init_params(layers, 0)  # ranges only need shape-plausible stats
+    cal = CalibExec(params, group=GROUP)
+    forward("vggmini", cal, jnp.asarray(ds.x_train[:64]), spec.num_classes)
+    fn = export_fn("vggmini", spec.num_classes, layers, cal.act_ranges,
+                   group=GROUP, use_pallas=True)
+    shapes = arg_shapes(layers, 8, spec.input_shape)
+    text = lower_to_hlo_text(fn, shapes)
+    path.write_text(text)
+    log(f"    wrote quickstart_pallas.hlo.txt ({len(text)//1024} KiB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma list of tags to build")
+    ap.add_argument("--skip-quickstart", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    only = {t for t in args.only.split(",") if t}
+    for family, dsname in COMBOS:
+        if only and tag_of(family, dsname) not in only:
+            continue
+        build_combo(family, dsname, out)
+    if not args.skip_quickstart:
+        build_quickstart(out)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Synthetic image-classification datasets standing in for CIFAR10/100/ImageNet.
+
+The paper's algorithm (Hessian-driven channel selection, hybrid quantization,
+noisy inference) only needs *trained weights on a real classification task*.
+We have no dataset access in this environment, so we generate deterministic
+class-prototype datasets that are hard enough that a trained CNN separates
+classes well above chance while untrained / heavily-perturbed ones do not —
+which is exactly the regime the paper's accuracy-degradation experiments probe.
+
+Each class c gets:
+  * a smooth random "texture" prototype (low-frequency Gaussian field),
+  * a class-specific spatial frequency pattern (so convolutions matter),
+  * per-sample additive noise + random brightness/contrast jitter.
+
+Dataset registry mirrors the paper's three datasets:
+  c10s  ≙ CIFAR10   : 10 classes, 16x16x3
+  c100s ≙ CIFAR100  : 100 classes, 16x16x3
+  in50s ≙ ImageNet  : 50 classes, 24x24x3 (larger, more classes per sample budget)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["DatasetSpec", "SPECS", "make_dataset", "Dataset"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    num_classes: int
+    image_hw: int
+    channels: int
+    train_per_class: int
+    test_per_class: int
+    noise_std: float
+    seed: int
+
+    @property
+    def input_shape(self):
+        return (self.image_hw, self.image_hw, self.channels)
+
+
+SPECS = {
+    "c10s": DatasetSpec("c10s", 10, 16, 3, 400, 100, 2.8, 101),
+    "c100s": DatasetSpec("c100s", 100, 16, 3, 60, 10, 2.0, 202),
+    "in50s": DatasetSpec("in50s", 50, 24, 3, 90, 20, 2.4, 303),
+}
+
+
+@dataclasses.dataclass
+class Dataset:
+    spec: DatasetSpec
+    x_train: np.ndarray  # [N, H, W, C] float32 in ~[-1, 1]
+    y_train: np.ndarray  # [N] int32
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+
+def _smooth_field(rng: np.random.Generator, hw: int, c: int) -> np.ndarray:
+    """Low-frequency random field: upsampled coarse Gaussian grid."""
+    coarse = rng.normal(size=(4, 4, c)).astype(np.float32)
+    # bilinear upsample 4x4 -> hw x hw
+    idx = np.linspace(0, 3, hw)
+    i0 = np.floor(idx).astype(int)
+    i1 = np.minimum(i0 + 1, 3)
+    f = (idx - i0).astype(np.float32)
+    rows = (coarse[i0] * (1 - f)[:, None, None] + coarse[i1] * f[:, None, None])
+    cols = (rows[:, i0] * (1 - f)[None, :, None] + rows[:, i1] * f[None, :, None])
+    return cols
+
+
+def _freq_pattern(rng: np.random.Generator, hw: int, c: int) -> np.ndarray:
+    """Class-specific oriented sinusoid grating (forces conv features)."""
+    yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float32) / hw
+    out = np.zeros((hw, hw, c), dtype=np.float32)
+    for ch in range(c):
+        fx, fy = rng.uniform(1.0, 4.0, size=2)
+        phase = rng.uniform(0, 2 * np.pi)
+        out[:, :, ch] = np.sin(2 * np.pi * (fx * xx + fy * yy) + phase)
+    return out
+
+
+def _make_split(spec: DatasetSpec, protos: np.ndarray, per_class: int,
+                rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    n = spec.num_classes * per_class
+    hw, c = spec.image_hw, spec.channels
+    x = np.empty((n, hw, hw, c), dtype=np.float32)
+    y = np.empty((n,), dtype=np.int32)
+    i = 0
+    for cls in range(spec.num_classes):
+        base = protos[cls]
+        for _ in range(per_class):
+            img = base + rng.normal(scale=spec.noise_std, size=base.shape)
+            # brightness / contrast jitter
+            img = img * rng.uniform(0.85, 1.15) + rng.uniform(-0.1, 0.1)
+            # small circular shift = translation invariance pressure
+            img = np.roll(img, rng.integers(-2, 3, size=2), axis=(0, 1))
+            x[i] = img
+            y[i] = cls
+            i += 1
+    perm = rng.permutation(n)
+    return np.clip(x[perm], -3.0, 3.0), y[perm]
+
+
+def make_dataset(name: str) -> Dataset:
+    spec = SPECS[name]
+    rng = np.random.default_rng(spec.seed)
+    hw, c = spec.image_hw, spec.channels
+    protos = np.stack(
+        [0.9 * _smooth_field(rng, hw, c) + 0.6 * _freq_pattern(rng, hw, c)
+         for _ in range(spec.num_classes)]
+    ).astype(np.float32)
+    x_tr, y_tr = _make_split(spec, protos, spec.train_per_class, rng)
+    x_te, y_te = _make_split(spec, protos, spec.test_per_class, rng)
+    return Dataset(spec, x_tr, y_tr, x_te, y_te)

@@ -1,0 +1,13 @@
+"""L1 kernels: the Pallas crossbar matmul and its oracles."""
+
+from .crossbar import crossbar_matmul_pallas, vmem_footprint_bytes
+from .ref import adc_quant, crossbar_matmul_numpy, crossbar_matmul_ref
+from .im2col import (conv_out_hw, im2col, im2col_np, weight_to_matrix,
+                     weight_to_matrix_np)
+
+__all__ = [
+    "crossbar_matmul_pallas", "vmem_footprint_bytes",
+    "adc_quant", "crossbar_matmul_numpy", "crossbar_matmul_ref",
+    "conv_out_hw", "im2col", "im2col_np",
+    "weight_to_matrix", "weight_to_matrix_np",
+]

@@ -1,0 +1,100 @@
+"""L1 — the Pallas crossbar kernel (the paper's analog compute hot-spot).
+
+`crossbar_matmul_pallas(x, w, lsb, clip, group)` computes x[M,K] @ w[K,N]
+exactly as a ReRAM crossbar bank would:
+
+  * the contraction dimension K is tiled into *wordline groups* of `group`
+    rows — one group ≙ the simultaneously-activated wordlines of one
+    crossbar (the paper activates up to 128, §5.2);
+  * each (group × bit-line tile) partial sum is read out through an ADC,
+    modeled as a uniform mid-rise quantizer with runtime step `lsb`,
+    saturating at ±`clip` (HybridAC's low-resolution ADCs; lsb<=0 = ideal);
+  * groups accumulate into the output tile — the shift-and-add path.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is
+(M/bm, N/bn, K/group); BlockSpec streams one (bm×group) activation tile and
+one (group×bn) weight tile HBM→VMEM per step — the same double-buffered
+schedule a crossbar pipeline has between its eDRAM buffer and DAC inputs.
+The per-group dot hits the MXU; bm=bn=128 keeps operand tiles MXU-shaped.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so real-TPU lowering is treated as compile-only.  Correctness
+is pinned against `ref.crossbar_matmul_ref` / `crossbar_matmul_numpy` in
+`python/tests/test_kernel.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import pad_k
+
+__all__ = ["crossbar_matmul_pallas"]
+
+
+def _kernel(x_ref, w_ref, lsb_ref, clip_ref, o_ref, *, n_groups: int):
+    """One grid step: ADC-quantized partial sum of one wordline group."""
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped dot: (bm, group) x (group, bn) in f32.
+    p = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    lsb = lsb_ref[0, 0]
+    clip = clip_ref[0, 0]
+    safe = jnp.where(lsb > 0, lsb, 1.0)
+    q = jnp.clip(jnp.round(p / safe) * safe, -clip, clip)
+    o_ref[...] += jnp.where(lsb > 0, q, p)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "bm", "bn"))
+def crossbar_matmul_pallas(x, w, lsb, clip, group: int = 128,
+                           bm: int = 128, bn: int = 128):
+    """x[M,K] @ w[K,N] through the crossbar model. lsb/clip: runtime scalars."""
+    x, w = pad_k(x, w, group)
+    m, k = x.shape
+    n = w.shape[1]
+    bm = min(bm, m)
+    bn = min(bn, n)
+    # pad M/N up to the tile grid; sliced off at the end
+    mp = (-m) % bm
+    np_ = (-n) % bn
+    if mp:
+        x = jnp.pad(x, ((0, mp), (0, 0)))
+    if np_:
+        w = jnp.pad(w, ((0, 0), (0, np_)))
+    mm, nn = x.shape[0], w.shape[1]
+    n_groups = k // group
+
+    lsb_arr = jnp.full((1, 1), lsb, dtype=jnp.float32)
+    clip_arr = jnp.full((1, 1), clip, dtype=jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_groups=n_groups),
+        grid=(mm // bm, nn // bn, n_groups),
+        in_specs=[
+            pl.BlockSpec((bm, group), lambda i, j, g: (i, g)),
+            pl.BlockSpec((group, bn), lambda i, j, g: (g, j)),
+            pl.BlockSpec((1, 1), lambda i, j, g: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, g: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.float32), w.astype(jnp.float32), lsb_arr, clip_arr)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(group: int = 128, bm: int = 128, bn: int = 128) -> int:
+    """Static VMEM estimate per grid step (DESIGN.md §Perf / EXPERIMENTS §Perf).
+
+    Operand tiles + output accumulator + scalars, all f32.
+    """
+    return 4 * (bm * group + group * bn + bm * bn + 2)

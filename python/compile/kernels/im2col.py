@@ -1,0 +1,67 @@
+"""im2col patch extraction — how convolutions map onto crossbars.
+
+A conv layer [R,R,C,K] on the crossbar is a matmul: each output pixel's
+receptive field is flattened to a row of length R*R*C (= the wordlines) and
+the K kernels are the bit-line columns.  Input channels map to *contiguous
+row blocks*, which is exactly why HybridAC's channel-wise selection removes
+whole crossbar rows uniformly (paper §3.1).
+
+We order the flattened patch as (C, R, R) — channel-major — so that one
+input channel occupies R*R consecutive rows; the channel→rows bookkeeping
+on the rust side (`mapping::rows_of_channel`) relies on this layout.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["im2col", "im2col_np", "conv_out_hw"]
+
+
+def conv_out_hw(h: int, w: int, r: int, stride: int, pad: int) -> tuple[int, int]:
+    return ((h + 2 * pad - r) // stride + 1,
+            (w + 2 * pad - r) // stride + 1)
+
+
+def im2col(x, r: int, stride: int = 1, pad: int = 0):
+    """x[B,H,W,C] -> patches [B*OH*OW, C*R*R], channel-major columns."""
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh, ow = conv_out_hw(h, w, r, stride, pad)
+    # gather r*r shifted views; cheap under XLA (fused slices)
+    rows = []
+    for di in range(r):
+        for dj in range(r):
+            v = x[:, di:di + stride * oh:stride, dj:dj + stride * ow:stride, :]
+            rows.append(v)  # [B, OH, OW, C]
+    # stack to [B, OH, OW, R*R, C] then reorder to channel-major (C, R*R)
+    p = jnp.stack(rows, axis=3)
+    p = jnp.transpose(p, (0, 1, 2, 4, 3))  # [B,OH,OW,C,R*R]
+    return p.reshape(b * oh * ow, c * r * r)
+
+
+def im2col_np(x: np.ndarray, r: int, stride: int = 1, pad: int = 0) -> np.ndarray:
+    """Numpy mirror of `im2col` for the oracle tests."""
+    b, h, w, c = x.shape
+    if pad:
+        x = np.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh, ow = conv_out_hw(h, w, r, stride, pad)
+    out = np.empty((b, oh, ow, c, r * r), dtype=x.dtype)
+    for di in range(r):
+        for dj in range(r):
+            v = x[:, di:di + stride * oh:stride, dj:dj + stride * ow:stride, :]
+            out[:, :, :, :, di * r + dj] = v
+    return out.reshape(b * oh * ow, c * r * r)
+
+
+def weight_to_matrix(w):
+    """Conv weight [R,R,C,K] -> crossbar matrix [C*R*R, K], channel-major rows."""
+    r1, r2, c, k = w.shape
+    return jnp.transpose(w, (2, 0, 1, 3)).reshape(c * r1 * r2, k)
+
+
+def weight_to_matrix_np(w: np.ndarray) -> np.ndarray:
+    r1, r2, c, k = w.shape
+    return np.transpose(w, (2, 0, 1, 3)).reshape(c * r1 * r2, k)

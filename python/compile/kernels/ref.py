@@ -1,0 +1,85 @@
+"""Pure-jnp / numpy oracles for the L1 crossbar kernel.
+
+These define the *semantics* that every other implementation must match:
+  * `crossbar_matmul_ref`   — jnp, vectorized (also the experiment-scale
+    lowering used inside the exported model graph),
+  * `crossbar_matmul_numpy` — numpy, loop-free but independent of jax,
+    used by hypothesis tests as a second opinion.
+
+Semantics (paper §3.1 + §5.2): y = x @ w computed per wordline-group of r
+rows; each group's bit-line partial sum is read out through an ADC modeled
+as a mid-rise uniform quantizer with step `lsb`, clipped to ±`clip`
+(lsb<=0 disables the ADC = ideal readout); groups are accumulated in f32
+(the shift-and-add path).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "adc_quant", "crossbar_matmul_ref", "crossbar_matmul_numpy",
+    "pad_k", "pad_k_np",
+]
+
+
+def pad_k_np(x: np.ndarray, w: np.ndarray, group: int):
+    k = x.shape[1]
+    rem = (-k) % group
+    if rem:
+        x = np.pad(x, ((0, 0), (0, rem)))
+        w = np.pad(w, ((0, rem), (0, 0)))
+    return x, w
+
+
+def pad_k(x, w, group: int):
+    """Pad the contraction dim so it divides the wordline-group size (jnp)."""
+    k = x.shape[-1]
+    rem = (-k) % group
+    if rem == 0:
+        return x, w
+    return (jnp.pad(x, ((0, 0), (0, rem))),
+            jnp.pad(w, ((0, rem), (0, 0))))
+
+
+def adc_quant(p, lsb, clip):
+    """ADC readout: uniform quantizer, step lsb, saturating at ±clip."""
+    q = jnp.round(p / lsb) * lsb
+    return jnp.clip(q, -clip, clip)
+
+
+def crossbar_matmul_ref(x, w, lsb, clip, group: int = 128):
+    """Vectorized reference: x[M,K] @ w[K,N] with per-group ADC quantization.
+
+    `lsb`/`clip` may be python floats or scalar jnp arrays (the exported graph
+    feeds them as runtime inputs).  lsb <= 0 selects the ideal (no-ADC) path —
+    when lsb is a traced scalar this becomes a jnp.where over both branches.
+    """
+    x, w = pad_k(x, w, group)
+    m, k = x.shape
+    n = w.shape[1]
+    g = k // group
+    xg = x.reshape(m, g, group)
+    wg = w.reshape(g, group, n)
+    # p[m, g, n]: one crossbar partial sum per wordline group
+    p = jnp.einsum("mgk,gkn->mgn", xg, wg, preferred_element_type=jnp.float32)
+    lsb = jnp.asarray(lsb, dtype=jnp.float32)
+    clip = jnp.asarray(clip, dtype=jnp.float32)
+    safe_lsb = jnp.where(lsb > 0, lsb, 1.0)
+    p = jnp.where(lsb > 0, adc_quant(p, safe_lsb, clip), p)
+    return jnp.sum(p, axis=1)
+
+
+def crossbar_matmul_numpy(x: np.ndarray, w: np.ndarray, lsb: float,
+                          clip: float, group: int = 128) -> np.ndarray:
+    """Numpy second-opinion oracle (no jax involved)."""
+    x, w = pad_k_np(x, w, group)
+    m, k = x.shape
+    n = w.shape[1]
+    g = k // group
+    p = np.einsum("mgk,gkn->mgn", x.reshape(m, g, group),
+                  w.reshape(g, group, n)).astype(np.float32)
+    if lsb > 0.0:
+        p = np.clip(np.round(p / lsb) * lsb, -clip, clip).astype(np.float32)
+    return p.sum(axis=1).astype(np.float32)

@@ -1,0 +1,253 @@
+"""Layer executors: one model topology, three interpretations.
+
+Each model family (models.py) writes its forward pass once against the
+`Executor` interface; the executor decides how a conv/dense is computed:
+
+  * `MetaExec`   — shape probe; records `LayerMeta` for every selectable
+    layer (convs + denses). Used at build time and by aot.py to lay out the
+    weight blob the rust side consumes.
+  * `TrainExec`  — plain float math (fast path for training/backprop).
+  * `CalibExec`  — plain float math + records per-layer activation ranges
+    and the 99.9-percentile wordline-group partial-sum magnitude (the ADC
+    full-scale anchor the rust side scales, DESIGN.md).
+  * `HybridExec` — the exported inference semantics (paper eqs. 5-8 +
+    §3.1): activations fake-quantized (shared 8-bit), analog path computed
+    as two crossbar matmuls (positive/differential slot minus the second
+    slot) with runtime ADC lsb/clip scalars, digital path as an exact
+    matmul, FP16 merge of partial results, bias add.
+
+The analog path has TWO weight operands (`wa1`, `wa2`, result wa1-path −
+wa2-path) so a single exported artifact serves both cell architectures:
+offset-subtraction designs pass wa2 = 0; differential designs pass the
+positive and negative conductance matrices separately so each crossbar's
+ADC sees only its own polarity (paper §5.2, HybACDi).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import fake_quant
+from .kernels.im2col import conv_out_hw, im2col, weight_to_matrix
+from .kernels.ref import crossbar_matmul_ref
+from .kernels.crossbar import crossbar_matmul_pallas
+
+ACT_BITS = 8  # shared activation quantization (paper §2.2)
+
+
+@dataclasses.dataclass
+class LayerMeta:
+    """One selectable (weight-bearing) layer."""
+    name: str
+    kind: str          # "conv" | "dense"
+    r: int             # kernel size (1 for dense)
+    stride: int
+    pad: int
+    cin: int           # input channels == selection units (paper's C)
+    cout: int
+    always_digital: bool = False  # first conv + classifier head (paper §3.2)
+
+    @property
+    def weight_shape(self) -> tuple:
+        if self.kind == "conv":
+            return (self.r, self.r, self.cin, self.cout)
+        return (self.cin, self.cout)
+
+    @property
+    def n_weights(self) -> int:
+        return int(np.prod(self.weight_shape))
+
+    @property
+    def rows(self) -> int:
+        """Crossbar rows = flattened reduction length (channel-major)."""
+        return self.cin * self.r * self.r if self.kind == "conv" else self.cin
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Executor:
+    """Interface the model forwards are written against."""
+
+    def conv(self, name, x, cout, r=3, stride=1, pad=1, act="relu",
+             always_digital=False):
+        raise NotImplementedError
+
+    def dense(self, name, x, cout, act=None, always_digital=False):
+        raise NotImplementedError
+
+    # shared structural ops -------------------------------------------------
+    def relu(self, x):
+        return jax.nn.relu(x)
+
+    def avg_pool(self, x, size=2):
+        b, h, w, c = x.shape
+        return x.reshape(b, h // size, size, w // size, size, c).mean(axis=(2, 4))
+
+    def max_pool(self, x, size=2):
+        b, h, w, c = x.shape
+        return x.reshape(b, h // size, size, w // size, size, c).max(axis=(2, 4))
+
+    def gap(self, x):
+        return x.mean(axis=(1, 2))
+
+    def _apply_act(self, y, act):
+        if act == "relu":
+            return jax.nn.relu(y)
+        if act == "sigmoid":
+            return jax.nn.sigmoid(y)
+        return y
+
+
+class MetaExec(Executor):
+    """Shape probe: records LayerMeta in forward order, computes with zeros."""
+
+    def __init__(self):
+        self.layers: list[LayerMeta] = []
+
+    def conv(self, name, x, cout, r=3, stride=1, pad=1, act="relu",
+             always_digital=False):
+        b, h, w, cin = x.shape
+        self.layers.append(LayerMeta(name, "conv", r, stride, pad, cin, cout,
+                                     always_digital))
+        oh, ow = conv_out_hw(h, w, r, stride, pad)
+        return jnp.zeros((b, oh, ow, cout), jnp.float32)
+
+    def dense(self, name, x, cout, act=None, always_digital=False):
+        cin = x.shape[-1]
+        self.layers.append(LayerMeta(name, "dense", 1, 1, 0, cin, cout,
+                                     always_digital))
+        return jnp.zeros((x.shape[0], cout), jnp.float32)
+
+
+class TrainExec(Executor):
+    """Plain float forward from a {name/w, name/b} param dict."""
+
+    def __init__(self, params):
+        self.params = params
+
+    def _wb(self, name):
+        return self.params[name + "/w"], self.params[name + "/b"]
+
+    def conv(self, name, x, cout, r=3, stride=1, pad=1, act="relu",
+             always_digital=False):
+        w, b = self._wb(name)
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(stride, stride),
+            padding=[(pad, pad), (pad, pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return self._apply_act(y + b, act)
+
+    def dense(self, name, x, cout, act=None, always_digital=False):
+        w, b = self._wb(name)
+        return self._apply_act(x @ w + b, act)
+
+
+class CalibExec(TrainExec):
+    """Float forward that records activation ranges + psum scale per layer."""
+
+    def __init__(self, params, group: int = 128):
+        super().__init__(params)
+        self.group = group
+        self.act_ranges: dict[str, tuple[float, float]] = {}
+        self.psum_p999: dict[str, float] = {}
+
+    def _calibrate(self, name, patches, wmat):
+        lo = float(jnp.percentile(patches, 0.05))
+        hi = float(jnp.percentile(patches, 99.95))
+        self.act_ranges[name] = (min(lo, 0.0), max(hi, 0.0))
+        # group partial sums on clean weights: the ADC full-scale anchor
+        k = patches.shape[1]
+        g = max(1, -(-k // self.group))
+        kp = g * self.group
+        xp = jnp.pad(patches, ((0, 0), (0, kp - k)))
+        wp = jnp.pad(wmat, ((0, kp - k), (0, 0)))
+        p = jnp.einsum("mgk,gkn->mgn",
+                       xp.reshape(-1, g, self.group),
+                       wp.reshape(g, self.group, -1))
+        self.psum_p999[name] = float(jnp.percentile(jnp.abs(p), 99.9))
+
+    def conv(self, name, x, cout, r=3, stride=1, pad=1, act="relu",
+             always_digital=False):
+        w, b = self._wb(name)
+        patches = im2col(x, r, stride, pad)
+        self._calibrate(name, patches, weight_to_matrix(w))
+        y = patches @ weight_to_matrix(w)
+        bsz, h, wd, _ = x.shape
+        oh, ow = conv_out_hw(h, wd, r, stride, pad)
+        y = y.reshape(bsz, oh, ow, cout) + b
+        return self._apply_act(y, act)
+
+    def dense(self, name, x, cout, act=None, always_digital=False):
+        w, b = self._wb(name)
+        self._calibrate(name, x, w)
+        return self._apply_act(x @ w + b, act)
+
+
+class HybridExec(Executor):
+    """Exported inference semantics.
+
+    `args` maps, per layer name: wa1, wa2, wd (weights in natural shape),
+    lsb, clip (f32 scalars), b (bias).  `act_ranges` are baked as constants
+    (calibrated at export).  `matmul` selects the analog implementation:
+    crossbar_matmul_ref (vectorized, experiment-scale) or
+    crossbar_matmul_pallas (the real L1 kernel, quickstart artifact).
+    """
+
+    def __init__(self, args: dict, act_ranges: dict, group: int = 128,
+                 use_pallas: bool = False, offset_only: bool = False):
+        self.args = args
+        self.act_ranges = act_ranges
+        self.group = group
+        self.offset_only = offset_only
+        self.matmul: Callable = (crossbar_matmul_pallas if use_pallas
+                                 else crossbar_matmul_ref)
+
+    def _hybrid_matmul(self, name, patches):
+        a = self.args
+        wa1, wd = a[name + "/wa1"], a[name + "/wd"]
+        lsb, clip = a[name + "/lsb"], a[name + "/clip"]
+        ya = self.matmul(patches, wa1, lsb, clip, self.group)
+        if not self.offset_only:
+            # differential cells: the negative-polarity crossbar has its own
+            # ADC readout and is subtracted digitally
+            ya = ya - self.matmul(patches, a[name + "/wa2"], lsb, clip, self.group)
+        yd = jnp.dot(patches, wd, preferred_element_type=jnp.float32)
+        # FP16 merge of analog/digital partial results (paper §2.2, [2])
+        y = (ya.astype(jnp.float16) + yd.astype(jnp.float16)).astype(jnp.float32)
+        return y
+
+    def conv(self, name, x, cout, r=3, stride=1, pad=1, act="relu",
+             always_digital=False):
+        lo, hi = self.act_ranges[name]
+        xq = fake_quant(x, lo, hi, ACT_BITS)
+        patches = im2col(xq, r, stride, pad)
+        y = self._hybrid_matmul(name, patches)
+        bsz, h, wd_, _ = x.shape
+        oh, ow = conv_out_hw(h, wd_, r, stride, pad)
+        y = y.reshape(bsz, oh, ow, cout) + self.args[name + "/b"]
+        return self._apply_act(y, act)
+
+    def dense(self, name, x, cout, act=None, always_digital=False):
+        lo, hi = self.act_ranges[name]
+        xq = fake_quant(x, lo, hi, ACT_BITS)
+        y = self._hybrid_matmul(name, xq) + self.args[name + "/b"]
+        return self._apply_act(y, act)
+
+
+def init_params(layers: list[LayerMeta], seed: int = 0) -> dict:
+    """He-init conv/dense weights + zero biases for a recorded layer list."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for lm in layers:
+        fan_in = lm.rows
+        std = float(np.sqrt(2.0 / fan_in))
+        params[lm.name + "/w"] = jnp.asarray(
+            rng.normal(scale=std, size=lm.weight_shape).astype(np.float32))
+        params[lm.name + "/b"] = jnp.zeros((lm.cout,), jnp.float32)
+    return params

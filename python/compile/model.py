@@ -1,0 +1,87 @@
+"""L2 — the exported inference graph (weights-as-inputs hybrid model).
+
+`export_fn(family, num_classes, layers, act_ranges, group, use_pallas)`
+returns a jax-jittable function whose *positional argument list* is the
+contract with the rust runtime (`rust/src/runtime/artifact.rs` builds the
+same order):
+
+    args = [x]  then per selectable layer, in LayerMeta order:
+        wa1   [rows, cout] f32   analog crossbar #1 (offset: the whole
+                                 analog copy; differential: positive part)
+        wa2   [rows, cout] f32   analog crossbar #2 (offset: zeros;
+                                 differential: negative part, subtracted)
+        wd    [rows, cout] f32   digital copy (exact matmul, no ADC)
+        b     [cout]       f32   bias (digital periphery, clean)
+        lsb   f32 scalar         ADC step    (<= 0 disables the ADC)
+        clip  f32 scalar         ADC clip level (full-scale / 2)
+
+Weight matrices use the crossbar layout: rows are channel-major
+(input channel c owns rows [c*R*R, (c+1)*R*R)), columns are output kernels
+— matching kernels/im2col.py.  All variation / quantization / channel
+splitting is applied by the caller (rust) to these inputs; the graph itself
+is fixed per (model, dataset, wordline-group) and lowered once to HLO text.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .layers import HybridExec, LayerMeta
+from .models import forward
+
+__all__ = ["arg_names", "arg_shapes", "export_fn", "lower_to_hlo_text",
+           "PER_LAYER_ARGS"]
+
+PER_LAYER_ARGS = ("wa1", "wa2", "wd", "b", "lsb", "clip")
+
+
+def arg_names(layers: list[LayerMeta]) -> list[str]:
+    """Flat positional argument names after the leading activation batch."""
+    names = []
+    for lm in layers:
+        for suffix in PER_LAYER_ARGS:
+            names.append(f"{lm.name}/{suffix}")
+    return names
+
+
+def arg_shapes(layers: list[LayerMeta], batch: int, input_shape):
+    """ShapeDtypeStructs matching [x] + arg_names()."""
+    f32 = jnp.float32
+    shapes = [jax.ShapeDtypeStruct((batch,) + tuple(input_shape), f32)]
+    for lm in layers:
+        mat = (lm.rows, lm.cout)
+        shapes += [jax.ShapeDtypeStruct(mat, f32),
+                   jax.ShapeDtypeStruct(mat, f32),
+                   jax.ShapeDtypeStruct(mat, f32),
+                   jax.ShapeDtypeStruct((lm.cout,), f32),
+                   jax.ShapeDtypeStruct((), f32),
+                   jax.ShapeDtypeStruct((), f32)]
+    return shapes
+
+
+def export_fn(family: str, num_classes: int, layers: list[LayerMeta],
+              act_ranges: dict, group: int = 128, use_pallas: bool = False):
+    """Build fn(x, *flat_args) -> (logits,) under the contract above."""
+    names = arg_names(layers)
+
+    def fn(x, *flat):
+        assert len(flat) == len(names), (len(flat), len(names))
+        args = dict(zip(names, flat))
+        ex = HybridExec(args, act_ranges, group=group, use_pallas=use_pallas)
+        logits = forward(family, ex, x, num_classes)
+        return (logits,)
+
+    return fn
+
+
+def lower_to_hlo_text(fn, shapes) -> str:
+    """Lower to HLO *text* — the interchange format the xla 0.1.6 crate's
+    xla_extension 0.5.1 can parse (serialized jax>=0.5 protos are rejected:
+    64-bit instruction ids; the text parser reassigns ids)."""
+    lowered = jax.jit(fn).lower(*shapes)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()

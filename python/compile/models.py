@@ -1,0 +1,123 @@
+"""The five DNN families (paper §4), scaled to this testbed.
+
+VGG16 → vggmini, ResNet18 → resnet18m, ResNet34 → resnet34m,
+DenseNet121 → densenetm, EfficientNetB3 → effnetm.  The *channel-wise
+structure* — the unit HybridAC selects on — is preserved per family:
+plain conv stacks, residual basic blocks, dense concatenation, and
+MBConv-style expand/conv/SE/project blocks.
+
+Each family is a function `forward(ex, x, num_classes)` written against the
+Executor interface (layers.py); `build(family, input_shape, num_classes)`
+probes it once with MetaExec to produce the ordered LayerMeta list that
+fixes the weight-blob layout shared with the rust side.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .layers import Executor, LayerMeta, MetaExec
+
+__all__ = ["FAMILIES", "build", "forward"]
+
+
+def _vggmini(ex: Executor, x, num_classes: int):
+    # conv stacks, widths scaled from VGG16's 64..512
+    x = ex.conv("c0", x, 16, always_digital=True)  # stem: dedicated digital tile
+    x = ex.conv("c1", x, 16)
+    x = ex.max_pool(x)
+    x = ex.conv("c2", x, 32)
+    x = ex.conv("c3", x, 32)
+    x = ex.max_pool(x)
+    x = ex.conv("c4", x, 48)
+    x = ex.conv("c5", x, 48)
+    x = ex.max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = ex.dense("fc0", x, 96, act="relu")
+    return ex.dense("fc1", x, num_classes, always_digital=True)
+
+
+def _basic_block(ex, x, name, cout, stride):
+    """ResNet basic block: two 3x3 convs + identity/projection skip."""
+    skip = x
+    y = ex.conv(name + "a", x, cout, stride=stride)
+    y = ex.conv(name + "b", y, cout, act=None)
+    if stride != 1 or x.shape[-1] != cout:
+        skip = ex.conv(name + "s", x, cout, r=1, stride=stride, pad=0, act=None)
+    return ex.relu(y + skip)
+
+
+def _resnet(blocks_per_stage):
+    def fwd(ex: Executor, x, num_classes: int):
+        x = ex.conv("stem", x, 16, always_digital=True)
+        widths = (16, 32, 64)
+        for s, (w, nb) in enumerate(zip(widths, blocks_per_stage)):
+            for b in range(nb):
+                stride = 2 if (s > 0 and b == 0) else 1
+                x = _basic_block(ex, x, f"s{s}b{b}", w, stride)
+        x = ex.gap(x)
+        return ex.dense("head", x, num_classes, always_digital=True)
+    return fwd
+
+
+def _densenetm(ex: Executor, x, num_classes: int):
+    growth = 12
+    x = ex.conv("stem", x, 16, always_digital=True)
+    li = 0
+    for block in range(3):
+        for layer in range(4):  # dense block: concat all previous features
+            y = ex.conv(f"d{block}_{layer}", x, growth)
+            x = jnp.concatenate([x, y], axis=-1)
+            li += 1
+        if block < 2:  # transition: 1x1 compress + avgpool
+            x = ex.conv(f"t{block}", x, x.shape[-1] // 2, r=1, pad=0)
+            x = ex.avg_pool(x)
+    x = ex.gap(x)
+    return ex.dense("head", x, num_classes, always_digital=True)
+
+
+def _se(ex, x, name, c):
+    """Squeeze-and-excite: gap -> dense/4 -> dense -> sigmoid scale."""
+    s = ex.gap(x)
+    s = ex.dense(name + "_sq", s, max(4, c // 4), act="relu")
+    s = ex.dense(name + "_ex", s, c, act="sigmoid")
+    return x * s[:, None, None, :]
+
+
+def _effnetm(ex: Executor, x, num_classes: int):
+    x = ex.conv("stem", x, 16, always_digital=True)
+    cfg = [(16, 1), (24, 2), (40, 2)]  # (width, stride) per MBConv block
+    for i, (w, stride) in enumerate(cfg):
+        cin = x.shape[-1]
+        skip = x
+        y = ex.conv(f"mb{i}e", x, cin * 3, r=1, pad=0)          # expand
+        y = ex.conv(f"mb{i}c", y, cin * 3, stride=stride)       # spatial
+        y = _se(ex, y, f"mb{i}", cin * 3)                       # squeeze-excite
+        y = ex.conv(f"mb{i}p", y, w, r=1, pad=0, act=None)      # project
+        if stride == 1 and cin == w:
+            y = y + skip
+        x = y
+    x = ex.conv("headc", x, 64, r=1, pad=0)
+    x = ex.gap(x)
+    return ex.dense("head", x, num_classes, always_digital=True)
+
+
+FAMILIES = {
+    "vggmini": _vggmini,
+    "resnet18m": _resnet((2, 2, 2)),
+    "resnet34m": _resnet((3, 4, 3)),
+    "densenetm": _densenetm,
+    "effnetm": _effnetm,
+}
+
+
+def forward(family: str, ex: Executor, x, num_classes: int):
+    return FAMILIES[family](ex, x, num_classes)
+
+
+def build(family: str, input_shape, num_classes: int) -> list[LayerMeta]:
+    """Probe the forward once; the LayerMeta order defines the weight blob."""
+    ex = MetaExec()
+    x = jnp.zeros((1,) + tuple(input_shape), jnp.float32)
+    forward(family, ex, x, num_classes)
+    return ex.layers

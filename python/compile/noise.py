@@ -1,0 +1,80 @@
+"""Conductance-variation model (paper eq. 9 + §5.2 cell architectures).
+
+Device variation: noise ~ N(0, sigma * g) per cell, sigma = 50% analog /
+10% digital.  What matters algorithmically is the noise *referred back to
+the weight domain*, which depends on how weights map to conductances:
+
+* offset-subtraction cells (ISAAC-style, `HybAC`): one crossbar stores
+  g = g_off + (w - w_min) / (w_max - w_min) * (g_on - g_off); the bias
+  column is subtracted digitally.  Weight-referred noise std:
+      sigma_w(w) = sigma * g(w) / slope,   slope = (g_on - g_off) / (w_max - w_min)
+  A small R-ratio (= R_on/R_off = g_on/g_off... inverted resistances) means
+  a large g_off pedestal under every weight — more noise, exactly the
+  paper's Fig.-11 argument for why offset designs cap activated wordlines.
+
+* differential cells (`HybACDi`): two crossbars store g+ ~ max(w,0) and
+  g- ~ max(-w,0); zero/low weights sit near g_off on both sides so their
+  noise contribution is small:
+      sigma_w(w) = sigma * sqrt(g(|w|)^2 + g_off^2) / slope  (both arrays)
+
+This module is the python mirror used by pytest and by aot-time sanity
+checks; the rust `noise` module re-implements it for the request path and
+`python/tests/test_noise.py` + rust unit tests pin both to the same closed
+forms (moments checked against sampled statistics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["CellModel", "OFFSET_BASE", "weight_noise_std", "apply_variation"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CellModel:
+    kind: str          # "offset" | "differential"
+    r_ratio: float     # R_on / R_off (VTEAM baseline ~ 10)
+    sigma: float       # relative conductance deviation (0.5 analog, 0.1 digital)
+
+    @property
+    def g_off(self) -> float:
+        return 1.0 / self.r_ratio  # normalize g_on = 1
+
+    @property
+    def g_on(self) -> float:
+        return 1.0
+
+
+# VTEAM-derived baseline R-ratio used for the Fig. 11 sweep (R_b).
+OFFSET_BASE = CellModel("offset", 10.0, 0.5)
+
+
+def weight_noise_std(w: np.ndarray, cell: CellModel,
+                     w_min: float, w_max: float) -> np.ndarray:
+    """Per-weight std of the weight-referred conductance noise.
+
+    Base model is the paper's eq. 9 -- N(0, sigma * w_i), i.e. relative
+    deviation per stored parameter -- plus a small additive floor from the
+    conductance pedestal g_off of the cell architecture (halved for
+    differential cells; modulated by the R-ratio in the Fig.-11 sweep).
+    Mirrors rust `noise::CellModel::weight_noise_std` exactly.
+    """
+    half_span = 0.5 * max(w_max - w_min, 1e-12)
+    pedestal = cell.g_off / (cell.g_on - cell.g_off) * half_span
+    if cell.kind == "differential":
+        pedestal *= 0.5
+    return cell.sigma * np.sqrt(w * w + pedestal * pedestal)
+
+
+def apply_variation(w: np.ndarray, cell: CellModel, rng: np.random.Generator,
+                    w_min: float | None = None,
+                    w_max: float | None = None) -> np.ndarray:
+    """Sample one noisy instance of a weight tensor under `cell`."""
+    if w_min is None:
+        w_min = float(w.min())
+    if w_max is None:
+        w_max = float(w.max())
+    std = weight_noise_std(w, cell, w_min, w_max)
+    return (w + rng.normal(size=w.shape) * std).astype(np.float32)

@@ -1,0 +1,72 @@
+"""Linear quantization utilities (paper §2.2, eqs. 3-8).
+
+Asymmetric affine fake-quantization: x_q = round(x * s - zp) with
+s = (2^n - 1) / (max - min), zp = min * s.  We use fake-quant (quantize →
+dequantize back to f32) throughout: the paper's analysis is about the
+*numerical* effect of reduced precision, and both analog and digital partial
+sums are merged in floating point before a single rounding (eq. 6-8), which
+fake-quant models exactly.
+
+The rust side (`rust/src/quantize/`) re-implements the same functions for the
+request path; `python/tests/test_quant.py` pins the semantics both must obey.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "qparams", "fake_quant", "fake_quant_np", "quantize_weights_hybrid",
+]
+
+
+def qparams(lo: float, hi: float, bits: int) -> tuple[float, float]:
+    """Scale and zero-point for an asymmetric affine quantizer (eq. 3)."""
+    lo = min(float(lo), 0.0)  # keep 0 exactly representable
+    hi = max(float(hi), 0.0)
+    if hi - lo < 1e-12:
+        return 1.0, 0.0
+    scale = (2.0 ** bits - 1.0) / (hi - lo)
+    # integer zero-point keeps 0.0 exactly representable (matches rust)
+    zp = round(lo * scale)
+    return scale, zp
+
+
+def fake_quant(x, lo: float, hi: float, bits: int):
+    """Quantize-dequantize in jnp (differentiable-enough for inference use)."""
+    scale, zp = qparams(lo, hi, bits)
+    q = jnp.round(x * scale - zp)
+    q = jnp.clip(q, 0.0, 2.0 ** bits - 1.0)
+    return (q + zp) / scale
+
+
+def fake_quant_np(x: np.ndarray, lo: float, hi: float, bits: int) -> np.ndarray:
+    """Numpy mirror of `fake_quant` (used by the oracle + tests)."""
+    scale, zp = qparams(lo, hi, bits)
+    q = np.round(x * scale - zp)
+    q = np.clip(q, 0.0, 2.0 ** bits - 1.0)
+    return ((q + zp) / scale).astype(np.float32)
+
+
+def quantize_weights_hybrid(w: np.ndarray, mask_digital: np.ndarray,
+                            bits_analog: int = 6, bits_digital: int = 8
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Split a conv weight [R,R,C,K] into (analog, digital) copies.
+
+    `mask_digital` is a [C] 0/1 vector over *input channels* (the paper's
+    selection unit).  Each copy is fake-quantized with its own range/scale —
+    the paper's hybrid quantization: n2(digital)=8 > n1(analog)=6.  Channels
+    of one copy are exact zeros in the other (rows removed, not zeroed-noisy).
+    """
+    md = mask_digital.astype(bool)
+    w_d = np.where(md[None, None, :, None], w, 0.0).astype(np.float32)
+    w_a = np.where(md[None, None, :, None], 0.0, w).astype(np.float32)
+
+    def _q(part: np.ndarray, bits: int) -> np.ndarray:
+        nz = part[part != 0.0]
+        if nz.size == 0:
+            return part
+        return fake_quant_np(part, float(nz.min()), float(nz.max()), bits)
+
+    return _q(w_a, bits_analog), _q(w_d, bits_digital)

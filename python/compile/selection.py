@@ -1,0 +1,112 @@
+"""Weight selection: HybridAC's channel-wise ranking + the IWS baseline.
+
+Algorithm 1 (paper §2.1): sort all (layer, input-channel) pairs globally by
+aggregated sensitivity; pop channels into the digital unit until noisy
+accuracy reaches the target.  The *ranking* is computed here at build time
+and exported; the iterative pop-until-accuracy loop runs on the rust side
+(eval::sweeps) where noisy inference is cheap — the division mirrors the
+paper's own split between the PyTorch algorithm side and the simulator.
+
+IWS (Dash et al.): per-weight ranking over the flattened eq.-1 map; exported
+as a score blob the rust side thresholds.
+
+`always_digital` layers (first conv, classifier head — paper §3.2 dedicates
+tiles to them) are excluded from the ranking: their channels are pinned to
+digital and accounted separately.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .layers import LayerMeta
+
+__all__ = ["RankedChannel", "rank_channels", "selection_stats",
+           "protected_fraction_for_channels"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedChannel:
+    layer: int       # index into the LayerMeta list
+    channel: int     # input channel within the layer
+    score: float
+    n_weights: int   # weights this channel carries (R*R*K or K)
+
+
+def rank_channels(layers: list[LayerMeta],
+                  per_channel: dict[str, np.ndarray]) -> list[RankedChannel]:
+    """Global descending sensitivity order over all selectable channels."""
+    out: list[RankedChannel] = []
+    for li, lm in enumerate(layers):
+        if lm.always_digital:
+            continue
+        scores = per_channel[lm.name]
+        assert scores.shape == (lm.cin,), (lm.name, scores.shape, lm.cin)
+        per_ch_weights = lm.n_weights // lm.cin
+        for c in range(lm.cin):
+            out.append(RankedChannel(li, c, float(scores[c]), per_ch_weights))
+    out.sort(key=lambda rc: -rc.score)
+    return out
+
+
+def protected_fraction_for_channels(layers: list[LayerMeta],
+                                    ranked: list[RankedChannel],
+                                    n_selected: int) -> float:
+    """Fraction of ALL model weights protected when the top-n channels plus
+    the always-digital layers live in the digital accelerator."""
+    total = sum(lm.n_weights for lm in layers)
+    pinned = sum(lm.n_weights for lm in layers if lm.always_digital)
+    sel = sum(rc.n_weights for rc in ranked[:n_selected])
+    return (pinned + sel) / total
+
+
+def selection_stats(layers: list[LayerMeta], ranked: list[RankedChannel],
+                    n_selected: int) -> dict:
+    """Per-layer protected-weight percentages (paper Fig. 3) + their stddev.
+
+    The paper's headline: HybridAC's per-layer selection is ~4.8x more
+    uniform than IWS (std 1.37 vs 6.69 on ResNet18/CIFAR10), which is what
+    lets the hardware shrink ADCs uniformly.
+    """
+    per_layer = np.zeros(len(layers), dtype=np.float64)
+    for rc in ranked[:n_selected]:
+        per_layer[rc.layer] += rc.n_weights
+    pct = []
+    for li, lm in enumerate(layers):
+        if lm.always_digital:
+            pct.append(100.0)
+        else:
+            pct.append(100.0 * per_layer[li] / lm.n_weights)
+    interior = [p for li, p in enumerate(pct) if not layers[li].always_digital]
+    return {
+        "per_layer_pct": pct,
+        "interior_std": float(np.std(interior)),
+        "interior_mean": float(np.mean(interior)),
+    }
+
+
+def iws_threshold_stats(layers: list[LayerMeta],
+                        per_weight: dict[str, np.ndarray],
+                        frac: float) -> dict:
+    """IWS per-layer distribution when the top `frac` of weights (globally
+    by eq.-1 score) are protected — the scattered/irregular selection the
+    paper contrasts against (Fig. 3)."""
+    all_scores = np.concatenate(
+        [per_weight[lm.name].ravel() for lm in layers if not lm.always_digital])
+    k = max(1, int(frac * all_scores.size))
+    thresh = np.partition(all_scores, -k)[-k]
+    pct = []
+    for lm in layers:
+        if lm.always_digital:
+            pct.append(100.0)
+            continue
+        s = per_weight[lm.name]
+        pct.append(100.0 * float((s >= thresh).sum()) / s.size)
+    interior = [p for li, p in enumerate(pct) if not layers[li].always_digital]
+    return {
+        "per_layer_pct": pct,
+        "interior_std": float(np.std(interior)),
+        "interior_mean": float(np.mean(interior)),
+    }

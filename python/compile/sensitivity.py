@@ -1,0 +1,116 @@
+"""Hessian-driven parameter sensitivity (paper eq. 1-2, following Dash et al.).
+
+Per selectable layer we estimate the top-n eigenpairs of the layer-block
+Hessian of the training loss via deflated power iteration on
+Hessian-vector products (HVP = jvp of grad), then
+
+    s      = (sum_i |lambda_i| q_i^2) (.) w^2          (eq. 1, elementwise)
+    s_chan = sum over (R, R, K) of s per input channel (eq. 2, aggregation)
+
+The per-weight map `s` is the IWS baseline's ranking signal; the channel
+aggregate is HybridAC's.  Both are exported in the artifacts so the rust
+coordinator can sweep protection percentages without re-deriving them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .train import loss_fn
+
+__all__ = ["layer_hessian_eigenpairs", "sensitivity_map", "channel_aggregate",
+           "model_sensitivities"]
+
+
+@functools.partial(jax.jit, static_argnames=("family", "num_classes", "name"))
+def _hvp(params, v, x, y, family, num_classes, name):
+    """HVP restricted to one layer's weight leaf.
+
+    params/x/y are runtime arguments (NOT closure constants) so XLA does not
+    try to constant-fold the whole forward pass at trace time.
+    """
+    key = name + "/w"
+
+    def f(wl):
+        p = dict(params)
+        p[key] = wl
+        return loss_fn(p, family, x, y, num_classes)
+
+    return jax.jvp(jax.grad(f), (params[key],), (v,))[1]
+
+
+def _layer_hvp_fn(params, name, family, x, y, num_classes):
+    return lambda v: _hvp(params, v, x, y, family, num_classes, name)
+
+
+def layer_hessian_eigenpairs(params, name, family, x, y, num_classes,
+                             n_pairs: int = 5, iters: int = 12, seed: int = 0):
+    """Top-n (eigenvalue, eigenvector) of the layer-block Hessian.
+
+    Deflated power iteration: after extracting (lam_j, q_j) we iterate on
+    H v - sum_j lam_j q_j (q_j . v) to converge to the next pair.  Power
+    iteration finds the largest-|lambda| pairs, which is what eq. 1 weights.
+    """
+    hvp = _layer_hvp_fn(params, name, family, x, y, num_classes)
+    w = params[name + "/w"]
+    rng = np.random.default_rng(seed)
+    pairs = []
+    for j in range(n_pairs):
+        v = jnp.asarray(rng.normal(size=w.shape).astype(np.float32))
+        v = v / (jnp.linalg.norm(v) + 1e-12)
+        lam = 0.0
+        for _ in range(iters):
+            hv = hvp(v)
+            for lam_k, q_k in pairs:  # deflation
+                hv = hv - lam_k * q_k * jnp.vdot(q_k, v)
+            lam = float(jnp.vdot(v, hv))
+            nrm = float(jnp.linalg.norm(hv))
+            if nrm < 1e-10:
+                break
+            v = hv / nrm
+        pairs.append((lam, v))
+    return pairs
+
+
+def sensitivity_map(w, pairs) -> jnp.ndarray:
+    """Eq. 1: s = (sum_i |lambda_i| q_i^2) elementwise-times w^2."""
+    acc = jnp.zeros_like(w)
+    for lam, q in pairs:
+        acc = acc + jnp.abs(lam) * q * q
+    return acc * w * w
+
+
+def channel_aggregate(s, kind: str) -> np.ndarray:
+    """Eq. 2: aggregate per input channel.
+
+    conv weights are [R, R, C, K] -> sum over (R, R, K) leaves [C];
+    dense weights are [C, K]      -> sum over K.
+    (The paper tried max/mean/MSE and found plain aggregation best — fn. 1.)
+    """
+    s = np.asarray(s)
+    if kind == "conv":
+        return s.sum(axis=(0, 1, 3))
+    return s.sum(axis=1)
+
+
+def model_sensitivities(params, layers, family, x, y, num_classes,
+                        n_pairs: int = 5, iters: int = 12, log=print):
+    """Per-layer eq.1 maps + eq.2 channel aggregates for a whole model.
+
+    Returns (per_weight: {name: np.ndarray(weight_shape)},
+             per_channel: {name: np.ndarray[Cin]}).
+    """
+    per_weight, per_channel = {}, {}
+    for i, lm in enumerate(layers):
+        pairs = layer_hessian_eigenpairs(
+            params, lm.name, family, x, y, num_classes,
+            n_pairs=n_pairs, iters=iters, seed=1000 + i)
+        s = sensitivity_map(params[lm.name + "/w"], pairs)
+        per_weight[lm.name] = np.asarray(s, dtype=np.float32)
+        per_channel[lm.name] = channel_aggregate(s, lm.kind).astype(np.float32)
+        log(f"    hessian[{lm.name}] |lam|max={max(abs(l) for l, _ in pairs):.2e}")
+    return per_weight, per_channel

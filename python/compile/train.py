@@ -1,0 +1,88 @@
+"""Build-time training: hand-rolled Adam + cross-entropy in pure JAX.
+
+Training is an *input* to HybridAC (the paper takes already-trained
+networks); it runs once under `make artifacts` and the weights are cached.
+No optax in this environment — Adam is ~20 lines anyway.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .datasets import Dataset
+from .layers import TrainExec, init_params
+from .models import build, forward
+
+__all__ = ["train_model", "accuracy", "loss_fn"]
+
+
+def loss_fn(params, family, x, y, num_classes):
+    logits = forward(family, TrainExec(params), x, num_classes)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+def _adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params), jnp.zeros(())
+
+
+@functools.partial(jax.jit, static_argnames=("family", "num_classes", "lr"))
+def _adam_step(params, m, v, t, x, y, family, num_classes, lr):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    loss, grads = jax.value_and_grad(loss_fn)(params, family, x, y, num_classes)
+    t = t + 1.0
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    scale = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * scale * mm / (jnp.sqrt(vv) + eps),
+        params, m, v)
+    return params, m, v, t, loss
+
+
+@functools.partial(jax.jit, static_argnames=("family", "num_classes"))
+def _predict(params, x, family, num_classes):
+    return jnp.argmax(forward(family, TrainExec(params), x, num_classes), -1)
+
+
+def accuracy(params, family, x, y, num_classes, batch=500) -> float:
+    hits = 0
+    for i in range(0, len(x), batch):
+        pred = _predict(params, jnp.asarray(x[i:i + batch]), family, num_classes)
+        hits += int((np.asarray(pred) == y[i:i + batch]).sum())
+    return hits / len(x)
+
+
+def train_model(family: str, ds: Dataset, epochs: int = 30, batch: int = 128,
+                lr: float = 2e-3, seed: int = 0, log=print):
+    """Train one family on one dataset; returns (params, train_acc, test_acc)."""
+    spec = ds.spec
+    layers = build(family, spec.input_shape, spec.num_classes)
+    params = init_params(layers, seed)
+    m, v, t = _adam_init(params)
+    rng = np.random.default_rng(seed + 17)
+    n = len(ds.x_train)
+    t0 = time.time()
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        tot = 0.0
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i:i + batch]
+            params, m, v, t, loss = _adam_step(
+                params, m, v, t, jnp.asarray(ds.x_train[idx]),
+                jnp.asarray(ds.y_train[idx]), family, spec.num_classes, lr)
+            tot += float(loss)
+        if ep % 5 == 4 or ep == epochs - 1:
+            log(f"  [{family}/{spec.name}] epoch {ep+1}/{epochs} "
+                f"loss={tot/max(1, n//batch):.3f} ({time.time()-t0:.0f}s)")
+    tr = accuracy(params, family, ds.x_train[:1000], ds.y_train[:1000], spec.num_classes)
+    te = accuracy(params, family, ds.x_test, ds.y_test, spec.num_classes)
+    log(f"  [{family}/{spec.name}] train_acc={tr:.3f} test_acc={te:.3f}")
+    return params, layers, tr, te

@@ -1,0 +1,77 @@
+"""Export the offset-only graph variants ({tag}_off.hlo.txt).
+
+Perf-pass artifact (EXPERIMENTS.md §Perf): the base graph computes BOTH
+analog polarity paths so one artifact serves offset and differential cells;
+offset experiments (the majority) waste a full crossbar matmul per layer on
+an all-zero wa2.  This pass re-lowers each built model without the second
+path -- it needs only the meta.json (family, shapes, act ranges), not the
+trained weights, so it does not retrain anything.
+
+Contract change: 5 args per layer (wa1, wd, b, lsb, clip).  The rust side
+selects the _off variant when the cell is offset and the file exists.
+
+Run: cd python && python -m compile.variant --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .layers import HybridExec, LayerMeta
+from .model import lower_to_hlo_text
+from .models import forward, build
+
+
+def export_offset_variant(out: pathlib.Path, tag: str) -> None:
+    meta = json.loads((out / f"{tag}.meta.json").read_text())
+    family = meta["family"]
+    num_classes = meta["num_classes"]
+    input_shape = tuple(meta["input_shape"])
+    batch = meta["batch"]
+    group = meta["group"]
+    act_ranges = {k: tuple(v) for k, v in meta["act_ranges"].items()}
+    layers = build(family, input_shape, num_classes)
+
+    names = []
+    for lm in layers:
+        for suffix in ("wa1", "wd", "b", "lsb", "clip"):
+            names.append(f"{lm.name}/{suffix}")
+
+    def fn(x, *flat):
+        args = dict(zip(names, flat))
+        ex = HybridExec(args, act_ranges, group=group, offset_only=True)
+        return (forward(family, ex, x, num_classes),)
+
+    f32 = jnp.float32
+    shapes = [jax.ShapeDtypeStruct((batch,) + input_shape, f32)]
+    for lm in layers:
+        mat = (lm.rows, lm.cout)
+        shapes += [jax.ShapeDtypeStruct(mat, f32),
+                   jax.ShapeDtypeStruct(mat, f32),
+                   jax.ShapeDtypeStruct((lm.cout,), f32),
+                   jax.ShapeDtypeStruct((), f32),
+                   jax.ShapeDtypeStruct((), f32)]
+    text = lower_to_hlo_text(fn, shapes)
+    (out / f"{tag}_off.hlo.txt").write_text(text)
+    print(f"wrote {tag}_off.hlo.txt ({len(text)//1024} KiB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    for meta_path in sorted(out.glob("*.meta.json")):
+        tag = meta_path.name.removesuffix(".meta.json")
+        if not (out / f"{tag}_off.hlo.txt").exists():
+            export_offset_variant(out, tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""im2col layout: channel-major rows (the crossbar row contract)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.im2col import (conv_out_hw, im2col, im2col_np,
+                                    weight_to_matrix_np)
+
+
+def conv_direct(x, w, stride, pad):
+    """Straightforward conv for cross-checking (NHWC x HWIO)."""
+    import jax
+    return np.asarray(jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w), (stride, stride),
+        [(pad, pad), (pad, pad)], dimension_numbers=("NHWC", "HWIO", "NHWC")))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3), hw=st.integers(4, 10), c=st.integers(1, 5),
+    k=st.integers(1, 4), r=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_matmul_equals_conv(b, hw, c, k, r, stride, seed):
+    rng = np.random.default_rng(seed)
+    pad = r // 2
+    x = rng.normal(size=(b, hw, hw, c)).astype(np.float32)
+    w = rng.normal(size=(r, r, c, k)).astype(np.float32)
+    patches = im2col_np(x, r, stride, pad)
+    got = patches @ weight_to_matrix_np(w)
+    oh, ow = conv_out_hw(hw, hw, r, stride, pad)
+    want = conv_direct(x, w, stride, pad).reshape(b * oh * ow, k)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_jnp_matches_numpy():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(2, 8, 8, 4)).astype(np.float32)
+    got = np.asarray(im2col(jnp.asarray(x), 3, 1, 1))
+    want = im2col_np(x, 3, 1, 1)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_channel_major_rows():
+    """Channel c must own rows [c*r*r, (c+1)*r*r) of the weight matrix."""
+    r, cin, k = 3, 4, 2
+    w = np.zeros((r, r, cin, k), np.float32)
+    w[:, :, 2, :] = 7.0  # only channel 2
+    mat = weight_to_matrix_np(w)
+    rows = mat.reshape(cin, r * r, k)
+    assert np.all(rows[2] == 7.0)
+    assert np.all(rows[[0, 1, 3]] == 0.0)

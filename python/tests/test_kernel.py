@@ -1,0 +1,104 @@
+"""L1 correctness: the Pallas crossbar kernel vs the jnp and numpy oracles.
+
+This is the core correctness signal for the exported artifacts: the
+vectorized reference (what the experiment graphs use) and the Pallas kernel
+(the TPU-shaped implementation, exported in the quickstart artifact) must
+agree bitwise-closely across shapes, group sizes and ADC settings.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.crossbar import crossbar_matmul_pallas, vmem_footprint_bytes
+from compile.kernels.ref import crossbar_matmul_numpy, crossbar_matmul_ref
+
+RTOL, ATOL = 1e-4, 1e-3
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 8, 4), (16, 128, 16), (32, 300, 24),
+                                   (128, 576, 48), (1, 1, 1)])
+@pytest.mark.parametrize("group", [16, 128])
+def test_ref_matches_numpy_ideal(m, k, n, group):
+    x, w = rand((m, k), 1), rand((k, n), 2)
+    got = np.asarray(crossbar_matmul_ref(x, w, -1.0, 1.0, group))
+    want = crossbar_matmul_numpy(x, w, -1.0, 1.0, group)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 64, 8), (16, 200, 12)])
+@pytest.mark.parametrize("group", [32, 128])
+@pytest.mark.parametrize("lsb,clip", [(-1.0, 1.0), (0.05, 4.0), (0.5, 2.0)])
+def test_pallas_matches_ref(m, k, n, group, lsb, clip):
+    x, w = rand((m, k), 3), rand((k, n), 4)
+    got = np.asarray(crossbar_matmul_pallas(x, w, lsb, clip, group, bm=8, bn=8))
+    want = np.asarray(crossbar_matmul_ref(x, w, lsb, clip, group))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_ideal_equals_plain_matmul():
+    x, w = rand((16, 96), 5), rand((96, 8), 6)
+    got = np.asarray(crossbar_matmul_ref(x, w, -1.0, 1.0, 32))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-3)
+
+
+def test_adc_quantization_bounds_error():
+    """With lsb>0 the result differs from exact by <= groups * lsb/2."""
+    x, w = rand((8, 256), 7), rand((256, 4), 8)
+    lsb = 0.25
+    exact = x @ w
+    got = np.asarray(crossbar_matmul_ref(x, w, lsb, 1e9, 128))
+    assert np.max(np.abs(got - exact)) <= 2 * (lsb / 2) + 1e-5
+
+
+def test_adc_clipping_saturates():
+    x = np.ones((2, 128), np.float32)
+    w = np.ones((128, 2), np.float32)
+    got = np.asarray(crossbar_matmul_ref(x, w, 0.1, 1.0, 128))
+    np.testing.assert_allclose(got, np.full((2, 2), 1.0), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 24), k=st.integers(1, 200), n=st.integers(1, 16),
+    group=st.sampled_from([8, 16, 32, 128]),
+    lsb=st.sampled_from([-1.0, 0.01, 0.2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ref_vs_numpy_hypothesis(m, k, n, group, lsb, seed):
+    """Property: jnp reference == numpy oracle over random shapes/configs."""
+    x, w = rand((m, k), seed), rand((k, n), seed + 1)
+    got = np.asarray(crossbar_matmul_ref(x, w, lsb, 8.0, group))
+    want = crossbar_matmul_numpy(x, w, lsb, 8.0, group)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(1, 12), k=st.integers(1, 150), n=st.integers(1, 8),
+    group=st.sampled_from([16, 64]), seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_vs_numpy_hypothesis(m, k, n, group, seed):
+    """Property: the Pallas kernel == numpy oracle (interpret mode)."""
+    x, w = rand((m, k), seed), rand((k, n), seed + 9)
+    got = np.asarray(crossbar_matmul_pallas(x, w, 0.05, 16.0, group, bm=8, bn=8))
+    want = crossbar_matmul_numpy(x, w, 0.05, 16.0, group)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_dtype_bf16_inputs_upcast():
+    x = rand((8, 64), 10).astype(jnp.bfloat16)
+    w = rand((64, 8), 11).astype(jnp.bfloat16)
+    out = crossbar_matmul_pallas(x, w, -1.0, 1.0, 64, bm=8, bn=8)
+    assert out.dtype == jnp.float32
+
+
+def test_vmem_footprint_within_budget():
+    """Default tiling must fit comfortably in a 16 MiB VMEM budget."""
+    assert vmem_footprint_bytes(128, 128, 128) < 1 << 20

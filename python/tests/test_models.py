@@ -1,0 +1,105 @@
+"""Model families: shapes, parameter layout, exported-graph consistency."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.layers import CalibExec, HybridExec, MetaExec, TrainExec, init_params
+from compile.model import arg_names, export_fn
+from compile.models import FAMILIES, build, forward
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_shapes_and_meta(family):
+    layers = build(family, (16, 16, 3), 10)
+    assert layers[0].always_digital, "stem pinned to digital"
+    assert layers[-1].always_digital, "classifier head pinned to digital"
+    params = init_params(layers, 0)
+    y = forward(family, TrainExec(params), jnp.zeros((2, 16, 16, 3)), 10)
+    assert y.shape == (2, 10)
+    assert all((lm.name + "/w") in params for lm in layers)
+
+
+@pytest.mark.parametrize("family", ["vggmini", "resnet18m"])
+def test_hybrid_exec_matches_train_exec_when_ideal(family):
+    """HybridExec with all weights analog, no ADC, fp32 == TrainExec up to
+    activation fake-quant error."""
+    num_classes = 10
+    layers = build(family, (16, 16, 3), num_classes)
+    params = init_params(layers, 1)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(4, 16, 16, 3)).astype(np.float32))
+    cal = CalibExec(params, group=128)
+    ref = forward(family, cal, x, num_classes)
+
+    args = {}
+    for lm in layers:
+        w = params[lm.name + "/w"]
+        if lm.kind == "conv":
+            mat = jnp.transpose(w, (2, 0, 1, 3)).reshape(lm.rows, lm.cout)
+        else:
+            mat = w
+        args[lm.name + "/wa1"] = mat
+        args[lm.name + "/wa2"] = jnp.zeros_like(mat)
+        args[lm.name + "/wd"] = jnp.zeros_like(mat)
+        args[lm.name + "/b"] = params[lm.name + "/b"]
+        args[lm.name + "/lsb"] = jnp.float32(-1.0)
+        args[lm.name + "/clip"] = jnp.float32(1.0)
+    hy = forward(family, HybridExec(args, cal.act_ranges, group=128), x, num_classes)
+    # 8-bit activations + fp16 merge leave small numeric differences, but
+    # the prediction must survive
+    assert jnp.argmax(hy, -1).tolist() == jnp.argmax(ref, -1).tolist()
+    np.testing.assert_allclose(np.asarray(hy), np.asarray(ref), rtol=0.2, atol=0.25)
+
+
+def test_export_fn_argument_contract():
+    layers = build("vggmini", (16, 16, 3), 10)
+    names = arg_names(layers)
+    assert len(names) == 6 * len(layers)
+    assert names[0] == "c0/wa1" and names[5] == "c0/clip"
+    cal_params = init_params(layers, 0)
+    cal = CalibExec(cal_params, group=128)
+    forward("vggmini", cal, jnp.zeros((2, 16, 16, 3)), 10)
+    fn = export_fn("vggmini", 10, layers, cal.act_ranges, group=128)
+    # build a full flat arg list and check it traces
+    flat = []
+    for lm in layers:
+        mat = jnp.zeros((lm.rows, lm.cout), jnp.float32)
+        flat += [mat, mat, mat, jnp.zeros((lm.cout,)), jnp.float32(-1.0),
+                 jnp.float32(1.0)]
+    (out,) = fn(jnp.zeros((2, 16, 16, 3)), *flat)
+    assert out.shape == (2, 10)
+
+
+def test_analog_digital_split_sums_to_whole():
+    """eq. 6: y = y_d + y_a — splitting channels must preserve the output
+    (ideal readout, no noise, no quant)."""
+    family, num_classes = "vggmini", 10
+    layers = build(family, (16, 16, 3), num_classes)
+    params = init_params(layers, 2)
+    x = jnp.asarray(np.random.default_rng(1).normal(
+        size=(3, 16, 16, 3)).astype(np.float32))
+    cal = CalibExec(params, group=128)
+    ref = forward(family, cal, x, num_classes)
+
+    rng = np.random.default_rng(7)
+    args = {}
+    for lm in layers:
+        w = params[lm.name + "/w"]
+        if lm.kind == "conv":
+            mat = np.asarray(jnp.transpose(w, (2, 0, 1, 3)).reshape(lm.rows, lm.cout))
+        else:
+            mat = np.asarray(w)
+        mask = rng.integers(0, 2, size=lm.cin).astype(bool)  # random split
+        rpc = lm.rows // lm.cin
+        rows_digital = np.repeat(mask, rpc)
+        wa = np.where(rows_digital[:, None], 0.0, mat).astype(np.float32)
+        wd = np.where(rows_digital[:, None], mat, 0.0).astype(np.float32)
+        args[lm.name + "/wa1"] = jnp.asarray(wa)
+        args[lm.name + "/wa2"] = jnp.zeros_like(jnp.asarray(wa))
+        args[lm.name + "/wd"] = jnp.asarray(wd)
+        args[lm.name + "/b"] = params[lm.name + "/b"]
+        args[lm.name + "/lsb"] = jnp.float32(-1.0)
+        args[lm.name + "/clip"] = jnp.float32(1.0)
+    hy = forward(family, HybridExec(args, cal.act_ranges, group=128), x, num_classes)
+    assert jnp.argmax(hy, -1).tolist() == jnp.argmax(ref, -1).tolist()

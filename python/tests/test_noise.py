@@ -1,0 +1,37 @@
+"""Noise model: closed forms vs sampled moments; rust parity is pinned by
+identical unit tests on the rust side (noise::tests)."""
+
+import numpy as np
+from compile.noise import CellModel, apply_variation, weight_noise_std
+
+
+def test_eq9_relative_term_dominates_large_weights():
+    cell = CellModel("offset", 1e9, 0.5)  # no pedestal
+    std = weight_noise_std(np.array([2.0]), cell, -2, 2)
+    assert abs(std[0] - 1.0) < 1e-6  # sigma * |w|
+
+
+def test_pedestal_floor_grows_with_small_r_ratio():
+    tight = CellModel("offset", 2.0, 0.5)
+    wide = CellModel("offset", 100.0, 0.5)
+    s_t = weight_noise_std(np.array([0.0]), tight, -1, 1)
+    s_w = weight_noise_std(np.array([0.0]), wide, -1, 1)
+    assert s_t[0] > 5 * s_w[0]
+
+
+def test_differential_halves_pedestal():
+    off = CellModel("offset", 10.0, 0.5)
+    dif = CellModel("differential", 10.0, 0.5)
+    s_o = weight_noise_std(np.array([0.0]), off, -1, 1)
+    s_d = weight_noise_std(np.array([0.0]), dif, -1, 1)
+    assert abs(s_d[0] - s_o[0] / 2) < 1e-9
+
+
+def test_sampled_std_matches_closed_form():
+    cell = CellModel("offset", 10.0, 0.5)
+    rng = np.random.default_rng(0)
+    w = np.full(20000, 0.3, np.float32)
+    noisy = apply_variation(w, cell, rng, w_min=-1.0, w_max=1.0)
+    sampled = np.std(noisy - w)
+    expect = weight_noise_std(np.array([0.3]), cell, -1, 1)[0]
+    assert abs(sampled - expect) / expect < 0.03

@@ -1,0 +1,62 @@
+"""Quantization semantics (eq. 3-8) — pinned for both python and rust."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import fake_quant_np, qparams, quantize_weights_hybrid
+
+
+def test_zero_exactly_representable():
+    s, zp = qparams(-0.7, 1.3, 8)
+    assert fake_quant_np(np.zeros(3, np.float32), -0.7, 1.3, 8).tolist() == [0, 0, 0]
+
+
+def test_error_bounded_by_half_lsb():
+    lo, hi, bits = -1.0, 1.0, 6
+    s, _ = qparams(lo, hi, bits)
+    x = np.linspace(lo, hi, 301).astype(np.float32)
+    err = np.abs(fake_quant_np(x, lo, hi, bits) - x)
+    assert err.max() <= 0.5 / s + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    lo=st.floats(-10, -0.01), hi=st.floats(0.01, 10),
+    bits=st.sampled_from([2, 4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_idempotent(lo, hi, bits, seed):
+    """Property: fake-quant is idempotent."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(lo, hi, size=64).astype(np.float32)
+    q1 = fake_quant_np(x, lo, hi, bits)
+    q2 = fake_quant_np(q1, lo, hi, bits)
+    np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+
+def test_more_bits_monotone_better():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, 256).astype(np.float32)
+    errs = [np.abs(fake_quant_np(x, -1, 1, b) - x).mean() for b in (2, 4, 6, 8)]
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+
+
+def test_hybrid_split_partitions_channels():
+    w = np.random.default_rng(1).normal(size=(3, 3, 8, 4)).astype(np.float32)
+    mask = np.zeros(8); mask[[1, 5]] = 1
+    wa, wd = quantize_weights_hybrid(w, mask)
+    # digital copy occupies exactly the masked channels; analog the rest
+    assert np.all(wa[:, :, [1, 5], :] == 0)
+    assert np.all(wd[:, :, [0, 2, 3, 4, 6, 7], :] == 0)
+    assert not np.all(wd[:, :, [1, 5], :] == 0)
+
+
+def test_hybrid_bits_relation():
+    """6-bit analog copy has coarser grid than 8-bit digital copy."""
+    w = np.random.default_rng(2).normal(size=(3, 3, 8, 4)).astype(np.float32)
+    mask = np.zeros(8); mask[:4] = 1
+    wa, wd = quantize_weights_hybrid(w, mask, bits_analog=6, bits_digital=8)
+    ua = np.unique(np.round(wa[wa != 0], 7)).size
+    ud = np.unique(np.round(wd[wd != 0], 7)).size
+    assert ua <= 2**6 and ud <= 2**8

@@ -1,0 +1,48 @@
+"""Hessian sensitivity (eq. 1-2) on a tiny model: eigenpairs and maps."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.layers import TrainExec, init_params
+from compile.models import build, forward
+from compile.sensitivity import (channel_aggregate,
+                                 layer_hessian_eigenpairs, sensitivity_map)
+
+
+def tiny_setup():
+    layers = build("vggmini", (16, 16, 3), 10)
+    params = init_params(layers, 3)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(32, 16, 16, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=32).astype(np.int32))
+    return layers, params, x, y
+
+
+def test_eigenpairs_normalized_and_ordered():
+    layers, params, x, y = tiny_setup()
+    pairs = layer_hessian_eigenpairs(params, "fc1", "vggmini", x, y, 10,
+                                     n_pairs=3, iters=15)
+    assert len(pairs) == 3
+    for lam, q in pairs:
+        assert abs(float(jnp.linalg.norm(q)) - 1.0) < 1e-3
+    mags = [abs(l) for l, _ in pairs]
+    assert mags[0] >= mags[-1] * 0.5  # deflation keeps rough ordering
+
+
+def test_sensitivity_map_shape_and_nonneg():
+    layers, params, x, y = tiny_setup()
+    pairs = layer_hessian_eigenpairs(params, "fc1", "vggmini", x, y, 10,
+                                     n_pairs=2, iters=8)
+    s = sensitivity_map(params["fc1/w"], pairs)
+    assert s.shape == params["fc1/w"].shape
+    assert float(jnp.min(s)) >= 0.0
+
+
+def test_channel_aggregate_shapes():
+    s_conv = np.abs(np.random.default_rng(0).normal(size=(3, 3, 5, 7)))
+    assert channel_aggregate(s_conv, "conv").shape == (5,)
+    s_dense = np.abs(np.random.default_rng(1).normal(size=(6, 4)))
+    assert channel_aggregate(s_dense, "dense").shape == (6,)
+    # aggregation preserves total mass
+    np.testing.assert_allclose(channel_aggregate(s_conv, "conv").sum(),
+                               s_conv.sum(), rtol=1e-6)

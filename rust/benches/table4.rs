@@ -1,0 +1,59 @@
+//! Table 4 — peak area-/power-efficiency of all architectures, normalized
+//! to Ideal-ISAAC (paper §5.4.2).  Pure hardware-model composition.
+
+use hybridac::benchkit::Stopwatch;
+use hybridac::hwmodel::all_architectures;
+use hybridac::report;
+
+/// Paper's published normalized values for side-by-side comparison.
+const PAPER: &[(&str, f64, f64)] = &[
+    ("Ideal-ISAAC", 1.0, 1.0),
+    ("PUMA", 0.70, 0.79),
+    ("SRE", 0.19, 0.26),
+    ("FORMS8(not pruned)", 0.54, 0.61),
+    ("FORMS16(not pruned)", 0.77, 0.84),
+    ("DaDianNao", 0.13, 0.45),
+    ("TPU", 0.08, 0.48),
+    ("WAX", 0.33, 2.3),
+    ("SIMBA", 0.48, 1.2),
+    ("IWS-1", 0.13, 0.15),
+    ("IWS-2", 0.38, 0.41),
+    ("HybridAC", 1.43, 1.81),
+    ("HybridACDi", 1.75, 2.5),
+];
+
+fn main() {
+    let _sw = Stopwatch::start("table4");
+    let archs = all_architectures();
+    let isaac = archs[0].clone();
+    let mut rows = Vec::new();
+    for a in &archs {
+        let paper = PAPER.iter().find(|(n, _, _)| *n == a.name);
+        rows.push(vec![
+            a.name.clone(),
+            format!("{:.2}", a.norm_area_eff(&isaac)),
+            paper.map(|(_, p, _)| format!("{p:.2}")).unwrap_or_default(),
+            format!("{:.2}", a.norm_power_eff(&isaac)),
+            paper.map(|(_, _, p)| format!("{p:.2}")).unwrap_or_default(),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            "Table 4: peak efficiency normalized to Ideal-ISAAC (measured vs paper)",
+            &["architecture", "GOPS/mm2 (ours)", "(paper)", "GOPS/W (ours)", "(paper)"],
+            &rows
+        )
+    );
+    println!(
+        "Ideal-ISAAC absolute anchors: {:.0} GOPS/mm2, {:.0} GOPS/W (paper: 1912, 2510)",
+        isaac.area_eff(),
+        isaac.power_eff()
+    );
+    let hy = archs.iter().find(|a| a.name == "HybridAC").unwrap();
+    println!(
+        "HybridAC analog:digital area-efficiency ratio: {:.2}x (paper: 5.87x -> ~16% digital)",
+        (hy.peak_gops - hy.digital_gops) / hy.totals.analog_area_mm2
+            / (hy.digital_gops / hy.totals.digital_area_mm2)
+    );
+}

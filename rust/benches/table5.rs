@@ -1,0 +1,70 @@
+//! Table 5 — component-level power/area of HybridAC vs Ideal-ISAAC, plus
+//! the §5.2 ADC-scaling claims (7-bit: -14% tile power/-7% area; 6-bit:
+//! -29%/-13%).
+
+use hybridac::benchkit::Stopwatch;
+use hybridac::hwmodel::adc;
+use hybridac::hwmodel::components::{hybridac_digital_chip, hybridac_mcu,
+                                    hybridac_tile_periphery, isaac_mcu,
+                                    isaac_tile_periphery, total};
+use hybridac::hwmodel::TileModel;
+use hybridac::report;
+
+fn main() {
+    let _sw = Stopwatch::start("table5");
+
+    let mut rows = Vec::new();
+    for (label, parts) in [
+        ("HybridAC tile periphery", hybridac_tile_periphery()),
+        ("Ideal-ISAAC tile periphery", isaac_tile_periphery()),
+        ("HybridAC MCU", hybridac_mcu()),
+        ("Ideal-ISAAC MCU", isaac_mcu()),
+        ("HybridAC digital accelerator", hybridac_digital_chip()),
+    ] {
+        for c in &parts {
+            rows.push(vec![
+                label.to_string(),
+                c.name.to_string(),
+                format!("{:.4}", c.power_mw()),
+                format!("{:.5}", c.area_mm2()),
+            ]);
+        }
+        let (p, a) = total(&parts);
+        rows.push(vec![
+            label.to_string(),
+            "TOTAL".to_string(),
+            format!("{p:.3}"),
+            format!("{a:.4}"),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            "Table 5: component power/area (32nm, 1GHz)",
+            &["block", "component", "power mW", "area mm2"],
+            &rows
+        )
+    );
+
+    // §5.2 tile-level ADC savings
+    let (p8, a8) = TileModel::isaac().tile_totals();
+    let mut save_rows = Vec::new();
+    for bits in [7u32, 6, 4] {
+        let (p, a) = TileModel::isaac_with_adc(bits).tile_totals();
+        save_rows.push(vec![
+            format!("{bits}-bit"),
+            format!("{:.1}%", 100.0 * (1.0 - p / p8)),
+            format!("{:.1}%", 100.0 * (1.0 - a / a8)),
+            format!("{:.2}", adc::power_frac(bits)),
+            format!("{:.2}", adc::area_frac(bits)),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            "ADC resolution scaling (paper §5.2: 7-bit saves 14%/7%, 6-bit 29%/13% of the tile)",
+            &["ADC", "tile power saved", "tile area saved", "ADC power frac", "ADC area frac"],
+            &save_rows
+        )
+    );
+}

@@ -1,0 +1,65 @@
+//! Tables 6/7 — chip-level power/area of HybridAC vs IWS-1/2, SIGMA,
+//! FORMS, SRE and Ideal-ISAAC, recomposed from the component database.
+
+use hybridac::benchkit::Stopwatch;
+use hybridac::hwmodel::arch;
+use hybridac::hwmodel::components::{sigma_chip, total};
+use hybridac::report;
+
+/// Paper chip totals (power mW, area mm2) for the measured-vs-paper columns.
+const PAPER: &[(&str, f64, f64)] = &[
+    ("HybridAC", 37_444.94, 66.39),
+    ("IWS-1", 36_258.81, 97.665),
+    ("IWS-2", 61_936.96, 138.65),
+    ("FORMS", 66_360.8, 89.15),
+    ("SRE", 54_445.88, 84.99),
+    ("Ideal-ISAAC", 65_808.08, 85.09),
+];
+
+fn main() {
+    let _sw = Stopwatch::start("table6_7");
+    let chips = [
+        arch::hybridac_chip(),
+        arch::iws1_chip(),
+        arch::iws2_chip(),
+        arch::forms_chip(),
+        arch::sre_chip(),
+        arch::isaac_chip(),
+    ];
+    let mut rows = Vec::new();
+    for chip in &chips {
+        let t = chip.totals();
+        let (tile_p, tile_a) = chip.tile.tile_totals();
+        let paper = PAPER.iter().find(|(n, _, _)| *n == chip.name);
+        rows.push(vec![
+            chip.name.clone(),
+            chip.n_tiles.to_string(),
+            format!("{:.1}/{:.3}", tile_p, tile_a),
+            format!("{:.0}", t.analog_power_mw),
+            format!("{:.1}", t.analog_area_mm2),
+            format!("{:.0}", t.power_mw),
+            paper.map(|(_, p, _)| format!("{p:.0}")).unwrap_or_default(),
+            format!("{:.1}", t.area_mm2),
+            paper.map(|(_, _, a)| format!("{a:.1}")).unwrap_or_default(),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            "Tables 6/7: chip power/area (measured vs paper)",
+            &["architecture", "tiles", "tile mW/mm2", "analog mW", "analog mm2",
+              "chip mW", "(paper)", "chip mm2", "(paper)"],
+            &rows
+        )
+    );
+    let (sp, sa) = total(&sigma_chip());
+    println!("SIGMA digital chip: {sp:.1} mW, {sa:.2} mm2 (paper: 25520.1 / 74.4)");
+
+    let isaac = arch::by_name("Ideal-ISAAC").unwrap().totals;
+    let hy = arch::by_name("HybridAC").unwrap().totals;
+    println!(
+        "HybridAC vs ISAAC: area -{:.0}% power -{:.0}% (paper: -28% / -57%)",
+        100.0 * (1.0 - hy.area_mm2 / isaac.area_mm2),
+        100.0 * (1.0 - hy.power_mw / isaac.power_mw)
+    );
+}

@@ -1,0 +1,93 @@
+//! Shared plumbing for the table/figure bench harnesses.
+//!
+//! `cargo bench` regenerates every table and figure of the paper's
+//! evaluation. Accuracy benches execute real noisy inference through PJRT,
+//! so a full sweep is minutes of CPU; the default is a reduced-but-faithful
+//! configuration and `HYBRIDAC_BENCH_FULL=1` restores the paper-scale
+//! sweep (more eval samples + repeats).
+
+use std::time::Instant;
+
+pub fn full_mode() -> bool {
+    std::env::var("HYBRIDAC_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// (n_eval, repeats) for accuracy benches.
+pub fn eval_budget() -> (usize, usize) {
+    if full_mode() {
+        (1000, 5)
+    } else {
+        (250, 2)
+    }
+}
+
+/// All (tag, pretty) combos per dataset, in the paper's table order.
+pub fn combos(dataset: &str) -> Vec<(String, &'static str)> {
+    let fams: &[(&str, &str)] = match dataset {
+        "in50s" => &[
+            ("resnet18m", "ResNet18"),
+            ("resnet34m", "ResNet34"),
+            ("densenetm", "DenseNet121"),
+        ],
+        _ => &[
+            ("vggmini", "VGG16"),
+            ("resnet18m", "ResNet18"),
+            ("resnet34m", "ResNet34"),
+            ("densenetm", "DenseNet121"),
+            ("effnetm", "EfficientNetB3"),
+        ],
+    };
+    fams.iter()
+        .map(|(f, p)| (format!("{f}_{dataset}"), *p))
+        .collect()
+}
+
+/// Skip combos whose artifacts are not built yet (partial `make artifacts`);
+/// prints a notice so truncation is never silent.
+pub fn built_combos(dataset: &str) -> Vec<(String, &'static str)> {
+    let dir = crate::artifacts_dir();
+    combos(dataset)
+        .into_iter()
+        .filter(|(tag, _)| {
+            let ok = dir.join(format!("{tag}.meta.json")).exists();
+            if !ok {
+                eprintln!("[bench] skipping {tag}: artifact not built");
+            }
+            ok
+        })
+        .collect()
+}
+
+/// Tiny stopwatch for the per-bench timing line.
+pub struct Stopwatch(Instant, &'static str);
+
+impl Stopwatch {
+    pub fn start(label: &'static str) -> Self {
+        Stopwatch(Instant::now(), label)
+    }
+}
+
+impl Drop for Stopwatch {
+    fn drop(&mut self) {
+        println!("[bench] {} finished in {:.2}s", self.1, self.0.elapsed().as_secs_f64());
+    }
+}
+
+/// Time a closure n times, reporting min/mean (the perf bench's primitive).
+pub fn time_n<F: FnMut()>(label: &str, n: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut sum = 0.0;
+    for _ in 0..n {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt);
+        sum += dt;
+    }
+    println!(
+        "  {label:<44} min {:>10} mean {:>10}",
+        crate::report::si_time(best),
+        crate::report::si_time(sum / n as f64)
+    );
+    best
+}

@@ -1,0 +1,159 @@
+//! Request batching server (threads + channels; no tokio offline).
+//!
+//! The analog pipeline wants full batches (the exported graphs are compiled
+//! at a fixed batch), so the coordinator aggregates incoming requests up to
+//! the artifact batch size or a deadline, pads the tail, executes once, and
+//! fans results back — the same dynamic-batching shape a serving router
+//! uses, here over the PJRT executor.
+
+use anyhow::Result;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use crate::eval::{prepare, ExperimentConfig};
+use crate::runtime::{Artifact, DatasetBlob, Engine};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One inference request: an image (flat f32, H*W*C) + reply channel.
+pub struct InferenceRequest {
+    pub image: Vec<f32>,
+    pub reply: mpsc::Sender<i32>,
+    pub enqueued: Instant,
+}
+
+pub struct BatchServer {
+    tx: mpsc::Sender<InferenceRequest>,
+    pub metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl BatchServer {
+    /// Spawn the worker thread owning the PJRT engine.
+    pub fn start(
+        artifacts: std::path::PathBuf,
+        tag: String,
+        cfg: ExperimentConfig,
+        max_wait: Duration,
+    ) -> Result<BatchServer> {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let worker = std::thread::spawn(move || worker_loop(&artifacts, &tag, &cfg, max_wait, rx, m));
+        Ok(BatchServer { tx, metrics, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> mpsc::Sender<InferenceRequest> {
+        self.tx.clone()
+    }
+
+    /// Submit one image; returns the reply receiver.
+    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<i32> {
+        let (rtx, rrx) = mpsc::channel();
+        self.metrics.record_request();
+        let _ = self.tx.send(InferenceRequest {
+            image,
+            reply: rtx,
+            enqueued: Instant::now(),
+        });
+        rrx
+    }
+
+    /// Drop the ingress side and join the worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        drop(self.tx);
+        if let Some(w) = self.worker.take() {
+            w.join().expect("worker panicked")?;
+        }
+        Ok(())
+    }
+}
+
+fn worker_loop(
+    artifacts: &std::path::Path,
+    tag: &str,
+    cfg: &ExperimentConfig,
+    max_wait: Duration,
+    rx: mpsc::Receiver<InferenceRequest>,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    let art = Artifact::load(artifacts, tag)?;
+    let data = DatasetBlob::load(artifacts, &art.dataset)?;
+    let mut engine = Engine::cpu()?;
+    let exe_path = art.hlo_path.clone();
+    engine.load(&exe_path)?;
+
+    // one prepared (noisy) model instance serves the whole session
+    let mut rng = Rng::new(cfg.seed);
+    let model = prepare(&art, cfg, &mut rng);
+    let mut weight_bufs = Vec::new();
+    for li in &model.layers {
+        for t in [&li.wa1, &li.wa2, &li.wd, &li.bias] {
+            weight_bufs.push(engine.upload(t)?);
+        }
+        weight_bufs.push(engine.upload(&Tensor::scalar(li.lsb))?);
+        weight_bufs.push(engine.upload(&Tensor::scalar(li.clip))?);
+    }
+
+    let per_image = data.image_elems();
+    let batch = art.batch;
+    loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // ingress closed
+        };
+        let deadline = Instant::now() + max_wait;
+        let mut pending = vec![first];
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.record_batch(pending.len());
+
+        // assemble the fixed-size batch (pad by repeating the first image)
+        let mut x = Vec::with_capacity(batch * per_image);
+        for r in &pending {
+            x.extend_from_slice(&r.image);
+        }
+        for _ in pending.len()..batch {
+            x.extend_from_slice(&pending[0].image);
+        }
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&data.shape);
+        let xbuf = engine.upload(&Tensor::new(shape, x))?;
+        let exe = engine.load(&exe_path)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weight_bufs.len());
+        inputs.push(&xbuf);
+        inputs.extend(weight_bufs.iter());
+        match Engine::run_buffers(exe, &inputs) {
+            Ok(logits) => {
+                let nc = data.num_classes;
+                for (i, r) in pending.iter().enumerate() {
+                    let row = &logits[i * nc..(i + 1) * nc];
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(k, _)| k as i32)
+                        .unwrap();
+                    metrics.record_latency(r.enqueued.elapsed());
+                    let _ = r.reply.send(pred);
+                }
+            }
+            Err(e) => {
+                metrics.errors.fetch_add(pending.len() as u64, std::sync::atomic::Ordering::Relaxed);
+                eprintln!("batch execution failed: {e:#}");
+            }
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! End-to-end experiment driver: accuracy (PJRT) + hardware estimates
+//! (mapping + analog/digital timing + chip model) in one report.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::eval::{Evaluator, ExperimentConfig, Method};
+use crate::hwmodel::{arch, tile::TileModel};
+use crate::mapping::{self, MapScheme};
+
+/// Combined result of one (model, method, config) run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub tag: String,
+    pub method: String,
+    pub accuracy_mean: f64,
+    pub accuracy_std: f64,
+    pub clean_accuracy: f64,
+    pub protected_frac: f64,
+    pub exec_seconds: f64,
+    pub energy_j: f64,
+    pub crossbars: usize,
+    pub digital_frac: f64,
+}
+
+/// Run accuracy + hardware estimation for one configuration.
+pub fn run_experiment(
+    artifacts: &Path,
+    tag: &str,
+    cfg: &ExperimentConfig,
+    batch: usize,
+) -> Result<RunReport> {
+    let mut ev = Evaluator::new(artifacts, tag)?;
+    let acc = ev.accuracy(cfg)?;
+    let clean = ev.art.clean_test_acc;
+
+    let (scheme, frac, method_name) = match &cfg.method {
+        Method::Hybrid { frac } => (MapScheme::Hybrid, *frac, "HybridAC"),
+        Method::Iws { frac } => (MapScheme::IwsHoles, *frac, "IWS"),
+        Method::NoProtection => (MapScheme::AllAnalog, 0.0, "NoProtection"),
+        Method::Clean => (MapScheme::AllAnalog, 0.0, "Clean"),
+    };
+    let mapping = mapping::map_model(&ev.art, scheme, frac);
+    let (tile, timing, n_tiles, dig_units, dig_w) = match scheme {
+        MapScheme::Hybrid => (
+            TileModel::hybridac(),
+            crate::analog::AnalogTiming::hybridac(),
+            148,
+            152,
+            1.788,
+        ),
+        _ => (
+            TileModel::isaac(),
+            crate::analog::AnalogTiming::isaac(),
+            168,
+            0,
+            0.0,
+        ),
+    };
+    let est = mapping::simulate_exec(&mapping, &timing, &tile, n_tiles, batch, dig_units, dig_w, false);
+    Ok(RunReport {
+        tag: tag.to_string(),
+        method: method_name.to_string(),
+        accuracy_mean: acc.mean,
+        accuracy_std: acc.std,
+        clean_accuracy: clean,
+        protected_frac: frac,
+        exec_seconds: est.seconds,
+        energy_j: est.energy_j,
+        crossbars: mapping.total_crossbars,
+        digital_frac: mapping.digital_frac,
+    })
+}
+
+/// The paper's headline summary vs Ideal-ISAAC (abstract + §5.4):
+/// execution time, energy, area, power, area-eff, power-eff improvements.
+#[derive(Clone, Copy, Debug)]
+pub struct Headline {
+    pub exec_time_gain: f64,
+    pub energy_gain: f64,
+    pub area_gain: f64,
+    pub power_gain: f64,
+    pub area_eff_ratio: f64,
+    pub power_eff_ratio: f64,
+}
+
+pub fn headline_vs_isaac(hybrid_exec_s: f64, isaac_exec_s: f64,
+                         hybrid_energy: f64, isaac_energy: f64) -> Headline {
+    let isaac = arch::by_name("Ideal-ISAAC").unwrap();
+    let hy = arch::by_name("HybridAC").unwrap();
+    Headline {
+        exec_time_gain: 1.0 - hybrid_exec_s / isaac_exec_s,
+        energy_gain: 1.0 - hybrid_energy / isaac_energy,
+        area_gain: 1.0 - hy.totals.area_mm2 / isaac.totals.area_mm2,
+        power_gain: 1.0 - hy.totals.power_mw / isaac.totals.power_mw,
+        area_eff_ratio: hy.norm_area_eff(&isaac),
+        power_eff_ratio: hy.norm_power_eff(&isaac),
+    }
+}

@@ -1,0 +1,97 @@
+//! Lightweight counters + latency histogram for the serving path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Fixed log-scaled latency buckets (µs).
+const BUCKET_EDGES_US: [u64; 12] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000,
+];
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_samples: AtomicU64,
+    pub errors: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKET_EDGES_US.len() + 1],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_samples.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let idx = BUCKET_EDGES_US
+            .iter()
+            .position(|&e| us <= e)
+            .unwrap_or(BUCKET_EDGES_US.len());
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed).max(1);
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
+    }
+
+    /// Approximate latency percentile from the histogram (upper edge).
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return *BUCKET_EDGES_US.get(i).unwrap_or(&500_000) as f64 / 1000.0;
+            }
+        }
+        500.0
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        self.batched_samples.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let m = Metrics::new();
+        for us in [60u64, 120, 300, 900, 2000, 30_000] {
+            m.record_request();
+            m.record_latency(Duration::from_micros(us));
+        }
+        let p50 = m.latency_percentile_ms(0.5);
+        let p99 = m.latency_percentile_ms(0.99);
+        assert!(p50 <= p99, "{p50} vs {p99}");
+        assert!(m.mean_latency_ms() > 0.0);
+    }
+
+    #[test]
+    fn occupancy_average() {
+        let m = Metrics::new();
+        m.record_batch(10);
+        m.record_batch(30);
+        assert_eq!(m.mean_batch_occupancy(), 20.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 coordinator: ties the runtime (accuracy path) to the hardware model
+//! (timing/energy path) and serves batched inference requests.
+
+pub mod batcher;
+pub mod driver;
+pub mod metrics;
+
+pub use batcher::{BatchServer, InferenceRequest};
+pub use driver::{run_experiment, RunReport};
+pub use metrics::Metrics;

@@ -1,0 +1,163 @@
+//! Interconnect models: the grid the HybridAC digital units use vs the
+//! H-tree WAX uses (paper §3.2).
+//!
+//! The paper's argument for the grid: each unit mostly talks to its local
+//! SRAM and its immediate neighbours; an H-tree makes even nearest-neighbour
+//! traffic climb toward the root — distance as bad as log(chip width) — and
+//! needs hierarchical muxing at every split plus a central controller,
+//! which the grid eliminates.  This module quantifies exactly that claim:
+//! hop counts, wire length, energy per transfer, and bisection bandwidth
+//! for both topologies over the same unit array.
+
+/// Position of a unit in a sqrt(N) x sqrt(N) array.
+pub type Pos = (usize, usize);
+
+/// Wire-energy constants (32 nm-class, per §3.2's "short interconnections").
+pub const PJ_PER_MM_PER_BYTE: f64 = 0.2;
+pub const UNIT_PITCH_MM: f64 = 0.21; // 6.81 mm^2 / 152 units, square-ish
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// 2-D mesh: neighbours are one pitch apart; routing is XY.
+    Grid,
+    /// Binary H-tree: every transfer routes up to the lowest common
+    /// ancestor and back down; each split adds a mux traversal.
+    HTree,
+}
+
+/// A unit array wired with one of the two topologies.
+#[derive(Clone, Debug)]
+pub struct Interconnect {
+    pub topology: Topology,
+    pub side: usize, // units per side
+}
+
+impl Interconnect {
+    pub fn new(topology: Topology, n_units: usize) -> Self {
+        let side = (n_units as f64).sqrt().ceil() as usize;
+        Interconnect { topology, side: side.max(1) }
+    }
+
+    /// Number of link traversals for a transfer from `a` to `b`.
+    pub fn hops(&self, a: Pos, b: Pos) -> usize {
+        match self.topology {
+            Topology::Grid => a.0.abs_diff(b.0) + a.1.abs_diff(b.1),
+            Topology::HTree => {
+                if a == b {
+                    return 0;
+                }
+                // index units in row-major order; tree leaves = units.
+                let ia = a.0 * self.side + a.1;
+                let ib = b.0 * self.side + b.1;
+                let n = self.side * self.side;
+                let depth = (n as f64).log2().ceil() as usize;
+                // distance = 2 * (depth - common prefix length)
+                let diff = ia ^ ib;
+                let msb = usize::BITS as usize - diff.leading_zeros() as usize;
+                2 * msb.min(depth)
+            }
+        }
+    }
+
+    /// Physical wire length of the route (mm).
+    pub fn wire_mm(&self, a: Pos, b: Pos) -> f64 {
+        match self.topology {
+            Topology::Grid => self.hops(a, b) as f64 * UNIT_PITCH_MM,
+            Topology::HTree => {
+                // each level's segment doubles in length going up the tree
+                let h = self.hops(a, b);
+                let up = h / 2;
+                let mut len = 0.0;
+                let mut seg = UNIT_PITCH_MM / 2.0;
+                for _ in 0..up {
+                    len += seg;
+                    seg *= 2.0;
+                }
+                2.0 * len
+            }
+        }
+    }
+
+    /// Energy of moving `bytes` from `a` to `b` (pJ).
+    pub fn transfer_pj(&self, a: Pos, b: Pos, bytes: usize) -> f64 {
+        let mux_pj = match self.topology {
+            Topology::Grid => 0.0,
+            Topology::HTree => 0.05 * self.hops(a, b) as f64, // mux per split
+        };
+        self.wire_mm(a, b) * PJ_PER_MM_PER_BYTE * bytes as f64 + mux_pj * bytes as f64
+    }
+
+    /// Mean cost of the dominant traffic pattern — nearest-neighbour
+    /// psum/activation exchange (paper: "each tile usually needs to access
+    /// its local SRAM or its neighbors").
+    pub fn neighbour_traffic_pj(&self, bytes: usize) -> f64 {
+        let mut total = 0.0;
+        let mut links = 0usize;
+        for r in 0..self.side {
+            for c in 0..self.side.saturating_sub(1) {
+                total += self.transfer_pj((r, c), (r, c + 1), bytes);
+                links += 1;
+            }
+        }
+        total / links.max(1) as f64
+    }
+
+    /// Bisection bandwidth in links cut by a vertical midline (higher is
+    /// better; the grid's advantage the paper cites from [14, 50]).
+    pub fn bisection_links(&self) -> usize {
+        match self.topology {
+            Topology::Grid => self.side,
+            Topology::HTree => 1, // a tree's bisection is its root link
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_neighbours_are_one_hop() {
+        let g = Interconnect::new(Topology::Grid, 152);
+        assert_eq!(g.hops((3, 4), (3, 5)), 1);
+        assert_eq!(g.hops((3, 4), (5, 7)), 5);
+    }
+
+    #[test]
+    fn htree_neighbour_distance_grows_with_array() {
+        // the paper's complaint: adjacent units in different subtrees route
+        // through up to log(width) levels
+        let small = Interconnect::new(Topology::HTree, 16);
+        let big = Interconnect::new(Topology::HTree, 1024);
+        let mid_s = small.side / 2;
+        let mid_b = big.side / 2;
+        let hs = small.hops((0, mid_s - 1), (0, mid_s));
+        let hb = big.hops((0, mid_b - 1), (0, mid_b));
+        assert!(hb > hs, "H-tree neighbour hops should grow: {hs} -> {hb}");
+    }
+
+    #[test]
+    fn grid_beats_htree_on_neighbour_energy() {
+        let g = Interconnect::new(Topology::Grid, 152);
+        let h = Interconnect::new(Topology::HTree, 152);
+        let eg = g.neighbour_traffic_pj(24);
+        let eh = h.neighbour_traffic_pj(24);
+        assert!(eg < eh, "grid {eg} pJ vs H-tree {eh} pJ");
+    }
+
+    #[test]
+    fn grid_has_wider_bisection() {
+        let g = Interconnect::new(Topology::Grid, 152);
+        let h = Interconnect::new(Topology::HTree, 152);
+        assert!(g.bisection_links() > h.bisection_links());
+    }
+
+    #[test]
+    fn zero_distance_is_free() {
+        for t in [Topology::Grid, Topology::HTree] {
+            let ic = Interconnect::new(t, 64);
+            assert_eq!(ic.hops((2, 2), (2, 2)), 0);
+            assert_eq!(ic.transfer_pj((2, 2), (2, 2), 24), 0.0);
+        }
+    }
+}

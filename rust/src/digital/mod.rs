@@ -1,0 +1,32 @@
+//! Cycle-level simulator of the HybridAC digital accelerator (§3.3, Fig. 5).
+//!
+//! One *unit* is the WAX-inspired tuple: a tiny 32-row x 24-byte SRAM
+//! (1 activation row + 24 weight rows + 7 partial-sum rows), a 24-MAC
+//! cluster, and three registers (activation / weight / psum) each split in
+//! 4 channel partitions.  Units are connected in a grid (not an H-tree):
+//! a unit talks only to its local SRAM and its grid neighbours.
+//!
+//! Dataflow per Fig. 5:
+//!   * the activation SRAM row holds 6 consecutive inputs of 4 channels;
+//!   * a weight SRAM row holds 3 successive weights of 4 channels for 2
+//!     kernels; weights stay resident until fully reused;
+//!   * each cycle the 24 MACs multiply and a 3-level adder tree folds 4
+//!     products into each partial sum — 24 psum registers fill in 12
+//!     cycles, then one SRAM write-back;
+//!   * the next activation row loads while the current one computes
+//!     (compute/communication overlap), so stalls only appear when a
+//!     row's compute finishes before its successor loaded.
+
+pub mod interconnect;
+pub mod sim;
+
+pub use sim::{DigitalSim, LayerWork, UnitStats};
+
+/// Sustained MAC utilization of the Fig.-5 dataflow measured by the cycle
+/// simulator on a representative conv workload (cached constant — see
+/// `sim::measured_utilization`).  The adder tree retires 96 MACs per
+/// 12-cycle batch against 288 issue slots, so this lands near 1/3 — the
+/// same order as the paper's 434 GOPS/mm² over 6.81 mm² (~0.41 of peak).
+pub fn sustained_utilization() -> f64 {
+    sim::measured_utilization()
+}

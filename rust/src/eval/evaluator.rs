@@ -1,0 +1,101 @@
+//! Evaluator: accuracy of experiment configs over the staged test set,
+//! with repeat-averaging and the Algorithm-1 pop-until-accuracy loop.
+
+use anyhow::Result;
+use std::path::Path;
+
+use super::prepare::{prepare, ExperimentConfig, Method};
+use crate::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use crate::util::rng::Rng;
+
+/// Mean/std accuracy of one experiment point.
+#[derive(Clone, Copy, Debug)]
+pub struct AccResult {
+    pub mean: f64,
+    pub std: f64,
+    pub repeats: usize,
+}
+
+/// Owns the engine + one model's artifact/dataset and runs configs on it.
+pub struct Evaluator {
+    pub art: Artifact,
+    pub data: DatasetBlob,
+    engine: Engine,
+}
+
+impl Evaluator {
+    pub fn new(dir: &Path, tag: &str) -> Result<Evaluator> {
+        let art = Artifact::load(dir, tag)?;
+        let data = DatasetBlob::load(dir, &art.dataset)?;
+        Ok(Evaluator { art, data, engine: Engine::cpu()? })
+    }
+
+    /// Accuracy (mean over cfg.repeats noise draws) of one config.
+    pub fn accuracy(&mut self, cfg: &ExperimentConfig) -> Result<AccResult> {
+        // offset cells can use the single-polarity fast-path graph (§Perf)
+        let offset = cfg.cell.kind == crate::noise::CellKind::Offset;
+        let mut exec = ModelExecutor::new_with_variant(
+            &mut self.engine, &self.art, &self.data, cfg.n_eval, cfg.group, offset)?;
+        let mut master = Rng::new(cfg.seed);
+        let repeats = if matches!(cfg.method, Method::Clean) { 1 } else { cfg.repeats };
+        let mut accs = Vec::with_capacity(repeats);
+        for rep in 0..repeats {
+            let mut rng = master.fork(rep as u64 + 1);
+            let model = prepare(&self.art, cfg, &mut rng);
+            accs.push(exec.accuracy(&model)?);
+        }
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
+            / accs.len() as f64;
+        Ok(AccResult { mean, std: var.sqrt(), repeats })
+    }
+
+    /// Algorithm 1's outer loop: grow the protected fraction until the
+    /// noisy accuracy reaches `target` (absolute). Returns
+    /// (fraction, accuracy at that fraction). Steps are coarse (the paper
+    /// pops single channels; we pop ~1%-of-weights chunks) — the crossing
+    /// is what Table 1 reports.
+    pub fn find_protection(
+        &mut self,
+        base: &ExperimentConfig,
+        mk: impl Fn(f64) -> Method,
+        target: f64,
+        max_frac: f64,
+    ) -> Result<(f64, AccResult)> {
+        self.find_protection_step(base, mk, target, max_frac, 0.01)
+    }
+
+    /// `find_protection` with an explicit chunk size (the paper pops one
+    /// channel at a time; benches use 2%-of-weights chunks for speed).
+    pub fn find_protection_step(
+        &mut self,
+        base: &ExperimentConfig,
+        mk: impl Fn(f64) -> Method,
+        target: f64,
+        max_frac: f64,
+        step: f64,
+    ) -> Result<(f64, AccResult)> {
+        let mut frac = self.art.pinned_weights as f64 / self.art.total_weights as f64;
+        loop {
+            let cfg = ExperimentConfig { method: mk(frac), ..base.clone() };
+            let acc = self.accuracy(&cfg)?;
+            if acc.mean >= target || frac >= max_frac {
+                return Ok((frac, acc));
+            }
+            frac += step;
+        }
+    }
+
+    /// Convenience: the clean (no noise/quant/ADC) pipeline anchor.
+    pub fn clean_accuracy(&mut self, n_eval: usize) -> Result<f64> {
+        let cfg = ExperimentConfig {
+            method: Method::Clean,
+            adc_bits: None,
+            quant: None,
+            n_eval,
+            repeats: 1,
+            ..ExperimentConfig::paper_default(Method::Clean)
+        };
+        Ok(self.accuracy(&cfg)?.mean)
+    }
+}

@@ -1,0 +1,8 @@
+//! Accuracy experiments: experiment configs, weight preparation, and the
+//! evaluator driving the PJRT executor (Tables 1-3, Figs 7 & 11).
+
+pub mod evaluator;
+pub mod prepare;
+
+pub use evaluator::Evaluator;
+pub use prepare::{prepare, ExperimentConfig, Method};

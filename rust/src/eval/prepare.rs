@@ -1,0 +1,222 @@
+//! Weight preparation: config → one noisy/quantized `PreparedModel`.
+//!
+//! This is the run-time half of the paper's method. For each layer:
+//!   1. split weights analog/digital (HybridAC channels, IWS scattered
+//!      weights, or nothing),
+//!   2. hybrid-quantize each copy over its occupied range (n1/n2 bits),
+//!   3. inject conductance variation (sigma_a on analog, sigma_d on
+//!      digital; IWS's left-behind zeros keep pedestal noise),
+//!   4. derive the ADC step/clip from the calibration anchor — HybridAC
+//!      shrinks the full-scale with the removed-rows fraction (the paper's
+//!      §5.2 argument for low-resolution ADCs), IWS cannot,
+//!   5. for differential cells, split the analog copy into the two
+//!      polarity crossbars (wa1 − wa2 in the graph).
+
+use crate::noise::{CellKind, CellModel};
+use crate::quantize::{fake_quant_occupied, QuantConfig};
+use crate::runtime::artifact::Artifact;
+use crate::runtime::executor::{LayerInputs, PreparedModel};
+use crate::selection::{IwsMasks, Partition};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Which protection method splits the weights.
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// HybridAC: channel-wise selection at a protected-weight fraction.
+    Hybrid { frac: f64 },
+    /// IWS baseline: individual weights at a protected fraction.
+    Iws { frac: f64 },
+    /// Everything analog, no protection (the "with PV" rows of Table 1).
+    NoProtection,
+    /// Everything analog, no noise, no quant — pipeline sanity anchor.
+    Clean,
+}
+
+/// One experiment point.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub method: Method,
+    /// analog cell model (kind + R-ratio + sigma); paper default offset/50%
+    pub cell: CellModel,
+    /// variation on the digital accelerator's weights (paper: 10%)
+    pub sigma_digital: f64,
+    /// weight quantization; None = keep f32 weights
+    pub quant: Option<QuantConfig>,
+    /// ADC resolution in bits; None = ideal readout
+    pub adc_bits: Option<u32>,
+    /// wordline group (simultaneously activated rows), default 128
+    pub group: usize,
+    pub n_eval: usize,
+    pub repeats: usize,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Paper-default experiment: offset cells, sigma 50%/10%, 8-bit ADC.
+    pub fn paper_default(method: Method) -> Self {
+        ExperimentConfig {
+            method,
+            cell: CellModel::analog_default(),
+            sigma_digital: 0.1,
+            quant: Some(QuantConfig::uniform8()),
+            adc_bits: Some(8),
+            group: 128,
+            n_eval: 500,
+            repeats: 3,
+            seed: 0xD1CE,
+        }
+    }
+
+    pub fn with_adc(mut self, bits: u32) -> Self {
+        self.adc_bits = Some(bits);
+        self
+    }
+
+    pub fn with_quant(mut self, q: QuantConfig) -> Self {
+        self.quant = Some(q);
+        self
+    }
+
+    pub fn with_cell(mut self, cell: CellModel) -> Self {
+        self.cell = cell;
+        self
+    }
+}
+
+/// ADC step/clip for one layer (paper §5.2 + eq. 10 discussion).
+///
+/// The calibration anchor `psum_p999` is the 99.9th-pct |group partial sum|
+/// at group=128 with all rows present. Removing a fraction of rows
+/// uniformly (HybridAC) shrinks the accumulated current — and therefore the
+/// ADC full scale — proportionally; smaller wordline groups shrink it too.
+/// IWS's scattered selection cannot shrink any bit-line's range
+/// (`range_frac = 1`), which is exactly why it needs the full 8 bits.
+pub fn adc_params(
+    psum_anchor: f32,
+    bits: u32,
+    group: usize,
+    range_frac: f64,
+    differential: bool,
+) -> (f32, f32) {
+    let group_frac = (group as f64 / 128.0).min(1.0);
+    let mut clip = psum_anchor as f64 * group_frac * range_frac.clamp(0.05, 1.0);
+    if differential {
+        // each polarity crossbar sees roughly half the dynamic range
+        clip *= 0.5;
+    }
+    let lsb = 2.0 * clip / (1u64 << bits) as f64;
+    (lsb as f32, clip as f32)
+}
+
+/// Build one prepared (noisy, quantized, split) model instance.
+pub fn prepare(art: &Artifact, cfg: &ExperimentConfig, rng: &mut Rng) -> PreparedModel {
+    let partition = match &cfg.method {
+        Method::Hybrid { frac } => Some(Partition::for_fraction(art, *frac)),
+        _ => None,
+    };
+    let iws = match &cfg.method {
+        Method::Iws { frac } => Some(IwsMasks::for_fraction(art, *frac)),
+        _ => None,
+    };
+    let digital_cell = CellModel::relative(cfg.sigma_digital);
+
+    let mut layers = Vec::with_capacity(art.layers.len());
+    for (li, w) in art.weights.iter().enumerate() {
+        let clean = matches!(cfg.method, Method::Clean);
+
+        // 1. split
+        let (mut wa, mut wd, range_frac, noisy_zeros) = match (&partition, &iws) {
+            (Some(p), _) => {
+                let (wa, wd) = p.split_layer(art, li, w);
+                (wa, wd, p.analog_fraction(art, li), false)
+            }
+            (_, Some(m)) => {
+                let (wa, wd) = m.split_layer(art, li, w);
+                // scattered holes: rows survive, ADC range unchanged, and
+                // the holes keep pedestal variation (paper IWS-2)
+                (wa, wd, 1.0, true)
+            }
+            _ => (w.clone(), Tensor::zeros(w.shape.clone()), 1.0, false),
+        };
+
+        // 2. hybrid quantization (over occupied ranges)
+        if let (Some(q), false) = (&cfg.quant, clean) {
+            fake_quant_occupied(&mut wa, q.analog_bits);
+            fake_quant_occupied(&mut wd, q.digital_bits);
+        }
+
+        // 3. conductance variation
+        if !clean {
+            cfg.cell.perturb(&mut wa, rng, noisy_zeros);
+            if cfg.sigma_digital > 0.0 {
+                digital_cell.perturb(&mut wd, rng, false);
+            }
+        }
+
+        // 4. ADC step
+        let (lsb, clip) = match (cfg.adc_bits, clean) {
+            (Some(bits), false) => adc_params(
+                art.psum_p999[li],
+                bits,
+                cfg.group,
+                range_frac,
+                cfg.cell.kind == CellKind::Differential,
+            ),
+            _ => (-1.0, 1.0), // ideal readout
+        };
+
+        // 5. polarity split for differential cells
+        let (wa1, wa2) = if cfg.cell.kind == CellKind::Differential && !clean {
+            let mut pos = wa.clone();
+            let mut neg = wa;
+            for v in pos.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+            for v in neg.data.iter_mut() {
+                *v = (-*v).max(0.0);
+            }
+            (pos, neg)
+        } else {
+            let z = Tensor::zeros(wa.shape.clone());
+            (wa, z)
+        };
+
+        layers.push(LayerInputs {
+            wa1,
+            wa2,
+            wd,
+            bias: art.biases[li].clone(),
+            lsb,
+            clip,
+        });
+    }
+    PreparedModel { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adc_full_scale_shrinks_with_removed_rows() {
+        let (lsb_full, clip_full) = adc_params(100.0, 6, 128, 1.0, false);
+        let (lsb_cut, clip_cut) = adc_params(100.0, 6, 128, 0.5, false);
+        assert!(clip_cut < clip_full);
+        assert!(lsb_cut < lsb_full, "finer steps once rows are removed");
+    }
+
+    #[test]
+    fn adc_lsb_halves_per_bit() {
+        let (lsb6, _) = adc_params(100.0, 6, 128, 1.0, false);
+        let (lsb7, _) = adc_params(100.0, 7, 128, 1.0, false);
+        assert!((lsb6 / lsb7 - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn smaller_groups_shrink_full_scale() {
+        let (_, clip128) = adc_params(100.0, 6, 128, 1.0, false);
+        let (_, clip16) = adc_params(100.0, 6, 16, 1.0, false);
+        assert!((clip16 - clip128 / 8.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,103 @@
+//! ADC power/area scaling with resolution (paper §4 + §5.2, after Saberi
+//! et al.: memory/clock/vref buffer scale linearly with bits, the
+//! capacitive DAC exponentially).
+//!
+//! Anchors: the paper's own tile-level claims — relative to the 8-bit
+//! ISAAC ADC, a 7-bit ADC saves 14% of tile power / 7% of tile area and a
+//! 6-bit saves 29% / 13%; with ADCs at 58% of ISAAC tile power and 31% of
+//! tile area those translate into the per-ADC fractions pinned below.
+//! Between/below the anchors we interpolate with the Saberi split
+//! (linear + exponential term) fitted through the 6- and 8-bit points.
+
+/// Per-ADC power at `bits` resolution relative to the 8-bit reference.
+pub fn power_frac(bits: u32) -> f64 {
+    frac(bits, &POWER_ANCHORS, 0.34)
+}
+
+/// Per-ADC area at `bits` resolution relative to the 8-bit reference.
+pub fn area_frac(bits: u32) -> f64 {
+    frac(bits, &AREA_ANCHORS, 0.40)
+}
+
+/// (bits, fraction-of-8-bit) anchor points derived from §5.2.
+const POWER_ANCHORS: [(u32, f64); 3] = [(8, 1.0), (7, 0.759), (6, 0.502)];
+const AREA_ANCHORS: [(u32, f64); 3] = [(8, 1.0), (7, 0.775), (6, 0.583)];
+
+/// Interpolate on anchors; extrapolate below 6 bits with the Saberi form
+/// f(b) = lin * b/8 + (1 - lin) * 2^(b-8) rescaled to continue smoothly.
+fn frac(bits: u32, anchors: &[(u32, f64)], lin: f64) -> f64 {
+    if bits >= 8 {
+        // above the reference: grow with the same mixed law
+        let saberi = |b: f64| lin * b / 8.0 + (1.0 - lin) * (b - 8.0).exp2();
+        return saberi(bits as f64);
+    }
+    for &(b, f) in anchors {
+        if b == bits {
+            return f;
+        }
+    }
+    // below 6: continue from the 6-bit anchor with the Saberi ratio
+    let base = anchors.last().unwrap().1; // 6-bit fraction
+    let saberi = |b: f64| lin * b / 8.0 + (1.0 - lin) * (b - 8.0).exp2();
+    base * saberi(bits as f64) / saberi(6.0)
+}
+
+/// The ISAAC reference ADC (Table 5): 8-bit, 1.28 GS/s, 2 mW, 0.0012 mm^2
+/// per ADC (8 per MCU totalling 16 mW / 0.0096 mm^2).
+pub const REF_ADC_POWER_MW: f64 = 2.0;
+pub const REF_ADC_AREA_MM2: f64 = 0.0012;
+
+pub fn adc_power_mw(bits: u32) -> f64 {
+    REF_ADC_POWER_MW * power_frac(bits)
+}
+
+pub fn adc_area_mm2(bits: u32) -> f64 {
+    REF_ADC_AREA_MM2 * area_frac(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_exact() {
+        assert_eq!(power_frac(8), 1.0);
+        assert!((power_frac(7) - 0.759).abs() < 1e-9);
+        assert!((power_frac(6) - 0.502).abs() < 1e-9);
+        assert!((area_frac(6) - 0.583).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        for b in 2..8u32 {
+            assert!(power_frac(b) < power_frac(b + 1), "power at {b}");
+            assert!(area_frac(b) < area_frac(b + 1), "area at {b}");
+        }
+    }
+
+    #[test]
+    fn four_bit_is_much_cheaper() {
+        assert!(power_frac(4) < 0.35);
+        assert!(area_frac(4) < 0.45);
+    }
+
+    #[test]
+    fn paper_tile_savings_reproduced() {
+        // ISAAC tile: 329.81 mW with 12 MCU * 16 mW of ADC (58%); area
+        // 0.37 mm^2 with 12 * 0.0096 of ADC (31%).  7-bit should save ~14%
+        // of tile power and ~7% of tile area; 6-bit ~29% / ~13% (§5.2).
+        let tile_p = 329.81;
+        let adc_p = 12.0 * 16.0;
+        let save7 = adc_p * (1.0 - power_frac(7)) / tile_p;
+        let save6 = adc_p * (1.0 - power_frac(6)) / tile_p;
+        assert!((save7 - 0.14).abs() < 0.01, "7-bit power saving {save7}");
+        assert!((save6 - 0.29).abs() < 0.01, "6-bit power saving {save6}");
+
+        let tile_a = 0.37;
+        let adc_a = 12.0 * 0.0096;
+        let save7a = adc_a * (1.0 - area_frac(7)) / tile_a;
+        let save6a = adc_a * (1.0 - area_frac(6)) / tile_a;
+        assert!((save7a - 0.07).abs() < 0.01, "7-bit area saving {save7a}");
+        assert!((save6a - 0.13).abs() < 0.01, "6-bit area saving {save6a}");
+    }
+}

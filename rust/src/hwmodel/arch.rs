@@ -1,0 +1,270 @@
+//! Architecture zoo (Tables 4, 6, 7): HybridAC and eleven baselines.
+//!
+//! Composed architectures (HybridAC, HybridACDi, Ideal-ISAAC, IWS-1/2,
+//! SRE, FORMS, SIGMA) are built bottom-up from the component DB; external
+//! accelerators (PUMA, DaDianNao, TPU, WAX, SIMBA) are spec constants
+//! taken from their publications as the paper itself did.
+//!
+//! **Throughput model** (documented in DESIGN.md): analog architectures
+//! are ADC-bandwidth-limited —
+//!   `GOPS/MCU = channels × rate_gsps × rows × 2 / input_phases × DERATE`
+//! with a single global DERATE calibrated so Ideal-ISAAC lands exactly on
+//! the paper's stated 1912 GOPS/mm² peak; every other architecture then
+//! follows structurally (no per-arch throughput fudging except the
+//! explicitly-noted SRE sparsity and FORMS polarization factors).
+
+use super::components::{self, total};
+use super::tile::{ChipModel, ChipTotals, TileModel};
+
+/// Ideal-ISAAC anchor efficiencies (paper §5.4.2).
+pub const ISAAC_AREA_EFF: f64 = 1912.0; // GOPS / mm^2
+pub const ISAAC_POWER_EFF: f64 = 2510.0; // GOPS / W
+
+/// ADC-bandwidth throughput of one MCU before derating (GOPS).
+fn raw_mcu_gops(channels: f64, rate_gsps: f64, rows: f64, phases: f64) -> f64 {
+    channels * rate_gsps * rows * 2.0 / phases
+}
+
+/// Global derate calibrated on Ideal-ISAAC (see module docs).
+pub fn derate() -> f64 {
+    let isaac = isaac_chip();
+    let t = isaac.totals();
+    let raw = raw_mcu_gops(8.0, 1.28, 128.0, 8.0)
+        * (isaac.tile.mcus_per_tile * isaac.n_tiles) as f64;
+    ISAAC_AREA_EFF * t.area_mm2 / raw
+}
+
+pub fn isaac_chip() -> ChipModel {
+    ChipModel {
+        name: "Ideal-ISAAC".into(),
+        tile: TileModel::isaac(),
+        n_tiles: 168,
+        digital: vec![],
+        extra: vec![],
+    }
+}
+
+pub fn hybridac_chip() -> ChipModel {
+    ChipModel {
+        name: "HybridAC".into(),
+        tile: TileModel::hybridac(),
+        n_tiles: 148,
+        digital: components::hybridac_digital_chip(),
+        extra: vec![],
+    }
+}
+
+pub fn hybridac_di_chip() -> ChipModel {
+    ChipModel {
+        name: "HybridACDi".into(),
+        tile: TileModel::hybridac_differential(),
+        n_tiles: 148,
+        digital: components::hybridac_digital_chip(),
+        extra: vec![],
+    }
+}
+
+pub fn iws1_chip() -> ChipModel {
+    ChipModel {
+        name: "IWS-1".into(),
+        tile: TileModel::isaac(),
+        n_tiles: 1,
+        digital: components::sigma_chip(),
+        extra: vec![],
+    }
+}
+
+pub fn iws2_chip() -> ChipModel {
+    // 6 MCUs/tile (Table 6), 142 tiles + the zero-hole crossbar overhead
+    let mut tile = TileModel::isaac();
+    tile.mcus_per_tile = 6;
+    ChipModel {
+        name: "IWS-2".into(),
+        tile,
+        n_tiles: 142,
+        digital: components::sigma_chip(),
+        extra: vec![],
+    }
+}
+
+pub fn sre_chip() -> ChipModel {
+    ChipModel {
+        name: "SRE".into(),
+        tile: TileModel::isaac(),
+        n_tiles: 168,
+        digital: vec![],
+        extra: vec![components::Component::new("index overhead", 1.0, 28.2, 4.23)],
+    }
+}
+
+pub fn forms_chip() -> ChipModel {
+    ChipModel {
+        name: "FORMS".into(),
+        tile: TileModel::isaac(),
+        n_tiles: 168,
+        digital: vec![],
+        extra: vec![],
+    }
+}
+
+/// Full architecture descriptor for the efficiency comparisons.
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: String,
+    pub peak_gops: f64,
+    pub totals: ChipTotals,
+    /// GOPS of the digital side alone (load balancing, §5.4.2)
+    pub digital_gops: f64,
+}
+
+impl ArchSpec {
+    pub fn area_eff(&self) -> f64 {
+        self.peak_gops / self.totals.area_mm2
+    }
+
+    /// GOPS per W.
+    pub fn power_eff(&self) -> f64 {
+        self.peak_gops / (self.totals.power_mw / 1000.0)
+    }
+
+    pub fn norm_area_eff(&self, isaac: &ArchSpec) -> f64 {
+        self.area_eff() / isaac.area_eff()
+    }
+
+    pub fn norm_power_eff(&self, isaac: &ArchSpec) -> f64 {
+        self.power_eff() / isaac.power_eff()
+    }
+}
+
+/// Digital-accelerator throughput: 152 WAX-like units, 24 MACs each at
+/// 1 GHz; the cycle simulator (`digital::`) measures ~1/3 sustained
+/// utilization on the Fig.-5 dataflow, the same order as the paper's
+/// 434 GOPS/mm² (~0.41 of peak).
+pub fn hybridac_digital_gops() -> f64 {
+    let util = crate::digital::sustained_utilization();
+    components::DIGITAL_UNITS * 24.0 * 2.0 * util
+}
+
+fn composed(chip: ChipModel, mcu_gops: f64, digital_gops: f64) -> ArchSpec {
+    let totals = chip.totals();
+    let mcus = (chip.tile.mcus_per_tile * chip.n_tiles) as f64;
+    ArchSpec {
+        name: chip.name.clone(),
+        peak_gops: mcus * mcu_gops + digital_gops,
+        totals,
+        digital_gops,
+    }
+}
+
+/// External accelerator (spec constants from its publication, 32 nm-scaled
+/// as in the paper): (name, peak GOPS, area mm^2, power W).
+fn external(name: &str, gops: f64, area: f64, power_w: f64) -> ArchSpec {
+    ArchSpec {
+        name: name.into(),
+        peak_gops: gops,
+        totals: ChipTotals {
+            power_mw: power_w * 1000.0,
+            area_mm2: area,
+            analog_power_mw: 0.0,
+            analog_area_mm2: 0.0,
+            digital_power_mw: power_w * 1000.0,
+            digital_area_mm2: area,
+        },
+        digital_gops: gops,
+    }
+}
+
+/// All Table-4 rows, in paper order.
+pub fn all_architectures() -> Vec<ArchSpec> {
+    let d = derate();
+    let isaac_mcu = raw_mcu_gops(8.0, 1.28, 128.0, 8.0) * d;
+    // HybridAC: 2 effective 6-bit conversion channels per crossbar (16/MCU)
+    // at 1.2 GS/s — the Table-5 "32 ADC" budget spread over 8 crossbars.
+    let hybrid_mcu = raw_mcu_gops(16.0, 1.2, 128.0, 8.0) * d;
+    // Differential variant: a 4-bit SAR completes in ~2/3 the cycles of the
+    // 6-bit converter at the same clock -> faster effective channel rate.
+    let hybrid_di_mcu = raw_mcu_gops(16.0, 1.5, 128.0, 8.0) * d;
+    // SRE activates only 16 wordlines; 8-bit operands leave ~1.6x sparsity
+    // speedup (paper §5.4.3 notes the reduced exploitation at 8 bits).
+    let sre_mcu = raw_mcu_gops(8.0, 1.28, 16.0, 8.0) * d * 1.6;
+    // FORMS polarized rows: activation-efficiency factors fit to its
+    // published 8/16-bit operating points.
+    let forms8_mcu = isaac_mcu * 0.565;
+    let forms16_mcu = isaac_mcu * 0.806;
+    let dig = hybridac_digital_gops();
+    // SIGMA: 155 GOPS/mm^2 published area efficiency (§5.4.1).
+    let sigma_gops = 155.0 * total(&components::sigma_chip()).1;
+
+    vec![
+        composed(isaac_chip(), isaac_mcu, 0.0),
+        external("PUMA", 120_400.0, 90.0, 60.7),
+        composed(sre_chip(), sre_mcu, 0.0),
+        {
+            let mut a = composed(forms_chip(), forms8_mcu, 0.0);
+            a.name = "FORMS8(not pruned)".into();
+            a
+        },
+        {
+            let mut a = composed(forms_chip(), forms16_mcu, 0.0);
+            a.name = "FORMS16(not pruned)".into();
+            a
+        },
+        external("DaDianNao", 16_830.0, 67.7, 14.9), // MICRO'14, 28->32nm scaled
+        external("TPU", 50_490.0, 330.0, 41.9),      // TPUv1 8-bit, derated
+        external("WAX", 2_210.0, 3.5, 0.3826),       // MICRO'19 wire-aware
+        external("SIMBA", 14_688.0, 16.0, 4.876),    // MCM mid-range point
+        composed(iws1_chip(), isaac_mcu, sigma_gops),
+        composed(iws2_chip(), isaac_mcu, sigma_gops),
+        composed(hybridac_chip(), hybrid_mcu, dig),
+        composed(hybridac_di_chip(), hybrid_di_mcu, dig),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<ArchSpec> {
+    all_architectures().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isaac_hits_anchor_exactly() {
+        let isaac = by_name("Ideal-ISAAC").unwrap();
+        assert!((isaac.area_eff() - ISAAC_AREA_EFF).abs() < 1.0);
+    }
+
+    #[test]
+    fn hybridac_beats_isaac_on_both_axes() {
+        let archs = all_architectures();
+        let isaac = &archs[0];
+        let hy = archs.iter().find(|a| a.name == "HybridAC").unwrap();
+        let di = archs.iter().find(|a| a.name == "HybridACDi").unwrap();
+        assert!(hy.norm_area_eff(isaac) > 1.2, "{}", hy.norm_area_eff(isaac));
+        assert!(hy.norm_power_eff(isaac) > 1.4, "{}", hy.norm_power_eff(isaac));
+        // differential variant improves further (paper: 1.75 / 2.5)
+        assert!(di.norm_area_eff(isaac) > hy.norm_area_eff(isaac));
+        assert!(di.norm_power_eff(isaac) > hy.norm_power_eff(isaac));
+    }
+
+    #[test]
+    fn iws_variants_trail_isaac() {
+        let archs = all_architectures();
+        let isaac = &archs[0];
+        for name in ["IWS-1", "IWS-2"] {
+            let a = archs.iter().find(|a| a.name == name).unwrap();
+            assert!(a.norm_area_eff(isaac) < 0.6, "{name} {}", a.norm_area_eff(isaac));
+        }
+    }
+
+    #[test]
+    fn headline_area_power_improvements() {
+        // paper: HybridAC improves area 28% and power 57% over ISAAC
+        let isaac = by_name("Ideal-ISAAC").unwrap().totals;
+        let hy = by_name("HybridAC").unwrap().totals;
+        let area_gain = 1.0 - hy.area_mm2 / isaac.area_mm2;
+        let power_gain = 1.0 - hy.power_mw / isaac.power_mw;
+        assert!(area_gain > 0.15 && area_gain < 0.40, "area gain {area_gain}");
+        assert!(power_gain > 0.40 && power_gain < 0.65, "power gain {power_gain}");
+    }
+}

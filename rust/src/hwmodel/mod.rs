@@ -1,0 +1,11 @@
+//! Hardware model: the paper's "in-house simulator" — component power/area
+//! database (Table 5), ADC resolution scaling (§5.2), tile/chip composition
+//! (Tables 6/7), and the architecture zoo with peak efficiencies (Table 4).
+
+pub mod adc;
+pub mod arch;
+pub mod components;
+pub mod tile;
+
+pub use arch::{all_architectures, by_name, ArchSpec};
+pub use tile::{ChipModel, ChipTotals, TileModel};

@@ -1,0 +1,154 @@
+//! Tile and chip composition: periphery + MCUs → tile; tiles + links +
+//! digital accelerator → chip (Tables 5-7).
+
+use super::components::{self, total, Component};
+
+/// One analog tile: shared periphery + `mcus` in-situ MAC units.
+#[derive(Clone, Debug)]
+pub struct TileModel {
+    pub name: &'static str,
+    pub periphery: Vec<Component>,
+    pub mcu: Vec<Component>,
+    pub mcus_per_tile: usize,
+}
+
+impl TileModel {
+    pub fn hybridac() -> Self {
+        TileModel {
+            name: "HybridAC",
+            periphery: components::hybridac_tile_periphery(),
+            mcu: components::hybridac_mcu(),
+            mcus_per_tile: 8,
+        }
+    }
+
+    pub fn isaac() -> Self {
+        TileModel {
+            name: "Ideal-ISAAC",
+            periphery: components::isaac_tile_periphery(),
+            mcu: components::isaac_mcu(),
+            mcus_per_tile: 12,
+        }
+    }
+
+    /// ISAAC-style tile with a different ADC resolution (Fig.-8 variants).
+    pub fn isaac_with_adc(bits: u32) -> Self {
+        TileModel {
+            name: "ISAAC-var",
+            periphery: components::isaac_tile_periphery(),
+            mcu: components::mcu_components(bits, 8.0, 1.0),
+            mcus_per_tile: 12,
+        }
+    }
+
+    /// HybridAC differential-cell variant: 4-bit ADCs, doubled crossbars.
+    pub fn hybridac_differential() -> Self {
+        let mut mcu = components::mcu_components(4, 32.0, 0.2989);
+        for c in mcu.iter_mut() {
+            if c.name == "crossbar 128x128 2b" {
+                c.count *= 2.0; // positive + negative arrays
+            }
+            if c.name == "sample-and-hold" {
+                c.unit_power_mw = 0.007 / 1024.0;
+                c.unit_area_mm2 = 0.00003 / 1024.0;
+            }
+        }
+        TileModel {
+            name: "HybridACDi",
+            periphery: components::hybridac_tile_periphery(),
+            mcu,
+            mcus_per_tile: 8,
+        }
+    }
+
+    pub fn mcu_power_mw(&self) -> f64 {
+        total(&self.mcu).0
+    }
+
+    pub fn mcu_area_mm2(&self) -> f64 {
+        total(&self.mcu).1
+    }
+
+    /// (power mW, area mm^2) of one full tile.
+    pub fn tile_totals(&self) -> (f64, f64) {
+        let (pp, pa) = total(&self.periphery);
+        (
+            pp + self.mcus_per_tile as f64 * self.mcu_power_mw(),
+            pa + self.mcus_per_tile as f64 * self.mcu_area_mm2(),
+        )
+    }
+
+    pub fn crossbars_per_tile(&self) -> usize {
+        self.mcus_per_tile * 8
+    }
+}
+
+/// Whole accelerator chip: analog tiles + HyperTransport + optional
+/// digital companion chip.
+#[derive(Clone, Debug)]
+pub struct ChipModel {
+    pub name: String,
+    pub tile: TileModel,
+    pub n_tiles: usize,
+    pub digital: Vec<Component>,
+    /// extra fixed overheads (e.g. SRE's index decoding)
+    pub extra: Vec<Component>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChipTotals {
+    pub analog_power_mw: f64,
+    pub analog_area_mm2: f64,
+    pub digital_power_mw: f64,
+    pub digital_area_mm2: f64,
+    pub power_mw: f64,
+    pub area_mm2: f64,
+}
+
+impl ChipModel {
+    pub fn totals(&self) -> ChipTotals {
+        let (tp, ta) = self.tile.tile_totals();
+        let ht = components::hypertransport();
+        let (ep, ea) = total(&self.extra);
+        let analog_p = tp * self.n_tiles as f64 + ht.power_mw() + ep;
+        let analog_a = ta * self.n_tiles as f64 + ht.area_mm2() + ea;
+        let (dp, da) = total(&self.digital);
+        ChipTotals {
+            analog_power_mw: analog_p,
+            analog_area_mm2: analog_a,
+            digital_power_mw: dp,
+            digital_area_mm2: da,
+            power_mw: analog_p + dp,
+            area_mm2: analog_a + da,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybridac_tile_near_table6() {
+        let (p, a) = TileModel::hybridac().tile_totals();
+        // Table 6: 170.655 mW, 0.24 mm^2
+        assert!((p - 170.655).abs() / 170.655 < 0.10, "tile power {p}");
+        assert!((a - 0.24).abs() / 0.24 < 0.10, "tile area {a}");
+    }
+
+    #[test]
+    fn isaac_tile_near_table7() {
+        let (p, a) = TileModel::isaac().tile_totals();
+        // Table 7: 329.81 mW, 0.37 mm^2
+        assert!((p - 329.81).abs() / 329.81 < 0.12, "tile power {p}");
+        assert!((a - 0.37).abs() / 0.37 < 0.15, "tile area {a}");
+    }
+
+    #[test]
+    fn differential_tile_has_more_crossbar_but_less_adc() {
+        let hy = TileModel::hybridac().tile_totals();
+        let di = TileModel::hybridac_differential().tile_totals();
+        // 4-bit ADCs save more than the doubled crossbars cost
+        assert!(di.0 < hy.0, "{} vs {}", di.0, hy.0);
+    }
+}

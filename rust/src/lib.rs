@@ -1,0 +1,41 @@
+//! # HybridAC — algorithm/hardware co-design for mixed-signal DNN accelerators
+//!
+//! Reproduction of Behnam, Kamal & Mukhopadhyay, *"An Algorithm-Hardware
+//! Co-design Framework to Overcome Imperfections of Mixed-signal DNN
+//! Accelerators"* (2022), as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** (build time): a Pallas crossbar kernel — wordline-group tiled
+//!   matmul with per-group ADC quantization (`python/compile/kernels/`).
+//! * **L2** (build time): five scaled DNN families whose inference graphs
+//!   take weights as runtime inputs; lowered once to HLO text.
+//! * **L3** (this crate): the coordinator — loads artifacts via PJRT,
+//!   injects conductance variation, applies hybrid quantization and
+//!   channel-wise selection, evaluates accuracy, and simulates the
+//!   area/power/energy/timing of HybridAC and eleven baseline
+//!   architectures.
+//!
+//! Start with [`runtime::Artifact`] + [`eval::Evaluator`] for accuracy
+//! experiments and [`hwmodel`] for the architecture studies; `examples/`
+//! shows the public API end to end.
+
+pub mod analog;
+pub mod benchkit;
+pub mod coordinator;
+pub mod digital;
+pub mod eval;
+pub mod hwmodel;
+pub mod mapping;
+pub mod noise;
+pub mod quantize;
+pub mod report;
+pub mod runtime;
+pub mod selection;
+pub mod tensor;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("HYBRIDAC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

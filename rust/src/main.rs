@@ -1,0 +1,263 @@
+//! `hybridac` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   info                         list artifacts + platform
+//!   run     --model TAG          clean + noisy + protected accuracy
+//!   sweep   --model TAG          protection-fraction sweep (Table 1 rows)
+//!   adc     --model TAG          ADC-resolution sweep (Table 2 rows)
+//!   hw                           architecture power/area/efficiency summary
+//!   select  --model TAG          Algorithm-1 loop: find the %weights needed
+//!   serve   --model TAG          batched-inference demo server (self-driven)
+
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+use hybridac::coordinator::{run_experiment, BatchServer};
+use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::hwmodel::all_architectures;
+use hybridac::report;
+use hybridac::runtime::DatasetBlob;
+use hybridac::util::cli::Args;
+
+const FLAGS: &[&str] = &["model", "repeats", "n-eval", "frac", "adc", "target", "requests"];
+const SWITCHES: &[&str] = &["differential", "verbose"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), FLAGS, SWITCHES)?;
+    match args.subcommand.as_deref() {
+        Some("info") => info(),
+        Some("run") => run(&args),
+        Some("sweep") => sweep(&args),
+        Some("adc") => adc(&args),
+        Some("hw") => hw(),
+        Some("select") => select(&args),
+        Some("serve") => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: hybridac <info|run|sweep|adc|hw|select|serve> [--model TAG] ...\n\
+                 see README.md; artifacts must be built first (`make artifacts`)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn model_tag(args: &Args) -> String {
+    args.get_or("model", "resnet18m_c10s")
+}
+
+fn base_cfg(args: &Args, method: Method) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::paper_default(method);
+    cfg.repeats = args.get_usize("repeats", 3)?;
+    cfg.n_eval = args.get_usize("n-eval", 500)?;
+    if args.has("differential") {
+        cfg.cell = hybridac::noise::CellModel::differential(0.5);
+    }
+    if let Some(bits) = args.get("adc") {
+        cfg.adc_bits = if bits == "none" { None } else { Some(bits.parse()?) };
+    }
+    Ok(cfg)
+}
+
+fn info() -> Result<()> {
+    let dir = hybridac::artifacts_dir();
+    if !dir.exists() {
+        bail!("artifacts directory {} missing — run `make artifacts`", dir.display());
+    }
+    let engine = hybridac::runtime::Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let mut tags: Vec<String> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            e.file_name()
+                .to_str()?
+                .strip_suffix(".meta.json")
+                .map(str::to_string)
+        })
+        .collect();
+    tags.sort();
+    let mut rows = Vec::new();
+    for tag in &tags {
+        let art = hybridac::runtime::Artifact::load(&dir, tag)?;
+        rows.push(vec![
+            tag.clone(),
+            art.family,
+            art.dataset,
+            art.layers.len().to_string(),
+            art.total_weights.to_string(),
+            format!("{:.2}%", 100.0 * art.clean_test_acc),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            "built artifacts",
+            &["tag", "family", "dataset", "layers", "weights", "clean acc"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let tag = model_tag(args);
+    let dir = hybridac::artifacts_dir();
+    let frac = args.get_f64("frac", 0.16)?;
+    let batch = 250;
+    println!("model {tag}: clean / unprotected / IWS / HybridAC @ {:.0}%", frac * 100.0);
+    for method in [
+        Method::Clean,
+        Method::NoProtection,
+        Method::Iws { frac },
+        Method::Hybrid { frac },
+    ] {
+        let cfg = base_cfg(args, method.clone())?;
+        let rep = run_experiment(&dir, &tag, &cfg, batch)?;
+        println!(
+            "  {:<13} acc {:>7} ± {:>6}  exec {:>10}  energy {:>10}  xbars {:>5}",
+            rep.method,
+            report::pct(rep.accuracy_mean),
+            report::pct(rep.accuracy_std),
+            report::si_time(rep.exec_seconds),
+            report::si_energy(rep.energy_j),
+            rep.crossbars
+        );
+    }
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let tag = model_tag(args);
+    let dir = hybridac::artifacts_dir();
+    let mut ev = Evaluator::new(&dir, &tag)?;
+    let mut rows = Vec::new();
+    for pct in [0.0, 0.02, 0.04, 0.08, 0.12, 0.16, 0.20] {
+        let hy = ev.accuracy(&base_cfg(args, Method::Hybrid { frac: pct })?)?;
+        let iws = ev.accuracy(&base_cfg(args, Method::Iws { frac: pct })?)?;
+        rows.push(vec![
+            format!("{:.0}%", pct * 100.0),
+            report::pct(hy.mean),
+            report::pct(iws.mean),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &format!("{tag}: accuracy vs protected weights (sigma=50%)"),
+            &["%protected", "HybridAC", "IWS"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn adc(args: &Args) -> Result<()> {
+    let tag = model_tag(args);
+    let dir = hybridac::artifacts_dir();
+    let mut ev = Evaluator::new(&dir, &tag)?;
+    let frac = args.get_f64("frac", 0.16)?;
+    let mut rows = Vec::new();
+    for bits in [8u32, 7, 6, 4] {
+        let hy = ev.accuracy(&base_cfg(args, Method::Hybrid { frac })?.with_adc(bits))?;
+        let iws = ev.accuracy(&base_cfg(args, Method::Iws { frac })?.with_adc(bits))?;
+        rows.push(vec![
+            format!("{bits}-bit"),
+            report::pct(hy.mean),
+            report::pct(iws.mean),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &format!("{tag}: accuracy vs ADC resolution"),
+            &["ADC", "HybridAC", "IWS"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn hw() -> Result<()> {
+    let archs = all_architectures();
+    let isaac = archs[0].clone();
+    let rows: Vec<Vec<String>> = archs
+        .iter()
+        .map(|a| {
+            vec![
+                a.name.clone(),
+                format!("{:.1}", a.totals.power_mw / 1000.0),
+                format!("{:.1}", a.totals.area_mm2),
+                format!("{:.0}", a.peak_gops),
+                format!("{:.2}", a.norm_area_eff(&isaac)),
+                format!("{:.2}", a.norm_power_eff(&isaac)),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            "architectures (normalized to Ideal-ISAAC)",
+            &["architecture", "power W", "area mm2", "peak GOPS", "area-eff", "power-eff"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn select(args: &Args) -> Result<()> {
+    let tag = model_tag(args);
+    let dir = hybridac::artifacts_dir();
+    let mut ev = Evaluator::new(&dir, &tag)?;
+    let clean = ev.art.clean_test_acc;
+    let target_drop = args.get_f64("target", 0.01)?;
+    let base = base_cfg(args, Method::Hybrid { frac: 0.0 })?;
+    let (frac, acc) = ev.find_protection(
+        &base,
+        |f| Method::Hybrid { frac: f },
+        clean - target_drop,
+        0.40,
+    )?;
+    println!(
+        "{tag}: protect {:.1}% of weights -> acc {} (clean {})",
+        frac * 100.0,
+        report::pct(acc.mean),
+        report::pct(clean)
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let tag = model_tag(args);
+    let dir = hybridac::artifacts_dir();
+    let n_requests = args.get_usize("requests", 600)?;
+    let cfg = base_cfg(args, Method::Hybrid { frac: 0.16 })?;
+    let data = {
+        let art = hybridac::runtime::Artifact::load(&dir, &tag)?;
+        DatasetBlob::load(&dir, &art.dataset)?
+    };
+    let server = BatchServer::start(dir, tag.clone(), cfg, Duration::from_millis(20))?;
+    let per = data.image_elems();
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::new();
+    let mut hits = 0usize;
+    for i in 0..n_requests {
+        let idx = i % data.n;
+        receivers.push((idx, server.submit(data.images[idx * per..(idx + 1) * per].to_vec())));
+    }
+    for (idx, rx) in receivers {
+        let pred = rx.recv()?;
+        hits += (pred == data.labels[idx]) as usize;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {n_requests} requests in {:.2}s ({:.0} req/s), acc {:.2}%, \
+         mean latency {:.1} ms, p99 {:.1} ms, mean batch {:.0}",
+        dt.as_secs_f64(),
+        n_requests as f64 / dt.as_secs_f64(),
+        100.0 * hits as f64 / n_requests as f64,
+        server.metrics.mean_latency_ms(),
+        server.metrics.latency_percentile_ms(0.99),
+        server.metrics.mean_batch_occupancy()
+    );
+    server.shutdown()
+}

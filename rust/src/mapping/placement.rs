@@ -1,0 +1,224 @@
+//! Tile placement (§3.3): which tiles hold which layer's crossbars.
+//!
+//! "One or several tile(s) are programmed to store the weights of each
+//! layer ... tiles are connected in a pipelined manner. Except for the
+//! first tile and the last three tiles, which are dedicated to digital
+//! accelerators, the remaining tiles have both digital and analog units.
+//! In case one tile cannot accommodate the whole weights of a layer, the
+//! remainder is placed in the tile next to it."
+//!
+//! This module materializes that policy into an explicit placement the
+//! coordinator (and the Fig. 9/10 pipeline model) can reason about, and
+//! checks the invariants: every crossbar placed exactly once, layer order
+//! preserved (pipeline), capacity respected.
+
+use super::Mapping;
+
+/// Reserved tiles (paper §3.2: first + third-last dedicated to digital).
+pub const RESERVED_HEAD_TILES: usize = 1;
+pub const RESERVED_TAIL_TILES: usize = 3;
+
+/// One layer's slice on one tile.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Slice {
+    pub layer: usize,
+    pub tile: usize,
+    pub crossbars: usize,
+}
+
+/// A full placement of a mapped model onto the tile pipeline.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub slices: Vec<Slice>,
+    pub tiles_used: usize,
+    pub xbars_per_tile: usize,
+    /// analog tiles available after the digital reservations
+    pub analog_tiles: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlacementError {
+    /// model needs more crossbars than the chip owns
+    InsufficientCapacity { needed: usize, available: usize },
+}
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementError::InsufficientCapacity { needed, available } => write!(
+                f,
+                "placement needs {needed} crossbars but only {available} are available"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// Greedy in-order placement: walk layers in pipeline order, fill tiles
+/// left to right, spill a layer's remainder onto the next tile (§3.3).
+pub fn place(
+    mapping: &Mapping,
+    n_tiles: usize,
+    xbars_per_tile: usize,
+) -> Result<Placement, PlacementError> {
+    let analog_tiles = n_tiles.saturating_sub(RESERVED_HEAD_TILES + RESERVED_TAIL_TILES);
+    let capacity = analog_tiles * xbars_per_tile;
+    let needed: usize = mapping.layers.iter().map(|l| l.crossbars + l.overhead_crossbars).sum();
+    if needed > capacity {
+        return Err(PlacementError::InsufficientCapacity { needed, available: capacity });
+    }
+    let mut slices = Vec::new();
+    let mut tile = RESERVED_HEAD_TILES; // tile 0 is a digital tile
+    let mut free = xbars_per_tile;
+    for (li, ml) in mapping.layers.iter().enumerate() {
+        let mut remaining = ml.crossbars + ml.overhead_crossbars;
+        while remaining > 0 {
+            if free == 0 {
+                tile += 1;
+                free = xbars_per_tile;
+            }
+            let take = remaining.min(free);
+            slices.push(Slice { layer: li, tile, crossbars: take });
+            free -= take;
+            remaining -= take;
+        }
+    }
+    Ok(Placement {
+        slices,
+        tiles_used: tile + 1 - RESERVED_HEAD_TILES,
+        xbars_per_tile,
+        analog_tiles,
+    })
+}
+
+impl Placement {
+    /// Crossbars placed per tile (occupancy histogram).
+    pub fn occupancy(&self) -> Vec<usize> {
+        let max_tile = self.slices.iter().map(|s| s.tile).max().unwrap_or(0);
+        let mut occ = vec![0usize; max_tile + 1];
+        for s in &self.slices {
+            occ[s.tile] += s.crossbars;
+        }
+        occ
+    }
+
+    /// Tiles a layer spans (pipeline stage width).
+    pub fn tiles_of_layer(&self, layer: usize) -> Vec<usize> {
+        let mut t: Vec<usize> = self
+            .slices
+            .iter()
+            .filter(|s| s.layer == layer)
+            .map(|s| s.tile)
+            .collect();
+        t.dedup();
+        t
+    }
+
+    /// Mean tile occupancy — the utilization the paper's uniform selection
+    /// is meant to keep high (§3.2).
+    pub fn utilization(&self) -> f64 {
+        let occ = self.occupancy();
+        let used: Vec<&usize> = occ.iter().filter(|&&o| o > 0).collect();
+        if used.is_empty() {
+            return 0.0;
+        }
+        used.iter().map(|&&o| o as f64).sum::<f64>()
+            / (used.len() as f64 * self.xbars_per_tile as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::AnalogLayer;
+    use crate::digital::LayerWork;
+    use crate::mapping::{Mapping, MappedLayer};
+
+    fn mapping(xbars: &[usize]) -> Mapping {
+        let layers = xbars
+            .iter()
+            .enumerate()
+            .map(|(i, &xb)| MappedLayer {
+                name: format!("l{i}"),
+                analog: AnalogLayer {
+                    rows: 128,
+                    cols_weights: 32,
+                    out_pixels: 64,
+                    weight_bits: 8,
+                    act_bits: 8,
+                },
+                digital: LayerWork { macs: 0, weights: 0, activations: 0 },
+                crossbars: xb,
+                overhead_crossbars: 0,
+            })
+            .collect();
+        Mapping {
+            layers,
+            total_crossbars: xbars.iter().sum(),
+            total_overhead_crossbars: 0,
+            digital_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn every_crossbar_placed_exactly_once() {
+        let m = mapping(&[5, 100, 63, 1, 31]);
+        let p = place(&m, 148, 64).unwrap();
+        for (li, ml) in m.layers.iter().enumerate() {
+            let placed: usize = p
+                .slices
+                .iter()
+                .filter(|s| s.layer == li)
+                .map(|s| s.crossbars)
+                .sum();
+            assert_eq!(placed, ml.crossbars, "layer {li}");
+        }
+    }
+
+    #[test]
+    fn capacity_respected_and_order_preserved() {
+        let m = mapping(&[70, 70, 70]);
+        let p = place(&m, 10, 64).unwrap();
+        for occ in p.occupancy() {
+            assert!(occ <= 64);
+        }
+        // pipeline order: a later layer never starts on an earlier tile
+        // than a previous layer's first slice
+        let first_tile =
+            |li: usize| p.slices.iter().find(|s| s.layer == li).unwrap().tile;
+        assert!(first_tile(0) <= first_tile(1));
+        assert!(first_tile(1) <= first_tile(2));
+    }
+
+    #[test]
+    fn spillover_spans_adjacent_tiles() {
+        let m = mapping(&[100]);
+        let p = place(&m, 148, 64).unwrap();
+        let tiles = p.tiles_of_layer(0);
+        assert_eq!(tiles.len(), 2);
+        assert_eq!(tiles[1], tiles[0] + 1, "remainder goes to the next tile");
+    }
+
+    #[test]
+    fn head_tiles_reserved_for_digital() {
+        let m = mapping(&[4]);
+        let p = place(&m, 148, 64).unwrap();
+        assert!(p.slices.iter().all(|s| s.tile >= RESERVED_HEAD_TILES));
+    }
+
+    #[test]
+    fn overflow_is_an_error() {
+        let m = mapping(&[10_000]);
+        let err = place(&m, 10, 64).unwrap_err();
+        assert!(matches!(err, PlacementError::InsufficientCapacity { .. }));
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let m = mapping(&[30, 31, 64, 2]);
+        let p = place(&m, 148, 64).unwrap();
+        let u = p.utilization();
+        assert!(u > 0.0 && u <= 1.0, "{u}");
+    }
+}

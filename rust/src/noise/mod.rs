@@ -1,0 +1,196 @@
+//! Conductance-variation model (paper eq. 9 + §5.2/§5.4.4).
+//!
+//! Device variation is N(0, sigma*g) per ReRAM cell; what the algorithm
+//! sees is that noise referred back to the weight domain, which depends on
+//! the weight→conductance mapping:
+//!
+//! * **offset-subtraction** cells (ISAAC-style, `HybAC`): one crossbar with
+//!   g = g_off + (w - w_min)*slope; the constant pedestal under every
+//!   weight is hit by variation too, so small R-ratios (g_off close to
+//!   g_on) hurt — the paper's Fig.-11 argument.
+//! * **differential** cells (`HybACDi`): g+ encodes max(w,0), g- encodes
+//!   max(-w,0); zero/low weights sit near g_off on both arrays and so
+//!   contribute little noise (why 4-bit differential ≈ 6-bit offset,
+//!   Table 2).
+//!
+//! `python/compile/noise.py` mirrors these closed forms; the pytest and the
+//! unit tests here pin both implementations to the same moments.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Weight→conductance mapping + variation level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CellModel {
+    pub kind: CellKind,
+    /// R_on / R_off; VTEAM-derived baseline is 10 (`R_b` in Fig. 11).
+    pub r_ratio: f64,
+    /// relative conductance deviation sigma (0.5 analog, 0.1 digital)
+    pub sigma: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellKind {
+    Offset,
+    Differential,
+}
+
+/// VTEAM-derived baseline R-ratio (`R_b` in Fig. 11).
+pub const R_RATIO_BASE: f64 = 10.0;
+/// Default R-ratio for the accuracy tables: a healthy device corner where
+/// the pedestal floor is minor and eq. 9's relative term dominates (the
+/// pedestal-dominated regime is exactly what Fig. 11 sweeps via
+/// `fig11_scenario`).
+pub const R_RATIO_DEFAULT: f64 = 30.0;
+
+impl CellModel {
+    pub fn offset(sigma: f64) -> Self {
+        CellModel { kind: CellKind::Offset, r_ratio: R_RATIO_DEFAULT, sigma }
+    }
+
+    pub fn differential(sigma: f64) -> Self {
+        CellModel { kind: CellKind::Differential, r_ratio: R_RATIO_DEFAULT, sigma }
+    }
+
+    /// Pure eq.-9 relative noise with no conductance pedestal (digital
+    /// storage, or idealized device studies).
+    pub fn relative(sigma: f64) -> Self {
+        CellModel { kind: CellKind::Offset, r_ratio: f64::INFINITY, sigma }
+    }
+
+    /// Paper defaults: sigma = 50% on analog weights.
+    pub fn analog_default() -> Self {
+        Self::offset(0.5)
+    }
+
+    /// sigma = 10% on the digital accelerator's weights (SRAM: no
+    /// conductance pedestal, plain relative deviation).
+    pub fn digital_default() -> Self {
+        Self::relative(0.1)
+    }
+
+    pub fn g_off(&self) -> f64 {
+        1.0 / self.r_ratio // normalized g_on = 1
+    }
+
+    /// Std of the weight-referred noise for weight value `w`, given the
+    /// tensor's mapping range [w_min, w_max].
+    ///
+    /// Base model is eq. 9 — `N(0, sigma * w_i)`, i.e. 50% *relative*
+    /// deviation per stored parameter.  The cell architecture adds a small
+    /// additive floor from the conductance pedestal g_off that every cell
+    /// carries (bias column in offset designs; both polarity arrays in
+    /// differential ones).  The floor is what the R-ratio sweep of
+    /// Fig. 11 modulates: g_off/(g_on - g_off) of the weight half-range
+    /// for offset mapping, and the ~2x smaller quadrature contribution of
+    /// the two near-off arrays for differential mapping (why differential
+    /// tolerates 4-bit ADCs, Table 2).
+    pub fn weight_noise_std(&self, w: f64, w_min: f64, w_max: f64) -> f64 {
+        let half_span = 0.5 * (w_max - w_min).max(1e-12);
+        let pedestal = self.g_off() / (1.0 - self.g_off()) * half_span;
+        match self.kind {
+            CellKind::Offset => self.sigma * (w * w + pedestal * pedestal).sqrt(),
+            CellKind::Differential => {
+                let p = pedestal * 0.5;
+                self.sigma * (w * w + p * p).sqrt()
+            }
+        }
+    }
+
+    /// Add one sampled variation instance to `w` in place.
+    /// Exact zeros are *removed rows* (HybridAC) and stay exact; the IWS
+    /// baseline's "zeros left behind" instead keep their pedestal noise —
+    /// pass `noisy_zeros = true` to model that (paper §1 / §5.4.1 IWS-2).
+    pub fn perturb(&self, w: &mut Tensor, rng: &mut Rng, noisy_zeros: bool) {
+        let (lo, hi) = match w.nonzero_range() {
+            Some(r) => r,
+            None => return,
+        };
+        let (lo, hi) = (lo as f64, hi as f64);
+        for v in w.data.iter_mut() {
+            if *v == 0.0 && !noisy_zeros {
+                continue;
+            }
+            let std = self.weight_noise_std(*v as f64, lo, hi);
+            *v += (rng.normal() * std) as f32;
+        }
+    }
+}
+
+/// Fig.-11 scenario row: scale R-ratio up and sigma down together.
+pub fn fig11_scenario(ratio_mult: f64, sigma_div: f64) -> CellModel {
+    CellModel {
+        kind: CellKind::Offset,
+        r_ratio: R_RATIO_BASE * ratio_mult,
+        sigma: 0.5 / sigma_div,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offset_noise_grows_with_pedestal() {
+        // smaller R-ratio => bigger g_off pedestal => more weight noise
+        let tight = CellModel { kind: CellKind::Offset, r_ratio: 2.0, sigma: 0.5 };
+        let wide = CellModel { kind: CellKind::Offset, r_ratio: 100.0, sigma: 0.5 };
+        let s_tight = tight.weight_noise_std(0.0, -1.0, 1.0);
+        let s_wide = wide.weight_noise_std(0.0, -1.0, 1.0);
+        assert!(s_tight > s_wide * 2.0, "{s_tight} vs {s_wide}");
+    }
+
+    #[test]
+    fn differential_suppresses_small_weights() {
+        let off = CellModel::offset(0.5);
+        let dif = CellModel::differential(0.5);
+        // at w = 0 (mid-range for offset mapping), offset noise >> differential
+        let s_off = off.weight_noise_std(0.0, -1.0, 1.0);
+        let s_dif = dif.weight_noise_std(0.0, -1.0, 1.0);
+        assert!(s_off > s_dif, "{s_off} vs {s_dif}");
+    }
+
+    #[test]
+    fn sampled_std_matches_closed_form() {
+        let cell = CellModel::analog_default();
+        let w0 = 0.3f32;
+        let expect = cell.weight_noise_std(w0 as f64, -1.0, 1.0);
+        let mut rng = Rng::new(42);
+        let n = 20_000;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let mut t = Tensor::new(vec![3], vec![-1.0, w0, 1.0]);
+            cell.perturb(&mut t, &mut rng, false);
+            let d = (t.data[1] - w0) as f64;
+            sq += d * d;
+        }
+        let sampled = (sq / n as f64).sqrt();
+        assert!(
+            (sampled - expect).abs() / expect < 0.05,
+            "sampled {sampled} vs closed-form {expect}"
+        );
+    }
+
+    #[test]
+    fn zeros_stay_exact_unless_iws_mode() {
+        let cell = CellModel::analog_default();
+        let mut rng = Rng::new(1);
+        let mut t = Tensor::new(vec![4], vec![0.0, 0.5, 0.0, -0.5]);
+        cell.perturb(&mut t, &mut rng, false);
+        assert_eq!(t.data[0], 0.0);
+        assert_eq!(t.data[2], 0.0);
+
+        let mut t2 = Tensor::new(vec![4], vec![0.0, 0.5, 0.0, -0.5]);
+        cell.perturb(&mut t2, &mut rng, true);
+        assert_ne!(t2.data[0], 0.0, "IWS zeros must carry pedestal noise");
+    }
+
+    #[test]
+    fn fig11_scenarios_reduce_noise() {
+        let base = fig11_scenario(1.0, 1.0);
+        let better = fig11_scenario(3.0, 3.0);
+        let sb = base.weight_noise_std(0.2, -1.0, 1.0);
+        let sg = better.weight_noise_std(0.2, -1.0, 1.0);
+        assert!(sg < sb / 2.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Linear quantization (paper §2.2, eqs. 3-8) — the rust-side mirror of
+//! `python/compile/quant.py`, used on the weight-preparation path.
+//!
+//! Hybrid quantization: the analog copy of each layer is fake-quantized at
+//! n1 = 6 bits over its own occupied range, the digital copy at n2 = 8
+//! bits; activations are handled inside the exported graph (shared 8-bit,
+//! ranges baked at calibration).  Fake-quant models the paper's flow
+//! exactly: partial results are merged in floating point before a single
+//! rounding (eq. 6-8).
+
+use crate::tensor::Tensor;
+
+/// Scale/zero-point of the asymmetric affine quantizer (eq. 3).
+pub fn qparams(lo: f32, hi: f32, bits: u32) -> (f32, f32) {
+    let lo = lo.min(0.0); // keep 0 exactly representable
+    let hi = hi.max(0.0);
+    if hi - lo < 1e-12 {
+        return (1.0, 0.0);
+    }
+    let scale = ((1u64 << bits) - 1) as f32 / (hi - lo);
+    // integer zero-point keeps 0.0 exactly representable (eq. 3's round)
+    (scale, (lo * scale).round())
+}
+
+/// Quantize-dequantize one value.
+#[inline]
+pub fn fake_quant_val(x: f32, scale: f32, zp: f32, bits: u32) -> f32 {
+    let qmax = ((1u64 << bits) - 1) as f32;
+    let q = (x * scale - zp).round().clamp(0.0, qmax);
+    (q + zp) / scale
+}
+
+/// Fake-quantize a tensor over an explicit range.
+pub fn fake_quant(t: &mut Tensor, lo: f32, hi: f32, bits: u32) {
+    let (scale, zp) = qparams(lo, hi, bits);
+    for v in t.data.iter_mut() {
+        *v = fake_quant_val(*v, scale, zp, bits);
+    }
+}
+
+/// Fake-quantize over the tensor's *occupied* (non-zero) range, leaving
+/// exact zeros untouched — removed crossbar rows must stay removed.
+pub fn fake_quant_occupied(t: &mut Tensor, bits: u32) {
+    let (lo, hi) = match t.nonzero_range() {
+        Some(r) => r,
+        None => return,
+    };
+    let (scale, zp) = qparams(lo, hi, bits);
+    for v in t.data.iter_mut() {
+        if *v != 0.0 {
+            *v = fake_quant_val(*v, scale, zp, bits);
+        }
+    }
+}
+
+/// The quantization side of an experiment (paper Table 3 columns).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantConfig {
+    pub analog_bits: u32,
+    pub digital_bits: u32,
+}
+
+impl QuantConfig {
+    /// Uniform 8-bit everywhere (the paper's non-hybrid baseline).
+    pub fn uniform8() -> Self {
+        QuantConfig { analog_bits: 8, digital_bits: 8 }
+    }
+
+    /// The paper's hybrid setting: analog 6-bit, digital 8-bit.
+    pub fn hybrid() -> Self {
+        QuantConfig { analog_bits: 6, digital_bits: 8 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_is_exactly_representable() {
+        let (scale, zp) = qparams(-0.7, 1.3, 8);
+        assert_eq!(fake_quant_val(0.0, scale, zp, 8), 0.0);
+    }
+
+    #[test]
+    fn quant_error_bounded_by_half_lsb() {
+        let (lo, hi, bits) = (-1.0f32, 1.0f32, 6u32);
+        let (scale, zp) = qparams(lo, hi, bits);
+        let lsb = 1.0 / scale;
+        let mut x = lo;
+        while x <= hi {
+            let err = (fake_quant_val(x, scale, zp, bits) - x).abs();
+            assert!(err <= lsb / 2.0 + 1e-6, "err {err} at {x}");
+            x += 0.013;
+        }
+    }
+
+    #[test]
+    fn more_bits_never_worse() {
+        let vals = [-0.83f32, -0.2, 0.11, 0.57, 0.99];
+        let mut prev_err = f32::INFINITY;
+        for bits in [2u32, 4, 6, 8, 10] {
+            let (scale, zp) = qparams(-1.0, 1.0, bits);
+            let err: f32 = vals
+                .iter()
+                .map(|&v| (fake_quant_val(v, scale, zp, bits) - v).abs())
+                .sum();
+            assert!(err <= prev_err + 1e-6, "bits {bits}: {err} > {prev_err}");
+            prev_err = err;
+        }
+    }
+
+    #[test]
+    fn occupied_quant_preserves_removed_rows() {
+        let mut t = Tensor::new(vec![5], vec![0.0, -0.4, 0.0, 0.9, 0.33]);
+        fake_quant_occupied(&mut t, 6);
+        assert_eq!(t.data[0], 0.0);
+        assert_eq!(t.data[2], 0.0);
+        assert!((t.data[3] - 0.9).abs() < 0.02);
+    }
+
+    #[test]
+    fn saturates_out_of_range() {
+        let (scale, zp) = qparams(-1.0, 1.0, 8);
+        let y = fake_quant_val(5.0, scale, zp, 8);
+        assert!((y - 1.0).abs() < 0.01, "{y}");
+    }
+}

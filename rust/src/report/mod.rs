@@ -1,0 +1,106 @@
+//! Paper-style table/figure printers shared by the benches and examples.
+
+/// Render an ASCII table with a header row.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==\n"));
+    let line = |out: &mut String| {
+        for w in &widths {
+            out.push('+');
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    line(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        out.push_str(&format!("| {:w$} ", h, w = widths[i]));
+    }
+    out.push_str("|\n");
+    line(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            out.push_str(&format!("| {:w$} ", cell, w = widths[i]));
+        }
+        out.push_str("|\n");
+    }
+    line(&mut out);
+    out
+}
+
+/// A simple ASCII line/series plot (for the "figure" benches).
+pub fn series_plot(title: &str, x_label: &str, xs: &[f64], series: &[(&str, Vec<f64>)]) -> String {
+    let mut out = format!("\n== {title} ==\n{:>12} |", x_label);
+    for (name, _) in series {
+        out.push_str(&format!(" {:>16}", name));
+    }
+    out.push('\n');
+    for (i, x) in xs.iter().enumerate() {
+        out.push_str(&format!("{x:>12.3} |"));
+        for (_, ys) in series {
+            if let Some(y) = ys.get(i) {
+                out.push_str(&format!(" {y:>16.4}"));
+            } else {
+                out.push_str(&format!(" {:>16}", "-"));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+pub fn si_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} us", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+pub fn si_energy(j: f64) -> String {
+    if j >= 1.0 {
+        format!("{j:.3} J")
+    } else if j >= 1e-3 {
+        format!("{:.3} mJ", j * 1e3)
+    } else {
+        format!("{:.3} uJ", j * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_cells() {
+        let t = table(
+            "T",
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("333"));
+        assert!(t.contains("bb"));
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si_time(0.0025), "2.500 ms");
+        assert_eq!(si_energy(0.5), "500.000 mJ");
+        assert_eq!(pct(0.1234), "12.34%");
+    }
+}

@@ -1,0 +1,257 @@
+//! Artifact metadata + blobs: the contract with `python/compile/aot.py`.
+//!
+//! One `Artifact` per (family, dataset) combo: layer table (with weight-blob
+//! offsets), activation ranges, ADC full-scale anchors, the HybridAC channel
+//! ranking, the IWS per-weight sensitivity blob, and the clean weights.
+
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::tensor::{blob, Tensor};
+use crate::util::json::Json;
+
+/// One selectable (weight-bearing) layer, mirroring python's LayerMeta.
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String, // "conv" | "dense"
+    pub r: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub always_digital: bool,
+    pub w_off: usize, // element offsets into the weight blob
+    pub w_len: usize,
+    pub b_off: usize,
+    pub b_len: usize,
+}
+
+impl LayerInfo {
+    /// Crossbar rows (reduction length); channel c owns rows
+    /// [c*r*r, (c+1)*r*r) — the channel-major layout from im2col.py.
+    pub fn rows(&self) -> usize {
+        if self.kind == "conv" {
+            self.cin * self.r * self.r
+        } else {
+            self.cin
+        }
+    }
+
+    pub fn rows_per_channel(&self) -> usize {
+        self.rows() / self.cin
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.rows() * self.cout
+    }
+}
+
+/// One entry of the HybridAC channel ranking (global, descending score).
+#[derive(Clone, Copy, Debug)]
+pub struct RankedChannel {
+    pub layer: usize,
+    pub channel: usize,
+    pub score: f32,
+    pub n_weights: usize,
+}
+
+/// Everything aot.py exported for one model/dataset combo.
+pub struct Artifact {
+    pub tag: String,
+    pub family: String,
+    pub dataset: String,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub batch: usize,
+    pub group: usize,
+    pub clean_test_acc: f64,
+    pub layers: Vec<LayerInfo>,
+    pub act_ranges: Vec<(f32, f32)>,
+    /// 99.9th percentile |wordline-group partial sum| per layer — the ADC
+    /// full-scale anchor (clean weights, group=128).
+    pub psum_p999: Vec<f32>,
+    pub ranking: Vec<RankedChannel>,
+    pub total_weights: usize,
+    pub pinned_weights: usize,
+    pub fig3: Json,
+    /// Clean weights: per layer, matrix [rows, cout] (w) and bias [cout].
+    pub weights: Vec<Tensor>,
+    pub biases: Vec<Tensor>,
+    /// Per-weight eq.-1 sensitivity, same matrix layout (IWS signal).
+    pub sens: Vec<Tensor>,
+    pub hlo_path: PathBuf,
+    dir: PathBuf,
+}
+
+impl Artifact {
+    pub fn load(dir: &Path, tag: &str) -> Result<Artifact> {
+        let meta_text = std::fs::read_to_string(dir.join(format!("{tag}.meta.json")))
+            .with_context(|| format!("artifact '{tag}' not built — run `make artifacts`"))?;
+        let meta = Json::parse(&meta_text).context("parsing meta.json")?;
+        let wbytes = blob::read_file(&dir.join(format!("{tag}.weights.bin")))?;
+        let sbytes = blob::read_file(&dir.join(format!("{tag}.sens.bin")))?;
+
+        let mut layers = Vec::new();
+        for l in meta.arr_of("layers")? {
+            layers.push(LayerInfo {
+                name: l.str_of("name")?.to_string(),
+                kind: l.str_of("kind")?.to_string(),
+                r: l.usize_of("r")?,
+                stride: l.usize_of("stride")?,
+                pad: l.usize_of("pad")?,
+                cin: l.usize_of("cin")?,
+                cout: l.usize_of("cout")?,
+                always_digital: l.bool_of("always_digital")?,
+                w_off: l.usize_of("w_off")?,
+                w_len: l.usize_of("w_len")?,
+                b_off: l.usize_of("b_off")?,
+                b_len: l.usize_of("b_len")?,
+            });
+        }
+
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        let mut sens = Vec::new();
+        let mut sens_off = 0usize;
+        for li in &layers {
+            ensure!(li.w_len == li.rows() * li.cout, "layer {} w_len mismatch", li.name);
+            weights.push(Tensor::new(
+                vec![li.rows(), li.cout],
+                blob::f32_slice(&wbytes, li.w_off, li.w_len)?,
+            ));
+            biases.push(Tensor::new(
+                vec![li.cout],
+                blob::f32_slice(&wbytes, li.b_off, li.b_len)?,
+            ));
+            sens.push(Tensor::new(
+                vec![li.rows(), li.cout],
+                blob::f32_slice(&sbytes, sens_off, li.w_len)?,
+            ));
+            sens_off += li.w_len;
+        }
+        ensure!(sens_off * 4 == sbytes.len(), "sens blob size mismatch");
+
+        let act_obj = meta.req("act_ranges")?;
+        let psum_obj = meta.req("psum_p999")?;
+        let mut act_ranges = Vec::new();
+        let mut psum = Vec::new();
+        for li in &layers {
+            let pair = act_obj.arr_of(&li.name)?;
+            act_ranges.push((pair[0].as_f64().unwrap() as f32, pair[1].as_f64().unwrap() as f32));
+            psum.push(psum_obj.f64_of(&li.name)? as f32);
+        }
+
+        let mut ranking = Vec::new();
+        for rc in meta.arr_of("ranking")? {
+            let v = rc.as_arr().context("ranking entry")?;
+            ranking.push(RankedChannel {
+                layer: v[0].as_usize().unwrap(),
+                channel: v[1].as_usize().unwrap(),
+                score: v[2].as_f64().unwrap() as f32,
+                n_weights: v[3].as_usize().unwrap(),
+            });
+        }
+
+        Ok(Artifact {
+            tag: tag.to_string(),
+            family: meta.str_of("family")?.to_string(),
+            dataset: meta.str_of("dataset")?.to_string(),
+            num_classes: meta.usize_of("num_classes")?,
+            input_shape: meta
+                .arr_of("input_shape")?
+                .iter()
+                .map(|j| j.as_usize().unwrap())
+                .collect(),
+            batch: meta.usize_of("batch")?,
+            group: meta.usize_of("group")?,
+            clean_test_acc: meta.f64_of("test_acc")?,
+            layers,
+            act_ranges,
+            psum_p999: psum,
+            ranking,
+            total_weights: meta.usize_of("total_weights")?,
+            pinned_weights: meta.usize_of("pinned_weights")?,
+            fig3: meta.req("fig3")?.clone(),
+            weights,
+            biases,
+            sens,
+            hlo_path: dir.join(format!("{tag}.hlo.txt")),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// The Fig.-11 wordline-variant graph (same weights, different group).
+    pub fn hlo_variant(&self, group: usize) -> PathBuf {
+        if group == self.group {
+            self.hlo_path.clone()
+        } else {
+            self.dir.join(format!("{}_r{}.hlo.txt", self.tag, group))
+        }
+    }
+
+    /// The offset-only graph (5 args/layer, no second polarity path) — the
+    /// §Perf fast path for offset-cell experiments. Falls back to the full
+    /// graph when the variant was not exported.
+    pub fn hlo_offset_variant(&self, group: usize) -> Option<PathBuf> {
+        if group != self.group {
+            return None; // wordline variants are only exported full-width
+        }
+        let p = self.dir.join(format!("{}_off.hlo.txt", self.tag));
+        p.exists().then_some(p)
+    }
+
+    /// Number of positional graph args: x + 6 per layer (model.py contract).
+    pub fn n_args(&self) -> usize {
+        1 + 6 * self.layers.len()
+    }
+}
+
+/// Test split of one synthetic dataset (images then labels).
+pub struct DatasetBlob {
+    pub n: usize,
+    pub shape: Vec<usize>,
+    pub num_classes: usize,
+    pub images: Vec<f32>, // n * H*W*C
+    pub labels: Vec<i32>,
+}
+
+impl DatasetBlob {
+    pub fn load(dir: &Path, name: &str) -> Result<DatasetBlob> {
+        let meta_text = std::fs::read_to_string(dir.join(format!("{name}.data.json")))?;
+        let meta = Json::parse(&meta_text)?;
+        let n = meta.usize_of("n")?;
+        let shape: Vec<usize> = meta
+            .arr_of("shape")?
+            .iter()
+            .map(|j| j.as_usize().unwrap())
+            .collect();
+        let num_classes = meta.usize_of("num_classes")?;
+        let bytes = blob::read_file(&dir.join(format!("{name}.data.bin")))?;
+        let img_elems = n * shape.iter().product::<usize>();
+        let images = blob::f32_slice(&bytes, 0, img_elems)?;
+        let labels = blob::i32_slice(&bytes, img_elems * 4, n)?;
+        ensure!(bytes.len() == (img_elems + n) * 4, "dataset blob size mismatch");
+        Ok(DatasetBlob { n, shape, num_classes, images, labels })
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Batch `i` of size `batch`, padded by wrapping (padding predictions are
+    /// discarded by the evaluator).
+    pub fn batch(&self, i: usize, batch: usize) -> (Tensor, Vec<i32>) {
+        let per = self.image_elems();
+        let mut data = Vec::with_capacity(batch * per);
+        let mut labels = Vec::with_capacity(batch);
+        for j in 0..batch {
+            let idx = (i * batch + j) % self.n;
+            data.extend_from_slice(&self.images[idx * per..(idx + 1) * per]);
+            labels.push(self.labels[idx]);
+        }
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&self.shape);
+        (Tensor::new(shape, data), labels)
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime: load AOT-compiled HLO artifacts and execute them via PJRT.
+//!
+//! Python (jax + pallas) runs only at build time; this module is everything
+//! the request path needs: a CPU PJRT client (`xla` crate), the artifact
+//! metadata contract shared with `python/compile/aot.py`, and an executor
+//! that caches compiled executables and device-resident weight buffers.
+
+pub mod artifact;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifact::{Artifact, DatasetBlob, LayerInfo};
+pub use executor::ModelExecutor;
+pub use pjrt::Engine;

@@ -1,0 +1,90 @@
+//! PJRT engine: HLO-text loading + compilation + execution.
+//!
+//! Interchange format is HLO *text* (not serialized HloModuleProto):
+//! jax >= 0.5 emits protos with 64-bit instruction ids which the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor;
+
+/// A compiled model plus its client. Compilation is cached per path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(&self.cache[path])
+    }
+
+    pub fn is_loaded(&self, path: &Path) -> bool {
+        self.cache.contains_key(path)
+    }
+
+    /// Upload a host tensor to the device (for buffer-resident reuse).
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims: Vec<usize> = t.shape.clone();
+        self.client
+            .buffer_from_host_buffer(&t.data, &dims, None)
+            .context("uploading buffer")
+    }
+
+    /// Execute with literal inputs; returns the flat f32 payload of the
+    /// single tuple output (the exported graphs return `(logits,)`).
+    pub fn run_literals(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute with device-resident buffers (hot path: weight buffers are
+    /// uploaded once per noisy instance and reused across test batches).
+    pub fn run_buffers(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<f32>> {
+        let result = exe.execute_b(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn literal_of(t: &Tensor) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&t.data);
+        if t.shape.is_empty() {
+            // scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Channel partitioning: turning the exported rankings into analog/digital
+//! splits (the run-time half of paper Algorithm 1, plus the IWS baseline).
+//!
+//! The python side exports (a) the HybridAC channel ranking — all
+//! (layer, input-channel) pairs sorted by aggregated eq.-2 sensitivity —
+//! and (b) the raw per-weight eq.-1 scores.  This module materializes, for
+//! a requested protected-weight fraction:
+//!
+//! * `Partition` (HybridAC): per layer, the set of digital input channels;
+//!   whole channels ⇒ whole crossbar *rows* removed uniformly.
+//! * `IwsMasks`: per layer, a 0/1 mask over individual weights; scattered
+//!   ⇒ rows cannot be removed, zeros stay behind in the crossbars.
+
+use crate::runtime::artifact::Artifact;
+use crate::tensor::Tensor;
+
+/// Per-layer digital channel sets for one protection level.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// digital_channels[l] = sorted input-channel ids mapped to digital
+    pub digital_channels: Vec<Vec<usize>>,
+    /// achieved fraction of all weights protected (incl. pinned layers)
+    pub protected_frac: f64,
+    /// number of ranked channels selected (excl. pinned layers)
+    pub n_selected: usize,
+}
+
+impl Partition {
+    /// Select top-ranked channels until `frac` of all weights is protected.
+    /// Layers flagged `always_digital` are fully pinned first (paper §3.2:
+    /// first + last layers get dedicated digital tiles).
+    pub fn for_fraction(art: &Artifact, frac: f64) -> Partition {
+        let total = art.total_weights as f64;
+        let mut digital: Vec<Vec<usize>> = art.layers.iter().map(|_| Vec::new()).collect();
+        let mut protected = art.pinned_weights as f64;
+        for (li, l) in art.layers.iter().enumerate() {
+            if l.always_digital {
+                digital[li] = (0..l.cin).collect();
+            }
+        }
+        let mut n_selected = 0;
+        for rc in &art.ranking {
+            if protected / total >= frac {
+                break;
+            }
+            digital[rc.layer].push(rc.channel);
+            protected += rc.n_weights as f64;
+            n_selected += 1;
+        }
+        for d in digital.iter_mut() {
+            d.sort_unstable();
+            d.dedup();
+        }
+        Partition {
+            digital_channels: digital,
+            protected_frac: protected / total,
+            n_selected,
+        }
+    }
+
+    /// Fraction of layer `li`'s input channels that stay analog.
+    pub fn analog_fraction(&self, art: &Artifact, li: usize) -> f64 {
+        let cin = art.layers[li].cin;
+        1.0 - self.digital_channels[li].len() as f64 / cin as f64
+    }
+
+    /// Per-layer protected-weight percentage (Fig. 3 series).
+    pub fn per_layer_pct(&self, art: &Artifact) -> Vec<f64> {
+        self.digital_channels
+            .iter()
+            .zip(&art.layers)
+            .map(|(d, l)| 100.0 * d.len() as f64 / l.cin as f64)
+            .collect()
+    }
+
+    /// Split a clean weight matrix [rows, cout] into (analog, digital)
+    /// copies: digital channels' rows are *removed* (exact zeros) from the
+    /// analog copy and vice versa.
+    pub fn split_layer(&self, art: &Artifact, li: usize, w: &Tensor) -> (Tensor, Tensor) {
+        let l = &art.layers[li];
+        let rpc = l.rows_per_channel();
+        let mut wa = w.clone();
+        let mut wd = Tensor::zeros(w.shape.clone());
+        for &c in &self.digital_channels[li] {
+            for row in c * rpc..(c + 1) * rpc {
+                let (a_row, d_row) = (wa.row_mut(row), row);
+                // move the whole row: analog loses it, digital gains it
+                wd.row_mut(d_row).copy_from_slice(a_row);
+                for v in a_row.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+        (wa, wd)
+    }
+}
+
+/// IWS (Dash et al.) baseline: individual-weight masks from eq.-1 scores.
+#[derive(Clone, Debug)]
+pub struct IwsMasks {
+    /// per layer: score threshold; weights with score >= threshold are digital
+    pub thresholds: Vec<f32>,
+    pub protected_frac: f64,
+    global_threshold: f32,
+}
+
+impl IwsMasks {
+    /// Global top-`frac` of weights by eq.-1 score (pinned layers included
+    /// wholesale, matching the HybridAC accounting).
+    pub fn for_fraction(art: &Artifact, frac: f64) -> IwsMasks {
+        let mut scores: Vec<f32> = Vec::new();
+        for (li, l) in art.layers.iter().enumerate() {
+            if l.always_digital {
+                continue;
+            }
+            scores.extend_from_slice(&art.sens[li].data);
+        }
+        let selectable = scores.len();
+        let pinned = art.pinned_weights;
+        let want = ((frac * art.total_weights as f64) as usize).saturating_sub(pinned);
+        let k = want.min(selectable).max(1);
+        // threshold = k-th largest score
+        let idx = selectable - k;
+        scores.sort_unstable_by(f32::total_cmp);
+        let threshold = scores[idx];
+        let n_over = scores[idx..].len();
+        IwsMasks {
+            thresholds: art
+                .layers
+                .iter()
+                .map(|l| if l.always_digital { f32::NEG_INFINITY } else { threshold })
+                .collect(),
+            protected_frac: (pinned + n_over) as f64 / art.total_weights as f64,
+            global_threshold: threshold,
+        }
+    }
+
+    /// Split one layer into (analog-with-zero-holes, digital-sparse).
+    /// Unlike HybridAC, the analog copy keeps a *hole* (zero cell that still
+    /// suffers pedestal variation) wherever a weight moved out.
+    pub fn split_layer(&self, art: &Artifact, li: usize, w: &Tensor) -> (Tensor, Tensor) {
+        let l = &art.layers[li];
+        let mut wa = w.clone();
+        let mut wd = Tensor::zeros(w.shape.clone());
+        if l.always_digital {
+            return (Tensor::zeros(w.shape.clone()), w.clone());
+        }
+        let s = &art.sens[li];
+        for i in 0..w.data.len() {
+            if s.data[i] >= self.global_threshold {
+                wd.data[i] = wa.data[i];
+                wa.data[i] = 0.0;
+            }
+        }
+        (wa, wd)
+    }
+
+    /// Per-layer protected percentage (Fig. 3's scattered distribution).
+    pub fn per_layer_pct(&self, art: &Artifact) -> Vec<f64> {
+        art.layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| {
+                if l.always_digital {
+                    return 100.0;
+                }
+                let s = &art.sens[li];
+                let n = s.data.iter().filter(|&&v| v >= self.global_threshold).count();
+                100.0 * n as f64 / s.data.len() as f64
+            })
+            .collect()
+    }
+}
+
+/// Population standard deviation (Fig.-3 summary statistic).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    (xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64).sqrt()
+}

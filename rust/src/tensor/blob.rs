@@ -1,0 +1,60 @@
+//! Little-endian binary blob I/O for the artifact format.
+//!
+//! aot.py writes raw `<f4` / `<i4` arrays; these helpers map byte ranges of
+//! such blobs into Vec<f32>/Vec<i32> (with an explicit copy — alignment of
+//! file contents is not guaranteed).
+
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+pub fn read_file(path: &Path) -> Result<Vec<u8>> {
+    std::fs::read(path).with_context(|| format!("reading {}", path.display()))
+}
+
+pub fn f32_slice(bytes: &[u8], off_elems: usize, len_elems: usize) -> Result<Vec<f32>> {
+    let start = off_elems * 4;
+    let end = start + len_elems * 4;
+    ensure!(
+        end <= bytes.len(),
+        "blob out of range: [{start}, {end}) of {}",
+        bytes.len()
+    );
+    Ok(bytes[start..end]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn i32_slice(bytes: &[u8], off_bytes: usize, len_elems: usize) -> Result<Vec<i32>> {
+    let end = off_bytes + len_elems * 4;
+    ensure!(
+        end <= bytes.len(),
+        "blob out of range: [{off_bytes}, {end}) of {}",
+        bytes.len()
+    );
+    Ok(bytes[off_bytes..end]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0, 3.0e7];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(f32_slice(&bytes, 0, 4).unwrap(), vals);
+        assert_eq!(f32_slice(&bytes, 1, 2).unwrap(), vals[1..3]);
+        assert!(f32_slice(&bytes, 2, 3).is_err());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let vals = [-7i32, 0, 123456];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(i32_slice(&bytes, 0, 3).unwrap(), vals);
+    }
+}

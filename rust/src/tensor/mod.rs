@@ -1,0 +1,111 @@
+//! Minimal dense f32 tensor + binary blob I/O.
+//!
+//! Only what the coordinator needs: row-major f32 buffers with shapes,
+//! little-endian blob loading (the artifact format written by aot.py), and
+//! a few bulk ops used on the weight-preparation hot path.
+
+pub mod blob;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch: {:?} vs {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "not a matrix: {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    /// Immutable row slice of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.dims2();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, c) = self.dims2();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Min/max over non-zero entries (hybrid quantization ranges are taken
+    /// over the occupied part of each split copy; exact zeros mean "row
+    /// removed" and must not widen the range).
+    pub fn nonzero_range(&self) -> Option<(f32, f32)> {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        let mut any = false;
+        for &v in &self.data {
+            if v != 0.0 {
+                any = true;
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        any.then_some((lo, hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_rows() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.dims2(), (2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn nonzero_range_ignores_removed_rows() {
+        let t = Tensor::new(vec![1, 5], vec![0.0, -2.0, 0.0, 3.0, 0.0]);
+        assert_eq!(t.nonzero_range(), Some((-2.0, 3.0)));
+        assert_eq!(Tensor::zeros(vec![4]).nonzero_range(), None);
+    }
+}

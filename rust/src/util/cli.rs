@@ -1,0 +1,121 @@
+//! Tiny flag parser (clap is not available offline).
+//!
+//! Grammar: `program SUBCOMMAND [--key value]... [--switch]... [positional]...`
+//! Unknown flags are an error; every consumer declares its flags up front so
+//! `--help` text can be generated.
+
+use std::collections::BTreeMap;
+
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from env; `known_flags` take a value, `known_switches` do not.
+    pub fn parse(
+        raw: impl Iterator<Item = String>,
+        known_flags: &[&str],
+        known_switches: &[&str],
+    ) -> anyhow::Result<Args> {
+        let mut it = raw.peekable();
+        let mut out = Args {
+            subcommand: None,
+            flags: BTreeMap::new(),
+            switches: Vec::new(),
+            positional: Vec::new(),
+        };
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if known_switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if known_flags.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    anyhow::bail!("unknown flag --{name}");
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> anyhow::Result<Args> {
+        Args::parse(
+            v.iter().map(|s| s.to_string()),
+            &["model", "repeats"],
+            &["verbose"],
+        )
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = args(&["run", "--model", "resnet18m_c10s", "--verbose", "x"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("model"), Some("resnet18m_c10s"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["x"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = args(&["run", "--repeats", "5"]).unwrap();
+        assert_eq!(a.get_usize("repeats", 1).unwrap(), 5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(args(&["run", "--repeats", "x"])
+            .unwrap()
+            .get_usize("repeats", 1)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(args(&["run", "--nope", "1"]).is_err());
+    }
+}

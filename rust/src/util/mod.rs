@@ -1,0 +1,8 @@
+//! Self-contained utilities: this environment has no network access, so
+//! JSON, RNG, CLI parsing and property testing are implemented here instead
+//! of pulling serde/rand/clap/proptest.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,157 @@
+//! Mini property-testing harness (proptest is not available offline).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it greedily shrinks via the input's
+//! `Shrink` implementation before panicking with the minimal counterexample.
+//! Coordinator/mapping invariants (routing conservation, partition
+//! disjointness, batching bounds) use this throughout `rust/tests/`.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // drop halves, then shrink single elements
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        for i in 0..self.len().min(8) {
+            for smaller in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; shrink on failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(0xC0FFEE ^ name.len() as u64);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink
+            let mut best = (input, msg);
+            let mut improved = true;
+            let mut budget = 200;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in best.0.shrink() {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        improved = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}).\n  minimal input: {:?}\n  reason: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Convenience generators.
+pub mod gen {
+    use super::super::rng::Rng;
+
+    pub fn usize_in(lo: usize, hi: usize) -> impl FnMut(&mut Rng) -> usize {
+        move |r| lo + r.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(lo: f64, hi: f64) -> impl FnMut(&mut Rng) -> f64 {
+        move |r| lo + r.next_f64() * (hi - lo)
+    }
+
+    pub fn vec_f32(len_lo: usize, len_hi: usize, scale: f32) -> impl FnMut(&mut Rng) -> Vec<f64> {
+        move |r| {
+            let n = len_lo + r.below(len_hi - len_lo + 1);
+            (0..n).map(|_| (r.normal() * scale as f64)).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 200, gen::f64_in(-10.0, 10.0), |x| {
+            if x + 1.0 == 1.0 + x {
+                Ok(())
+            } else {
+                Err("non-commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input")]
+    fn failing_property_shrinks() {
+        check("always-small", 200, gen::usize_in(0, 1000), |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 50"))
+            }
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Hardware-model integration: mapping + timing over real artifacts and
+//! cross-architecture sanity (the Fig. 9/10 orderings).
+
+use hybridac::analog::AnalogTiming;
+use hybridac::hwmodel::tile::TileModel;
+use hybridac::hwmodel::{all_architectures, arch};
+use hybridac::mapping::{balanced_digital_fraction, map_model, simulate_exec, MapScheme};
+use hybridac::runtime::Artifact;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = hybridac::artifacts_dir();
+    if dir.join("resnet18m_c10s.meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts not built; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn hybrid_mapping_uses_fewer_crossbars() {
+    let Some(dir) = artifacts() else { return };
+    let art = Artifact::load(&dir, "resnet18m_c10s").unwrap();
+    let all_analog = map_model(&art, MapScheme::AllAnalog, 0.0);
+    let hybrid = map_model(&art, MapScheme::Hybrid, 0.16);
+    let iws = map_model(&art, MapScheme::IwsHoles, 0.16);
+    assert!(
+        hybrid.total_crossbars < all_analog.total_crossbars,
+        "row removal + 6-bit cells must shrink the crossbar count: {} vs {}",
+        hybrid.total_crossbars,
+        all_analog.total_crossbars
+    );
+    assert!(
+        iws.total_crossbars > all_analog.total_crossbars,
+        "IWS zero holes must add crossbars: {} vs {}",
+        iws.total_crossbars,
+        all_analog.total_crossbars
+    );
+    assert!(iws.total_overhead_crossbars > 0);
+    // The digital MAC fraction exceeds the 16% *weight* fraction on the
+    // scaled models: sensitive channels concentrate in early layers, which
+    // carry many more output pixels per weight (16x16 vs 4x4). The paper's
+    // §5.4.2 balance argument equates the two only for its deep, large
+    // models. Bound it loosely and positively.
+    assert!(
+        hybrid.digital_frac > 0.10 && hybrid.digital_frac < 0.75,
+        "{}",
+        hybrid.digital_frac
+    );
+}
+
+#[test]
+fn fig9_orderings_hold() {
+    let Some(dir) = artifacts() else { return };
+    let art = Artifact::load(&dir, "resnet18m_c10s").unwrap();
+    let batch = 250;
+    let isaac_tile = TileModel::isaac();
+    let hybrid_tile = TileModel::hybridac();
+    let m_all = map_model(&art, MapScheme::AllAnalog, 0.0);
+    let m_iws = map_model(&art, MapScheme::IwsHoles, 0.16);
+    let m_h16 = map_model(&art, MapScheme::Hybrid, 0.16);
+    let m_h10 = map_model(&art, MapScheme::Hybrid, 0.10);
+
+    let isaac = simulate_exec(&m_all, &AnalogTiming::isaac(), &isaac_tile, 168,
+                              batch, 0, 0.0, false);
+    let iws1 = simulate_exec(&m_iws, &AnalogTiming::isaac(), &isaac_tile, 1,
+                             batch, 128, 25.52, true);
+    let iws2 = simulate_exec(&m_iws, &AnalogTiming::isaac(), &isaac_tile, 142,
+                             batch, 128, 25.52, false);
+    let h16 = simulate_exec(&m_h16, &AnalogTiming::hybridac(), &hybrid_tile, 148,
+                            batch, 152, 1.788, false);
+    let h10 = simulate_exec(&m_h10, &AnalogTiming::hybridac(), &hybrid_tile, 148,
+                            batch, 95, 1.118, false);
+
+    // paper's qualitative orderings (§5.4.3)
+    assert!(h16.seconds < isaac.seconds, "HybridAC-16% beats ISAAC");
+    assert!(iws1.seconds > isaac.seconds, "IWS-1 slower than ISAAC");
+    assert!(iws1.seconds > iws2.seconds, "IWS-1 slower than IWS-2");
+    assert!(h16.seconds <= h10.seconds, "balanced config at least as fast");
+    assert!(h16.energy_j < isaac.energy_j, "HybridAC saves energy");
+    assert!(iws1.reprogram_seconds > 0.0);
+    assert_eq!(isaac.reprogram_seconds, 0.0);
+}
+
+#[test]
+fn architectures_all_positive_and_isaac_anchor() {
+    let archs = all_architectures();
+    assert_eq!(archs.len(), 13);
+    for a in &archs {
+        assert!(a.peak_gops > 0.0, "{}", a.name);
+        assert!(a.totals.area_mm2 > 0.0, "{}", a.name);
+        assert!(a.totals.power_mw > 0.0, "{}", a.name);
+    }
+    let isaac = arch::by_name("Ideal-ISAAC").unwrap();
+    assert!((isaac.area_eff() - 1912.0).abs() < 2.0);
+}
+
+#[test]
+fn balanced_fraction_from_measured_efficiencies() {
+    let hy = arch::by_name("HybridAC").unwrap();
+    let analog_eff = (hy.peak_gops - hy.digital_gops) / hy.totals.analog_area_mm2;
+    let digital_eff = hy.digital_gops / hy.totals.digital_area_mm2;
+    let f = balanced_digital_fraction(analog_eff, digital_eff);
+    assert!(f > 0.05 && f < 0.30, "balanced digital fraction {f}");
+}
+
+#[test]
+fn reprogram_time_dominates_iws1_seconds() {
+    let Some(dir) = artifacts() else { return };
+    let art = Artifact::load(&dir, "resnet18m_c10s").unwrap();
+    let m_iws = map_model(&art, MapScheme::IwsHoles, 0.16);
+    let est = simulate_exec(&m_iws, &AnalogTiming::isaac(), &TileModel::isaac(), 1,
+                            250, 128, 25.52, true);
+    assert!(est.reprogram_seconds > 0.0);
+    assert!(est.seconds >= est.reprogram_seconds);
+}

@@ -1,0 +1,175 @@
+//! Property tests (own mini-prop harness) on coordinator invariants that
+//! don't need artifacts: ADC parameters, quantization, noise, digital sim,
+//! mapping balance, metrics.
+
+use hybridac::digital::{DigitalSim, LayerWork};
+use hybridac::eval::prepare::adc_params;
+use hybridac::noise::{CellKind, CellModel};
+use hybridac::quantize::{fake_quant_val, qparams};
+use hybridac::util::prop::{check, gen};
+use hybridac::util::rng::Rng;
+
+#[test]
+fn prop_adc_lsb_scales_with_range() {
+    check(
+        "adc-lsb-monotone-in-range-frac",
+        300,
+        |r: &mut Rng| (gen::f64_in(0.05, 1.0)(r), gen::f64_in(0.05, 1.0)(r)),
+        |&(f1, f2)| {
+            let (lo, hi) = if f1 <= f2 { (f1, f2) } else { (f2, f1) };
+            let (lsb_lo, _) = adc_params(100.0, 6, 128, lo, false);
+            let (lsb_hi, _) = adc_params(100.0, 6, 128, hi, false);
+            if lsb_lo <= lsb_hi + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("lsb({lo})={lsb_lo} > lsb({hi})={lsb_hi}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_quant_error_half_lsb() {
+    check(
+        "fake-quant-error-bound",
+        500,
+        |r: &mut Rng| (gen::f64_in(-5.0, 5.0)(r), gen::usize_in(2, 10)(r)),
+        |&(x, bits)| {
+            let (scale, zp) = qparams(-5.0, 5.0, bits as u32);
+            let y = fake_quant_val(x as f32, scale, zp, bits as u32);
+            let err = (y - x as f32).abs();
+            let half_lsb = 0.5 / scale + 1e-6;
+            if err <= half_lsb {
+                Ok(())
+            } else {
+                Err(format!("err {err} > half lsb {half_lsb} at {x}, {bits} bits"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_noise_std_monotone_in_weight_magnitude() {
+    check(
+        "noise-std-monotone",
+        300,
+        |r: &mut Rng| (gen::f64_in(0.0, 1.0)(r), gen::f64_in(0.0, 1.0)(r)),
+        |&(a, b)| {
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let cell = CellModel::analog_default();
+            let s_lo = cell.weight_noise_std(lo, -1.0, 1.0);
+            let s_hi = cell.weight_noise_std(hi, -1.0, 1.0);
+            if s_lo <= s_hi + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("std({lo})={s_lo} > std({hi})={s_hi}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_differential_never_noisier_than_offset() {
+    check(
+        "differential-pedestal-halved",
+        300,
+        gen::f64_in(-1.0, 1.0),
+        |&w| {
+            let off = CellModel { kind: CellKind::Offset, r_ratio: 10.0, sigma: 0.5 };
+            let dif = CellModel { kind: CellKind::Differential, r_ratio: 10.0, sigma: 0.5 };
+            let so = off.weight_noise_std(w, -1.0, 1.0);
+            let sd = dif.weight_noise_std(w, -1.0, 1.0);
+            if sd <= so + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("diff {sd} > offset {so} at w={w}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_digital_sim_work_conservation() {
+    check(
+        "digital-sim-macs-conserved",
+        200,
+        gen::usize_in(1, 5_000_000),
+        |&macs| {
+            let sim = DigitalSim::new(152);
+            let st = sim.run_layer(&LayerWork {
+                macs: macs as u64,
+                weights: (macs / 64) as u64,
+                activations: (macs / 90) as u64,
+            });
+            let per_unit = (macs as u64).div_ceil(152);
+            if st.mac_ops == per_unit {
+                Ok(())
+            } else {
+                Err(format!("mac_ops {} != per-unit work {per_unit}", st.mac_ops))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_digital_sim_cycles_monotone() {
+    check(
+        "digital-sim-monotone",
+        150,
+        |r: &mut Rng| (gen::usize_in(1, 2_000_000)(r), gen::usize_in(1, 2_000_000)(r)),
+        |&(a, b)| {
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let sim = DigitalSim::new(64);
+            let mk = |m: usize| LayerWork {
+                macs: m as u64,
+                weights: (m / 64) as u64,
+                activations: (m / 90) as u64,
+            };
+            let c_lo = sim.run_layer(&mk(lo)).cycles;
+            let c_hi = sim.run_layer(&mk(hi)).cycles;
+            if c_lo <= c_hi {
+                Ok(())
+            } else {
+                Err(format!("cycles({lo})={c_lo} > cycles({hi})={c_hi}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_rng_normal_tail_bounds() {
+    check(
+        "rng-normal-bounded-tails",
+        20,
+        gen::usize_in(0, 1_000_000),
+        |&seed| {
+            let mut rng = Rng::new(seed as u64);
+            let n = 10_000;
+            let extreme = (0..n).filter(|_| rng.normal().abs() > 4.0).count();
+            // P(|Z|>4) ~ 6e-5; allow a generous bound
+            if extreme <= 8 {
+                Ok(())
+            } else {
+                Err(format!("{extreme} samples beyond 4 sigma of {n}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_numbers() {
+    use hybridac::util::json::Json;
+    check(
+        "json-number-roundtrip",
+        300,
+        gen::f64_in(-1e9, 1e9),
+        |&x| {
+            let text = Json::Num(x).to_string();
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            match back {
+                Json::Num(y) if (y - x).abs() <= 1e-6 * x.abs().max(1.0) => Ok(()),
+                other => Err(format!("{x} -> {text} -> {other:?}")),
+            }
+        },
+    );
+}
