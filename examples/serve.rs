@@ -1,18 +1,24 @@
-//! Serving demo: the L3 coordinator as a batched-inference server.
+//! Serving demo: a replicated fleet behind the router.
 //!
-//! Spawns the batch server (worker thread owns the PJRT engine and one
-//! noisy HybridAC-protected model instance), then drives it from several
-//! client threads at a fixed request rate and reports throughput, latency
-//! percentiles and batch occupancy.
+//! Each replica's worker thread owns its own PJRT engine and an
+//! *independent* conductance-variation draw (the Monte Carlo view of device
+//! variation); the router load-balances client threads across them with
+//! bounded admission queues. Shed requests are retried after a short
+//! backoff, so overload shows up as latency + the shed counter, never as
+//! silent loss. A labeled canary probe reports per-replica observed
+//! accuracy before shutdown — the serving-time analogue of the paper's
+//! variation-robustness claim.
 //!
-//! Run: `cargo run --release --example serve [tag] [n_requests]`
+//! Run: `cargo run --release --example serve [tag] [n_requests] [replicas]`
 
 use anyhow::Result;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
-use hybridac::coordinator::BatchServer;
 use hybridac::eval::{ExperimentConfig, Method};
+use hybridac::report;
 use hybridac::runtime::{Artifact, DatasetBlob};
+use hybridac::serve::{drive_workload, FleetConfig, Router};
 
 fn main() -> Result<()> {
     let tag = std::env::args().nth(1).unwrap_or_else(|| "resnet18m_c10s".into());
@@ -20,59 +26,61 @@ fn main() -> Result<()> {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(1000);
+    let replicas: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
     let dir = hybridac::artifacts_dir();
-    let data = {
+    let data = Arc::new({
         let art = Artifact::load(&dir, &tag)?;
         DatasetBlob::load(&dir, &art.dataset)?
-    };
+    });
     let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
-    let server = BatchServer::start(dir, tag.clone(), cfg, Duration::from_millis(15))?;
-    println!("serving {tag} with HybridAC@16% protection, batch window 15 ms");
+    let router = Arc::new(Router::start(dir, tag.clone(), cfg, FleetConfig::new(replicas))?);
+    println!(
+        "serving {tag} with HybridAC@16% on {replicas} replicas \
+         (independent variation draws), queue depth {}",
+        router.queue_depth()
+    );
 
-    let per = data.image_elems();
-    let n_clients = 4;
+    // bounded queues turn overload into waiting (QueueFull is retried
+    // inside drive_workload); a dead fleet is a hard error, not a spin
+    let n_clients = (replicas * 2).max(4);
     let t0 = Instant::now();
-    let images = std::sync::Arc::new(data);
-    let mut clients = Vec::new();
-    for c in 0..n_clients {
-        let handle_data = images.clone();
-        let srv = server.handle();
-        clients.push(std::thread::spawn(move || -> (usize, usize) {
-            let mut hits = 0;
-            let mut total = 0;
-            for i in (c..n_requests).step_by(n_clients) {
-                let idx = i % handle_data.n;
-                let (tx, rx) = std::sync::mpsc::channel();
-                let _ = srv.send(hybridac::coordinator::InferenceRequest {
-                    image: handle_data.images[idx * per..(idx + 1) * per].to_vec(),
-                    reply: tx,
-                    enqueued: Instant::now(),
-                });
-                if let Ok(pred) = rx.recv() {
-                    hits += (pred == handle_data.labels[idx]) as usize;
-                    total += 1;
-                }
-            }
-            (hits, total)
-        }));
-    }
-    let (mut hits, mut total) = (0, 0);
-    for c in clients {
-        let (h, t) = c.join().expect("client panicked");
-        hits += h;
-        total += t;
-    }
+    let (hits, total) = drive_workload(&router, &data, n_requests, n_clients)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "{total} requests from {n_clients} clients in {dt:.2}s = {:.0} req/s",
-        total as f64 / dt
+        "{total} requests from {n_clients} clients in {dt:.2}s = {:.0} req/s, \
+         accuracy {}",
+        total as f64 / dt,
+        report::pct(hits as f64 / total.max(1) as f64)
     );
+
+    router.probe(&data, 64);
+    let fm = router.fleet_metrics();
+    for r in &fm.replicas {
+        println!(
+            "  replica {} gen {}: draw {:016x}  {} reqs, mean batch {:.0}, \
+             lat {:.1} ms (p99 {:.1}), probe acc {}, {:?}",
+            r.id,
+            r.generation,
+            r.fingerprint,
+            r.metrics.requests,
+            r.metrics.mean_batch_occupancy(),
+            r.metrics.mean_latency_ms(),
+            r.metrics.latency_percentile_ms(0.99),
+            r.probe_accuracy.map(report::pct).unwrap_or_else(|| "-".into()),
+            r.status,
+        );
+    }
     println!(
-        "accuracy {:.2}%  |  latency mean {:.1} ms  p99 {:.1} ms  |  mean batch {:.0}",
-        100.0 * hits as f64 / total.max(1) as f64,
-        server.metrics.mean_latency_ms(),
-        server.metrics.latency_percentile_ms(0.99),
-        server.metrics.mean_batch_occupancy()
+        "fleet: p99 {:.1} ms over {} requests, {} shed, {} recycled",
+        fm.total.latency_percentile_ms(0.99),
+        fm.total.requests,
+        fm.shed,
+        fm.recycled
     );
-    server.shutdown()
+    Arc::try_unwrap(router)
+        .map_err(|_| anyhow::anyhow!("router still referenced"))?
+        .shutdown()
 }

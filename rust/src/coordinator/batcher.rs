@@ -1,29 +1,244 @@
-//! Request batching server (threads + channels; no tokio offline).
+//! Request batching: assembly, padding, execution, fan-out (threads +
+//! channels; no tokio offline).
 //!
 //! The analog pipeline wants full batches (the exported graphs are compiled
-//! at a fixed batch), so the coordinator aggregates incoming requests up to
-//! the artifact batch size or a deadline, pads the tail, executes once, and
-//! fans results back — the same dynamic-batching shape a serving router
-//! uses, here over the PJRT executor.
+//! at a fixed batch), so a worker aggregates incoming requests up to the
+//! artifact batch size or a deadline, zero-pads the tail, executes once, and
+//! fans results back. The pieces are free functions + a [`BatchContext`] so
+//! the single-worker [`BatchServer`] and the replicated `serve::Replica`
+//! fleet share one implementation:
+//!
+//! * [`collect_batch`] — deadline-bounded batch aggregation off a channel,
+//! * [`BatchContext`] — one PJRT engine + compiled executable + one noisy
+//!   (variation-drawn) model instance, uploaded once at construction,
+//! * [`fan_out`] — shape-checked prediction scatter back to callers.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::metrics::Metrics;
 use crate::eval::{prepare, ExperimentConfig};
-use crate::runtime::{Artifact, DatasetBlob, Engine};
+use crate::runtime::{Artifact, DatasetMeta, Engine};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+use super::metrics::Metrics;
 
 /// One inference request: an image (flat f32, H*W*C) + reply channel.
 pub struct InferenceRequest {
     pub image: Vec<f32>,
     pub reply: mpsc::Sender<i32>,
     pub enqueued: Instant,
+    /// Health-probe canary: answered normally but kept out of the serving
+    /// latency histogram so probes don't skew the reported percentiles.
+    pub probe: bool,
 }
 
+/// Block for the first request, then aggregate until the batch is full or
+/// `max_wait` has elapsed. Returns `None` once the ingress side is closed
+/// and drained — partial batches collected before a disconnect are still
+/// returned (and served) first.
+pub fn collect_batch(
+    rx: &mpsc::Receiver<InferenceRequest>,
+    batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<InferenceRequest>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + max_wait;
+    let mut pending = vec![first];
+    while pending.len() < batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => pending.push(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(pending)
+}
+
+/// Assemble the fixed-size input batch; the tail beyond `pending` is
+/// explicit zero padding (a dedicated blank image), never a repeat of a
+/// real request, so padding rows can't be mistaken for traffic.
+///
+/// Image sizes are validated at admission (`serve::Router` rejects
+/// mismatches with a typed error); as defense in depth a wrong-length
+/// image that reaches here is truncated / zero-extended rather than
+/// allowed to panic the worker thread.
+pub fn assemble_input(pending: &[InferenceRequest], batch: usize, per_image: usize) -> Vec<f32> {
+    debug_assert!(pending.len() <= batch);
+    let mut x = vec![0.0f32; batch * per_image];
+    for (i, r) in pending.iter().enumerate() {
+        let m = r.image.len().min(per_image);
+        x[i * per_image..i * per_image + m].copy_from_slice(&r.image[..m]);
+    }
+    x
+}
+
+/// Scatter per-row argmax predictions back to the waiting callers.
+/// The logits length is checked against `batch * num_classes` up front so a
+/// shape mismatch fails loudly instead of mis-attributing predictions.
+pub fn fan_out(
+    pending: &[InferenceRequest],
+    logits: &[f32],
+    batch: usize,
+    num_classes: usize,
+    metrics: &Metrics,
+) -> Result<()> {
+    ensure!(
+        logits.len() == batch * num_classes,
+        "logit shape mismatch: got {} values, expected {}x{}",
+        logits.len(),
+        batch,
+        num_classes
+    );
+    ensure!(
+        pending.len() <= batch,
+        "{} pending requests exceed batch {}",
+        pending.len(),
+        batch
+    );
+    for (i, r) in pending.iter().enumerate() {
+        let row = &logits[i * num_classes..(i + 1) * num_classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(k, _)| k as i32)
+            .unwrap();
+        if !r.probe {
+            metrics.record_latency(r.enqueued.elapsed());
+        }
+        let _ = r.reply.send(pred);
+    }
+    Ok(())
+}
+
+/// FNV-1a over the raw weight bits — a cheap identity for one variation
+/// draw, used to verify that differently-seeded replicas really hold
+/// independent noisy instances.
+fn weight_fingerprint(layers: &[crate::runtime::executor::LayerInputs]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: f32| {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for li in layers {
+        for t in [&li.wa1, &li.wa2, &li.wd] {
+            for &v in &t.data {
+                eat(v);
+            }
+        }
+    }
+    h
+}
+
+/// Everything one batching worker needs, set up once: the PJRT engine, the
+/// compiled executable (owned — compilation is hoisted out of the batch
+/// loop), and the device-resident weight buffers of one prepared noisy
+/// model instance drawn from `cfg.seed`.
+pub struct BatchContext {
+    // declaration order = drop order: device-resident state goes before the
+    // engine that owns the underlying PJRT client
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    engine: Engine,
+    batch: usize,
+    per_image: usize,
+    sample_shape: Vec<usize>,
+    num_classes: usize,
+    fingerprint: u64,
+}
+
+impl BatchContext {
+    pub fn new(artifacts: &std::path::Path, tag: &str, cfg: &ExperimentConfig) -> Result<Self> {
+        let art = Artifact::load(artifacts, tag)?;
+        // metadata only: batch shaping never touches the image payload
+        let data = DatasetMeta::load(artifacts, &art.dataset)?;
+        let engine = Engine::cpu()?;
+        // compile once, own the executable: the batch loop only uploads
+        // inputs and runs
+        let exe = engine.compile_owned(&art.hlo_path)?;
+
+        // one prepared (noisy) model instance serves the whole session
+        let mut rng = Rng::new(cfg.seed);
+        let model = prepare(&art, cfg, &mut rng);
+        let fingerprint = weight_fingerprint(&model.layers);
+        let mut weight_bufs = Vec::with_capacity(model.layers.len() * 6);
+        for li in &model.layers {
+            for t in [&li.wa1, &li.wa2, &li.wd, &li.bias] {
+                weight_bufs.push(engine.upload(t)?);
+            }
+            weight_bufs.push(engine.upload(&Tensor::scalar(li.lsb))?);
+            weight_bufs.push(engine.upload(&Tensor::scalar(li.clip))?);
+        }
+
+        Ok(BatchContext {
+            exe,
+            weight_bufs,
+            engine,
+            batch: art.batch,
+            per_image: data.image_elems(),
+            sample_shape: data.shape.clone(),
+            num_classes: data.num_classes,
+            fingerprint,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn per_image(&self) -> usize {
+        self.per_image
+    }
+
+    /// Identity of this context's variation draw (see [`weight_fingerprint`]).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Execute one assembled batch and fan predictions back.
+    pub fn execute(&self, pending: &[InferenceRequest], metrics: &Metrics) -> Result<()> {
+        let x = assemble_input(pending, self.batch, self.per_image);
+        let mut shape = vec![self.batch];
+        shape.extend_from_slice(&self.sample_shape);
+        let xbuf = self.engine.upload(&Tensor::new(shape, x))?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        inputs.push(&xbuf);
+        inputs.extend(self.weight_bufs.iter());
+        let logits = Engine::run_buffers(&self.exe, &inputs)?;
+        fan_out(pending, &logits, self.batch, self.num_classes, metrics)
+    }
+}
+
+/// The worker loop shared by [`BatchServer`] and `serve::Replica`: drain
+/// batches until the ingress closes. Execution errors are counted and
+/// logged; the dropped reply senders surface as `RecvError` to callers.
+pub fn serve_requests(
+    ctx: &BatchContext,
+    rx: &mpsc::Receiver<InferenceRequest>,
+    max_wait: Duration,
+    metrics: &Metrics,
+) -> Result<()> {
+    while let Some(pending) = collect_batch(rx, ctx.batch, max_wait) {
+        metrics.record_batch(pending.len());
+        if let Err(e) = ctx.execute(&pending, metrics) {
+            metrics.record_error(pending.len());
+            eprintln!("batch execution failed: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+/// Single-worker batching server: one thread owning one PJRT engine and one
+/// noisy model instance. The replicated path is `serve::Router`.
 pub struct BatchServer {
     tx: mpsc::Sender<InferenceRequest>,
     pub metrics: Arc<Metrics>,
@@ -41,7 +256,10 @@ impl BatchServer {
         let (tx, rx) = mpsc::channel::<InferenceRequest>();
         let metrics = Arc::new(Metrics::new());
         let m = metrics.clone();
-        let worker = std::thread::spawn(move || worker_loop(&artifacts, &tag, &cfg, max_wait, rx, m));
+        let worker = std::thread::spawn(move || -> Result<()> {
+            let ctx = BatchContext::new(&artifacts, &tag, &cfg)?;
+            serve_requests(&ctx, &rx, max_wait, &m)
+        });
         Ok(BatchServer { tx, metrics, worker: Some(worker) })
     }
 
@@ -57,6 +275,7 @@ impl BatchServer {
             image,
             reply: rtx,
             enqueued: Instant::now(),
+            probe: false,
         });
         rrx
     }
@@ -71,89 +290,106 @@ impl BatchServer {
     }
 }
 
-fn worker_loop(
-    artifacts: &std::path::Path,
-    tag: &str,
-    cfg: &ExperimentConfig,
-    max_wait: Duration,
-    rx: mpsc::Receiver<InferenceRequest>,
-    metrics: Arc<Metrics>,
-) -> Result<()> {
-    let art = Artifact::load(artifacts, tag)?;
-    let data = DatasetBlob::load(artifacts, &art.dataset)?;
-    let mut engine = Engine::cpu()?;
-    let exe_path = art.hlo_path.clone();
-    engine.load(&exe_path)?;
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-    // one prepared (noisy) model instance serves the whole session
-    let mut rng = Rng::new(cfg.seed);
-    let model = prepare(&art, cfg, &mut rng);
-    let mut weight_bufs = Vec::new();
-    for li in &model.layers {
-        for t in [&li.wa1, &li.wa2, &li.wd, &li.bias] {
-            weight_bufs.push(engine.upload(t)?);
-        }
-        weight_bufs.push(engine.upload(&Tensor::scalar(li.lsb))?);
-        weight_bufs.push(engine.upload(&Tensor::scalar(li.clip))?);
+    fn req(fill: f32, per_image: usize) -> (InferenceRequest, mpsc::Receiver<i32>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferenceRequest {
+                image: vec![fill; per_image],
+                reply: tx,
+                enqueued: Instant::now(),
+                probe: false,
+            },
+            rx,
+        )
     }
 
-    let per_image = data.image_elems();
-    let batch = art.batch;
-    loop {
-        // block for the first request of a batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return Ok(()), // ingress closed
-        };
-        let deadline = Instant::now() + max_wait;
-        let mut pending = vec![first];
-        while pending.len() < batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        metrics.record_batch(pending.len());
+    #[test]
+    fn assemble_zero_pads_tail() {
+        let (r, _rx) = req(3.0, 4);
+        let x = assemble_input(&[r], 3, 4);
+        assert_eq!(&x[..4], &[3.0; 4]);
+        assert_eq!(&x[4..], &[0.0; 8], "padding must be zeros, not a repeat");
+    }
 
-        // assemble the fixed-size batch (pad by repeating the first image)
-        let mut x = Vec::with_capacity(batch * per_image);
-        for r in &pending {
-            x.extend_from_slice(&r.image);
-        }
-        for _ in pending.len()..batch {
-            x.extend_from_slice(&pending[0].image);
-        }
-        let mut shape = vec![batch];
-        shape.extend_from_slice(&data.shape);
-        let xbuf = engine.upload(&Tensor::new(shape, x))?;
-        let exe = engine.load(&exe_path)?;
-        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weight_bufs.len());
-        inputs.push(&xbuf);
-        inputs.extend(weight_bufs.iter());
-        match Engine::run_buffers(exe, &inputs) {
-            Ok(logits) => {
-                let nc = data.num_classes;
-                for (i, r) in pending.iter().enumerate() {
-                    let row = &logits[i * nc..(i + 1) * nc];
-                    let pred = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(k, _)| k as i32)
-                        .unwrap();
-                    metrics.record_latency(r.enqueued.elapsed());
-                    let _ = r.reply.send(pred);
-                }
-            }
-            Err(e) => {
-                metrics.errors.fetch_add(pending.len() as u64, std::sync::atomic::Ordering::Relaxed);
-                eprintln!("batch execution failed: {e:#}");
-            }
-        }
+    #[test]
+    fn assemble_full_batch_has_no_padding() {
+        let (a, _ra) = req(1.0, 2);
+        let (b, _rb) = req(2.0, 2);
+        let x = assemble_input(&[a, b], 2, 2);
+        assert_eq!(x, vec![1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn fan_out_rejects_bad_logit_shape() {
+        let m = Metrics::new();
+        let (r, _rx) = req(0.0, 1);
+        // 2-class, batch 4 expects 8 logits; hand it 6
+        assert!(fan_out(&[r], &[0.0; 6], 4, 2, &m).is_err());
+    }
+
+    #[test]
+    fn fan_out_routes_argmax_to_each_caller() {
+        let m = Metrics::new();
+        let (a, ra) = req(0.0, 1);
+        let (b, rb) = req(0.0, 1);
+        // batch 3 (one padding row), 2 classes: rows argmax to 1, 0, pad
+        let logits = [0.1, 0.9, 0.8, 0.2, 0.0, 0.0];
+        fan_out(&[a, b], &logits, 3, 2, &m).unwrap();
+        assert_eq!(ra.recv().unwrap(), 1);
+        assert_eq!(rb.recv().unwrap(), 0);
+    }
+
+    #[test]
+    fn assemble_survives_wrong_length_images() {
+        // admission validates sizes; the worker must still never panic
+        let (long, _rl) = req(1.0, 6);
+        let (short, _rs) = req(2.0, 2);
+        let x = assemble_input(&[long, short], 2, 4);
+        assert_eq!(x, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fan_out_keeps_probes_out_of_latency_stats() {
+        let m = Metrics::new();
+        let (mut p, rp) = req(0.0, 1);
+        p.probe = true;
+        fan_out(&[p], &[0.3, 0.7], 1, 2, &m).unwrap();
+        assert_eq!(rp.recv().unwrap(), 1, "probes are still answered");
+        assert_eq!(m.latency_percentile_ms(0.5), 0.0, "but not recorded");
+    }
+
+    #[test]
+    fn collect_cuts_off_at_deadline() {
+        let (tx, rx) = mpsc::channel();
+        let (a, _ra) = req(0.0, 1);
+        let (b, _rb) = req(0.0, 1);
+        tx.send(a).unwrap();
+        tx.send(b).unwrap();
+        // batch of 8 never fills; the deadline must return the partial batch
+        let t0 = Instant::now();
+        let pending = collect_batch(&rx, 8, Duration::from_millis(20)).unwrap();
+        assert_eq!(pending.len(), 2);
+        assert!(t0.elapsed() < Duration::from_secs(2), "did not block forever");
+    }
+
+    #[test]
+    fn collect_returns_none_when_closed_and_drained() {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        drop(tx);
+        assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn collect_returns_partial_batch_on_disconnect() {
+        let (tx, rx) = mpsc::channel();
+        let (a, _ra) = req(0.0, 1);
+        tx.send(a).unwrap();
+        drop(tx);
+        let pending = collect_batch(&rx, 4, Duration::from_secs(5)).unwrap();
+        assert_eq!(pending.len(), 1, "pending request served before shutdown");
     }
 }

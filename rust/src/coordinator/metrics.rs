@@ -1,4 +1,9 @@
 //! Lightweight counters + latency histogram for the serving path.
+//!
+//! `Metrics` is the live, lock-free accumulator a worker thread writes to;
+//! `MetricsSnapshot` is a plain-data copy that can be merged across
+//! replicas — the fleet router reports both per-replica snapshots and the
+//! merged total.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -8,13 +13,15 @@ const BUCKET_EDGES_US: [u64; 12] = [
     50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000,
 ];
 
+const N_BUCKETS: usize = BUCKET_EDGES_US.len() + 1;
+
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batched_samples: AtomicU64,
     pub errors: AtomicU64,
-    latency_buckets: [AtomicU64; BUCKET_EDGES_US.len() + 1],
+    latency_buckets: [AtomicU64; N_BUCKETS],
     latency_sum_us: AtomicU64,
 }
 
@@ -32,6 +39,10 @@ impl Metrics {
         self.batched_samples.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    pub fn record_error(&self, n: usize) {
+        self.errors.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
@@ -42,21 +53,75 @@ impl Metrics {
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Consistent-enough copy of the counters (each counter is read once;
+    /// no cross-counter atomicity is needed for reporting).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut latency_buckets = [0u64; N_BUCKETS];
+        for (out, b) in latency_buckets.iter_mut().zip(&self.latency_buckets) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_samples: self.batched_samples.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            latency_buckets,
+            latency_sum_us: self.latency_sum_us.load(Ordering::Relaxed),
+        }
+    }
+
     pub fn mean_latency_ms(&self) -> f64 {
-        let n = self.requests.load(Ordering::Relaxed).max(1);
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
+        self.snapshot().mean_latency_ms()
     }
 
     /// Approximate latency percentile from the histogram (upper edge).
     pub fn latency_percentile_ms(&self, p: f64) -> f64 {
-        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        self.snapshot().latency_percentile_ms(p)
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        self.snapshot().mean_batch_occupancy()
+    }
+}
+
+/// Plain-data counters; `merge` folds several replicas into a fleet total
+/// (histograms add bucket-wise, so merged percentiles stay meaningful).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_samples: u64,
+    pub errors: u64,
+    latency_buckets: [u64; N_BUCKETS],
+    latency_sum_us: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.batched_samples += other.batched_samples;
+        self.errors += other.errors;
+        for (a, b) in self.latency_buckets.iter_mut().zip(&other.latency_buckets) {
+            *a += b;
+        }
+        self.latency_sum_us += other.latency_sum_us;
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.latency_sum_us as f64 / self.requests.max(1) as f64 / 1000.0
+    }
+
+    /// Approximate latency percentile from the histogram (upper edge).
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        let total: u64 = self.latency_buckets.iter().sum();
         if total == 0 {
             return 0.0;
         }
         let target = (total as f64 * p).ceil() as u64;
         let mut seen = 0;
         for (i, b) in self.latency_buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+            seen += b;
             if seen >= target {
                 return *BUCKET_EDGES_US.get(i).unwrap_or(&500_000) as f64 / 1000.0;
             }
@@ -65,8 +130,7 @@ impl Metrics {
     }
 
     pub fn mean_batch_occupancy(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed).max(1);
-        self.batched_samples.load(Ordering::Relaxed) as f64 / b as f64
+        self.batched_samples as f64 / self.batches.max(1) as f64
     }
 }
 
@@ -93,5 +157,56 @@ mod tests {
         m.record_batch(10);
         m.record_batch(30);
         assert_eq!(m.mean_batch_occupancy(), 20.0);
+    }
+
+    #[test]
+    fn snapshot_matches_live_counters() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2);
+        m.record_error(1);
+        m.record_latency(Duration::from_micros(75));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.batched_samples, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.latency_percentile_ms(0.5), m.latency_percentile_ms(0.5));
+    }
+
+    #[test]
+    fn merge_adds_counters_and_histograms() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        for us in [60u64, 120] {
+            a.record_request();
+            a.record_latency(Duration::from_micros(us));
+        }
+        for us in [30_000u64, 90_000] {
+            b.record_request();
+            b.record_latency(Duration::from_micros(us));
+        }
+        a.record_batch(2);
+        b.record_batch(4);
+        let mut total = a.snapshot();
+        total.merge(&b.snapshot());
+        assert_eq!(total.requests, 4);
+        assert_eq!(total.batches, 2);
+        assert_eq!(total.batched_samples, 6);
+        // merged p99 must land in the slow replica's tail, not the fast one's
+        assert!(total.latency_percentile_ms(0.99) >= 100.0 - 1e-9);
+        assert!(total.latency_percentile_ms(0.25) <= 0.1 + 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_latency(Duration::from_micros(200));
+        let mut s = m.snapshot();
+        let before = s.clone();
+        s.merge(&MetricsSnapshot::default());
+        assert_eq!(s, before);
     }
 }

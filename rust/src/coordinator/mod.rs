@@ -1,10 +1,14 @@
 //! L3 coordinator: ties the runtime (accuracy path) to the hardware model
 //! (timing/energy path) and serves batched inference requests.
+//!
+//! The batching building blocks here ([`batcher::BatchContext`],
+//! [`batcher::collect_batch`], [`batcher::fan_out`]) are shared with the
+//! replicated serving fleet in [`crate::serve`].
 
 pub mod batcher;
 pub mod driver;
 pub mod metrics;
 
-pub use batcher::{BatchServer, InferenceRequest};
+pub use batcher::{BatchContext, BatchServer, InferenceRequest};
 pub use driver::{run_experiment, RunReport};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};

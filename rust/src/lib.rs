@@ -15,8 +15,11 @@
 //!   architectures.
 //!
 //! Start with [`runtime::Artifact`] + [`eval::Evaluator`] for accuracy
-//! experiments and [`hwmodel`] for the architecture studies; `examples/`
-//! shows the public API end to end.
+//! experiments and [`hwmodel`] for the architecture studies; for serving,
+//! [`serve::Router`] runs a replicated fleet where every replica holds an
+//! independent conductance-variation draw (the single-worker
+//! [`coordinator::BatchServer`] remains for benchmarks). `examples/` shows
+//! the public API end to end.
 
 pub mod analog;
 pub mod benchkit;
@@ -30,6 +33,7 @@ pub mod quantize;
 pub mod report;
 pub mod runtime;
 pub mod selection;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -7,19 +7,25 @@
 //!   adc     --model TAG          ADC-resolution sweep (Table 2 rows)
 //!   hw                           architecture power/area/efficiency summary
 //!   select  --model TAG          Algorithm-1 loop: find the %weights needed
-//!   serve   --model TAG          batched-inference demo server (self-driven)
+//!   serve   --model TAG          replicated serving fleet demo (self-driven):
+//!           --replicas N --window-ms MS --queue-depth D --probe P --requests R
 
 use anyhow::{bail, Result};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use hybridac::coordinator::{run_experiment, BatchServer};
+use hybridac::coordinator::run_experiment;
 use hybridac::eval::{Evaluator, ExperimentConfig, Method};
 use hybridac::hwmodel::all_architectures;
 use hybridac::report;
-use hybridac::runtime::DatasetBlob;
+use hybridac::runtime::{Artifact, DatasetBlob};
+use hybridac::serve::{self, FleetConfig, Router};
 use hybridac::util::cli::Args;
 
-const FLAGS: &[&str] = &["model", "repeats", "n-eval", "frac", "adc", "target", "requests"];
+const FLAGS: &[&str] = &[
+    "model", "repeats", "n-eval", "frac", "adc", "target", "requests", "replicas", "window-ms",
+    "queue-depth", "probe", "seed",
+];
 const SWITCHES: &[&str] = &["differential", "verbose"];
 
 fn main() -> Result<()> {
@@ -35,6 +41,7 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: hybridac <info|run|sweep|adc|hw|select|serve> [--model TAG] ...\n\
+                 serve flags: --replicas N --window-ms MS --queue-depth D --probe P --requests R\n\
                  see README.md; artifacts must be built first (`make artifacts`)"
             );
             Ok(())
@@ -229,35 +236,84 @@ fn select(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let tag = model_tag(args);
     let dir = hybridac::artifacts_dir();
-    let n_requests = args.get_usize("requests", 600)?;
-    let cfg = base_cfg(args, Method::Hybrid { frac: 0.16 })?;
-    let data = {
-        let art = hybridac::runtime::Artifact::load(&dir, &tag)?;
+    let n_requests = args.get_usize("requests", 2000)?;
+    let replicas = args.get_usize("replicas", 2)?;
+    let probe_n = args.get_usize("probe", 64)?;
+    let frac = args.get_f64("frac", 0.16)?;
+    let cfg = base_cfg(args, Method::Hybrid { frac })?;
+    let data = Arc::new({
+        let art = Artifact::load(&dir, &tag)?;
         DatasetBlob::load(&dir, &art.dataset)?
-    };
-    let server = BatchServer::start(dir, tag.clone(), cfg, Duration::from_millis(20))?;
-    let per = data.image_elems();
-    let t0 = std::time::Instant::now();
-    let mut receivers = Vec::new();
-    let mut hits = 0usize;
-    for i in 0..n_requests {
-        let idx = i % data.n;
-        receivers.push((idx, server.submit(data.images[idx * per..(idx + 1) * per].to_vec())));
-    }
-    for (idx, rx) in receivers {
-        let pred = rx.recv()?;
-        hits += (pred == data.labels[idx]) as usize;
-    }
-    let dt = t0.elapsed();
+    });
+
+    let mut fleet = FleetConfig::new(replicas);
+    fleet.max_wait = Duration::from_millis(args.get_usize("window-ms", 15)? as u64);
+    fleet.queue_depth = args.get_usize("queue-depth", 0)?;
+    fleet.base_seed = args.get_usize("seed", 0xF1EE7)? as u64;
+    let router = Arc::new(Router::start(dir, tag.clone(), cfg, fleet)?);
     println!(
-        "served {n_requests} requests in {:.2}s ({:.0} req/s), acc {:.2}%, \
-         mean latency {:.1} ms, p99 {:.1} ms, mean batch {:.0}",
-        dt.as_secs_f64(),
-        n_requests as f64 / dt.as_secs_f64(),
-        100.0 * hits as f64 / n_requests as f64,
-        server.metrics.mean_latency_ms(),
-        server.metrics.latency_percentile_ms(0.99),
-        server.metrics.mean_batch_occupancy()
+        "serving {tag}: {} replicas (HybridAC@{:.0}%), window {} ms, queue depth {}",
+        router.replica_count(),
+        frac * 100.0,
+        args.get_usize("window-ms", 15)?,
+        router.queue_depth()
     );
-    server.shutdown()
+
+    // drive the fleet from several client threads; a shed request is
+    // retried after a short backoff, so admission shows up as delay + the
+    // fleet's shed counter rather than lost traffic
+    let n_clients = (replicas * 2).max(4);
+    let t0 = Instant::now();
+    let (hits, total) = serve::drive_workload(&router, &data, n_requests, n_clients)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {total} requests in {dt:.2}s = {:.0} req/s, accuracy {}",
+        total as f64 / dt,
+        report::pct(hits as f64 / total.max(1) as f64)
+    );
+
+    // labeled canary probe → per-replica observed accuracy + health verdict
+    router.probe(&data, probe_n);
+    let recycled = router.recycle_degraded()?;
+    if !recycled.is_empty() {
+        println!("recycled degraded replicas: {recycled:?}");
+    }
+    let fm = router.fleet_metrics();
+    let rows: Vec<Vec<String>> = fm
+        .replicas
+        .iter()
+        .map(|r| {
+            vec![
+                r.id.to_string(),
+                r.generation.to_string(),
+                format!("{:016x}", r.fingerprint),
+                r.metrics.requests.to_string(),
+                format!("{:.0}", r.metrics.mean_batch_occupancy()),
+                format!("{:.1}", r.metrics.mean_latency_ms()),
+                format!("{:.1}", r.metrics.latency_percentile_ms(0.99)),
+                r.probe_accuracy.map(report::pct).unwrap_or_else(|| "-".into()),
+                format!("{:?}", r.status),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            "fleet",
+            &["replica", "gen", "variation draw", "reqs", "batch", "lat ms", "p99 ms", "probe acc", "status"],
+            &rows
+        )
+    );
+    println!(
+        "fleet totals: {} requests, {} batches (mean occupancy {:.0}), p99 {:.1} ms, {} shed, {} recycled",
+        fm.total.requests,
+        fm.total.batches,
+        fm.total.mean_batch_occupancy(),
+        fm.total.latency_percentile_ms(0.99),
+        fm.shed,
+        fm.recycled
+    );
+    Arc::try_unwrap(router)
+        .map_err(|_| anyhow::anyhow!("router still referenced"))?
+        .shutdown()
 }

@@ -207,6 +207,35 @@ impl Artifact {
     }
 }
 
+/// Dataset metadata only (no image/label payload) — enough for serving
+/// paths that shape batches but never score against the blob, so spawning
+/// a replica doesn't re-read the whole image file.
+pub struct DatasetMeta {
+    pub n: usize,
+    pub shape: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl DatasetMeta {
+    pub fn load(dir: &Path, name: &str) -> Result<DatasetMeta> {
+        let meta_text = std::fs::read_to_string(dir.join(format!("{name}.data.json")))?;
+        let meta = Json::parse(&meta_text)?;
+        Ok(DatasetMeta {
+            n: meta.usize_of("n")?,
+            shape: meta
+                .arr_of("shape")?
+                .iter()
+                .map(|j| j.as_usize().unwrap())
+                .collect(),
+            num_classes: meta.usize_of("num_classes")?,
+        })
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
 /// Test split of one synthetic dataset (images then labels).
 pub struct DatasetBlob {
     pub n: usize,

@@ -9,6 +9,6 @@ pub mod artifact;
 pub mod executor;
 pub mod pjrt;
 
-pub use artifact::{Artifact, DatasetBlob, LayerInfo};
+pub use artifact::{Artifact, DatasetBlob, DatasetMeta, LayerInfo};
 pub use executor::ModelExecutor;
 pub use pjrt::Engine;

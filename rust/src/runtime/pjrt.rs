@@ -29,18 +29,25 @@ impl Engine {
     /// Load + compile an HLO text artifact (cached).
     pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(path) {
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?;
+            let exe = self.compile_owned(path)?;
             self.cache.insert(path.to_path_buf(), exe);
         }
         Ok(&self.cache[path])
+    }
+
+    /// Compile an HLO text artifact into an *owned* executable, bypassing
+    /// the cache. Long-lived loops (the batch server, serve replicas) hold
+    /// this across iterations so the per-batch path is upload + run only —
+    /// no repeated cache lookup under a `&mut self` borrow.
+    pub fn compile_owned(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
     }
 
     pub fn is_loaded(&self, path: &Path) -> bool {

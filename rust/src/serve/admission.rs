@@ -1,0 +1,152 @@
+//! Admission control: bounded per-replica queues with shed-on-full.
+//!
+//! A [`Gate`] wraps a `SyncSender` so the router can *offer* work without
+//! blocking — a full queue hands the item back for spillover to the next
+//! replica, and only when every replica refuses does the router shed the
+//! request with a typed [`ServeError`]. Backpressure is therefore explicit
+//! and bounded: no unbounded queue can hide an overloaded fleet.
+
+use std::fmt;
+use std::sync::mpsc;
+
+/// Typed serving-path error, surfaced to clients by the router.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Every replica's admission queue was full — the request was shed.
+    QueueFull { replicas: usize, depth: usize },
+    /// The target replica's worker has exited.
+    ReplicaClosed { id: usize },
+    /// The fleet has no replicas (misconfiguration or full shutdown).
+    NoReplicas,
+    /// The image payload doesn't match the model's input size — rejected
+    /// at admission so it can never panic a replica worker.
+    BadRequest { got: usize, want: usize },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::QueueFull { replicas, depth } => write!(
+                f,
+                "request shed: all {replicas} replica queues full (depth {depth})"
+            ),
+            ServeError::ReplicaClosed { id } => write!(f, "replica {id} is shut down"),
+            ServeError::NoReplicas => write!(f, "no replicas in the fleet"),
+            ServeError::BadRequest { got, want } => write!(
+                f,
+                "invalid request: image has {got} elements, model expects {want}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Why an `offer` was refused; carries the item back so the caller can
+/// spill it to another replica without cloning.
+#[derive(Debug)]
+pub enum Rejection<T> {
+    /// Queue at capacity right now.
+    Full(T),
+    /// Receiver dropped — the consumer is gone for good.
+    Closed(T),
+}
+
+impl<T> Rejection<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            Rejection::Full(t) | Rejection::Closed(t) => t,
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        matches!(self, Rejection::Full(_))
+    }
+}
+
+/// Bounded admission queue in front of one worker. Clones share the same
+/// queue (and its bound), so a handle can outlive a lock on the owner.
+pub struct Gate<T> {
+    tx: mpsc::SyncSender<T>,
+    depth: usize,
+}
+
+impl<T> Clone for Gate<T> {
+    fn clone(&self) -> Self {
+        Gate { tx: self.tx.clone(), depth: self.depth }
+    }
+}
+
+impl<T> Gate<T> {
+    /// Create a gate + the worker-side receiver. `depth` must be ≥ 1
+    /// (a zero-capacity sync channel is a rendezvous, which would stall
+    /// the non-blocking `offer` path entirely).
+    pub fn bounded(depth: usize) -> (Gate<T>, mpsc::Receiver<T>) {
+        assert!(depth >= 1, "admission queue depth must be >= 1");
+        let (tx, rx) = mpsc::sync_channel(depth);
+        (Gate { tx, depth }, rx)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Non-blocking admit; a full or closed queue returns the item.
+    pub fn offer(&self, item: T) -> Result<(), Rejection<T>> {
+        match self.tx.try_send(item) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(t)) => Err(Rejection::Full(t)),
+            Err(mpsc::TrySendError::Disconnected(t)) => Err(Rejection::Closed(t)),
+        }
+    }
+
+    /// Blocking admit (used by health probes, which must not be shed —
+    /// shedding probes would blind the very signal that detects overload
+    /// of a *degraded* replica).
+    pub fn send_blocking(&self, item: T) -> Result<(), Rejection<T>> {
+        self.tx.send(item).map_err(|mpsc::SendError(t)| Rejection::Closed(t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offers_admit_up_to_depth_then_shed() {
+        let (gate, _rx) = Gate::bounded(2);
+        assert!(gate.offer(1).is_ok());
+        assert!(gate.offer(2).is_ok());
+        match gate.offer(3) {
+            Err(Rejection::Full(v)) => assert_eq!(v, 3, "item handed back for spillover"),
+            other => panic!("expected Full, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn draining_reopens_the_gate() {
+        let (gate, rx) = Gate::bounded(1);
+        assert!(gate.offer(7).is_ok());
+        assert!(gate.offer(8).is_err());
+        assert_eq!(rx.recv().unwrap(), 7);
+        assert!(gate.offer(8).is_ok());
+    }
+
+    #[test]
+    fn closed_receiver_is_distinguished_from_full() {
+        let (gate, rx) = Gate::bounded(1);
+        drop(rx);
+        match gate.offer(1) {
+            Err(r @ Rejection::Closed(_)) => assert!(!r.is_full()),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert!(gate.send_blocking(2).is_err());
+    }
+
+    #[test]
+    fn serve_error_messages_name_the_condition() {
+        let e = ServeError::QueueFull { replicas: 4, depth: 16 };
+        assert!(e.to_string().contains("shed"));
+        assert!(ServeError::ReplicaClosed { id: 2 }.to_string().contains("2"));
+    }
+}

@@ -1,0 +1,47 @@
+//! Replicated serving: a router load-balancing over N replicas, each with
+//! its own PJRT engine and an *independent* conductance-variation draw.
+//!
+//! The single-worker [`crate::coordinator::BatchServer`] caps throughput at
+//! one batch at a time and pins every request to one variation instance.
+//! This subsystem scales that out and makes the paper's robustness claim an
+//! operational property:
+//!
+//! * [`Router`] — round-robin + spillover load balancing, bounded
+//!   per-replica admission queues, shed-on-full with a typed [`ServeError`];
+//! * [`Replica`] — one worker thread = one engine + one dynamic-batching
+//!   loop + one variation draw seeded per (replica, generation);
+//! * [`ReplicaHealth`] / [`HealthPolicy`] — labeled canary probes whose
+//!   observed accuracy flags degraded draws, recycled via
+//!   [`Router::recycle_degraded`] with a fresh seed;
+//! * [`FleetMetrics`] — per-replica and merged throughput, latency
+//!   percentiles, batch occupancy, and probe accuracy
+//!   (built on [`crate::coordinator::MetricsSnapshot`]).
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use hybridac::eval::{ExperimentConfig, Method};
+//! use hybridac::serve::{FleetConfig, Router};
+//!
+//! let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
+//! let router = Router::start(
+//!     hybridac::artifacts_dir(),
+//!     "resnet18m_c10s".into(),
+//!     cfg,
+//!     FleetConfig::new(4),
+//! )?;
+//! let rx = router.submit(vec![0.0; 16 * 16 * 3]).unwrap();
+//! let _pred = rx.recv()?;
+//! router.shutdown()?;
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod admission;
+pub mod health;
+pub mod replica;
+pub mod router;
+
+pub use admission::{Gate, Rejection, ServeError};
+pub use health::{HealthPolicy, HealthStatus, ReplicaHealth};
+pub use replica::{ProbeHandle, Replica, ReplicaSpec};
+pub use router::{drive_workload, FleetConfig, FleetMetrics, ReplicaReport, Router};

@@ -1,0 +1,185 @@
+//! One serving replica: a worker thread owning its own PJRT engine, its own
+//! dynamic-batching loop, and — the point of the fleet — its own
+//! conductance-variation draw, seeded per (replica, generation).
+//!
+//! The PJRT client is built *inside* the worker thread (it is not `Send`),
+//! so `spawn` hands the construction parameters in and waits on a ready
+//! channel for either the replica's variation fingerprint or the
+//! construction error.
+
+use anyhow::{anyhow, Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{serve_requests, BatchContext, InferenceRequest};
+use crate::coordinator::Metrics;
+use crate::eval::ExperimentConfig;
+
+use super::admission::{Gate, Rejection};
+use super::health::ReplicaHealth;
+
+/// Spawn-time parameters for one replica.
+#[derive(Clone, Debug)]
+pub struct ReplicaSpec {
+    pub id: usize,
+    /// Incremented by every recycle; part of the seed derivation.
+    pub generation: u64,
+    /// Seed of this replica's variation draw (see `Router::replica_seed`).
+    pub seed: u64,
+    /// Dynamic-batching window.
+    pub max_wait: Duration,
+    /// Admission queue depth, in requests (resolved — never 0 here).
+    pub queue_depth: usize,
+}
+
+/// Handle to a live replica worker.
+pub struct Replica {
+    pub id: usize,
+    pub generation: u64,
+    pub seed: u64,
+    /// Identity of this replica's variation draw (hash of the noisy weights).
+    pub fingerprint: u64,
+    /// Artifact batch size the worker executes at.
+    pub batch: usize,
+    /// Flat input size (H*W*C) one request must carry.
+    pub per_image: usize,
+    pub metrics: Arc<Metrics>,
+    pub health: Arc<ReplicaHealth>,
+    gate: Gate<InferenceRequest>,
+    worker: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl Replica {
+    /// Spawn the worker and block until its engine + variation instance are
+    /// ready (or construction failed, surfaced here rather than at join).
+    pub fn spawn(
+        artifacts: std::path::PathBuf,
+        tag: String,
+        base_cfg: &ExperimentConfig,
+        spec: ReplicaSpec,
+    ) -> Result<Replica> {
+        let mut cfg = base_cfg.clone();
+        cfg.seed = spec.seed;
+        let (gate, rx) = Gate::bounded(spec.queue_depth);
+        let metrics = Arc::new(Metrics::new());
+        let health = Arc::new(ReplicaHealth::new());
+        let m = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(u64, usize, usize), String>>();
+        let max_wait = spec.max_wait;
+        let worker = std::thread::Builder::new()
+            .name(format!("replica-{}", spec.id))
+            .spawn(move || -> Result<()> {
+                let ctx = match BatchContext::new(&artifacts, &tag, &cfg) {
+                    Ok(ctx) => {
+                        let _ = ready_tx
+                            .send(Ok((ctx.fingerprint(), ctx.batch_size(), ctx.per_image())));
+                        ctx
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return Err(e);
+                    }
+                };
+                serve_requests(&ctx, &rx, max_wait, &m)
+            })
+            .context("spawning replica worker thread")?;
+
+        match ready_rx.recv() {
+            Ok(Ok((fingerprint, batch, per_image))) => Ok(Replica {
+                id: spec.id,
+                generation: spec.generation,
+                seed: spec.seed,
+                fingerprint,
+                batch,
+                per_image,
+                metrics,
+                health,
+                gate,
+                worker: Some(worker),
+            }),
+            Ok(Err(msg)) => {
+                let _ = worker.join();
+                Err(anyhow!("replica {} failed to start: {msg}", spec.id))
+            }
+            Err(_) => {
+                let _ = worker.join();
+                Err(anyhow!("replica {} worker died during startup", spec.id))
+            }
+        }
+    }
+
+    /// Non-blocking admit; a refusal hands the image back so the router can
+    /// spill it to the next replica.
+    pub fn try_submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, Rejection<Vec<f32>>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = InferenceRequest { image, reply: rtx, enqueued: Instant::now(), probe: false };
+        match self.gate.offer(req) {
+            Ok(()) => {
+                self.metrics.record_request();
+                Ok(rrx)
+            }
+            Err(r) => {
+                let full = r.is_full();
+                let image = r.into_inner().image;
+                Err(if full { Rejection::Full(image) } else { Rejection::Closed(image) })
+            }
+        }
+    }
+
+    /// Detached ingress handle for health probing: shares this replica's
+    /// queue, metrics, and health record, but lets the prober submit
+    /// (blocking) *without* holding whatever lock guards the `Replica`.
+    pub fn probe_handle(&self) -> ProbeHandle {
+        ProbeHandle { gate: self.gate.clone(), health: self.health.clone() }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.gate.depth()
+    }
+
+    /// Whether the worker thread is still running. A dead worker (panic or
+    /// unexpected exit) makes the slot recyclable regardless of its health
+    /// verdict — see `Router::recycle_degraded`.
+    pub fn is_alive(&self) -> bool {
+        self.worker.as_ref().is_some_and(|w| !w.is_finished())
+    }
+
+    /// Close the ingress, drain pending batches, and join the worker.
+    /// Any live [`ProbeHandle`] clones keep the queue open until dropped.
+    /// A worker that panicked (or exited with an error) surfaces as `Err`
+    /// here — recycling relies on this not panicking the caller.
+    pub fn shutdown(mut self) -> Result<()> {
+        let worker = self.worker.take();
+        drop(self); // drops the gate → worker drains and exits
+        if let Some(w) = worker {
+            match w.join() {
+                Ok(result) => result?,
+                Err(_) => anyhow::bail!("replica worker panicked"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Probe-side ingress cloned off a [`Replica`] (see
+/// [`Replica::probe_handle`]): blocking submits that are never shed, usable
+/// while the router's slot lock is released.
+pub struct ProbeHandle {
+    gate: Gate<InferenceRequest>,
+    pub health: Arc<ReplicaHealth>,
+}
+
+impl ProbeHandle {
+    /// Blocking admit; fails only once the worker is gone. Probes are
+    /// tagged so they stay out of the serving request/latency metrics —
+    /// their outcomes land in the health record instead.
+    pub fn submit_blocking(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, Rejection<Vec<f32>>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = InferenceRequest { image, reply: rtx, enqueued: Instant::now(), probe: true };
+        match self.gate.send_blocking(req) {
+            Ok(()) => Ok(rrx),
+            Err(r) => Err(Rejection::Closed(r.into_inner().image)),
+        }
+    }
+}

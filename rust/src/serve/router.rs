@@ -1,0 +1,410 @@
+//! Fleet router: load-balances requests across N replicas, each holding an
+//! independent conductance-variation draw.
+//!
+//! Balancing is round-robin with spillover: a request starts at the next
+//! replica in rotation and walks the ring until a queue admits it; only
+//! when every queue refuses is it shed with [`ServeError::QueueFull`].
+//! Health probing replays a labeled canary set through every replica and
+//! `recycle_degraded` replaces flagged replicas with a fresh variation draw
+//! (generation bump ⇒ new seed).
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use crate::coordinator::MetricsSnapshot;
+use crate::eval::ExperimentConfig;
+use crate::runtime::{Artifact, DatasetBlob, DatasetMeta};
+use crate::util::rng::Rng;
+
+use super::admission::{Rejection, ServeError};
+use super::health::{HealthPolicy, HealthStatus};
+use super::replica::{Replica, ReplicaSpec};
+
+/// Fleet-level configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub replicas: usize,
+    /// Dynamic-batching window per replica.
+    pub max_wait: Duration,
+    /// Per-replica admission queue depth in requests; 0 means
+    /// "2 × artifact batch" (one batch executing + one building).
+    pub queue_depth: usize,
+    /// Base of the per-(replica, generation) seed derivation.
+    pub base_seed: u64,
+    pub health: HealthPolicy,
+}
+
+impl FleetConfig {
+    pub fn new(replicas: usize) -> Self {
+        FleetConfig {
+            replicas,
+            max_wait: Duration::from_millis(15),
+            queue_depth: 0,
+            base_seed: 0xF1EE7,
+            health: HealthPolicy::default(),
+        }
+    }
+}
+
+/// Point-in-time state of one replica, for reporting.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub id: usize,
+    pub generation: u64,
+    pub seed: u64,
+    pub fingerprint: u64,
+    pub metrics: MetricsSnapshot,
+    /// Health probes answered this generation (kept out of `metrics`).
+    pub probes: u64,
+    pub probe_accuracy: Option<f64>,
+    pub status: HealthStatus,
+    /// False once the worker thread has exited (recyclable state).
+    pub alive: bool,
+}
+
+/// Per-replica reports plus the merged fleet totals.
+#[derive(Clone, Debug)]
+pub struct FleetMetrics {
+    pub replicas: Vec<ReplicaReport>,
+    pub total: MetricsSnapshot,
+    /// Requests refused by every queue (admission sheds).
+    pub shed: u64,
+    /// Replicas replaced by health recycling since start.
+    pub recycled: u64,
+}
+
+pub struct Router {
+    artifacts: std::path::PathBuf,
+    tag: String,
+    base_cfg: ExperimentConfig,
+    fleet: FleetConfig,
+    /// Resolved admission depth (the 0-sentinel replaced by 2 × batch).
+    queue_depth: usize,
+    /// Flat input size every request must carry (validated at admission).
+    per_image: usize,
+    /// Read-locked on the hot path (try_submit needs only `&Replica`);
+    /// write-locked only to swap a replica during recycling.
+    slots: Vec<RwLock<Replica>>,
+    next: AtomicUsize,
+    shed: AtomicU64,
+    recycled: AtomicU64,
+}
+
+/// Deterministic, decorrelated seed for one (replica, generation) draw.
+fn replica_seed(base: u64, id: usize, generation: u64) -> u64 {
+    let mixed = base
+        ^ (id as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+        ^ generation.wrapping_mul(0xD1B54A32D192ED03);
+    Rng::new(mixed).next_u64()
+}
+
+impl Router {
+    /// Spawn the whole fleet; fails fast if any replica cannot start.
+    pub fn start(
+        artifacts: std::path::PathBuf,
+        tag: String,
+        base_cfg: ExperimentConfig,
+        fleet: FleetConfig,
+    ) -> Result<Router> {
+        anyhow::ensure!(fleet.replicas >= 1, "fleet needs at least one replica");
+        let art = Artifact::load(&artifacts, &tag)?;
+        let queue_depth = if fleet.queue_depth == 0 { 2 * art.batch } else { fleet.queue_depth };
+        let per_image = DatasetMeta::load(&artifacts, &art.dataset)?.image_elems();
+        let mut slots = Vec::with_capacity(fleet.replicas);
+        for id in 0..fleet.replicas {
+            let spec = ReplicaSpec {
+                id,
+                generation: 0,
+                seed: replica_seed(fleet.base_seed, id, 0),
+                max_wait: fleet.max_wait,
+                queue_depth,
+            };
+            slots.push(RwLock::new(Replica::spawn(
+                artifacts.clone(),
+                tag.clone(),
+                &base_cfg,
+                spec,
+            )?));
+        }
+        Ok(Router {
+            artifacts,
+            tag,
+            base_cfg,
+            fleet,
+            queue_depth,
+            per_image,
+            slots,
+            next: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Route one request: round-robin start, spillover on full queues,
+    /// typed shed once the whole ring refuses. Returns the image alongside
+    /// the error so retry wrappers don't have to clone it.
+    fn try_route(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, (Vec<f32>, ServeError)> {
+        let n = self.slots.len();
+        if n == 0 {
+            return Err((image, ServeError::NoReplicas));
+        }
+        let got = image.len();
+        if got != self.per_image {
+            // reject before it can reach (and confuse) a worker
+            return Err((image, ServeError::BadRequest { got, want: self.per_image }));
+        }
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut image = image;
+        let mut saw_full = false;
+        let mut closed_id = 0;
+        for k in 0..n {
+            let id = (start + k) % n;
+            let replica = self.slots[id].read().unwrap();
+            match replica.try_submit(image) {
+                Ok(rx) => return Ok(rx),
+                Err(Rejection::Full(img)) => {
+                    saw_full = true;
+                    image = img;
+                }
+                Err(Rejection::Closed(img)) => {
+                    closed_id = id;
+                    image = img;
+                }
+            }
+        }
+        if saw_full {
+            // overload: at least one live queue refused for capacity
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            Err((image, ServeError::QueueFull { replicas: n, depth: self.queue_depth }))
+        } else {
+            // every replica's worker is gone — not a shed, not retryable
+            Err((image, ServeError::ReplicaClosed { id: closed_id }))
+        }
+    }
+
+    /// Route one request; see [`Router::try_route`] for the policy.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, ServeError> {
+        self.try_route(image).map_err(|(_, e)| e)
+    }
+
+    /// [`Router::submit`] with bounded-queue backpressure turned into
+    /// waiting: a `QueueFull` shed is retried after `backoff` (each retry
+    /// counts as a fresh shed in the fleet metrics); any other error —
+    /// dead workers, empty fleet — is fatal and returned immediately.
+    pub fn submit_retry(
+        &self,
+        image: Vec<f32>,
+        backoff: Duration,
+    ) -> Result<mpsc::Receiver<i32>, ServeError> {
+        let mut image = image;
+        loop {
+            match self.try_route(image) {
+                Ok(rx) => return Ok(rx),
+                Err((img, ServeError::QueueFull { .. })) => {
+                    image = img;
+                    std::thread::sleep(backoff);
+                }
+                Err((_, e)) => return Err(e),
+            }
+        }
+    }
+
+    /// Replay the first `n` labeled samples of `data` through *every*
+    /// replica (bypassing load balancing, never shed), record the outcomes
+    /// in each replica's health probe, and return the observed per-replica
+    /// accuracies in slot order.
+    pub fn probe(&self, data: &DatasetBlob, n: usize) -> Vec<f64> {
+        let per = data.image_elems();
+        let n = n.clamp(1, data.n);
+        let mut accs = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            // grab a detached ingress under a short lock, then do all the
+            // (possibly blocking) submits with the lock released so live
+            // traffic keeps spilling through this slot
+            let handle = slot.read().unwrap().probe_handle();
+            let mut pending = Vec::with_capacity(n);
+            for i in 0..n {
+                let image = data.images[i * per..(i + 1) * per].to_vec();
+                if let Ok(rx) = handle.submit_blocking(image) {
+                    pending.push((data.labels[i], rx));
+                }
+            }
+            let mut hits = 0u64;
+            let mut total = 0u64;
+            for (label, rx) in pending {
+                if let Ok(pred) = rx.recv() {
+                    let hit = pred == label;
+                    handle.health.record_probe(hit);
+                    hits += hit as u64;
+                    total += 1;
+                }
+            }
+            accs.push(hits as f64 / total.max(1) as f64);
+        }
+        accs
+    }
+
+    /// Replace every replica whose health verdict is `Degraded` — or whose
+    /// worker thread has died — with a fresh one: generation + 1 ⇒ a new
+    /// variation seed, new metrics, and a clean health record. Returns the
+    /// recycled slot ids.
+    pub fn recycle_degraded(&self) -> Result<Vec<usize>> {
+        let mut recycled = Vec::new();
+        for (id, slot) in self.slots.iter().enumerate() {
+            // verdict + generation under a short read lock; a dead worker
+            // is recyclable no matter what the probe record says (it will
+            // never accumulate probes to become Degraded on its own)
+            let generation = {
+                let replica = slot.read().unwrap();
+                let degraded =
+                    replica.health.status(&self.fleet.health) == HealthStatus::Degraded;
+                if !degraded && replica.is_alive() {
+                    continue;
+                }
+                replica.generation
+            };
+            // the expensive spawn (engine + compile + prepare + uploads)
+            // happens with no lock held: traffic keeps flowing to this
+            // slot's old replica and spilling across the fleet meanwhile
+            let next_gen = generation + 1;
+            let spec = ReplicaSpec {
+                id,
+                generation: next_gen,
+                seed: replica_seed(self.fleet.base_seed, id, next_gen),
+                max_wait: self.fleet.max_wait,
+                queue_depth: self.queue_depth,
+            };
+            let fresh =
+                Replica::spawn(self.artifacts.clone(), self.tag.clone(), &self.base_cfg, spec)?;
+            let swapped = {
+                let mut replica = slot.write().unwrap();
+                // a concurrent recycle may have swapped this slot while we
+                // were spawning; keep the newer generation, discard ours
+                if replica.generation == generation {
+                    Ok(std::mem::replace(&mut *replica, fresh))
+                } else {
+                    Err(fresh)
+                }
+            };
+            match swapped {
+                Ok(old) => {
+                    // join outside the lock so the new replica takes
+                    // traffic; a crashed worker's error is the reason it
+                    // was recycled, not a reason to abort the sweep
+                    if let Err(e) = old.shutdown() {
+                        eprintln!("recycled replica {id}: worker had failed: {e:#}");
+                    }
+                    self.recycled.fetch_add(1, Ordering::Relaxed);
+                    recycled.push(id);
+                }
+                Err(unused) => unused.shutdown()?,
+            }
+        }
+        Ok(recycled)
+    }
+
+    /// Snapshot every replica plus merged fleet totals.
+    pub fn fleet_metrics(&self) -> FleetMetrics {
+        let mut replicas = Vec::with_capacity(self.slots.len());
+        let mut total = MetricsSnapshot::default();
+        for slot in &self.slots {
+            let replica = slot.read().unwrap();
+            let snap = replica.metrics.snapshot();
+            total.merge(&snap);
+            replicas.push(ReplicaReport {
+                id: replica.id,
+                generation: replica.generation,
+                seed: replica.seed,
+                fingerprint: replica.fingerprint,
+                metrics: snap,
+                probes: replica.health.probes(),
+                probe_accuracy: replica.health.probe_accuracy(),
+                status: replica.health.status(&self.fleet.health),
+                alive: replica.is_alive(),
+            });
+        }
+        FleetMetrics {
+            replicas,
+            total,
+            shed: self.shed.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drain and join every replica.
+    pub fn shutdown(self) -> Result<()> {
+        for slot in self.slots {
+            slot.into_inner().unwrap().shutdown()?;
+        }
+        Ok(())
+    }
+}
+
+/// Drive `n_requests` labeled samples from `data` through the router from
+/// `n_clients` concurrent client threads, waiting out sheds via
+/// [`Router::submit_retry`]. Returns `(hits, answered)` scored against the
+/// dataset labels. This is the client loop shared by the `serve` CLI
+/// subcommand, `examples/serve.rs`, and the fleet integration tests.
+pub fn drive_workload(
+    router: &Arc<Router>,
+    data: &Arc<DatasetBlob>,
+    n_requests: usize,
+    n_clients: usize,
+) -> Result<(usize, usize), ServeError> {
+    let n_clients = n_clients.max(1);
+    let mut clients = Vec::with_capacity(n_clients);
+    for c in 0..n_clients {
+        let router = router.clone();
+        let data = data.clone();
+        clients.push(std::thread::spawn(move || -> Result<(usize, usize), ServeError> {
+            let per = data.image_elems();
+            let mut pending = Vec::new();
+            for i in (c..n_requests).step_by(n_clients) {
+                let idx = i % data.n;
+                let image = data.images[idx * per..(idx + 1) * per].to_vec();
+                pending.push((idx, router.submit_retry(image, Duration::from_millis(1))?));
+            }
+            let (mut hits, mut total) = (0, 0);
+            for (idx, rx) in pending {
+                if let Ok(pred) = rx.recv() {
+                    hits += (pred == data.labels[idx]) as usize;
+                    total += 1;
+                }
+            }
+            Ok((hits, total))
+        }));
+    }
+    let (mut hits, mut total) = (0, 0);
+    for c in clients {
+        let (h, t) = c.join().expect("client thread panicked")?;
+        hits += h;
+        total += t;
+    }
+    Ok((hits, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_seeds_are_decorrelated() {
+        let a = replica_seed(42, 0, 0);
+        let b = replica_seed(42, 1, 0);
+        let c = replica_seed(42, 0, 1);
+        assert_ne!(a, b, "different replicas must draw different variation");
+        assert_ne!(a, c, "recycling must draw fresh variation");
+        assert_eq!(a, replica_seed(42, 0, 0), "derivation is deterministic");
+    }
+}

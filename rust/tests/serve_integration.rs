@@ -1,0 +1,219 @@
+//! Integration tests for the replicated serving fleet (router + replicas +
+//! admission + health recycling) over real artifacts + the PJRT runtime.
+//!
+//! Like `artifact_integration.rs`, these need `make artifacts` to have
+//! produced vggmini_c10s; they are skipped (with a notice) otherwise so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hybridac::eval::{prepare, ExperimentConfig, Method};
+use hybridac::runtime::{Artifact, DatasetBlob};
+use hybridac::serve::{drive_workload, FleetConfig, HealthPolicy, HealthStatus, Router, ServeError};
+use hybridac::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = hybridac::artifacts_dir();
+    if dir.join("vggmini_c10s.meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts not built; run `make artifacts`");
+        None
+    }
+}
+
+fn hybrid_cfg() -> ExperimentConfig {
+    ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 })
+}
+
+/// Replicas seeded differently must hold *independent* variation draws
+/// (different prepared weights), yet every draw must stay within the
+/// protection method's accuracy tolerance — the paper's robustness claim
+/// as a fleet property.
+#[test]
+fn fleet_replicas_draw_independent_variation() {
+    let Some(dir) = artifacts() else { return };
+    let data = {
+        let art = Artifact::load(&dir, "vggmini_c10s").unwrap();
+        DatasetBlob::load(&dir, &art.dataset).unwrap()
+    };
+    let mut fleet = FleetConfig::new(2);
+    fleet.max_wait = Duration::from_millis(5);
+    let router = Router::start(dir, "vggmini_c10s".into(), hybrid_cfg(), fleet).unwrap();
+
+    let fm = router.fleet_metrics();
+    assert_eq!(fm.replicas.len(), 2);
+    assert_ne!(
+        fm.replicas[0].fingerprint, fm.replicas[1].fingerprint,
+        "differently-seeded replicas must hold different noisy instances"
+    );
+    assert_ne!(fm.replicas[0].seed, fm.replicas[1].seed);
+
+    // every replica's observed accuracy stays within tolerance: HybridAC@16%
+    // recovers to within a few points of clean (~0.85 on the scaled models),
+    // so well above 0.5 for any healthy draw
+    let accs = router.probe(&data, 200);
+    for (i, acc) in accs.iter().enumerate() {
+        assert!(
+            *acc > 0.5,
+            "replica {i} accuracy {acc} below tolerance despite protection"
+        );
+    }
+    let fm = router.fleet_metrics();
+    for r in &fm.replicas {
+        assert_eq!(r.status, HealthStatus::Healthy, "replica {} unhealthy", r.id);
+        assert!(r.alive, "replica {} worker died", r.id);
+        assert!(r.probes >= 200, "probe outcomes recorded in health, not serving metrics");
+        assert_eq!(r.metrics.requests, 0, "probes must not count as served traffic");
+    }
+    assert_eq!(fm.total.requests, fm.replicas.iter().map(|r| r.metrics.requests).sum::<u64>());
+    router.shutdown().unwrap();
+}
+
+/// Same (replica, generation) seed ⇒ the exact same draw as a direct
+/// `prepare` call is deterministic; the fleet adds no hidden randomness.
+#[test]
+fn same_seed_same_draw_different_seed_different_draw() {
+    let Some(dir) = artifacts() else { return };
+    let art = Artifact::load(&dir, "vggmini_c10s").unwrap();
+    let cfg = hybrid_cfg();
+    let mut cfg_a = cfg.clone();
+    cfg_a.seed = 1234;
+    let mut cfg_b = cfg.clone();
+    cfg_b.seed = 5678;
+    let m_a1 = prepare(&art, &cfg_a, &mut Rng::new(cfg_a.seed));
+    let m_a2 = prepare(&art, &cfg_a, &mut Rng::new(cfg_a.seed));
+    let m_b = prepare(&art, &cfg_b, &mut Rng::new(cfg_b.seed));
+    assert_eq!(
+        m_a1.layers[0].wa1.data, m_a2.layers[0].wa1.data,
+        "same seed must reproduce the draw"
+    );
+    assert_ne!(
+        m_a1.layers[0].wa1.data, m_b.layers[0].wa1.data,
+        "different seeds must give different draws"
+    );
+}
+
+/// Admission: with a tiny queue and the single worker busy inside a batch
+/// execution, a burst must be shed with the typed error — not silently
+/// queued without bound.
+#[test]
+fn router_sheds_on_full_queues() {
+    let Some(dir) = artifacts() else { return };
+    let data = {
+        let art = Artifact::load(&dir, "vggmini_c10s").unwrap();
+        DatasetBlob::load(&dir, &art.dataset).unwrap()
+    };
+    let per = data.image_elems();
+    let image = || data.images[..per].to_vec();
+
+    let mut fleet = FleetConfig::new(1);
+    fleet.queue_depth = 2;
+    // zero window: the worker grabs the first request immediately and goes
+    // busy executing a (mostly padded) batch, leaving the queue to fill
+    fleet.max_wait = Duration::ZERO;
+    let router = Router::start(dir, "vggmini_c10s".into(), hybrid_cfg(), fleet).unwrap();
+
+    let first = router.submit(image()).expect("first request admitted");
+    std::thread::sleep(Duration::from_millis(30)); // let the worker start the batch
+    let mut shed = 0;
+    let mut admitted = Vec::new();
+    for _ in 0..50 {
+        match router.submit(image()) {
+            Ok(rx) => admitted.push(rx),
+            Err(e) => {
+                assert!(
+                    matches!(e, ServeError::QueueFull { replicas: 1, depth: 2 }),
+                    "unexpected error {e:?}"
+                );
+                shed += 1;
+            }
+        }
+    }
+    assert!(shed > 0, "a 50-request burst into a depth-2 queue must shed");
+    assert!(first.recv().is_ok(), "admitted request still served");
+    for rx in admitted {
+        assert!(rx.recv().is_ok(), "queued requests drain after the burst");
+    }
+    assert_eq!(router.fleet_metrics().shed, shed as u64);
+
+    // admission also rejects wrong-size payloads with a typed error
+    // (never letting them near a worker), and that is not a shed
+    assert!(matches!(
+        router.submit(vec![0.0; per + 1]),
+        Err(ServeError::BadRequest { want, .. }) if want == per
+    ));
+    assert_eq!(router.fleet_metrics().shed, shed as u64);
+    router.shutdown().unwrap();
+}
+
+/// Health recycling: an (artificially) unreachable accuracy floor flags
+/// every replica Degraded; recycling swaps in a new generation with a fresh
+/// variation draw that keeps serving.
+#[test]
+fn degraded_replicas_are_recycled_with_fresh_draws() {
+    let Some(dir) = artifacts() else { return };
+    let data = {
+        let art = Artifact::load(&dir, "vggmini_c10s").unwrap();
+        DatasetBlob::load(&dir, &art.dataset).unwrap()
+    };
+    let mut fleet = FleetConfig::new(1);
+    fleet.max_wait = Duration::from_millis(5);
+    fleet.health = HealthPolicy { accuracy_floor: 1.01, min_probes: 8 };
+    let router = Router::start(dir, "vggmini_c10s".into(), hybrid_cfg(), fleet).unwrap();
+
+    let before = router.fleet_metrics().replicas[0].clone();
+    router.probe(&data, 16);
+    assert_eq!(
+        router.fleet_metrics().replicas[0].status,
+        HealthStatus::Degraded,
+        "an impossible floor must flag the replica"
+    );
+
+    let recycled = router.recycle_degraded().unwrap();
+    assert_eq!(recycled, vec![0]);
+    let after = router.fleet_metrics().replicas[0].clone();
+    assert_eq!(after.generation, before.generation + 1);
+    assert_ne!(after.seed, before.seed, "recycle must re-seed");
+    assert_ne!(after.fingerprint, before.fingerprint, "recycle must redraw variation");
+    assert_eq!(after.probe_accuracy, None, "fresh generation starts a clean record");
+    assert_eq!(router.fleet_metrics().recycled, 1);
+
+    // the recycled replica serves traffic
+    let per = data.image_elems();
+    let rx = router.submit(data.images[..per].to_vec()).unwrap();
+    assert!(rx.recv().is_ok());
+    router.shutdown().unwrap();
+}
+
+/// The fleet keeps the end-to-end contract: predictions routed back to the
+/// right callers under concurrent multi-client load.
+#[test]
+fn fleet_serves_concurrent_clients_correctly() {
+    let Some(dir) = artifacts() else { return };
+    let data = Arc::new({
+        let art = Artifact::load(&dir, "vggmini_c10s").unwrap();
+        DatasetBlob::load(&dir, &art.dataset).unwrap()
+    });
+    let mut fleet = FleetConfig::new(2);
+    fleet.max_wait = Duration::from_millis(5);
+    let router = Arc::new(
+        Router::start(dir, "vggmini_c10s".into(), hybrid_cfg(), fleet).unwrap(),
+    );
+
+    let n_requests = 300;
+    let (hits, total) = drive_workload(&router, &data, n_requests, 4).unwrap();
+    assert_eq!(total, n_requests, "every admitted request must be answered");
+    let acc = hits as f64 / total as f64;
+    assert!(acc > 0.5, "fleet accuracy {acc} below protection tolerance");
+
+    let fm = router.fleet_metrics();
+    assert_eq!(fm.total.requests, n_requests as u64);
+    assert!(
+        fm.replicas.iter().all(|r| r.metrics.requests > 0),
+        "round-robin must spread load over both replicas: {:?}",
+        fm.replicas.iter().map(|r| r.metrics.requests).collect::<Vec<_>>()
+    );
+    Arc::try_unwrap(router).ok().unwrap().shutdown().unwrap();
+}
