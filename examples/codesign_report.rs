@@ -12,11 +12,12 @@
 
 use anyhow::Result;
 use hybridac::analog::AnalogTiming;
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::eval::{Evaluator, Method};
 use hybridac::hwmodel::{arch, tile::TileModel};
 use hybridac::mapping::{map_model, simulate_exec, MapScheme};
 use hybridac::report::{self, pct};
 use hybridac::runtime::Artifact;
+use hybridac::scenario::Scenario;
 
 fn main() -> Result<()> {
     let dir = hybridac::artifacts_dir();
@@ -26,8 +27,13 @@ fn main() -> Result<()> {
     // ---- accuracy story ---------------------------------------------------
     let mut ev = Evaluator::new(&dir, &tag)?;
     let clean = ev.clean_accuracy(500)?;
-    let noisy = ev.accuracy(&ExperimentConfig::paper_default(Method::NoProtection))?;
-    let hybrid = ev.accuracy(&ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 }))?;
+    let noisy =
+        ev.run_scenario(&Scenario::paper_default("unprotected", &tag, Method::NoProtection))?;
+    let hybrid = ev.run_scenario(&Scenario::paper_default(
+        "paper-hybrid",
+        &tag,
+        Method::Hybrid { frac: 0.16 },
+    ))?;
     let degradation = clean - noisy.mean;
     let residual = clean - hybrid.mean;
     println!("\naccuracy under sigma=50% conductance variation:");

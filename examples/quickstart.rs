@@ -11,9 +11,10 @@
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`).
 
 use anyhow::Result;
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::eval::{Evaluator, Method};
 use hybridac::report::pct;
 use hybridac::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use hybridac::scenario::Scenario;
 use hybridac::tensor::Tensor;
 use hybridac::util::rng::Rng;
 
@@ -65,12 +66,18 @@ fn main() -> Result<()> {
     drop(engine);
 
     // --- 2. the paper's core claim on a trained artifact ------------------
+    // experiments are declarative scenarios: named stage compositions that
+    // round-trip through JSON (see examples/scenario.json)
     let tag = "resnet18m_c10s";
     let mut ev = Evaluator::new(&dir, tag)?;
     let clean = ev.clean_accuracy(500)?;
-    let noisy = ev.accuracy(&ExperimentConfig::paper_default(Method::NoProtection))?;
-    let protected =
-        ev.accuracy(&ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 }))?;
+    let noisy =
+        ev.run_scenario(&Scenario::paper_default("unprotected", tag, Method::NoProtection))?;
+    let protected = ev.run_scenario(&Scenario::paper_default(
+        "paper-hybrid",
+        tag,
+        Method::Hybrid { frac: 0.16 },
+    ))?;
     println!("\n{tag} under conductance variation (sigma = 50%):");
     println!("  clean accuracy:            {}", pct(clean));
     println!("  no protection:             {}", pct(noisy.mean));
@@ -82,11 +89,10 @@ fn main() -> Result<()> {
     let mut engine = Engine::cpu()?;
     let mut exec = ModelExecutor::new(&mut engine, &art, &data, 250, art.group)?;
     let mut rng = Rng::new(42);
-    let model = hybridac::eval::prepare(
-        &art,
-        &ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 }),
-        &mut rng,
-    );
+    // one variation draw = one pipeline run over the artifact's weights
+    let pipeline = Scenario::paper_default("one-draw", tag, Method::Hybrid { frac: 0.16 })
+        .pipeline();
+    let model = pipeline.prepare(&art, &mut rng);
     let acc = exec.accuracy(&model)?;
     println!("  one prepared instance:     {}", pct(acc));
     Ok(())

@@ -1,14 +1,18 @@
 //! Robustness sweep: Algorithm 1 in action on one model.
 //!
-//! Sweeps the protected-weight fraction for both selection methods, prints
-//! the recovery curves, then runs the paper's pop-until-accuracy loop to
-//! find each method's crossing point.
+//! Sweeps the protected-weight fraction for both selection methods (each
+//! point a declarative `Scenario`), prints the recovery curves, runs the
+//! paper's pop-until-accuracy loop to find each method's crossing point,
+//! and finishes with two beyond-the-paper scenarios — stuck-at faults and
+//! conductance drift — that exist only because the preparation pipeline is
+//! open (new `Perturbation` stages, no core edits).
 //!
 //! Run: `cargo run --release --example robustness_sweep [tag]`
 
 use anyhow::Result;
 use hybridac::eval::{Evaluator, ExperimentConfig, Method};
 use hybridac::report;
+use hybridac::scenario::{PerturbSpec, Scenario};
 
 fn main() -> Result<()> {
     let tag = std::env::args().nth(1).unwrap_or_else(|| "resnet18m_c10s".into());
@@ -22,10 +26,10 @@ fn main() -> Result<()> {
     let mut hyb = Vec::new();
     let mut iws = Vec::new();
     for &p in &points {
-        hyb.push(100.0 * ev.accuracy(&ExperimentConfig::paper_default(
-            Method::Hybrid { frac: p }))?.mean);
-        iws.push(100.0 * ev.accuracy(&ExperimentConfig::paper_default(
-            Method::Iws { frac: p }))?.mean);
+        let sh = Scenario::paper_default("sweep", &tag, Method::Hybrid { frac: p });
+        let si = Scenario::paper_default("sweep", &tag, Method::Iws { frac: p });
+        hyb.push(100.0 * ev.run_scenario(&sh)?.mean);
+        iws.push(100.0 * ev.run_scenario(&si)?.mean);
     }
     let xs: Vec<f64> = points.iter().map(|p| p * 100.0).collect();
     print!(
@@ -51,5 +55,19 @@ fn main() -> Result<()> {
             100.0 * frac
         );
     }
+
+    // beyond the paper: extra imperfections as pipeline stages
+    let hybrid = Scenario::paper_default("hybrid", &tag, Method::Hybrid { frac: 0.16 });
+    let faulty = hybrid.clone().with_stage(PerturbSpec::StuckAt { rate: 0.002 });
+    let drifted = hybrid.clone().with_stage(PerturbSpec::Drift {
+        t_seconds: 3600.0 * 24.0,
+        nu: 0.06,
+        nu_sigma: 0.02,
+    });
+    println!(
+        "extra scenarios: +0.2% stuck-at {}  |  +1 day drift {}",
+        report::pct(ev.run_scenario(&faulty)?.mean),
+        report::pct(ev.run_scenario(&drifted)?.mean)
+    );
     Ok(())
 }

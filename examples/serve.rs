@@ -1,23 +1,26 @@
-//! Serving demo: a replicated fleet behind the router.
+//! Serving demo: a replicated fleet behind the router, prepared from one
+//! declarative scenario.
 //!
 //! Each replica's worker thread owns its own PJRT engine and an
-//! *independent* conductance-variation draw (the Monte Carlo view of device
-//! variation); the router load-balances client threads across them with
-//! bounded admission queues. Shed requests are retried after a short
-//! backoff, so overload shows up as latency + the shed counter, never as
-//! silent loss. A labeled canary probe reports per-replica observed
-//! accuracy before shutdown — the serving-time analogue of the paper's
-//! variation-robustness claim.
+//! *independent* conductance-variation draw of the same `Scenario` (the
+//! Monte Carlo view of device variation); the router load-balances client
+//! threads across them with bounded admission queues. Shed requests are
+//! retried after a short backoff, so overload shows up as latency + the
+//! shed counter, never as silent loss. A background monitor thread
+//! (FleetConfig::with_probe) replays a labeled canary set on an interval
+//! and recycles degraded replicas with a fresh draw — no caller-driven
+//! probing.
 //!
 //! Run: `cargo run --release --example serve [tag] [n_requests] [replicas]`
 
 use anyhow::Result;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use hybridac::eval::{ExperimentConfig, Method};
+use hybridac::eval::Method;
 use hybridac::report;
 use hybridac::runtime::{Artifact, DatasetBlob};
+use hybridac::scenario::Scenario;
 use hybridac::serve::{drive_workload, FleetConfig, Router};
 
 fn main() -> Result<()> {
@@ -35,11 +38,16 @@ fn main() -> Result<()> {
         let art = Artifact::load(&dir, &tag)?;
         DatasetBlob::load(&dir, &art.dataset)?
     });
-    let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
-    let router = Arc::new(Router::start(dir, tag.clone(), cfg, FleetConfig::new(replicas))?);
+    // the whole fleet serves this one declarative value; replicas redraw
+    // their variation from it on every recycle
+    let scenario = Scenario::paper_default("serve-demo", &tag, Method::Hybrid { frac: 0.16 });
+    let fleet = FleetConfig::new(replicas)
+        .with_probe(Duration::from_millis(500), 64, data.clone());
+    let router = Arc::new(Router::start_scenario(dir, scenario, fleet)?);
     println!(
-        "serving {tag} with HybridAC@16% on {replicas} replicas \
-         (independent variation draws), queue depth {}",
+        "serving scenario '{}' on {tag}: {replicas} replicas \
+         (independent variation draws), queue depth {}, background monitor on",
+        router.scenario().name,
         router.queue_depth()
     );
 
@@ -56,7 +64,8 @@ fn main() -> Result<()> {
         report::pct(hits as f64 / total.max(1) as f64)
     );
 
-    router.probe(&data, 64);
+    // give the background monitor one more beat, then report
+    std::thread::sleep(Duration::from_millis(600));
     let fm = router.fleet_metrics();
     for r in &fm.replicas {
         println!(

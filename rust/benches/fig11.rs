@@ -9,15 +9,17 @@
 //! reduction dimension (artifacts resnet18m_c10s_r{16,32,64}).
 
 use hybridac::benchkit::{eval_budget, Stopwatch};
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::eval::{Evaluator, Method};
 use hybridac::noise::{fig11_scenario, CellModel};
 use hybridac::report;
+use hybridac::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("fig11");
     let dir = hybridac::artifacts_dir();
     let (n_eval, repeats) = eval_budget();
-    let mut ev = Evaluator::new(&dir, "resnet18m_c10s")?;
+    let tag = "resnet18m_c10s";
+    let mut ev = Evaluator::new(&dir, tag)?;
     let clean = ev.clean_accuracy(n_eval)?;
     let groups = [16usize, 32, 64, 128];
 
@@ -32,13 +34,12 @@ fn main() -> anyhow::Result<()> {
     for (name, cell, method) in &scenarios {
         let mut ys = Vec::new();
         for &g in &groups {
-            let mut cfg = ExperimentConfig::paper_default(method.clone());
-            cfg.cell = *cell;
-            cfg.group = g;
-            cfg.adc_bits = Some(8);
-            cfg.n_eval = n_eval;
-            cfg.repeats = repeats;
-            ys.push(100.0 * ev.accuracy(&cfg)?.mean);
+            let sc = Scenario::paper_default(name, tag, method.clone())
+                .with_cell(*cell)
+                .with_adc(Some(8))
+                .with_group(g)
+                .with_eval(n_eval, repeats);
+            ys.push(100.0 * ev.run_scenario(&sc)?.mean);
         }
         series.push((*name, ys));
     }

@@ -2,8 +2,9 @@
 //! (in50s): ResNet18, ResNet34, DenseNet121; HybridAC vs IWS curves.
 
 use hybridac::benchkit::{built_combos, eval_budget, Stopwatch};
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::eval::{Evaluator, Method};
 use hybridac::report;
+use hybridac::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("fig7");
@@ -17,14 +18,12 @@ fn main() -> anyhow::Result<()> {
         let mut hyb = Vec::new();
         let mut iws = Vec::new();
         for &p in &points {
-            let mut ch = ExperimentConfig::paper_default(Method::Hybrid { frac: p });
-            ch.n_eval = n_eval;
-            ch.repeats = repeats;
-            let mut ci = ExperimentConfig::paper_default(Method::Iws { frac: p });
-            ci.n_eval = n_eval;
-            ci.repeats = repeats;
-            hyb.push(100.0 * ev.accuracy(&ch)?.mean);
-            iws.push(100.0 * ev.accuracy(&ci)?.mean);
+            let ch = Scenario::paper_default("fig7", &tag, Method::Hybrid { frac: p })
+                .with_eval(n_eval, repeats);
+            let ci = Scenario::paper_default("fig7", &tag, Method::Iws { frac: p })
+                .with_eval(n_eval, repeats);
+            hyb.push(100.0 * ev.run_scenario(&ch)?.mean);
+            iws.push(100.0 * ev.run_scenario(&ci)?.mean);
         }
         let xs: Vec<f64> = points.iter().map(|p| 100.0 * p).collect();
         print!(

@@ -3,17 +3,19 @@
 //! differential cells) moves the design toward the ideal corner.
 
 use hybridac::benchkit::{eval_budget, Stopwatch};
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::eval::{Evaluator, Method};
 use hybridac::hwmodel::{all_architectures, ArchSpec};
 use hybridac::noise::CellModel;
 use hybridac::quantize::QuantConfig;
 use hybridac::report;
+use hybridac::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("fig8");
     let dir = hybridac::artifacts_dir();
     let (n_eval, repeats) = eval_budget();
-    let mut ev = Evaluator::new(&dir, "resnet18m_c10s")?;
+    let tag = "resnet18m_c10s";
+    let mut ev = Evaluator::new(&dir, tag)?;
     let archs = all_architectures();
     let isaac = archs[0].clone();
     let eff = |name: &str| -> f64 {
@@ -26,34 +28,35 @@ fn main() -> anyhow::Result<()> {
 
     let frac = 0.16;
     let mk = |method: Method| {
-        let mut c = ExperimentConfig::paper_default(method);
-        c.n_eval = n_eval;
-        c.repeats = repeats;
-        c
+        Scenario::paper_default("fig8", tag, method).with_eval(n_eval, repeats)
     };
 
     let mut rows = Vec::new();
-    // (point label, accuracy config, matching architecture efficiency)
-    let isaac_acc = ev.accuracy(&mk(Method::NoProtection))?;
+    // (point label, accuracy scenario, matching architecture efficiency)
+    let isaac_acc = ev.run_scenario(&mk(Method::NoProtection))?;
     rows.push(("ISAAC (no protection)".to_string(), isaac_acc.mean, eff("Ideal-ISAAC")));
 
-    let iws = ev.accuracy(&mk(Method::Iws { frac }))?;
+    let iws = ev.run_scenario(&mk(Method::Iws { frac }))?;
     rows.push(("IWS-2".to_string(), iws.mean, eff("IWS-2")));
 
-    let hy8 = ev.accuracy(&mk(Method::Hybrid { frac }).with_adc(8))?;
+    let hy8 = ev.run_scenario(&mk(Method::Hybrid { frac }).with_adc(Some(8)))?;
     rows.push(("HybridAC 8b-ADC".to_string(), hy8.mean, eff("Ideal-ISAAC") * 1.05));
 
-    let hy6 = ev.accuracy(&mk(Method::Hybrid { frac }).with_adc(6))?;
+    let hy6 = ev.run_scenario(&mk(Method::Hybrid { frac }).with_adc(Some(6)))?;
     rows.push(("HybridAC 6b-ADC".to_string(), hy6.mean, eff("HybridAC") * 0.95));
 
-    let hyq = ev.accuracy(&mk(Method::Hybrid { frac })
-        .with_adc(6)
-        .with_quant(QuantConfig::hybrid()))?;
+    let hyq = ev.run_scenario(
+        &mk(Method::Hybrid { frac })
+            .with_quant(Some(QuantConfig::hybrid()))
+            .with_adc(Some(6)),
+    )?;
     rows.push(("HybridAC 6b + hybrid quant".to_string(), hyq.mean, eff("HybridAC")));
 
-    let mut cdi = mk(Method::Hybrid { frac }).with_adc(4);
-    cdi.cell = CellModel::differential(0.5);
-    let hydi = ev.accuracy(&cdi)?;
+    let hydi = ev.run_scenario(
+        &mk(Method::Hybrid { frac })
+            .with_cell(CellModel::differential(0.5))
+            .with_adc(Some(4)),
+    )?;
     rows.push(("HybridACDi 4b-ADC".to_string(), hydi.mean, eff("HybridACDi")));
 
     let clean = ev.clean_accuracy(n_eval)?;

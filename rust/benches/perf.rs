@@ -2,7 +2,8 @@
 //!
 //! Hot paths, in execution order per sweep point:
 //!   1. noise generation (gaussian fill over every analog weight),
-//!   2. weight preparation (split + quantize + perturb + polarity),
+//!   2. weight preparation (the scenario pipeline: split + quantize +
+//!      perturb + polarity), with and without the extra fault stages,
 //!   3. PJRT upload + execute of one batch,
 //!   4. end-to-end accuracy evaluation (one repeat),
 //!   5. batch-server round trip.
@@ -11,8 +12,9 @@ use std::time::Duration;
 
 use hybridac::benchkit::{time_n, Stopwatch};
 use hybridac::coordinator::BatchServer;
-use hybridac::eval::{prepare, ExperimentConfig, Method};
+use hybridac::eval::{ExperimentConfig, Method};
 use hybridac::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use hybridac::scenario::{PerturbSpec, Scenario};
 use hybridac::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -31,19 +33,32 @@ fn main() -> anyhow::Result<()> {
         rng.fill_normal(&mut buf);
     });
 
-    // 2. full weight preparation
-    let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
+    // 2. full weight preparation through the scenario pipeline
+    let sc = Scenario::paper_default("perf", tag, Method::Hybrid { frac: 0.16 });
+    let pipeline = sc.pipeline();
     let mut rng2 = Rng::new(8);
-    time_n("prepare() split+quant+noise", 10, || {
-        let _ = prepare(&art, &cfg, &mut rng2);
+    time_n("pipeline.prepare() split+quant+noise", 10, || {
+        let _ = pipeline.prepare(&art, &mut rng2);
+    });
+
+    // 2b. the same pipeline with the extra fault stages plugged in — the
+    // marginal cost of stuck-at + drift on the preparation hot path
+    let faulty = sc
+        .clone()
+        .with_stage(PerturbSpec::StuckAt { rate: 0.002 })
+        .with_stage(PerturbSpec::Drift { t_seconds: 3600.0, nu: 0.06, nu_sigma: 0.02 })
+        .pipeline();
+    let mut rng2b = Rng::new(8);
+    time_n("pipeline.prepare() + stuck-at + drift", 10, || {
+        let _ = faulty.prepare(&art, &mut rng2b);
     });
 
     // 3. upload + execute one batch — full graph (both polarity paths)
     let mut engine = Engine::cpu()?;
     let mut rng3 = Rng::new(9);
-    let model = prepare(&art, &cfg, &mut rng3);
+    let model = pipeline.prepare(&art, &mut rng3);
     {
-        let mut exec = ModelExecutor::new(&mut engine, &art, &data, art.batch, cfg.group)?;
+        let mut exec = ModelExecutor::new(&mut engine, &art, &data, art.batch, sc.group)?;
         time_n("accuracy(): full graph (wa1+wa2 paths)", 5, || {
             let _ = exec.accuracy(&model).unwrap();
         });
@@ -51,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     // 3b. the §Perf offset-only variant (skips the all-zero wa2 matmuls)
     {
         let mut exec = ModelExecutor::new_with_variant(
-            &mut engine, &art, &data, art.batch, cfg.group, true)?;
+            &mut engine, &art, &data, art.batch, sc.group, true)?;
         time_n("accuracy(): offset-only variant graph", 5, || {
             let _ = exec.accuracy(&model).unwrap();
         });
@@ -59,14 +74,15 @@ fn main() -> anyhow::Result<()> {
         // 4. one full repeat (prepare + upload + execute) on the fast path
         let mut rng4 = Rng::new(10);
         time_n("full repeat (prepare + eval, offset variant)", 5, || {
-            let m = prepare(&art, &cfg, &mut rng4);
+            let m = pipeline.prepare(&art, &mut rng4);
             let _ = exec.accuracy(&m).unwrap();
         });
     }
     drop(engine);
 
     // 5. serving round trip (batched)
-    let server = BatchServer::start(dir.clone(), tag.to_string(), cfg.clone(),
+    let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
+    let server = BatchServer::start(dir.clone(), tag.to_string(), cfg,
                                     Duration::from_millis(5))?;
     let per = data.image_elems();
     let n_req = 500;

@@ -6,9 +6,10 @@
 //! ADC hurts far less than it hurts IWS's scattered selection.
 
 use hybridac::benchkit::{built_combos, eval_budget, full_mode, Stopwatch};
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::eval::{Evaluator, Method};
 use hybridac::noise::CellModel;
 use hybridac::report;
+use hybridac::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("table2");
@@ -27,25 +28,24 @@ fn main() -> anyhow::Result<()> {
             let mut ev = Evaluator::new(&dir, &tag)?;
             let mut cells = Vec::new();
             let mk = |method: Method, bits: u32, cell: CellModel| {
-                let mut c = ExperimentConfig::paper_default(method).with_adc(bits);
-                c.cell = cell;
-                c.n_eval = n_eval;
-                c.repeats = repeats;
-                c
+                Scenario::paper_default("table2", &tag, method)
+                    .with_adc(Some(bits))
+                    .with_cell(cell)
+                    .with_eval(n_eval, repeats)
             };
             for bits in [8u32, 7, 6] {
-                let hy = ev.accuracy(&mk(Method::Hybrid { frac }, bits,
-                                         CellModel::offset(0.5)))?;
-                let iw = ev.accuracy(&mk(Method::Iws { frac }, bits,
-                                         CellModel::offset(0.5)))?;
+                let hy = ev.run_scenario(&mk(Method::Hybrid { frac }, bits,
+                                             CellModel::offset(0.5)))?;
+                let iw = ev.run_scenario(&mk(Method::Iws { frac }, bits,
+                                             CellModel::offset(0.5)))?;
                 cells.push(report::pct(hy.mean));
                 cells.push(report::pct(iw.mean));
             }
             // 4-bit differential (HybACDi / IWSDi)
-            let hy4 = ev.accuracy(&mk(Method::Hybrid { frac }, 4,
-                                      CellModel::differential(0.5)))?;
-            let iw4 = ev.accuracy(&mk(Method::Iws { frac }, 4,
-                                      CellModel::differential(0.5)))?;
+            let hy4 = ev.run_scenario(&mk(Method::Hybrid { frac }, 4,
+                                          CellModel::differential(0.5)))?;
+            let iw4 = ev.run_scenario(&mk(Method::Iws { frac }, 4,
+                                          CellModel::differential(0.5)))?;
             cells.push(report::pct(hy4.mean));
             cells.push(report::pct(iw4.mean));
             let mut row = vec![pretty.to_string()];

@@ -3,9 +3,10 @@
 //! against the uniform-8-bit baseline of Table 2's first column.
 
 use hybridac::benchkit::{built_combos, eval_budget, full_mode, Stopwatch};
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::eval::{Evaluator, Method};
 use hybridac::quantize::QuantConfig;
 use hybridac::report;
+use hybridac::scenario::Scenario;
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("table3");
@@ -23,16 +24,14 @@ fn main() -> anyhow::Result<()> {
         for (tag, pretty) in built_combos(dataset) {
             let mut ev = Evaluator::new(&dir, &tag)?;
             let mk = |q: QuantConfig, adc: u32| {
-                let mut c = ExperimentConfig::paper_default(Method::Hybrid { frac })
-                    .with_quant(q)
-                    .with_adc(adc);
-                c.n_eval = n_eval;
-                c.repeats = repeats;
-                c
+                Scenario::paper_default("table3", &tag, Method::Hybrid { frac })
+                    .with_quant(Some(q))
+                    .with_adc(Some(adc))
+                    .with_eval(n_eval, repeats)
             };
-            let u8_8 = ev.accuracy(&mk(QuantConfig::uniform8(), 8))?;
-            let h86_8 = ev.accuracy(&mk(QuantConfig::hybrid(), 8))?;
-            let h86_6 = ev.accuracy(&mk(QuantConfig::hybrid(), 6))?;
+            let u8_8 = ev.run_scenario(&mk(QuantConfig::uniform8(), 8))?;
+            let h86_8 = ev.run_scenario(&mk(QuantConfig::hybrid(), 8))?;
+            let h86_6 = ev.run_scenario(&mk(QuantConfig::hybrid(), 6))?;
             rows.push(vec![
                 pretty.to_string(),
                 report::pct(u8_8.mean),

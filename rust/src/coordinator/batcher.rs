@@ -18,8 +18,9 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::eval::{prepare, ExperimentConfig};
+use crate::eval::ExperimentConfig;
 use crate::runtime::{Artifact, DatasetMeta, Engine};
+use crate::scenario::Scenario;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -158,17 +159,34 @@ pub struct BatchContext {
 
 impl BatchContext {
     pub fn new(artifacts: &std::path::Path, tag: &str, cfg: &ExperimentConfig) -> Result<Self> {
-        let art = Artifact::load(artifacts, tag)?;
+        Self::from_scenario(artifacts, &Scenario::from_config("serve", tag, cfg))
+    }
+
+    /// Build a worker context from a declarative [`Scenario`]: the model
+    /// tag, the wordline-group graph variant, the preparation pipeline, and
+    /// the variation seed all come from the spec (the serving fleet
+    /// re-seeds per replica generation).
+    pub fn from_scenario(artifacts: &std::path::Path, sc: &Scenario) -> Result<Self> {
+        let art = Artifact::load(artifacts, &sc.model)?;
         // metadata only: batch shaping never touches the image payload
         let data = DatasetMeta::load(artifacts, &art.dataset)?;
         let engine = Engine::cpu()?;
+        // the graph must match the scenario's wordline group — the ADC
+        // lsb/clip the pipeline derives are group-dependent
+        let hlo = art.hlo_variant(sc.group);
+        ensure!(
+            hlo.exists(),
+            "missing HLO variant {} for group {} — re-run `make artifacts`",
+            hlo.display(),
+            sc.group
+        );
         // compile once, own the executable: the batch loop only uploads
         // inputs and runs
-        let exe = engine.compile_owned(&art.hlo_path)?;
+        let exe = engine.compile_owned(&hlo)?;
 
         // one prepared (noisy) model instance serves the whole session
-        let mut rng = Rng::new(cfg.seed);
-        let model = prepare(&art, cfg, &mut rng);
+        let mut rng = Rng::new(sc.seed);
+        let model = sc.pipeline().prepare(&art, &mut rng);
         let fingerprint = weight_fingerprint(&model.layers);
         let mut weight_bufs = Vec::with_capacity(model.layers.len() * 6);
         for li in &model.layers {

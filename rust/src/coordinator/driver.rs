@@ -1,14 +1,19 @@
 //! End-to-end experiment driver: accuracy (PJRT) + hardware estimates
 //! (mapping + analog/digital timing + chip model) in one report.
+//!
+//! [`run_scenario`] is the primary entry point — it runs any declarative
+//! [`Scenario`] (including one loaded from JSON); [`run_experiment`] lowers
+//! the legacy [`ExperimentConfig`] to a scenario and delegates.
 
 use anyhow::Result;
 use std::path::Path;
 
-use crate::eval::{Evaluator, ExperimentConfig, Method};
+use crate::eval::{Evaluator, ExperimentConfig};
 use crate::hwmodel::{arch, tile::TileModel};
 use crate::mapping::{self, MapScheme};
+use crate::scenario::{Scenario, SplitSpec};
 
-/// Combined result of one (model, method, config) run.
+/// Combined result of one (model, scenario) run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
     pub tag: String,
@@ -23,22 +28,16 @@ pub struct RunReport {
     pub digital_frac: f64,
 }
 
-/// Run accuracy + hardware estimation for one configuration.
-pub fn run_experiment(
-    artifacts: &Path,
-    tag: &str,
-    cfg: &ExperimentConfig,
-    batch: usize,
-) -> Result<RunReport> {
-    let mut ev = Evaluator::new(artifacts, tag)?;
-    let acc = ev.accuracy(cfg)?;
+/// Run accuracy + hardware estimation for one declarative scenario.
+pub fn run_scenario(artifacts: &Path, sc: &Scenario, batch: usize) -> Result<RunReport> {
+    let mut ev = Evaluator::new(artifacts, &sc.model)?;
+    let acc = ev.run_scenario(sc)?;
     let clean = ev.art.clean_test_acc;
 
-    let (scheme, frac, method_name) = match &cfg.method {
-        Method::Hybrid { frac } => (MapScheme::Hybrid, *frac, "HybridAC"),
-        Method::Iws { frac } => (MapScheme::IwsHoles, *frac, "IWS"),
-        Method::NoProtection => (MapScheme::AllAnalog, 0.0, "NoProtection"),
-        Method::Clean => (MapScheme::AllAnalog, 0.0, "Clean"),
+    let (scheme, frac) = match sc.split {
+        SplitSpec::Channels { frac } => (MapScheme::Hybrid, frac),
+        SplitSpec::Iws { frac } => (MapScheme::IwsHoles, frac),
+        SplitSpec::AllAnalog => (MapScheme::AllAnalog, 0.0),
     };
     let mapping = mapping::map_model(&ev.art, scheme, frac);
     let (tile, timing, n_tiles, dig_units, dig_w) = match scheme {
@@ -59,8 +58,8 @@ pub fn run_experiment(
     };
     let est = mapping::simulate_exec(&mapping, &timing, &tile, n_tiles, batch, dig_units, dig_w, false);
     Ok(RunReport {
-        tag: tag.to_string(),
-        method: method_name.to_string(),
+        tag: sc.model.clone(),
+        method: sc.method_label().to_string(),
         accuracy_mean: acc.mean,
         accuracy_std: acc.std,
         clean_accuracy: clean,
@@ -70,6 +69,17 @@ pub fn run_experiment(
         crossbars: mapping.total_crossbars,
         digital_frac: mapping.digital_frac,
     })
+}
+
+/// Run accuracy + hardware estimation for one legacy configuration
+/// (lowered to a [`Scenario`]).
+pub fn run_experiment(
+    artifacts: &Path,
+    tag: &str,
+    cfg: &ExperimentConfig,
+    batch: usize,
+) -> Result<RunReport> {
+    run_scenario(artifacts, &Scenario::from_config("config", tag, cfg), batch)
 }
 
 /// The paper's headline summary vs Ideal-ISAAC (abstract + §5.4):

@@ -10,5 +10,5 @@ pub mod driver;
 pub mod metrics;
 
 pub use batcher::{BatchContext, BatchServer, InferenceRequest};
-pub use driver::{run_experiment, RunReport};
+pub use driver::{run_experiment, run_scenario, RunReport};
 pub use metrics::{Metrics, MetricsSnapshot};

@@ -1,11 +1,16 @@
-//! Evaluator: accuracy of experiment configs over the staged test set,
+//! Evaluator: accuracy of experiment scenarios over the staged test set,
 //! with repeat-averaging and the Algorithm-1 pop-until-accuracy loop.
+//!
+//! [`Evaluator::run_scenario`] is the primary entry point; the
+//! [`ExperimentConfig`]-taking [`Evaluator::accuracy`] lowers the config to
+//! a [`Scenario`] and delegates, so both paths share one implementation.
 
 use anyhow::Result;
 use std::path::Path;
 
-use super::prepare::{prepare, ExperimentConfig, Method};
+use super::prepare::{ExperimentConfig, Method};
 use crate::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use crate::scenario::Scenario;
 use crate::util::rng::Rng;
 
 /// Mean/std accuracy of one experiment point.
@@ -30,18 +35,36 @@ impl Evaluator {
         Ok(Evaluator { art, data, engine: Engine::cpu()? })
     }
 
-    /// Accuracy (mean over cfg.repeats noise draws) of one config.
+    /// Accuracy (mean over cfg.repeats noise draws) of one config —
+    /// lowered to a [`Scenario`] and run through the pipeline.
     pub fn accuracy(&mut self, cfg: &ExperimentConfig) -> Result<AccResult> {
+        self.run_scenario(&Scenario::from_config("config", &self.art.tag, cfg))
+    }
+
+    /// Accuracy of one declarative scenario (mean over `sc.repeats`
+    /// independent variation draws forked off `sc.seed`).
+    pub fn run_scenario(&mut self, sc: &Scenario) -> Result<AccResult> {
+        anyhow::ensure!(
+            sc.model.is_empty() || sc.model == self.art.tag,
+            "scenario '{}' targets model '{}' but this evaluator holds '{}'",
+            sc.name,
+            sc.model,
+            self.art.tag
+        );
         // offset cells can use the single-polarity fast-path graph (§Perf)
-        let offset = cfg.cell.kind == crate::noise::CellKind::Offset;
+        let offset = !sc.differential();
         let mut exec = ModelExecutor::new_with_variant(
-            &mut self.engine, &self.art, &self.data, cfg.n_eval, cfg.group, offset)?;
-        let mut master = Rng::new(cfg.seed);
-        let repeats = if matches!(cfg.method, Method::Clean) { 1 } else { cfg.repeats };
+            &mut self.engine, &self.art, &self.data, sc.n_eval, sc.group, offset)?;
+        let pipeline = sc.pipeline();
+        let mut master = Rng::new(sc.seed);
+        // a perturbation-free pipeline draws no randomness: every repeat
+        // would be bit-identical, so run it once (the old Clean rule,
+        // generalized to any deterministic scenario loaded from JSON)
+        let repeats = if sc.perturb.is_empty() { 1 } else { sc.repeats.max(1) };
         let mut accs = Vec::with_capacity(repeats);
         for rep in 0..repeats {
             let mut rng = master.fork(rep as u64 + 1);
-            let model = prepare(&self.art, cfg, &mut rng);
+            let model = pipeline.prepare(&self.art, &mut rng);
             accs.push(exec.accuracy(&model)?);
         }
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;

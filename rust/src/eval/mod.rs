@@ -1,8 +1,12 @@
-//! Accuracy experiments: experiment configs, weight preparation, and the
-//! evaluator driving the PJRT executor (Tables 1-3, Figs 7 & 11).
+//! Accuracy experiments: the evaluator driving the PJRT executor
+//! (Tables 1-3, Figs 7 & 11) plus the legacy [`ExperimentConfig`] builder.
+//!
+//! Weight preparation itself lives in [`crate::scenario`] as a composable
+//! stage pipeline; [`prepare`] and [`Evaluator::accuracy`] lower configs to
+//! it, and [`Evaluator::run_scenario`] runs declarative scenarios directly.
 
 pub mod evaluator;
 pub mod prepare;
 
-pub use evaluator::Evaluator;
+pub use evaluator::{AccResult, Evaluator};
 pub use prepare::{prepare, ExperimentConfig, Method};

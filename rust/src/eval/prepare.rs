@@ -11,6 +11,13 @@
 //!      §5.2 argument for low-resolution ADCs), IWS cannot,
 //!   5. for differential cells, split the analog copy into the two
 //!      polarity crossbars (wa1 − wa2 in the graph).
+//!
+//! The steps themselves live in [`crate::scenario`] as open stage traits;
+//! [`prepare`] lowers the closed [`ExperimentConfig`] to a
+//! [`crate::scenario::PreparePipeline`] and runs it, so this module is now
+//! a thin compatibility builder over the composable pipeline. The
+//! pre-pipeline body is kept as [`reference_prepare`], the bit-for-bit
+//! oracle for `tests/scenario_equivalence.rs`.
 
 use crate::noise::{CellKind, CellModel};
 use crate::quantize::{fake_quant_occupied, QuantConfig};
@@ -110,7 +117,19 @@ pub fn adc_params(
 }
 
 /// Build one prepared (noisy, quantized, split) model instance.
+///
+/// Lowers `cfg` to the composable [`crate::scenario::PreparePipeline`] and
+/// runs it — bit-for-bit equivalent to the original monolithic
+/// implementation (see [`reference_prepare`]).
 pub fn prepare(art: &Artifact, cfg: &ExperimentConfig, rng: &mut Rng) -> PreparedModel {
+    crate::scenario::PreparePipeline::from_config(cfg).prepare(art, rng)
+}
+
+/// The pre-pipeline `prepare()` body, kept verbatim as the equivalence
+/// oracle: `tests/scenario_equivalence.rs` pins the trait pipeline to this
+/// bit-for-bit across all four [`Method`]s. Not part of the public API.
+#[doc(hidden)]
+pub fn reference_prepare(art: &Artifact, cfg: &ExperimentConfig, rng: &mut Rng) -> PreparedModel {
     let partition = match &cfg.method {
         Method::Hybrid { frac } => Some(Partition::for_fraction(art, *frac)),
         _ => None,

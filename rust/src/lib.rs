@@ -14,12 +14,29 @@
 //!   area/power/energy/timing of HybridAC and eleven baseline
 //!   architectures.
 //!
-//! Start with [`runtime::Artifact`] + [`eval::Evaluator`] for accuracy
-//! experiments and [`hwmodel`] for the architecture studies; for serving,
-//! [`serve::Router`] runs a replicated fleet where every replica holds an
-//! independent conductance-variation draw (the single-worker
-//! [`coordinator::BatchServer`] remains for benchmarks). `examples/` shows
-//! the public API end to end.
+//! ## Experiments are scenarios
+//!
+//! The central API is [`scenario`]: an experiment is a [`scenario::Scenario`]
+//! — model tag + a composable preparation pipeline (split / quantize /
+//! perturb / readout stages) + eval knobs — that round-trips through JSON
+//! (`hybridac scenario --spec file.json` runs one from a file alone). The
+//! stage layer is open: new device imperfections are new
+//! [`scenario::Perturbation`] impls, not enum edits; [`eval::ExperimentConfig`]
+//! remains as a thin builder that lowers to the same pipeline.
+//!
+//! Typical flow:
+//! * [`eval::Evaluator::run_scenario`] — accuracy of one scenario
+//!   (repeat-averaged over variation draws),
+//! * [`coordinator::run_scenario`] — accuracy + hardware
+//!   (timing/energy/area) in one [`coordinator::RunReport`],
+//! * [`serve::Router`] — a replicated serving fleet prepared from one
+//!   scenario, every replica holding an independent variation draw,
+//!   recycled (with a fresh draw from the same scenario) when the optional
+//!   background health monitor flags it,
+//! * [`hwmodel`] — the architecture studies.
+//!
+//! `examples/` shows the public API end to end; `examples/scenario.json`
+//! is a complete experiment as data.
 
 pub mod analog;
 pub mod benchkit;
@@ -32,6 +49,7 @@ pub mod noise;
 pub mod quantize;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod selection;
 pub mod serve;
 pub mod tensor;

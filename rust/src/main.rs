@@ -2,36 +2,43 @@
 //!
 //! Subcommands:
 //!   info                         list artifacts + platform
+//!   scenario --spec FILE         run a full experiment from a JSON scenario
+//!            --name KEY          ... or a named built-in (--list to see them)
 //!   run     --model TAG          clean + noisy + protected accuracy
 //!   sweep   --model TAG          protection-fraction sweep (Table 1 rows)
 //!   adc     --model TAG          ADC-resolution sweep (Table 2 rows)
 //!   hw                           architecture power/area/efficiency summary
 //!   select  --model TAG          Algorithm-1 loop: find the %weights needed
 //!   serve   --model TAG          replicated serving fleet demo (self-driven):
-//!           --replicas N --window-ms MS --queue-depth D --probe P --requests R
+//!           --replicas N --window-ms MS --queue-depth D --probe P
+//!           --probe-interval-ms MS (background health monitor)
+//!           --requests R --spec FILE (serve a JSON scenario)
 
 use anyhow::{bail, Result};
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use hybridac::coordinator::run_experiment;
+use hybridac::coordinator::{run_scenario, RunReport};
 use hybridac::eval::{Evaluator, ExperimentConfig, Method};
 use hybridac::hwmodel::all_architectures;
 use hybridac::report;
 use hybridac::runtime::{Artifact, DatasetBlob};
+use hybridac::scenario::Scenario;
 use hybridac::serve::{self, FleetConfig, Router};
 use hybridac::util::cli::Args;
 
 const FLAGS: &[&str] = &[
     "model", "repeats", "n-eval", "frac", "adc", "target", "requests", "replicas", "window-ms",
-    "queue-depth", "probe", "seed",
+    "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name",
 ];
-const SWITCHES: &[&str] = &["differential", "verbose"];
+const SWITCHES: &[&str] = &["differential", "verbose", "list"];
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), FLAGS, SWITCHES)?;
     match args.subcommand.as_deref() {
         Some("info") => info(),
+        Some("scenario") => scenario_cmd(&args),
         Some("run") => run(&args),
         Some("sweep") => sweep(&args),
         Some("adc") => adc(&args),
@@ -40,8 +47,10 @@ fn main() -> Result<()> {
         Some("serve") => serve(&args),
         _ => {
             eprintln!(
-                "usage: hybridac <info|run|sweep|adc|hw|select|serve> [--model TAG] ...\n\
-                 serve flags: --replicas N --window-ms MS --queue-depth D --probe P --requests R\n\
+                "usage: hybridac <info|scenario|run|sweep|adc|hw|select|serve> [--model TAG] ...\n\
+                 scenario flags: --spec FILE | --name KEY | --list\n\
+                 serve flags: --replicas N --window-ms MS --queue-depth D --probe P\n\
+                 \x20            --probe-interval-ms MS --requests R --spec FILE\n\
                  see README.md; artifacts must be built first (`make artifacts`)"
             );
             Ok(())
@@ -64,6 +73,18 @@ fn base_cfg(args: &Args, method: Method) -> Result<ExperimentConfig> {
         cfg.adc_bits = if bits == "none" { None } else { Some(bits.parse()?) };
     }
     Ok(cfg)
+}
+
+fn print_report(rep: &RunReport) {
+    println!(
+        "  {:<13} acc {:>7} ± {:>6}  exec {:>10}  energy {:>10}  xbars {:>5}",
+        rep.method,
+        report::pct(rep.accuracy_mean),
+        report::pct(rep.accuracy_std),
+        report::si_time(rep.exec_seconds),
+        report::si_energy(rep.energy_j),
+        rep.crossbars
+    );
 }
 
 fn info() -> Result<()> {
@@ -106,29 +127,70 @@ fn info() -> Result<()> {
     Ok(())
 }
 
+/// Run one declarative scenario — from a JSON file (`--spec`) or a named
+/// built-in (`--name`, see `--list`). The whole experiment (model, pipeline
+/// stages, knobs, seed) comes from the spec alone.
+fn scenario_cmd(args: &Args) -> Result<()> {
+    if args.has("list") {
+        println!("built-in scenarios (run with: scenario --name KEY [--model TAG]):");
+        for (key, desc) in Scenario::builtin_names() {
+            println!("  {key:<16} {desc}");
+        }
+        return Ok(());
+    }
+    // the scenario (file or builtin) defines the experiment knobs; refuse
+    // the per-knob flags instead of silently dropping them
+    for flag in ["frac", "adc", "seed", "n-eval", "repeats"] {
+        if args.get(flag).is_some() {
+            bail!("--{flag} conflicts with the scenario subcommand (the spec defines it)");
+        }
+    }
+    if args.has("differential") {
+        bail!("--differential conflicts with the scenario subcommand (set the cell in the spec)");
+    }
+    let sc = if let Some(path) = args.get("spec") {
+        if args.get("model").is_some() {
+            bail!("--model conflicts with --spec (the scenario file names the model)");
+        }
+        Scenario::load(Path::new(path))?
+    } else if let Some(name) = args.get("name") {
+        Scenario::builtin(name, &model_tag(args)).ok_or_else(|| {
+            anyhow::anyhow!("unknown built-in scenario '{name}' — try `scenario --list`")
+        })?
+    } else {
+        bail!("scenario needs --spec FILE or --name KEY (or --list)");
+    };
+    let dir = hybridac::artifacts_dir();
+    println!("scenario '{}' on {}:", sc.name, sc.model);
+    if args.has("verbose") {
+        println!("  spec: {}", sc.to_json().to_string());
+    }
+    let rep = run_scenario(&dir, &sc, 250)?;
+    print_report(&rep);
+    println!(
+        "  clean {}  protected {:.1}% of weights  digital frac {:.3}",
+        report::pct(rep.clean_accuracy),
+        100.0 * rep.protected_frac,
+        rep.digital_frac
+    );
+    Ok(())
+}
+
 fn run(args: &Args) -> Result<()> {
     let tag = model_tag(args);
     let dir = hybridac::artifacts_dir();
     let frac = args.get_f64("frac", 0.16)?;
-    let batch = 250;
     println!("model {tag}: clean / unprotected / IWS / HybridAC @ {:.0}%", frac * 100.0);
-    for method in [
-        Method::Clean,
-        Method::NoProtection,
-        Method::Iws { frac },
-        Method::Hybrid { frac },
+    // the four classic baselines, each expressed as a scenario
+    for (label, method) in [
+        ("clean", Method::Clean),
+        ("unprotected", Method::NoProtection),
+        ("iws", Method::Iws { frac }),
+        ("hybrid", Method::Hybrid { frac }),
     ] {
-        let cfg = base_cfg(args, method.clone())?;
-        let rep = run_experiment(&dir, &tag, &cfg, batch)?;
-        println!(
-            "  {:<13} acc {:>7} ± {:>6}  exec {:>10}  energy {:>10}  xbars {:>5}",
-            rep.method,
-            report::pct(rep.accuracy_mean),
-            report::pct(rep.accuracy_std),
-            report::si_time(rep.exec_seconds),
-            report::si_energy(rep.energy_j),
-            rep.crossbars
-        );
+        let sc = Scenario::from_config(label, &tag, &base_cfg(args, method)?);
+        let rep = run_scenario(&dir, &sc, 250)?;
+        print_report(&rep);
     }
     Ok(())
 }
@@ -165,8 +227,14 @@ fn adc(args: &Args) -> Result<()> {
     let frac = args.get_f64("frac", 0.16)?;
     let mut rows = Vec::new();
     for bits in [8u32, 7, 6, 4] {
-        let hy = ev.accuracy(&base_cfg(args, Method::Hybrid { frac })?.with_adc(bits))?;
-        let iws = ev.accuracy(&base_cfg(args, Method::Iws { frac })?.with_adc(bits))?;
+        let hy = ev.run_scenario(
+            &Scenario::from_config("adc", &tag, &base_cfg(args, Method::Hybrid { frac })?)
+                .with_adc(Some(bits)),
+        )?;
+        let iws = ev.run_scenario(
+            &Scenario::from_config("adc", &tag, &base_cfg(args, Method::Iws { frac })?)
+                .with_adc(Some(bits)),
+        )?;
         rows.push(vec![
             format!("{bits}-bit"),
             report::pct(hy.mean),
@@ -234,13 +302,40 @@ fn select(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let tag = model_tag(args);
     let dir = hybridac::artifacts_dir();
     let n_requests = args.get_usize("requests", 2000)?;
     let replicas = args.get_usize("replicas", 2)?;
     let probe_n = args.get_usize("probe", 64)?;
+    let probe_interval_ms = args.get_usize("probe-interval-ms", 0)?;
     let frac = args.get_f64("frac", 0.16)?;
-    let cfg = base_cfg(args, Method::Hybrid { frac })?;
+
+    // the fleet serves one declarative scenario: from a JSON spec file, or
+    // the paper-default HybridAC config lowered to one
+    let sc = match args.get("spec") {
+        Some(path) => {
+            // the spec defines the experiment; conflicting per-knob flags
+            // would be silently ignored, so refuse them loudly instead
+            for flag in ["model", "seed", "frac", "n-eval", "repeats", "adc"] {
+                if args.get(flag).is_some() {
+                    bail!("--{flag} conflicts with --spec (the scenario file defines it)");
+                }
+            }
+            if args.has("differential") {
+                bail!("--differential conflicts with --spec (set the cell in the scenario file)");
+            }
+            Scenario::load(Path::new(path))?
+        }
+        None => {
+            let mut sc = Scenario::from_config(
+                "serve",
+                &model_tag(args),
+                &base_cfg(args, Method::Hybrid { frac })?,
+            );
+            sc.seed = args.get_usize("seed", 0xF1EE7)? as u64;
+            sc
+        }
+    };
+    let tag = sc.model.clone();
     let data = Arc::new({
         let art = Artifact::load(&dir, &tag)?;
         DatasetBlob::load(&dir, &art.dataset)?
@@ -249,14 +344,30 @@ fn serve(args: &Args) -> Result<()> {
     let mut fleet = FleetConfig::new(replicas);
     fleet.max_wait = Duration::from_millis(args.get_usize("window-ms", 15)? as u64);
     fleet.queue_depth = args.get_usize("queue-depth", 0)?;
-    fleet.base_seed = args.get_usize("seed", 0xF1EE7)? as u64;
-    let router = Arc::new(Router::start(dir, tag.clone(), cfg, fleet)?);
+    fleet.base_seed = sc.seed;
+    if probe_interval_ms > 0 {
+        // background monitor: periodic canary probe + recycle sweep
+        fleet = fleet.with_probe(
+            Duration::from_millis(probe_interval_ms as u64),
+            probe_n,
+            data.clone(),
+        );
+    }
+    let router = Arc::new(Router::start_scenario(dir, sc, fleet)?);
     println!(
-        "serving {tag}: {} replicas (HybridAC@{:.0}%), window {} ms, queue depth {}",
+        "serving scenario '{}' on {tag}: {} replicas ({} @ {:.0}%), window {} ms, \
+         queue depth {}, monitor {}",
+        router.scenario().name,
         router.replica_count(),
-        frac * 100.0,
+        router.scenario().method_label(),
+        100.0 * router.scenario().protected_frac(),
         args.get_usize("window-ms", 15)?,
-        router.queue_depth()
+        router.queue_depth(),
+        if router.has_monitor() {
+            format!("every {probe_interval_ms} ms")
+        } else {
+            "off (caller-driven probe)".to_string()
+        }
     );
 
     // drive the fleet from several client threads; a shed request is
@@ -272,11 +383,14 @@ fn serve(args: &Args) -> Result<()> {
         report::pct(hits as f64 / total.max(1) as f64)
     );
 
-    // labeled canary probe → per-replica observed accuracy + health verdict
-    router.probe(&data, probe_n);
-    let recycled = router.recycle_degraded()?;
-    if !recycled.is_empty() {
-        println!("recycled degraded replicas: {recycled:?}");
+    // with a monitor the sweep already ran in the background; otherwise do
+    // one caller-driven labeled canary probe + recycle pass before report
+    if !router.has_monitor() {
+        router.probe(&data, probe_n);
+        let recycled = router.recycle_degraded()?;
+        if !recycled.is_empty() {
+            println!("recycled degraded replicas: {recycled:?}");
+        }
     }
     let fm = router.fleet_metrics();
     let rows: Vec<Vec<String>> = fm

@@ -205,6 +205,107 @@ impl Artifact {
     pub fn n_args(&self) -> usize {
         1 + 6 * self.layers.len()
     }
+
+    /// A small, fully in-memory artifact (no files on disk) whose
+    /// selection/preparation metadata — layer table, weights, per-weight
+    /// sensitivities, channel ranking, ADC anchors — is self-consistent.
+    ///
+    /// Used by the unit, property, and pipeline-equivalence tests that must
+    /// run without `make artifacts`. The HLO path points at a file that
+    /// does not exist, so a synthetic artifact can be *prepared* but never
+    /// *executed*.
+    pub fn synthetic(seed: u64) -> Artifact {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        // (kind, r, cin, cout, always_digital): one pinned conv (paper
+        // §3.2 pins first/last layers), one rankable conv, one dense head
+        let specs = [
+            ("conv", 3usize, 3usize, 8usize, true),
+            ("conv", 3, 8, 8, false),
+            ("dense", 1, 32, 10, false),
+        ];
+        let mut layers = Vec::new();
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        let mut sens = Vec::new();
+        let mut off = 0usize;
+        for (i, &(kind, r, cin, cout, pinned)) in specs.iter().enumerate() {
+            let mut info = LayerInfo {
+                name: format!("layer{i}"),
+                kind: kind.to_string(),
+                r,
+                stride: 1,
+                pad: if kind == "conv" { 1 } else { 0 },
+                cin,
+                cout,
+                always_digital: pinned,
+                w_off: off,
+                w_len: 0,
+                b_off: 0,
+                b_len: cout,
+            };
+            let n = info.rows() * cout;
+            info.w_len = n;
+            info.b_off = off + n;
+            off += n + cout;
+            let mut w = vec![0.0f32; n];
+            rng.fill_normal(&mut w);
+            for v in w.iter_mut() {
+                *v *= 0.1;
+            }
+            let s: Vec<f32> = (0..n).map(|_| rng.normal_f32().abs()).collect();
+            weights.push(Tensor::new(vec![info.rows(), cout], w));
+            biases.push(Tensor::zeros(vec![cout]));
+            sens.push(Tensor::new(vec![info.rows(), cout], s));
+            layers.push(info);
+        }
+        let total_weights: usize = layers.iter().map(|l| l.n_weights()).sum();
+        let pinned_weights: usize = layers
+            .iter()
+            .filter(|l| l.always_digital)
+            .map(|l| l.n_weights())
+            .sum();
+        // channel ranking over the non-pinned layers, descending score
+        let mut ranking = Vec::new();
+        for (li, l) in layers.iter().enumerate() {
+            if l.always_digital {
+                continue;
+            }
+            let rpc = l.rows_per_channel();
+            for c in 0..l.cin {
+                ranking.push(RankedChannel {
+                    layer: li,
+                    channel: c,
+                    score: rng.next_f32(),
+                    n_weights: rpc * l.cout,
+                });
+            }
+        }
+        ranking.sort_by(|a, b| b.score.total_cmp(&a.score));
+        let n_layers = layers.len();
+        Artifact {
+            tag: "synthetic".to_string(),
+            family: "synthetic".to_string(),
+            dataset: "synthetic".to_string(),
+            num_classes: 10,
+            input_shape: vec![16, 16, 3],
+            batch: 8,
+            group: 128,
+            clean_test_acc: 0.9,
+            layers,
+            act_ranges: vec![(0.0, 6.0); n_layers],
+            psum_p999: vec![120.0, 90.0, 40.0],
+            ranking,
+            total_weights,
+            pinned_weights,
+            fig3: Json::Null,
+            weights,
+            biases,
+            sens,
+            hlo_path: PathBuf::from("synthetic.hlo.txt"),
+            dir: PathBuf::from("."),
+        }
+    }
 }
 
 /// Dataset metadata only (no image/label payload) — enough for serving

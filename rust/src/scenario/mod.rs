@@ -1,0 +1,51 @@
+//! Composable experiment scenarios: an open, trait-based preparation
+//! pipeline plus a declarative JSON spec on top.
+//!
+//! The paper's method is a *composition* — channel selection, hybrid
+//! quantization, conductance variation, reduced-precision readout. This
+//! module makes that composition first-class instead of a hardwired
+//! function body:
+//!
+//! * [`stages`] — the stage traits ([`Splitter`], [`WeightQuantizer`],
+//!   [`Perturbation`], [`Readout`]) and the built-in implementations,
+//!   including two imperfections beyond the paper ([`StuckAtFaults`],
+//!   [`ConductanceDrift`]) as proof the pipeline is open;
+//! * [`PreparePipeline`] — the composed pipeline that replaced the old
+//!   monolithic `eval::prepare::prepare()` body (which now delegates here,
+//!   pinned bit-for-bit by `tests/scenario_equivalence.rs`);
+//! * [`Scenario`] — a whole experiment as one JSON-round-trippable value:
+//!   model tag, stages, eval knobs, seed. The CLI runs one straight from a
+//!   file (`hybridac scenario --spec examples/scenario.json`), the serving
+//!   fleet re-prepares replicas from one on recycle, and the benches build
+//!   their sweeps from them.
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use hybridac::eval::{Evaluator, Method};
+//! use hybridac::scenario::{PerturbSpec, Scenario};
+//!
+//! // declarative: paper-default HybridAC plus a stuck-at-fault stage
+//! let sc = Scenario::paper_default("faulty", "resnet18m_c10s",
+//!                                  Method::Hybrid { frac: 0.16 })
+//!     .with_stage(PerturbSpec::StuckAt { rate: 0.002 });
+//! let json = sc.to_json().to_string(); // round-trips through a file
+//! assert_eq!(Scenario::parse(&json)?, sc);
+//!
+//! let mut ev = Evaluator::new(&hybridac::artifacts_dir(), "resnet18m_c10s")?;
+//! let acc = ev.run_scenario(&sc)?;
+//! println!("{}: {:.2}%", sc.name, 100.0 * acc.mean);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod pipeline;
+pub mod spec;
+pub mod stages;
+
+pub use pipeline::PreparePipeline;
+pub use spec::{PerturbSpec, ReadoutSpec, Scenario, SplitSpec};
+pub use stages::{
+    AdcReadout, AllAnalogSplitter, AnalogVariation, ChannelSplitter, ConductanceDrift,
+    DigitalVariation, HybridQuantizer, IdealReadout, IwsSplitter, Perturbation, Readout,
+    SplitLayer, SplitPlan, Splitter, StuckAtFaults, WeightQuantizer,
+};

@@ -1,0 +1,82 @@
+//! [`PreparePipeline`]: the composable replacement for the old monolithic
+//! `eval::prepare::prepare()` body.
+//!
+//! A pipeline is one splitter, any number of quantizers and perturbations,
+//! and one readout policy (see [`super::stages`]); `prepare` runs every
+//! layer through the stages in order and packs the result into the
+//! executor's [`PreparedModel`] (including the differential-cell polarity
+//! split). Stage order per layer is fixed — split → quantize → perturb →
+//! readout — and perturbations consume the shared RNG in declaration
+//! order, so an instance is reproducible from (pipeline, seed) alone.
+
+use crate::eval::prepare::ExperimentConfig;
+use crate::runtime::artifact::Artifact;
+use crate::runtime::executor::{LayerInputs, PreparedModel};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::spec::Scenario;
+use super::stages::{Perturbation, Readout, SplitLayer, Splitter, WeightQuantizer};
+
+/// A composed weight-preparation pipeline. Build one from a declarative
+/// [`Scenario`] (`scenario.pipeline()`), from an [`ExperimentConfig`]
+/// ([`PreparePipeline::from_config`]), or by hand from custom stage impls.
+pub struct PreparePipeline {
+    pub splitter: Box<dyn Splitter>,
+    pub quantizers: Vec<Box<dyn WeightQuantizer>>,
+    pub perturbations: Vec<Box<dyn Perturbation>>,
+    pub readout: Box<dyn Readout>,
+    /// Differential cells: split the analog copy into the two polarity
+    /// crossbars (wa1 − wa2 in the exported graphs) and halve the ADC
+    /// full scale per polarity array.
+    pub differential: bool,
+}
+
+impl PreparePipeline {
+    /// The old closed-enum configuration expressed as a pipeline
+    /// (bit-for-bit equivalent to the pre-pipeline `prepare()`; pinned by
+    /// `tests/scenario_equivalence.rs`).
+    pub fn from_config(cfg: &ExperimentConfig) -> PreparePipeline {
+        Scenario::from_config("config", "", cfg).pipeline()
+    }
+
+    /// Build one prepared (noisy, quantized, split) model instance.
+    pub fn prepare(&self, art: &Artifact, rng: &mut Rng) -> PreparedModel {
+        let plan = self.splitter.plan(art);
+        let mut layers = Vec::with_capacity(art.layers.len());
+        for (li, w) in art.weights.iter().enumerate() {
+            let mut layer = plan.split(art, li, w);
+            for q in &self.quantizers {
+                q.quantize(art, li, &mut layer);
+            }
+            for p in &self.perturbations {
+                p.perturb(art, li, &mut layer, rng);
+            }
+            let (lsb, clip) = self.readout.params(art, li, &layer, self.differential);
+            let SplitLayer { wa, wd, .. } = layer;
+            let (wa1, wa2) = if self.differential {
+                let mut pos = wa.clone();
+                let mut neg = wa;
+                for v in pos.data.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                for v in neg.data.iter_mut() {
+                    *v = (-*v).max(0.0);
+                }
+                (pos, neg)
+            } else {
+                let z = Tensor::zeros(wa.shape.clone());
+                (wa, z)
+            };
+            layers.push(LayerInputs {
+                wa1,
+                wa2,
+                wd,
+                bias: art.biases[li].clone(),
+                lsb,
+                clip,
+            });
+        }
+        PreparedModel { layers }
+    }
+}

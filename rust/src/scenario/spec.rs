@@ -1,0 +1,706 @@
+//! Declarative, JSON-(de)serializable experiment scenarios.
+//!
+//! A [`Scenario`] is a full experiment in one value: which model artifact,
+//! which preparation stages (split / quantization / perturbations /
+//! readout), and the evaluation knobs (wordline group, eval set size,
+//! repeats, seed). It round-trips through [`crate::util::json`] so a whole
+//! experiment lives in a file:
+//!
+//! ```json
+//! {
+//!   "name": "hybrid-16pct-stuck-at",
+//!   "model": "resnet18m_c10s",
+//!   "split": {"kind": "channels", "frac": 0.16},
+//!   "quant": {"analog_bits": 8, "digital_bits": 8},
+//!   "perturb": [
+//!     {"kind": "variation", "target": "analog",
+//!      "cell": "offset", "sigma": 0.5, "r_ratio": 30},
+//!     {"kind": "variation", "target": "digital", "sigma": 0.1},
+//!     {"kind": "stuck_at", "rate": 0.002}
+//!   ],
+//!   "readout": {"kind": "adc", "bits": 8},
+//!   "group": 128, "n_eval": 500, "repeats": 3, "seed": 53710
+//! }
+//! ```
+//!
+//! `scenario.pipeline()` lowers the spec to trait objects; anything the
+//! spec cannot express (a custom `Perturbation` impl, say) can still be
+//! composed by building a [`PreparePipeline`] directly — the JSON layer
+//! covers the built-ins, the trait layer stays open.
+//!
+//! Note: `seed` is carried as a JSON number; values above 2^53 do not
+//! round-trip exactly (none of ours come close).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::eval::prepare::{ExperimentConfig, Method};
+use crate::noise::{CellKind, CellModel};
+use crate::quantize::QuantConfig;
+use crate::util::json::Json;
+
+use super::pipeline::PreparePipeline;
+use super::stages::{
+    AdcReadout, AllAnalogSplitter, AnalogVariation, ChannelSplitter, ConductanceDrift,
+    DigitalVariation, HybridQuantizer, IdealReadout, IwsSplitter, Perturbation, Readout, Splitter,
+    StuckAtFaults, WeightQuantizer,
+};
+
+/// Which splitter divides the weights (stage 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SplitSpec {
+    /// HybridAC channel-wise selection at a protected-weight fraction.
+    Channels { frac: f64 },
+    /// IWS individual-weight baseline at a protected fraction.
+    Iws { frac: f64 },
+    /// Everything analog (unprotected / clean baselines).
+    AllAnalog,
+}
+
+/// One perturbation stage (stage 3), applied in list order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PerturbSpec {
+    /// Conductance variation on the analog copy (paper eq. 9).
+    AnalogVariation { cell: CellModel },
+    /// Relative variation on the digital copy (paper: 10%).
+    DigitalVariation { sigma: f64 },
+    /// Stuck-at-fault cells at the given per-cell rate.
+    StuckAt { rate: f64 },
+    /// PCM-style conductance drift after `t_seconds`.
+    Drift { t_seconds: f64, nu: f64, nu_sigma: f64 },
+}
+
+/// The readout policy (stage 4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReadoutSpec {
+    /// Reduced-precision ADC at the given resolution.
+    Adc { bits: u32 },
+    /// Ideal (un-quantized) readout.
+    Ideal,
+}
+
+/// One full experiment, declaratively.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Free-form label (reports, fleet logs).
+    pub name: String,
+    /// Artifact tag the scenario runs on (e.g. `resnet18m_c10s`).
+    pub model: String,
+    pub split: SplitSpec,
+    /// Hybrid weight quantization; `None` keeps f32 weights.
+    pub quant: Option<QuantConfig>,
+    pub perturb: Vec<PerturbSpec>,
+    pub readout: ReadoutSpec,
+    /// Simultaneously activated wordlines (selects the graph variant and
+    /// scales the ADC full-range).
+    pub group: usize,
+    pub n_eval: usize,
+    /// Independent variation draws to average over.
+    pub repeats: usize,
+    pub seed: u64,
+}
+
+impl Scenario {
+    // -- construction -------------------------------------------------------
+
+    /// Express an [`ExperimentConfig`] as a scenario. This is the exact
+    /// semantics of the old monolithic `prepare()`: `Clean` drops
+    /// quantization, perturbations and the ADC and runs a single repeat;
+    /// digital variation is included only when `sigma_digital > 0`.
+    pub fn from_config(name: &str, model: &str, cfg: &ExperimentConfig) -> Scenario {
+        let clean = matches!(cfg.method, Method::Clean);
+        let split = match cfg.method {
+            Method::Hybrid { frac } => SplitSpec::Channels { frac },
+            Method::Iws { frac } => SplitSpec::Iws { frac },
+            Method::NoProtection | Method::Clean => SplitSpec::AllAnalog,
+        };
+        let mut perturb = Vec::new();
+        if !clean {
+            perturb.push(PerturbSpec::AnalogVariation { cell: cfg.cell });
+            if cfg.sigma_digital > 0.0 {
+                perturb.push(PerturbSpec::DigitalVariation { sigma: cfg.sigma_digital });
+            }
+        }
+        Scenario {
+            name: name.to_string(),
+            model: model.to_string(),
+            split,
+            quant: if clean { None } else { cfg.quant },
+            perturb,
+            readout: match (cfg.adc_bits, clean) {
+                (Some(bits), false) => ReadoutSpec::Adc { bits },
+                _ => ReadoutSpec::Ideal,
+            },
+            group: cfg.group,
+            n_eval: cfg.n_eval,
+            repeats: if clean { 1 } else { cfg.repeats },
+            seed: cfg.seed,
+        }
+    }
+
+    /// Paper-default experiment (offset cells, sigma 50%/10%, 8-bit ADC)
+    /// for one protection method, as a scenario.
+    pub fn paper_default(name: &str, model: &str, method: Method) -> Scenario {
+        Scenario::from_config(name, model, &ExperimentConfig::paper_default(method))
+    }
+
+    /// Named built-in scenarios — the CLI subcommands re-expressed
+    /// declaratively (see `scenario --list`).
+    pub fn builtin(key: &str, model: &str) -> Option<Scenario> {
+        let hybrid = || Scenario::paper_default(key, model, Method::Hybrid { frac: 0.16 });
+        Some(match key {
+            "clean" => Scenario::paper_default(key, model, Method::Clean),
+            "unprotected" => Scenario::paper_default(key, model, Method::NoProtection),
+            "paper-iws" => Scenario::paper_default(key, model, Method::Iws { frac: 0.16 }),
+            "paper-hybrid" => hybrid(),
+            "differential-4b" => hybrid()
+                .with_cell(CellModel::differential(0.5))
+                .with_adc(Some(4)),
+            "stuck-at" => hybrid().with_stage(PerturbSpec::StuckAt { rate: 0.002 }),
+            "drift-1h" => hybrid().with_stage(PerturbSpec::Drift {
+                t_seconds: 3600.0,
+                nu: 0.06,
+                nu_sigma: 0.02,
+            }),
+            _ => return None,
+        })
+    }
+
+    /// `(key, description)` of every built-in scenario.
+    pub fn builtin_names() -> &'static [(&'static str, &'static str)] {
+        &[
+            ("clean", "no noise, no quant, ideal readout (pipeline anchor)"),
+            ("unprotected", "everything analog under sigma=50% variation"),
+            ("paper-iws", "IWS baseline at 16% protected weights"),
+            ("paper-hybrid", "HybridAC at 16% protected weights (paper default)"),
+            ("differential-4b", "HybridAC with differential cells and a 4-bit ADC"),
+            ("stuck-at", "paper-hybrid plus 0.2% stuck-at-fault cells"),
+            ("drift-1h", "paper-hybrid plus one hour of conductance drift"),
+        ]
+    }
+
+    // -- builders -----------------------------------------------------------
+
+    pub fn with_adc(mut self, bits: Option<u32>) -> Self {
+        self.readout = match bits {
+            Some(bits) => ReadoutSpec::Adc { bits },
+            None => ReadoutSpec::Ideal,
+        };
+        self
+    }
+
+    pub fn with_quant(mut self, quant: Option<QuantConfig>) -> Self {
+        self.quant = quant;
+        self
+    }
+
+    /// Replace the analog-variation cell model (inserted first if the
+    /// scenario had no analog variation stage).
+    pub fn with_cell(mut self, cell: CellModel) -> Self {
+        let mut found = false;
+        for p in self.perturb.iter_mut() {
+            if let PerturbSpec::AnalogVariation { cell: c } = p {
+                *c = cell;
+                found = true;
+            }
+        }
+        if !found {
+            self.perturb.insert(0, PerturbSpec::AnalogVariation { cell });
+        }
+        self
+    }
+
+    /// Append a perturbation stage.
+    pub fn with_stage(mut self, stage: PerturbSpec) -> Self {
+        self.perturb.push(stage);
+        self
+    }
+
+    pub fn with_eval(mut self, n_eval: usize, repeats: usize) -> Self {
+        self.n_eval = n_eval;
+        self.repeats = repeats;
+        self
+    }
+
+    pub fn with_group(mut self, group: usize) -> Self {
+        self.group = group;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    // -- lowering -----------------------------------------------------------
+
+    /// Whether the analog arrays use differential cells (drives the
+    /// polarity split, the per-polarity ADC range, and the graph variant).
+    pub fn differential(&self) -> bool {
+        self.perturb.iter().any(|p| {
+            matches!(p, PerturbSpec::AnalogVariation { cell }
+                     if cell.kind == CellKind::Differential)
+        })
+    }
+
+    /// The requested protected-weight fraction (0 for unprotected).
+    pub fn protected_frac(&self) -> f64 {
+        match self.split {
+            SplitSpec::Channels { frac } | SplitSpec::Iws { frac } => frac,
+            SplitSpec::AllAnalog => 0.0,
+        }
+    }
+
+    /// Short method label for reports ("HybridAC", "IWS", ...).
+    pub fn method_label(&self) -> &'static str {
+        match self.split {
+            SplitSpec::Channels { .. } => "HybridAC",
+            SplitSpec::Iws { .. } => "IWS",
+            SplitSpec::AllAnalog => {
+                if self.perturb.is_empty() {
+                    "Clean"
+                } else {
+                    "NoProtection"
+                }
+            }
+        }
+    }
+
+    /// Lower the declarative spec to a composed trait pipeline.
+    pub fn pipeline(&self) -> PreparePipeline {
+        let splitter: Box<dyn Splitter> = match self.split {
+            SplitSpec::Channels { frac } => Box::new(ChannelSplitter { frac }),
+            SplitSpec::Iws { frac } => Box::new(IwsSplitter { frac }),
+            SplitSpec::AllAnalog => Box::new(AllAnalogSplitter),
+        };
+        let quantizers: Vec<Box<dyn WeightQuantizer>> = self
+            .quant
+            .iter()
+            .map(|&cfg| -> Box<dyn WeightQuantizer> { Box::new(HybridQuantizer { cfg }) })
+            .collect();
+        let perturbations: Vec<Box<dyn Perturbation>> = self
+            .perturb
+            .iter()
+            .map(|p| -> Box<dyn Perturbation> {
+                match *p {
+                    PerturbSpec::AnalogVariation { cell } => Box::new(AnalogVariation { cell }),
+                    PerturbSpec::DigitalVariation { sigma } => {
+                        Box::new(DigitalVariation::relative(sigma))
+                    }
+                    PerturbSpec::StuckAt { rate } => Box::new(StuckAtFaults { rate }),
+                    PerturbSpec::Drift { t_seconds, nu, nu_sigma } => {
+                        Box::new(ConductanceDrift { t_seconds, nu, nu_sigma })
+                    }
+                }
+            })
+            .collect();
+        let readout: Box<dyn Readout> = match self.readout {
+            ReadoutSpec::Adc { bits } => Box::new(AdcReadout { bits, group: self.group }),
+            ReadoutSpec::Ideal => Box::new(IdealReadout),
+        };
+        PreparePipeline {
+            splitter,
+            quantizers,
+            perturbations,
+            readout,
+            differential: self.differential(),
+        }
+    }
+
+    // -- JSON ---------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("split".to_string(), split_to_json(&self.split));
+        m.insert(
+            "quant".to_string(),
+            match &self.quant {
+                Some(q) => quant_to_json(q),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "perturb".to_string(),
+            Json::Arr(self.perturb.iter().map(perturb_to_json).collect()),
+        );
+        m.insert("readout".to_string(), readout_to_json(&self.readout));
+        m.insert("group".to_string(), Json::Num(self.group as f64));
+        m.insert("n_eval".to_string(), Json::Num(self.n_eval as f64));
+        m.insert("repeats".to_string(), Json::Num(self.repeats as f64));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        check_keys(
+            j,
+            &[
+                "name", "model", "split", "quant", "perturb", "readout", "group", "n_eval",
+                "repeats", "seed",
+            ],
+            "scenario",
+        )?;
+        let split = split_from_json(j.req("split")?).context("scenario 'split'")?;
+        let quant = match j.get("quant") {
+            None | Some(Json::Null) => None,
+            Some(q) => Some(quant_from_json(q).context("scenario 'quant'")?),
+        };
+        let mut perturb = Vec::new();
+        if let Some(arr) = j.get("perturb") {
+            for (i, p) in arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'perturb' is not an array"))?
+                .iter()
+                .enumerate()
+            {
+                perturb.push(
+                    perturb_from_json(p).with_context(|| format!("scenario 'perturb'[{i}]"))?,
+                );
+            }
+        }
+        let readout = match j.get("readout") {
+            None | Some(Json::Null) => ReadoutSpec::Ideal,
+            Some(r) => readout_from_json(r).context("scenario 'readout'")?,
+        };
+        let name = match j.get("name") {
+            None | Some(Json::Null) => "scenario".to_string(),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("'name' is not a string"))?
+                .to_string(),
+        };
+        Ok(Scenario {
+            name,
+            model: j.str_of("model")?.to_string(),
+            split,
+            quant,
+            perturb,
+            readout,
+            group: opt_usize(j, "group", 128)?,
+            n_eval: opt_usize(j, "n_eval", 500)?,
+            repeats: opt_usize(j, "repeats", 3)?,
+            seed: opt_f64(j, "seed", 0xD1CE as f64)? as u64,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Scenario::from_json(&j)
+    }
+
+    pub fn load(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario spec {}", path.display()))?;
+        Scenario::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Reject unknown keys: a misspelled experiment knob ("n-eval",
+/// "perturbations", ...) must fail the parse, not silently fall back to a
+/// default while the file claims otherwise.
+fn check_keys(j: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    if let Json::Obj(m) = j {
+        for key in m.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!("unknown {what} key '{key}' (allowed: {})", allowed.join(", "));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Optional numeric key: absent/null takes the default, but a key that is
+/// *present with the wrong type* is a hard error — a mistyped experiment
+/// knob must never silently run with a different value than the file says.
+fn opt_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("'{key}' is not a number")),
+    }
+}
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'{key}' is not a number")),
+    }
+}
+
+fn split_to_json(s: &SplitSpec) -> Json {
+    match *s {
+        SplitSpec::Channels { frac } => {
+            obj(vec![("kind", Json::Str("channels".into())), ("frac", Json::Num(frac))])
+        }
+        SplitSpec::Iws { frac } => {
+            obj(vec![("kind", Json::Str("iws".into())), ("frac", Json::Num(frac))])
+        }
+        SplitSpec::AllAnalog => obj(vec![("kind", Json::Str("all_analog".into()))]),
+    }
+}
+
+fn split_from_json(j: &Json) -> Result<SplitSpec> {
+    check_keys(j, &["kind", "frac"], "split")?;
+    Ok(match j.str_of("kind")? {
+        "channels" => SplitSpec::Channels { frac: j.f64_of("frac")? },
+        "iws" => SplitSpec::Iws { frac: j.f64_of("frac")? },
+        "all_analog" => SplitSpec::AllAnalog,
+        k => bail!("unknown split kind '{k}' (channels|iws|all_analog)"),
+    })
+}
+
+fn quant_to_json(q: &QuantConfig) -> Json {
+    obj(vec![
+        ("analog_bits", Json::Num(q.analog_bits as f64)),
+        ("digital_bits", Json::Num(q.digital_bits as f64)),
+    ])
+}
+
+fn quant_from_json(j: &Json) -> Result<QuantConfig> {
+    check_keys(j, &["analog_bits", "digital_bits"], "quant")?;
+    Ok(QuantConfig {
+        analog_bits: j.usize_of("analog_bits")? as u32,
+        digital_bits: j.usize_of("digital_bits")? as u32,
+    })
+}
+
+fn cell_kind_str(k: CellKind) -> &'static str {
+    match k {
+        CellKind::Offset => "offset",
+        CellKind::Differential => "differential",
+    }
+}
+
+fn perturb_to_json(p: &PerturbSpec) -> Json {
+    match *p {
+        PerturbSpec::AnalogVariation { cell } => obj(vec![
+            ("kind", Json::Str("variation".into())),
+            ("target", Json::Str("analog".into())),
+            ("cell", Json::Str(cell_kind_str(cell.kind).into())),
+            ("sigma", Json::Num(cell.sigma)),
+            // infinite R-ratio (pure relative noise) serializes as null
+            (
+                "r_ratio",
+                if cell.r_ratio.is_finite() { Json::Num(cell.r_ratio) } else { Json::Null },
+            ),
+        ]),
+        PerturbSpec::DigitalVariation { sigma } => obj(vec![
+            ("kind", Json::Str("variation".into())),
+            ("target", Json::Str("digital".into())),
+            ("sigma", Json::Num(sigma)),
+        ]),
+        PerturbSpec::StuckAt { rate } => {
+            obj(vec![("kind", Json::Str("stuck_at".into())), ("rate", Json::Num(rate))])
+        }
+        PerturbSpec::Drift { t_seconds, nu, nu_sigma } => obj(vec![
+            ("kind", Json::Str("drift".into())),
+            ("t_seconds", Json::Num(t_seconds)),
+            ("nu", Json::Num(nu)),
+            ("nu_sigma", Json::Num(nu_sigma)),
+        ]),
+    }
+}
+
+fn perturb_from_json(j: &Json) -> Result<PerturbSpec> {
+    match j.get("kind").and_then(Json::as_str) {
+        Some("variation") => {
+            check_keys(j, &["kind", "target", "cell", "sigma", "r_ratio"], "variation")?
+        }
+        Some("stuck_at") => check_keys(j, &["kind", "rate"], "stuck_at")?,
+        Some("drift") => check_keys(j, &["kind", "t_seconds", "nu", "nu_sigma"], "drift")?,
+        _ => {}
+    }
+    Ok(match j.str_of("kind")? {
+        "variation" => match j.get("target").and_then(Json::as_str).unwrap_or("analog") {
+            "digital" => PerturbSpec::DigitalVariation { sigma: j.f64_of("sigma")? },
+            "analog" => {
+                let kind = match j.get("cell").and_then(Json::as_str).unwrap_or("offset") {
+                    "offset" => CellKind::Offset,
+                    "differential" => CellKind::Differential,
+                    c => bail!("unknown cell kind '{c}' (offset|differential)"),
+                };
+                let r_ratio = match j.get("r_ratio") {
+                    None | Some(Json::Null) => f64::INFINITY,
+                    Some(r) => r
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("'r_ratio' is not a number"))?,
+                };
+                PerturbSpec::AnalogVariation {
+                    cell: CellModel { kind, r_ratio, sigma: j.f64_of("sigma")? },
+                }
+            }
+            t => bail!("unknown variation target '{t}' (analog|digital)"),
+        },
+        "stuck_at" => PerturbSpec::StuckAt { rate: j.f64_of("rate")? },
+        "drift" => PerturbSpec::Drift {
+            t_seconds: j.f64_of("t_seconds")?,
+            nu: j.f64_of("nu")?,
+            nu_sigma: j.get("nu_sigma").and_then(Json::as_f64).unwrap_or(0.0),
+        },
+        k => bail!("unknown perturbation kind '{k}' (variation|stuck_at|drift)"),
+    })
+}
+
+fn readout_to_json(r: &ReadoutSpec) -> Json {
+    match *r {
+        ReadoutSpec::Adc { bits } => {
+            obj(vec![("kind", Json::Str("adc".into())), ("bits", Json::Num(bits as f64))])
+        }
+        ReadoutSpec::Ideal => obj(vec![("kind", Json::Str("ideal".into()))]),
+    }
+}
+
+fn readout_from_json(j: &Json) -> Result<ReadoutSpec> {
+    check_keys(j, &["kind", "bits"], "readout")?;
+    Ok(match j.str_of("kind")? {
+        "adc" => {
+            let bits = j.usize_of("bits")?;
+            // adc_params shifts 1u64 << bits; anything past 32 is a typo,
+            // not an ADC
+            if !(1..=32).contains(&bits) {
+                bail!("adc 'bits' must be in 1..=32, got {bits}");
+            }
+            ReadoutSpec::Adc { bits: bits as u32 }
+        }
+        "ideal" => ReadoutSpec::Ideal,
+        k => bail!("unknown readout kind '{k}' (adc|ideal)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_maps_the_old_enum_faithfully() {
+        let sc = Scenario::paper_default("t", "m", Method::Hybrid { frac: 0.16 });
+        assert_eq!(sc.split, SplitSpec::Channels { frac: 0.16 });
+        assert_eq!(sc.readout, ReadoutSpec::Adc { bits: 8 });
+        assert_eq!(sc.perturb.len(), 2, "analog + digital variation");
+        assert_eq!(sc.method_label(), "HybridAC");
+        assert!(!sc.differential());
+
+        let clean = Scenario::paper_default("t", "m", Method::Clean);
+        assert_eq!(clean.quant, None);
+        assert!(clean.perturb.is_empty());
+        assert_eq!(clean.readout, ReadoutSpec::Ideal);
+        assert_eq!(clean.repeats, 1);
+        assert_eq!(clean.method_label(), "Clean");
+    }
+
+    #[test]
+    fn builtins_parse_and_label() {
+        for (key, _) in Scenario::builtin_names() {
+            let sc = Scenario::builtin(key, "m").expect(key);
+            assert_eq!(&sc.name, key);
+            // every builtin round-trips through JSON
+            let back = Scenario::parse(&sc.to_json().to_string()).unwrap();
+            assert_eq!(sc, back, "builtin '{key}' does not round-trip");
+        }
+        assert!(Scenario::builtin("nope", "m").is_none());
+        assert!(Scenario::builtin("differential-4b", "m").unwrap().differential());
+    }
+
+    #[test]
+    fn json_round_trip_with_every_stage_kind() {
+        let sc = Scenario::paper_default("all-stages", "vggmini_c10s", Method::Iws { frac: 0.1 })
+            .with_stage(PerturbSpec::StuckAt { rate: 0.001 })
+            .with_stage(PerturbSpec::Drift { t_seconds: 3600.0, nu: 0.06, nu_sigma: 0.02 })
+            .with_eval(100, 2)
+            .with_group(64)
+            .with_seed(99);
+        let text = sc.to_json().to_string();
+        let back = Scenario::parse(&text).unwrap();
+        assert_eq!(sc, back, "{text}");
+    }
+
+    #[test]
+    fn infinite_r_ratio_round_trips_as_null() {
+        let sc = Scenario::paper_default("rel", "m", Method::NoProtection)
+            .with_cell(CellModel::relative(0.3));
+        let text = sc.to_json().to_string();
+        assert!(text.contains("\"r_ratio\":null"), "{text}");
+        assert_eq!(Scenario::parse(&text).unwrap(), sc);
+    }
+
+    #[test]
+    fn missing_optional_keys_take_defaults() {
+        let sc = Scenario::parse(
+            r#"{"model": "vggmini_c10s", "split": {"kind": "all_analog"}}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.group, 128);
+        assert_eq!(sc.n_eval, 500);
+        assert_eq!(sc.repeats, 3);
+        assert_eq!(sc.readout, ReadoutSpec::Ideal);
+        assert!(sc.perturb.is_empty());
+        assert_eq!(sc.method_label(), "Clean");
+    }
+
+    #[test]
+    fn bad_specs_fail_loudly() {
+        assert!(Scenario::parse("{}").is_err(), "missing split/model");
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"sharded"}}"#).is_err(),
+            "unknown split kind"
+        );
+        assert!(Scenario::parse(
+            r#"{"model":"m","split":{"kind":"all_analog"},"perturb":[{"kind":"gamma-ray"}]}"#
+        )
+        .is_err());
+        // mistyped knobs must error, not silently fall back to defaults
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"repeats":"5"}"#)
+                .is_err(),
+            "string repeats"
+        );
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"seed":"7"}"#)
+                .is_err(),
+            "string seed"
+        );
+        // out-of-range ADC resolution is a typo, not an ADC
+        assert!(
+            Scenario::parse(
+                r#"{"model":"m","split":{"kind":"all_analog"},"readout":{"kind":"adc","bits":64}}"#
+            )
+            .is_err(),
+            "64-bit ADC"
+        );
+        // misspelled keys must error, not silently vanish
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"n-eval":50}"#)
+                .is_err(),
+            "hyphenated n-eval"
+        );
+        assert!(
+            Scenario::parse(
+                r#"{"model":"m","split":{"kind":"all_analog"},"perturb":[{"kind":"drift","t_seconds":10,"nu":0.1,"nu-sigma":0.1}]}"#
+            )
+            .is_err(),
+            "misspelled drift key"
+        );
+    }
+
+    #[test]
+    fn with_cell_replaces_or_inserts_the_analog_stage() {
+        let sc = Scenario::paper_default("t", "m", Method::Hybrid { frac: 0.16 })
+            .with_cell(CellModel::differential(0.5));
+        assert!(sc.differential());
+        assert_eq!(sc.perturb.len(), 2, "replacement, not duplication");
+
+        let clean = Scenario::paper_default("t", "m", Method::Clean)
+            .with_cell(CellModel::offset(0.5));
+        assert_eq!(clean.perturb.len(), 1, "inserted when absent");
+    }
+}

@@ -1,0 +1,414 @@
+//! Pipeline stage traits + the built-in stage implementations.
+//!
+//! One prepared model instance is produced by running every layer through
+//! four stage slots (see [`super::PreparePipeline`]):
+//!
+//! 1. a [`Splitter`] decides which weights live on the analog crossbars and
+//!    which on the digital co-accelerator (HybridAC channels, IWS scattered
+//!    weights, or nothing),
+//! 2. zero or more [`WeightQuantizer`]s fake-quantize each copy over its
+//!    occupied range,
+//! 3. zero or more [`Perturbation`]s inject device imperfections
+//!    (conductance variation, stuck-at faults, drift, ...) — applied in
+//!    order, each drawing from the shared per-instance RNG,
+//! 4. a [`Readout`] derives the ADC step/clip per layer.
+//!
+//! The traits are open: a new imperfection model is a new `Perturbation`
+//! impl plugged into a pipeline — no enum to widen, no `prepare()` edit.
+//! [`StuckAtFaults`] and [`ConductanceDrift`] are exactly that (the
+//! programming-noise/drift family of Rasch et al. 2023 and the fault models
+//! of the noise-mitigation literature), living alongside the paper's own
+//! [`AnalogVariation`].
+
+use crate::eval::prepare::adc_params;
+use crate::noise::CellModel;
+use crate::quantize::{fake_quant_occupied, QuantConfig};
+use crate::runtime::artifact::Artifact;
+use crate::selection::{IwsMasks, Partition};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Per-layer working state flowing through the pipeline stages.
+#[derive(Clone, Debug)]
+pub struct SplitLayer {
+    /// Analog copy (crossbar-resident weights; exact zeros = removed rows).
+    pub wa: Tensor,
+    /// Digital copy (protected weights on the co-accelerator).
+    pub wd: Tensor,
+    /// Fraction of the ADC full scale still occupied after row removal
+    /// (HybridAC's uniform channel removal shrinks it; scattered selection
+    /// cannot, see paper §5.2).
+    pub range_frac: f64,
+    /// Zeros in `wa` are *physical* cells (IWS holes) and keep pedestal
+    /// variation, rather than removed rows that stay exact.
+    pub noisy_zeros: bool,
+}
+
+/// Splits clean weights into analog/digital copies. `plan` resolves the
+/// splitter against one artifact (channel ranking, score thresholds, ...);
+/// the returned [`SplitPlan`] is then applied layer by layer.
+pub trait Splitter {
+    fn plan(&self, art: &Artifact) -> Box<dyn SplitPlan>;
+}
+
+/// One splitter resolved against one artifact.
+pub trait SplitPlan {
+    fn split(&self, art: &Artifact, li: usize, w: &Tensor) -> SplitLayer;
+    /// Achieved protected-weight fraction (reporting only).
+    fn achieved_frac(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Quantizes the split copies in place (stage 2).
+pub trait WeightQuantizer {
+    fn quantize(&self, art: &Artifact, li: usize, layer: &mut SplitLayer);
+}
+
+/// Injects one device imperfection into the split copies (stage 3).
+/// Implementations must draw all randomness from `rng` so instances stay
+/// reproducible from a single scenario seed.
+pub trait Perturbation {
+    fn perturb(&self, art: &Artifact, li: usize, layer: &mut SplitLayer, rng: &mut Rng);
+}
+
+/// Derives the per-layer ADC step/clip `(lsb, clip)` (stage 4);
+/// `lsb < 0` means ideal (un-quantized) readout in the exported graphs.
+pub trait Readout {
+    fn params(&self, art: &Artifact, li: usize, layer: &SplitLayer, differential: bool)
+        -> (f32, f32);
+}
+
+// ---------------------------------------------------------------------------
+// splitters
+
+/// HybridAC: channel-wise selection at a protected-weight fraction
+/// (whole crossbar rows removed uniformly ⇒ the ADC full scale shrinks).
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelSplitter {
+    pub frac: f64,
+}
+
+impl Splitter for ChannelSplitter {
+    fn plan(&self, art: &Artifact) -> Box<dyn SplitPlan> {
+        Box::new(Partition::for_fraction(art, self.frac))
+    }
+}
+
+impl SplitPlan for Partition {
+    fn split(&self, art: &Artifact, li: usize, w: &Tensor) -> SplitLayer {
+        let (wa, wd) = self.split_layer(art, li, w);
+        SplitLayer {
+            wa,
+            wd,
+            range_frac: self.analog_fraction(art, li),
+            noisy_zeros: false,
+        }
+    }
+
+    fn achieved_frac(&self) -> f64 {
+        self.protected_frac
+    }
+}
+
+/// IWS baseline: individual scattered weights at a protected fraction
+/// (holes keep pedestal noise, no bit-line range shrinks).
+#[derive(Clone, Copy, Debug)]
+pub struct IwsSplitter {
+    pub frac: f64,
+}
+
+impl Splitter for IwsSplitter {
+    fn plan(&self, art: &Artifact) -> Box<dyn SplitPlan> {
+        Box::new(IwsMasks::for_fraction(art, self.frac))
+    }
+}
+
+impl SplitPlan for IwsMasks {
+    fn split(&self, art: &Artifact, li: usize, w: &Tensor) -> SplitLayer {
+        let (wa, wd) = self.split_layer(art, li, w);
+        SplitLayer { wa, wd, range_frac: 1.0, noisy_zeros: true }
+    }
+
+    fn achieved_frac(&self) -> f64 {
+        self.protected_frac
+    }
+}
+
+/// Everything stays analog (the "with PV" / clean baselines).
+#[derive(Clone, Copy, Debug)]
+pub struct AllAnalogSplitter;
+
+struct AllAnalogPlan;
+
+impl Splitter for AllAnalogSplitter {
+    fn plan(&self, _art: &Artifact) -> Box<dyn SplitPlan> {
+        Box::new(AllAnalogPlan)
+    }
+}
+
+impl SplitPlan for AllAnalogPlan {
+    fn split(&self, _art: &Artifact, _li: usize, w: &Tensor) -> SplitLayer {
+        SplitLayer {
+            wa: w.clone(),
+            wd: Tensor::zeros(w.shape.clone()),
+            range_frac: 1.0,
+            noisy_zeros: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantizers
+
+/// Hybrid quantization (paper §2.2): analog copy at `analog_bits`, digital
+/// copy at `digital_bits`, each over its own occupied range.
+#[derive(Clone, Copy, Debug)]
+pub struct HybridQuantizer {
+    pub cfg: QuantConfig,
+}
+
+impl WeightQuantizer for HybridQuantizer {
+    fn quantize(&self, _art: &Artifact, _li: usize, layer: &mut SplitLayer) {
+        fake_quant_occupied(&mut layer.wa, self.cfg.analog_bits);
+        fake_quant_occupied(&mut layer.wd, self.cfg.digital_bits);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// perturbations
+
+/// Conductance variation on the analog copy (paper eq. 9): the weight-domain
+/// view of per-cell N(0, sigma·g), honoring the splitter's `noisy_zeros`
+/// (IWS holes keep pedestal noise; removed rows stay exact).
+#[derive(Clone, Copy, Debug)]
+pub struct AnalogVariation {
+    pub cell: CellModel,
+}
+
+impl Perturbation for AnalogVariation {
+    fn perturb(&self, _art: &Artifact, _li: usize, layer: &mut SplitLayer, rng: &mut Rng) {
+        self.cell.perturb(&mut layer.wa, rng, layer.noisy_zeros);
+    }
+}
+
+/// Variation on the digital co-accelerator's copy (paper: 10% relative,
+/// SRAM — no conductance pedestal).
+#[derive(Clone, Copy, Debug)]
+pub struct DigitalVariation {
+    pub cell: CellModel,
+}
+
+impl DigitalVariation {
+    pub fn relative(sigma: f64) -> Self {
+        DigitalVariation { cell: CellModel::relative(sigma) }
+    }
+}
+
+impl Perturbation for DigitalVariation {
+    fn perturb(&self, _art: &Artifact, _li: usize, layer: &mut SplitLayer, rng: &mut Rng) {
+        self.cell.perturb(&mut layer.wd, rng, false);
+    }
+}
+
+/// Stuck-at-fault cells: each analog cell is, with probability `rate`,
+/// stuck at one conductance extreme — half stuck-at-off (weight pinned to
+/// the mapping minimum), half stuck-at-on (pinned to the maximum). Removed
+/// rows carry no cells and cannot fault; IWS holes are physical cells and
+/// can (same `noisy_zeros` contract as variation).
+#[derive(Clone, Copy, Debug)]
+pub struct StuckAtFaults {
+    pub rate: f64,
+}
+
+impl Perturbation for StuckAtFaults {
+    fn perturb(&self, _art: &Artifact, _li: usize, layer: &mut SplitLayer, rng: &mut Rng) {
+        if self.rate <= 0.0 {
+            return;
+        }
+        let (lo, hi) = match layer.wa.nonzero_range() {
+            Some(r) => r,
+            None => return,
+        };
+        for v in layer.wa.data.iter_mut() {
+            if *v == 0.0 && !layer.noisy_zeros {
+                continue;
+            }
+            let u = rng.next_f64();
+            if u < self.rate * 0.5 {
+                *v = lo;
+            } else if u < self.rate {
+                *v = hi;
+            }
+        }
+    }
+}
+
+/// Conductance drift (PCM-style, Rasch et al. 2023): conductance decays as
+/// `g(t) = g(t0) · (t/t0)^(-nu)` with a per-device exponent
+/// `nu ~ N(nu, nu_sigma)`, reference `t0 = 1 s`. In the weight domain the
+/// stored value shrinks toward zero the longer the array goes unrefreshed.
+#[derive(Clone, Copy, Debug)]
+pub struct ConductanceDrift {
+    /// Time since programming, in seconds (`<= 1` is a no-op).
+    pub t_seconds: f64,
+    /// Mean drift exponent (PCM-typical 0.05-0.1).
+    pub nu: f64,
+    /// Device-to-device spread of the exponent.
+    pub nu_sigma: f64,
+}
+
+impl Perturbation for ConductanceDrift {
+    fn perturb(&self, _art: &Artifact, _li: usize, layer: &mut SplitLayer, rng: &mut Rng) {
+        if self.t_seconds <= 1.0 {
+            return;
+        }
+        for v in layer.wa.data.iter_mut() {
+            if *v == 0.0 {
+                continue;
+            }
+            let nu = (self.nu + rng.normal() * self.nu_sigma).max(0.0);
+            *v *= self.t_seconds.powf(-nu) as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// readouts
+
+/// Reduced-precision ADC readout (paper §5.2): step/clip from the per-layer
+/// calibration anchor, shrunk by the splitter's occupied range fraction and
+/// the wordline group.
+#[derive(Clone, Copy, Debug)]
+pub struct AdcReadout {
+    pub bits: u32,
+    /// Simultaneously activated wordlines (full scale grows with the group).
+    pub group: usize,
+}
+
+impl Readout for AdcReadout {
+    fn params(
+        &self,
+        art: &Artifact,
+        li: usize,
+        layer: &SplitLayer,
+        differential: bool,
+    ) -> (f32, f32) {
+        adc_params(art.psum_p999[li], self.bits, self.group, layer.range_frac, differential)
+    }
+}
+
+/// Ideal (un-quantized) readout: the exported graphs treat `lsb < 0` as
+/// "skip ADC quantization".
+#[derive(Clone, Copy, Debug)]
+pub struct IdealReadout;
+
+impl Readout for IdealReadout {
+    fn params(
+        &self,
+        _art: &Artifact,
+        _li: usize,
+        _layer: &SplitLayer,
+        _differential: bool,
+    ) -> (f32, f32) {
+        (-1.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer_of(data: Vec<f32>, noisy_zeros: bool) -> SplitLayer {
+        let n = data.len();
+        SplitLayer {
+            wa: Tensor::new(vec![n], data),
+            wd: Tensor::zeros(vec![n]),
+            range_frac: 1.0,
+            noisy_zeros,
+        }
+    }
+
+    #[test]
+    fn stuck_at_zero_rate_is_identity_and_draws_no_rng() {
+        let art = Artifact::synthetic(1);
+        let mut layer = layer_of(vec![-0.5, 0.25, 0.5], false);
+        let before = layer.wa.data.clone();
+        let mut rng = Rng::new(3);
+        StuckAtFaults { rate: 0.0 }.perturb(&art, 0, &mut layer, &mut rng);
+        assert_eq!(layer.wa.data, before);
+        assert_eq!(rng.next_u64(), Rng::new(3).next_u64(), "no RNG consumed");
+    }
+
+    #[test]
+    fn stuck_at_rate_one_pins_every_cell_to_an_extreme() {
+        let art = Artifact::synthetic(1);
+        let mut layer = layer_of(vec![-0.5, 0.1, 0.2, 0.3, 0.5], false);
+        let mut rng = Rng::new(9);
+        StuckAtFaults { rate: 1.0 }.perturb(&art, 0, &mut layer, &mut rng);
+        for v in &layer.wa.data {
+            assert!(*v == -0.5 || *v == 0.5, "cell {v} not stuck at an extreme");
+        }
+    }
+
+    #[test]
+    fn stuck_at_respects_removed_rows_but_faults_iws_holes() {
+        let art = Artifact::synthetic(1);
+        let mut removed = layer_of(vec![0.0, 0.4, -0.4], false);
+        StuckAtFaults { rate: 1.0 }.perturb(&art, 0, &mut removed, &mut Rng::new(5));
+        assert_eq!(removed.wa.data[0], 0.0, "removed rows carry no cells");
+
+        let mut holes = layer_of(vec![0.0, 0.4, -0.4], true);
+        StuckAtFaults { rate: 1.0 }.perturb(&art, 0, &mut holes, &mut Rng::new(5));
+        assert_ne!(holes.wa.data[0], 0.0, "IWS holes are physical cells");
+    }
+
+    #[test]
+    fn stuck_at_hits_roughly_rate_fraction() {
+        let n = 20_000;
+        // two range sentinels so lo/hi differ from the bulk value and a
+        // fault on a bulk cell is always visible
+        let mut data = vec![0.5; n];
+        data.push(-1.0);
+        data.push(1.0);
+        let art = Artifact::synthetic(1);
+        let mut layer = layer_of(data, false);
+        let mut rng = Rng::new(11);
+        StuckAtFaults { rate: 0.1 }.perturb(&art, 0, &mut layer, &mut rng);
+        let hit = layer.wa.data[..n].iter().filter(|&&v| v != 0.5).count();
+        let frac = hit as f64 / n as f64;
+        assert!((frac - 0.1).abs() < 0.01, "fault fraction {frac}");
+        for v in &layer.wa.data[..n] {
+            assert!(*v == 0.5 || *v == -1.0 || *v == 1.0, "stuck value {v}");
+        }
+    }
+
+    #[test]
+    fn drift_shrinks_magnitudes_monotonically_in_time() {
+        let art = Artifact::synthetic(1);
+        let mean_abs = |t: f64| {
+            let mut layer = layer_of(vec![0.5; 1000], false);
+            let mut rng = Rng::new(21);
+            ConductanceDrift { t_seconds: t, nu: 0.06, nu_sigma: 0.02 }
+                .perturb(&art, 0, &mut layer, &mut rng);
+            layer.wa.data.iter().map(|v| v.abs() as f64).sum::<f64>() / 1000.0
+        };
+        let fresh = mean_abs(1.0); // t0: no decay
+        let hour = mean_abs(3600.0);
+        let month = mean_abs(3600.0 * 24.0 * 30.0);
+        assert_eq!(fresh, 0.5);
+        assert!(hour < fresh, "one hour must drift: {hour}");
+        assert!(month < hour, "a month must drift further: {month}");
+        assert!(hour > 0.5 * 0.4, "drift is gradual, not a collapse: {hour}");
+    }
+
+    #[test]
+    fn drift_preserves_removed_rows() {
+        let art = Artifact::synthetic(1);
+        let mut layer = layer_of(vec![0.0, 0.5], false);
+        ConductanceDrift { t_seconds: 1e6, nu: 0.1, nu_sigma: 0.0 }
+            .perturb(&art, 0, &mut layer, &mut Rng::new(2));
+        assert_eq!(layer.wa.data[0], 0.0);
+        assert!(layer.wa.data[1] < 0.5);
+    }
+}

@@ -9,24 +9,29 @@
 //! * [`Router`] — round-robin + spillover load balancing, bounded
 //!   per-replica admission queues, shed-on-full with a typed [`ServeError`];
 //! * [`Replica`] — one worker thread = one engine + one dynamic-batching
-//!   loop + one variation draw seeded per (replica, generation);
+//!   loop + one variation draw, prepared from the fleet's shared
+//!   [`crate::scenario::Scenario`] and seeded per (replica, generation);
 //! * [`ReplicaHealth`] / [`HealthPolicy`] — labeled canary probes whose
 //!   observed accuracy flags degraded draws, recycled via
-//!   [`Router::recycle_degraded`] with a fresh seed;
+//!   [`Router::recycle_degraded`] with a fresh seed (same scenario);
+//!   setting [`FleetConfig::probe`] (a [`ProbeConfig`]) spawns a
+//!   background monitor thread that runs the probe + recycle sweep on an
+//!   interval instead of leaving it caller-driven;
 //! * [`FleetMetrics`] — per-replica and merged throughput, latency
 //!   percentiles, batch occupancy, and probe accuracy
 //!   (built on [`crate::coordinator::MetricsSnapshot`]).
 //!
 //! ```no_run
 //! # fn main() -> anyhow::Result<()> {
-//! use hybridac::eval::{ExperimentConfig, Method};
+//! use hybridac::eval::Method;
+//! use hybridac::scenario::Scenario;
 //! use hybridac::serve::{FleetConfig, Router};
 //!
-//! let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
-//! let router = Router::start(
+//! let sc = Scenario::paper_default("fleet", "resnet18m_c10s",
+//!                                  Method::Hybrid { frac: 0.16 });
+//! let router = Router::start_scenario(
 //!     hybridac::artifacts_dir(),
-//!     "resnet18m_c10s".into(),
-//!     cfg,
+//!     sc,
 //!     FleetConfig::new(4),
 //! )?;
 //! let rx = router.submit(vec![0.0; 16 * 16 * 3]).unwrap();
@@ -44,4 +49,4 @@ pub mod router;
 pub use admission::{Gate, Rejection, ServeError};
 pub use health::{HealthPolicy, HealthStatus, ReplicaHealth};
 pub use replica::{ProbeHandle, Replica, ReplicaSpec};
-pub use router::{drive_workload, FleetConfig, FleetMetrics, ReplicaReport, Router};
+pub use router::{drive_workload, FleetConfig, FleetMetrics, ProbeConfig, ReplicaReport, Router};

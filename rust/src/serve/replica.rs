@@ -2,6 +2,10 @@
 //! dynamic-batching loop, and — the point of the fleet — its own
 //! conductance-variation draw, seeded per (replica, generation).
 //!
+//! A replica is prepared from a declarative [`Scenario`]: the router hands
+//! every spawn (initial or recycle) the same scenario with only the seed
+//! swapped, so "what this fleet serves" is one JSON-roundtrippable value.
+//!
 //! The PJRT client is built *inside* the worker thread (it is not `Send`),
 //! so `spawn` hands the construction parameters in and waits on a ready
 //! channel for either the replica's variation fingerprint or the
@@ -14,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{serve_requests, BatchContext, InferenceRequest};
 use crate::coordinator::Metrics;
-use crate::eval::ExperimentConfig;
+use crate::scenario::Scenario;
 
 use super::admission::{Gate, Rejection};
 use super::health::ReplicaHealth;
@@ -53,14 +57,14 @@ pub struct Replica {
 impl Replica {
     /// Spawn the worker and block until its engine + variation instance are
     /// ready (or construction failed, surfaced here rather than at join).
+    /// The replica re-prepares from `scenario` with `spec.seed` as its own
+    /// variation seed — recycling passes the same scenario, new seed.
     pub fn spawn(
         artifacts: std::path::PathBuf,
-        tag: String,
-        base_cfg: &ExperimentConfig,
+        scenario: &Scenario,
         spec: ReplicaSpec,
     ) -> Result<Replica> {
-        let mut cfg = base_cfg.clone();
-        cfg.seed = spec.seed;
+        let sc = scenario.clone().with_seed(spec.seed);
         let (gate, rx) = Gate::bounded(spec.queue_depth);
         let metrics = Arc::new(Metrics::new());
         let health = Arc::new(ReplicaHealth::new());
@@ -70,7 +74,7 @@ impl Replica {
         let worker = std::thread::Builder::new()
             .name(format!("replica-{}", spec.id))
             .spawn(move || -> Result<()> {
-                let ctx = match BatchContext::new(&artifacts, &tag, &cfg) {
+                let ctx = match BatchContext::from_scenario(&artifacts, &sc) {
                     Ok(ctx) => {
                         let _ = ready_tx
                             .send(Ok((ctx.fingerprint(), ctx.batch_size(), ctx.per_image())));

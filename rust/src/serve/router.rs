@@ -1,15 +1,19 @@
 //! Fleet router: load-balances requests across N replicas, each holding an
-//! independent conductance-variation draw.
+//! independent conductance-variation draw of one shared [`Scenario`].
 //!
 //! Balancing is round-robin with spillover: a request starts at the next
 //! replica in rotation and walks the ring until a queue admits it; only
 //! when every queue refuses is it shed with [`ServeError::QueueFull`].
 //! Health probing replays a labeled canary set through every replica and
 //! `recycle_degraded` replaces flagged replicas with a fresh variation draw
-//! (generation bump ⇒ new seed).
+//! (generation bump ⇒ new seed) prepared from the same scenario. With
+//! [`FleetConfig::probe`] set, a background monitor thread runs the
+//! probe + recycle sweep on an interval so canaries are no longer
+//! caller-driven.
 
-use anyhow::Result;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use anyhow::{Context, Result};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
@@ -17,11 +21,32 @@ use std::time::Duration;
 use crate::coordinator::MetricsSnapshot;
 use crate::eval::ExperimentConfig;
 use crate::runtime::{Artifact, DatasetBlob, DatasetMeta};
+use crate::scenario::Scenario;
 use crate::util::rng::Rng;
 
 use super::admission::{Rejection, ServeError};
 use super::health::{HealthPolicy, HealthStatus};
 use super::replica::{Replica, ReplicaSpec};
+
+/// Background canary probing: how often, how many labeled samples, and the
+/// dataset they come from.
+#[derive(Clone)]
+pub struct ProbeConfig {
+    pub interval: Duration,
+    /// Labeled samples replayed per replica per sweep.
+    pub n: usize,
+    pub data: Arc<DatasetBlob>,
+}
+
+impl fmt::Debug for ProbeConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ProbeConfig")
+            .field("interval", &self.interval)
+            .field("n", &self.n)
+            .field("dataset_n", &self.data.n)
+            .finish()
+    }
+}
 
 /// Fleet-level configuration.
 #[derive(Clone, Debug)]
@@ -35,6 +60,9 @@ pub struct FleetConfig {
     /// Base of the per-(replica, generation) seed derivation.
     pub base_seed: u64,
     pub health: HealthPolicy,
+    /// When set, the router spawns a monitor thread that probes every
+    /// replica and recycles degraded ones on this interval.
+    pub probe: Option<ProbeConfig>,
 }
 
 impl FleetConfig {
@@ -45,7 +73,14 @@ impl FleetConfig {
             queue_depth: 0,
             base_seed: 0xF1EE7,
             health: HealthPolicy::default(),
+            probe: None,
         }
+    }
+
+    /// Enable the background health monitor.
+    pub fn with_probe(mut self, interval: Duration, n: usize, data: Arc<DatasetBlob>) -> Self {
+        self.probe = Some(ProbeConfig { interval, n, data });
+        self
     }
 }
 
@@ -76,10 +111,19 @@ pub struct FleetMetrics {
     pub recycled: u64,
 }
 
-pub struct Router {
+/// Deterministic, decorrelated seed for one (replica, generation) draw.
+fn replica_seed(base: u64, id: usize, generation: u64) -> u64 {
+    let mixed = base
+        ^ (id as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+        ^ generation.wrapping_mul(0xD1B54A32D192ED03);
+    Rng::new(mixed).next_u64()
+}
+
+/// Everything the routing/probing paths need. Shared between the
+/// caller-facing [`Router`] and the background monitor thread.
+struct RouterShared {
     artifacts: std::path::PathBuf,
-    tag: String,
-    base_cfg: ExperimentConfig,
+    scenario: Scenario,
     fleet: FleetConfig,
     /// Resolved admission depth (the 0-sentinel replaced by 2 × batch).
     queue_depth: usize,
@@ -93,24 +137,37 @@ pub struct Router {
     recycled: AtomicU64,
 }
 
-/// Deterministic, decorrelated seed for one (replica, generation) draw.
-fn replica_seed(base: u64, id: usize, generation: u64) -> u64 {
-    let mixed = base
-        ^ (id as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
-        ^ generation.wrapping_mul(0xD1B54A32D192ED03);
-    Rng::new(mixed).next_u64()
+pub struct Router {
+    shared: Arc<RouterShared>,
+    monitor: Option<Monitor>,
+}
+
+struct Monitor {
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
 }
 
 impl Router {
-    /// Spawn the whole fleet; fails fast if any replica cannot start.
+    /// Spawn a fleet from a legacy config (lowered to a [`Scenario`]).
     pub fn start(
         artifacts: std::path::PathBuf,
         tag: String,
         base_cfg: ExperimentConfig,
         fleet: FleetConfig,
     ) -> Result<Router> {
+        Router::start_scenario(artifacts, Scenario::from_config("serve", &tag, &base_cfg), fleet)
+    }
+
+    /// Spawn the whole fleet from one declarative scenario; fails fast if
+    /// any replica cannot start.
+    pub fn start_scenario(
+        artifacts: std::path::PathBuf,
+        scenario: Scenario,
+        fleet: FleetConfig,
+    ) -> Result<Router> {
         anyhow::ensure!(fleet.replicas >= 1, "fleet needs at least one replica");
-        let art = Artifact::load(&artifacts, &tag)?;
+        anyhow::ensure!(!scenario.model.is_empty(), "scenario must name a model artifact");
+        let art = Artifact::load(&artifacts, &scenario.model)?;
         let queue_depth = if fleet.queue_depth == 0 { 2 * art.batch } else { fleet.queue_depth };
         let per_image = DatasetMeta::load(&artifacts, &art.dataset)?.image_elems();
         let mut slots = Vec::with_capacity(fleet.replicas);
@@ -122,17 +179,11 @@ impl Router {
                 max_wait: fleet.max_wait,
                 queue_depth,
             };
-            slots.push(RwLock::new(Replica::spawn(
-                artifacts.clone(),
-                tag.clone(),
-                &base_cfg,
-                spec,
-            )?));
+            slots.push(RwLock::new(Replica::spawn(artifacts.clone(), &scenario, spec)?));
         }
-        Ok(Router {
+        let shared = Arc::new(RouterShared {
             artifacts,
-            tag,
-            base_cfg,
+            scenario,
             fleet,
             queue_depth,
             per_image,
@@ -140,17 +191,126 @@ impl Router {
             next: AtomicUsize::new(0),
             shed: AtomicU64::new(0),
             recycled: AtomicU64::new(0),
-        })
+        });
+        let monitor = if let Some(probe) = shared.fleet.probe.clone() {
+            let stop = Arc::new(AtomicBool::new(false));
+            let flag = stop.clone();
+            let s = shared.clone();
+            let thread = std::thread::Builder::new()
+                .name("fleet-monitor".to_string())
+                .spawn(move || {
+                    while !flag.load(Ordering::Relaxed) {
+                        // sleep in slices so shutdown never waits a full
+                        // interval for the monitor to notice
+                        let mut slept = Duration::ZERO;
+                        while slept < probe.interval && !flag.load(Ordering::Relaxed) {
+                            let chunk = (probe.interval - slept).min(Duration::from_millis(50));
+                            std::thread::sleep(chunk);
+                            slept += chunk;
+                        }
+                        if flag.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        s.probe(&probe.data, probe.n);
+                        match s.recycle_degraded() {
+                            Ok(ids) if !ids.is_empty() => {
+                                eprintln!("fleet monitor: recycled replicas {ids:?}");
+                            }
+                            Ok(_) => {}
+                            Err(e) => eprintln!("fleet monitor: recycle failed: {e:#}"),
+                        }
+                    }
+                })
+                .context("spawning fleet-monitor thread")?;
+            Some(Monitor { stop, thread })
+        } else {
+            None
+        };
+        Ok(Router { shared, monitor })
+    }
+
+    /// The scenario every replica (re-)prepares from.
+    pub fn scenario(&self) -> &Scenario {
+        &self.shared.scenario
+    }
+
+    /// Whether the background health monitor is running.
+    pub fn has_monitor(&self) -> bool {
+        self.monitor.is_some()
     }
 
     pub fn replica_count(&self) -> usize {
-        self.slots.len()
+        self.shared.slots.len()
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.queue_depth
+        self.shared.queue_depth
     }
 
+    /// Route one request; see [`RouterShared::try_route`] for the policy.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, ServeError> {
+        self.shared.try_route(image).map_err(|(_, e)| e)
+    }
+
+    /// [`Router::submit`] with bounded-queue backpressure turned into
+    /// waiting: a `QueueFull` shed is retried after `backoff` (each retry
+    /// counts as a fresh shed in the fleet metrics); any other error —
+    /// dead workers, empty fleet — is fatal and returned immediately.
+    pub fn submit_retry(
+        &self,
+        image: Vec<f32>,
+        backoff: Duration,
+    ) -> Result<mpsc::Receiver<i32>, ServeError> {
+        let mut image = image;
+        loop {
+            match self.shared.try_route(image) {
+                Ok(rx) => return Ok(rx),
+                Err((img, ServeError::QueueFull { .. })) => {
+                    image = img;
+                    std::thread::sleep(backoff);
+                }
+                Err((_, e)) => return Err(e),
+            }
+        }
+    }
+
+    /// Replay the first `n` labeled samples of `data` through *every*
+    /// replica (bypassing load balancing, never shed), record the outcomes
+    /// in each replica's health probe, and return the observed per-replica
+    /// accuracies in slot order.
+    pub fn probe(&self, data: &DatasetBlob, n: usize) -> Vec<f64> {
+        self.shared.probe(data, n)
+    }
+
+    /// Replace every replica whose health verdict is `Degraded` — or whose
+    /// worker thread has died — with a fresh one: generation + 1 ⇒ a new
+    /// variation seed drawn from the same scenario, new metrics, and a
+    /// clean health record. Returns the recycled slot ids.
+    pub fn recycle_degraded(&self) -> Result<Vec<usize>> {
+        self.shared.recycle_degraded()
+    }
+
+    /// Snapshot every replica plus merged fleet totals.
+    pub fn fleet_metrics(&self) -> FleetMetrics {
+        self.shared.fleet_metrics()
+    }
+
+    /// Stop the monitor (if any), drain and join every replica.
+    pub fn shutdown(self) -> Result<()> {
+        if let Some(m) = self.monitor {
+            m.stop.store(true, Ordering::Relaxed);
+            let _ = m.thread.join();
+        }
+        let shared = Arc::try_unwrap(self.shared)
+            .map_err(|_| anyhow::anyhow!("router still referenced"))?;
+        for slot in shared.slots {
+            slot.into_inner().unwrap().shutdown()?;
+        }
+        Ok(())
+    }
+}
+
+impl RouterShared {
     /// Route one request: round-robin start, spillover on full queues,
     /// typed shed once the whole ring refuses. Returns the image alongside
     /// the error so retry wrappers don't have to clone it.
@@ -193,38 +353,7 @@ impl Router {
         }
     }
 
-    /// Route one request; see [`Router::try_route`] for the policy.
-    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, ServeError> {
-        self.try_route(image).map_err(|(_, e)| e)
-    }
-
-    /// [`Router::submit`] with bounded-queue backpressure turned into
-    /// waiting: a `QueueFull` shed is retried after `backoff` (each retry
-    /// counts as a fresh shed in the fleet metrics); any other error —
-    /// dead workers, empty fleet — is fatal and returned immediately.
-    pub fn submit_retry(
-        &self,
-        image: Vec<f32>,
-        backoff: Duration,
-    ) -> Result<mpsc::Receiver<i32>, ServeError> {
-        let mut image = image;
-        loop {
-            match self.try_route(image) {
-                Ok(rx) => return Ok(rx),
-                Err((img, ServeError::QueueFull { .. })) => {
-                    image = img;
-                    std::thread::sleep(backoff);
-                }
-                Err((_, e)) => return Err(e),
-            }
-        }
-    }
-
-    /// Replay the first `n` labeled samples of `data` through *every*
-    /// replica (bypassing load balancing, never shed), record the outcomes
-    /// in each replica's health probe, and return the observed per-replica
-    /// accuracies in slot order.
-    pub fn probe(&self, data: &DatasetBlob, n: usize) -> Vec<f64> {
+    fn probe(&self, data: &DatasetBlob, n: usize) -> Vec<f64> {
         let per = data.image_elems();
         let n = n.clamp(1, data.n);
         let mut accs = Vec::with_capacity(self.slots.len());
@@ -255,11 +384,7 @@ impl Router {
         accs
     }
 
-    /// Replace every replica whose health verdict is `Degraded` — or whose
-    /// worker thread has died — with a fresh one: generation + 1 ⇒ a new
-    /// variation seed, new metrics, and a clean health record. Returns the
-    /// recycled slot ids.
-    pub fn recycle_degraded(&self) -> Result<Vec<usize>> {
+    fn recycle_degraded(&self) -> Result<Vec<usize>> {
         let mut recycled = Vec::new();
         for (id, slot) in self.slots.iter().enumerate() {
             // verdict + generation under a short read lock; a dead worker
@@ -285,8 +410,7 @@ impl Router {
                 max_wait: self.fleet.max_wait,
                 queue_depth: self.queue_depth,
             };
-            let fresh =
-                Replica::spawn(self.artifacts.clone(), self.tag.clone(), &self.base_cfg, spec)?;
+            let fresh = Replica::spawn(self.artifacts.clone(), &self.scenario, spec)?;
             let swapped = {
                 let mut replica = slot.write().unwrap();
                 // a concurrent recycle may have swapped this slot while we
@@ -314,8 +438,7 @@ impl Router {
         Ok(recycled)
     }
 
-    /// Snapshot every replica plus merged fleet totals.
-    pub fn fleet_metrics(&self) -> FleetMetrics {
+    fn fleet_metrics(&self) -> FleetMetrics {
         let mut replicas = Vec::with_capacity(self.slots.len());
         let mut total = MetricsSnapshot::default();
         for slot in &self.slots {
@@ -340,14 +463,6 @@ impl Router {
             shed: self.shed.load(Ordering::Relaxed),
             recycled: self.recycled.load(Ordering::Relaxed),
         }
-    }
-
-    /// Drain and join every replica.
-    pub fn shutdown(self) -> Result<()> {
-        for slot in self.slots {
-            slot.into_inner().unwrap().shutdown()?;
-        }
-        Ok(())
     }
 }
 
@@ -406,5 +521,25 @@ mod tests {
         assert_ne!(a, b, "different replicas must draw different variation");
         assert_ne!(a, c, "recycling must draw fresh variation");
         assert_eq!(a, replica_seed(42, 0, 0), "derivation is deterministic");
+    }
+
+    #[test]
+    fn fleet_config_defaults_have_no_monitor() {
+        let fleet = FleetConfig::new(2);
+        assert!(fleet.probe.is_none(), "probing stays caller-driven unless enabled");
+        let data = Arc::new(DatasetBlob {
+            n: 4,
+            shape: vec![2, 2, 1],
+            num_classes: 2,
+            images: vec![0.0; 16],
+            labels: vec![0, 1, 0, 1],
+        });
+        let fleet = fleet.with_probe(Duration::from_millis(200), 4, data);
+        let probe = fleet.probe.as_ref().unwrap();
+        assert_eq!(probe.n, 4);
+        assert_eq!(probe.interval, Duration::from_millis(200));
+        // Debug must not dump the image payload
+        let dbg = format!("{probe:?}");
+        assert!(dbg.contains("dataset_n"), "{dbg}");
     }
 }

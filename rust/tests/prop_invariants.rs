@@ -1,11 +1,15 @@
 //! Property tests (own mini-prop harness) on coordinator invariants that
-//! don't need artifacts: ADC parameters, quantization, noise, digital sim,
-//! mapping balance, metrics.
+//! don't need on-disk artifacts: ADC parameters, quantization, noise,
+//! digital sim, selection monotonicity (over `Artifact::synthetic`), and
+//! the `Scenario` JSON round trip.
 
 use hybridac::digital::{DigitalSim, LayerWork};
 use hybridac::eval::prepare::adc_params;
 use hybridac::noise::{CellKind, CellModel};
-use hybridac::quantize::{fake_quant_val, qparams};
+use hybridac::quantize::{fake_quant_val, qparams, QuantConfig};
+use hybridac::runtime::Artifact;
+use hybridac::scenario::{PerturbSpec, ReadoutSpec, Scenario, SplitSpec};
+use hybridac::selection::{IwsMasks, Partition};
 use hybridac::util::prop::{check, gen};
 use hybridac::util::rng::Rng;
 
@@ -154,6 +158,137 @@ fn prop_rng_normal_tail_bounds() {
             }
         },
     );
+}
+
+/// `Partition::for_fraction`: the achieved protected fraction is
+/// nondecreasing in the requested fraction and never exceeds 1.0 (it may
+/// exceed the *request* — pinned layers and whole-channel granularity —
+/// but growing the request can never shrink the selection).
+#[test]
+fn prop_partition_protected_frac_monotone_and_bounded() {
+    let art = Artifact::synthetic(0xA11CE);
+    check(
+        "partition-monotone-bounded",
+        120,
+        |r: &mut Rng| (gen::f64_in(0.0, 1.0)(r), gen::f64_in(0.0, 1.0)(r)),
+        |&(a, b)| {
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let p_lo = Partition::for_fraction(&art, lo);
+            let p_hi = Partition::for_fraction(&art, hi);
+            if p_lo.protected_frac > p_hi.protected_frac + 1e-12 {
+                return Err(format!(
+                    "frac({lo})={} > frac({hi})={}",
+                    p_lo.protected_frac, p_hi.protected_frac
+                ));
+            }
+            if p_hi.protected_frac > 1.0 + 1e-12 {
+                return Err(format!("achieved {} exceeds 1.0", p_hi.protected_frac));
+            }
+            // the pinned floor always holds
+            let floor = art.pinned_weights as f64 / art.total_weights as f64;
+            if p_lo.protected_frac + 1e-12 < floor {
+                return Err(format!("achieved {} below pinned floor {floor}", p_lo.protected_frac));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Same invariants for the IWS per-weight baseline.
+#[test]
+fn prop_iws_protected_frac_monotone_and_bounded() {
+    let art = Artifact::synthetic(0xB0B);
+    check(
+        "iws-monotone-bounded",
+        120,
+        |r: &mut Rng| (gen::f64_in(0.0, 1.0)(r), gen::f64_in(0.0, 1.0)(r)),
+        |&(a, b)| {
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let m_lo = IwsMasks::for_fraction(&art, lo);
+            let m_hi = IwsMasks::for_fraction(&art, hi);
+            if m_lo.protected_frac > m_hi.protected_frac + 1e-12 {
+                return Err(format!(
+                    "frac({lo})={} > frac({hi})={}",
+                    m_lo.protected_frac, m_hi.protected_frac
+                ));
+            }
+            if m_hi.protected_frac > 1.0 + 1e-12 {
+                return Err(format!("achieved {} exceeds 1.0", m_hi.protected_frac));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_scenario(r: &mut Rng) -> Scenario {
+    let split = match r.below(3) {
+        0 => SplitSpec::Channels { frac: r.next_f64() },
+        1 => SplitSpec::Iws { frac: r.next_f64() },
+        _ => SplitSpec::AllAnalog,
+    };
+    let quant = match r.below(3) {
+        0 => None,
+        1 => Some(QuantConfig::uniform8()),
+        _ => Some(QuantConfig { analog_bits: 2 + r.below(9) as u32, digital_bits: 8 }),
+    };
+    let mut perturb = Vec::new();
+    if r.below(2) == 0 {
+        let cell = match r.below(3) {
+            0 => CellModel::offset(r.next_f64()),
+            1 => CellModel::differential(r.next_f64()),
+            _ => CellModel::relative(r.next_f64()), // infinite R-ratio path
+        };
+        perturb.push(PerturbSpec::AnalogVariation { cell });
+    }
+    if r.below(2) == 0 {
+        perturb.push(PerturbSpec::DigitalVariation { sigma: r.next_f64() * 0.5 });
+    }
+    if r.below(2) == 0 {
+        perturb.push(PerturbSpec::StuckAt { rate: r.next_f64() * 0.01 });
+    }
+    if r.below(2) == 0 {
+        perturb.push(PerturbSpec::Drift {
+            t_seconds: 1.0 + r.next_f64() * 1e6,
+            nu: r.next_f64() * 0.1,
+            nu_sigma: r.next_f64() * 0.05,
+        });
+    }
+    let readout = if r.below(2) == 0 {
+        ReadoutSpec::Adc { bits: 2 + r.below(9) as u32 }
+    } else {
+        ReadoutSpec::Ideal
+    };
+    Scenario {
+        name: format!("prop-{}", r.below(1000)),
+        model: "resnet18m_c10s".to_string(),
+        split,
+        quant,
+        perturb,
+        readout,
+        group: [16, 32, 64, 128][r.below(4)],
+        n_eval: 1 + r.below(2000),
+        repeats: 1 + r.below(8),
+        seed: r.next_u64() >> 11, // < 2^53: exact through a JSON number
+    }
+}
+
+/// parse(serialize(s)) is the identity on scenarios, and the serialized
+/// text is a fixed point (canonical key order, shortest-round-trip floats).
+#[test]
+fn scenario_json_round_trip() {
+    let mut rng = Rng::new(0x5CE7A);
+    for case in 0..300 {
+        let sc = random_scenario(&mut rng);
+        let text = sc.to_json().to_string();
+        let back = Scenario::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: parse failed: {e}\n{text}"));
+        assert_eq!(sc, back, "case {case}: round trip changed the scenario\n{text}");
+        assert_eq!(
+            text,
+            back.to_json().to_string(),
+            "case {case}: serialization is not a fixed point"
+        );
+    }
 }
 
 #[test]

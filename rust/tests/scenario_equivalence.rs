@@ -1,0 +1,183 @@
+//! Pipeline-equivalence tests: the composable `PreparePipeline` must
+//! reproduce the pre-pipeline monolithic `prepare()` (kept as
+//! `reference_prepare`) **bit-for-bit** — same weights, same ADC params,
+//! same RNG consumption — for the paper-default configs across all four
+//! `Method`s, plus the cell/ADC variants the benches exercise.
+//!
+//! Runs on `Artifact::synthetic`, so no built artifacts are needed and the
+//! suite executes in every CI run.
+
+use hybridac::eval::prepare::{prepare, reference_prepare, ExperimentConfig, Method};
+use hybridac::noise::CellModel;
+use hybridac::quantize::QuantConfig;
+use hybridac::runtime::executor::PreparedModel;
+use hybridac::runtime::Artifact;
+use hybridac::scenario::{PerturbSpec, Scenario};
+use hybridac::util::rng::Rng;
+
+fn assert_bitwise_eq(a: &PreparedModel, b: &PreparedModel, label: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{label}: layer count");
+    for (li, (x, y)) in a.layers.iter().zip(&b.layers).enumerate() {
+        for (name, ta, tb) in [
+            ("wa1", &x.wa1, &y.wa1),
+            ("wa2", &x.wa2, &y.wa2),
+            ("wd", &x.wd, &y.wd),
+            ("bias", &x.bias, &y.bias),
+        ] {
+            assert_eq!(ta.shape, tb.shape, "{label}: layer {li} {name} shape");
+            let same = ta
+                .data
+                .iter()
+                .zip(&tb.data)
+                .all(|(p, q)| p.to_bits() == q.to_bits());
+            assert!(same, "{label}: layer {li} {name} differs bitwise");
+        }
+        assert_eq!(x.lsb.to_bits(), y.lsb.to_bits(), "{label}: layer {li} lsb");
+        assert_eq!(x.clip.to_bits(), y.clip.to_bits(), "{label}: layer {li} clip");
+    }
+}
+
+/// Old implementation vs the pipeline route of `prepare()` vs an explicit
+/// `Scenario` lowering — all three must agree bit-for-bit, and consume the
+/// RNG identically (checked by comparing the next draw afterwards).
+fn check_equivalent(art: &Artifact, cfg: &ExperimentConfig, label: &str) {
+    let mut r_ref = Rng::new(cfg.seed);
+    let reference = reference_prepare(art, cfg, &mut r_ref);
+
+    let mut r_new = Rng::new(cfg.seed);
+    let piped = prepare(art, cfg, &mut r_new);
+    assert_bitwise_eq(&reference, &piped, label);
+
+    let mut r_sc = Rng::new(cfg.seed);
+    let scenario = Scenario::from_config(label, &art.tag, cfg);
+    let from_spec = scenario.pipeline().prepare(art, &mut r_sc);
+    assert_bitwise_eq(&reference, &from_spec, &format!("{label} (via Scenario)"));
+
+    // identical post-prepare draws ⇒ every path consumed the RNG equally
+    // (an under- or over-draw would desynchronize the streams here)
+    let expect = r_ref.next_u64();
+    assert_eq!(r_new.next_u64(), expect, "{label}: pipeline RNG consumption differs");
+    assert_eq!(r_sc.next_u64(), expect, "{label}: scenario RNG consumption differs");
+}
+
+#[test]
+fn pipeline_matches_reference_for_all_paper_default_methods() {
+    let art = Artifact::synthetic(42);
+    for method in [
+        Method::Clean,
+        Method::NoProtection,
+        Method::Iws { frac: 0.2 },
+        Method::Hybrid { frac: 0.16 },
+    ] {
+        let cfg = ExperimentConfig::paper_default(method.clone());
+        check_equivalent(&art, &cfg, &format!("{method:?}"));
+    }
+}
+
+#[test]
+fn pipeline_matches_reference_for_differential_cells_and_low_adc() {
+    let art = Artifact::synthetic(7);
+    for method in [Method::NoProtection, Method::Iws { frac: 0.1 }, Method::Hybrid { frac: 0.16 }] {
+        let mut cfg = ExperimentConfig::paper_default(method.clone()).with_adc(4);
+        cfg.cell = CellModel::differential(0.5);
+        check_equivalent(&art, &cfg, &format!("differential {method:?}"));
+    }
+}
+
+#[test]
+fn pipeline_matches_reference_for_ideal_readout_and_quant_variants() {
+    let art = Artifact::synthetic(9);
+    let mut no_adc = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
+    no_adc.adc_bits = None;
+    check_equivalent(&art, &no_adc, "no-adc");
+
+    let mut no_quant = ExperimentConfig::paper_default(Method::Iws { frac: 0.12 });
+    no_quant.quant = None;
+    check_equivalent(&art, &no_quant, "no-quant");
+
+    let hybrid_quant = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 })
+        .with_quant(QuantConfig::hybrid())
+        .with_adc(6);
+    check_equivalent(&art, &hybrid_quant, "hybrid-quant-6b");
+
+    let mut no_digital = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
+    no_digital.sigma_digital = 0.0; // old code skipped the digital perturb entirely
+    check_equivalent(&art, &no_digital, "sigma-digital-zero");
+}
+
+#[test]
+fn pipeline_matches_reference_across_seeds_and_groups() {
+    let art = Artifact::synthetic(11);
+    for seed in [1u64, 0xD1CE, 0xFEED_BEEF] {
+        for group in [16usize, 128] {
+            let mut cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
+            cfg.seed = seed;
+            cfg.group = group;
+            check_equivalent(&art, &cfg, &format!("seed {seed} group {group}"));
+        }
+    }
+}
+
+/// The new perturbations must actually do something: a stuck-at stage and a
+/// drift stage each change the prepared analog weights relative to the
+/// paper-default pipeline, without touching the digital copy.
+#[test]
+fn extra_perturbations_change_analog_weights_only() {
+    let art = Artifact::synthetic(13);
+    let base = Scenario::paper_default("base", "synthetic", Method::Hybrid { frac: 0.16 });
+    let faulty = base.clone().with_stage(PerturbSpec::StuckAt { rate: 0.05 });
+    let drifted = base.clone().with_stage(PerturbSpec::Drift {
+        t_seconds: 3600.0 * 24.0,
+        nu: 0.08,
+        nu_sigma: 0.0,
+    });
+
+    let m_base = base.pipeline().prepare(&art, &mut Rng::new(1));
+    for (name, sc) in [("stuck-at", &faulty), ("drift", &drifted)] {
+        let m = sc.pipeline().prepare(&art, &mut Rng::new(1));
+        // pinned layer 0 is all-digital: its analog copy is empty either way
+        let changed = m
+            .layers
+            .iter()
+            .zip(&m_base.layers)
+            .any(|(a, b)| a.wa1.data != b.wa1.data);
+        assert!(changed, "{name} stage must alter the analog weights");
+        // within one layer the extra stage runs after both variation
+        // stages, so through the first fault-carrying layer (layer 1; the
+        // pinned layer 0 has an empty analog copy) the digital copies'
+        // draws are identical to the base run — the stage itself never
+        // touches wd. Later layers see a shifted RNG stream, which is
+        // expected.
+        for li in 0..2 {
+            assert_eq!(
+                m.layers[li].wd.data, m_base.layers[li].wd.data,
+                "{name}: layer {li} digital copy must be untouched"
+            );
+        }
+    }
+}
+
+/// A scenario is the unit of serving too: same seed ⇒ same instance, and
+/// the spec survives a JSON round trip with the prepared output unchanged.
+#[test]
+fn scenario_prepare_is_deterministic_and_json_stable() {
+    let art = Artifact::synthetic(17);
+    let sc = Scenario::paper_default("det", "synthetic", Method::Hybrid { frac: 0.16 })
+        .with_stage(PerturbSpec::StuckAt { rate: 0.01 })
+        .with_seed(0xABCD);
+    let a = sc.pipeline().prepare(&art, &mut Rng::new(sc.seed));
+    let b = sc.pipeline().prepare(&art, &mut Rng::new(sc.seed));
+    assert_bitwise_eq(&a, &b, "same scenario, same seed");
+
+    let roundtripped = Scenario::parse(&sc.to_json().to_string()).unwrap();
+    let c = roundtripped.pipeline().prepare(&art, &mut Rng::new(roundtripped.seed));
+    assert_bitwise_eq(&a, &c, "scenario after JSON round trip");
+
+    let other = sc.pipeline().prepare(&art, &mut Rng::new(0x1234));
+    let differs = a
+        .layers
+        .iter()
+        .zip(&other.layers)
+        .any(|(x, y)| x.wa1.data != y.wa1.data);
+    assert!(differs, "different seeds must give different draws");
+}
