@@ -1,27 +1,32 @@
 //! Quickstart: the three-layer pipeline in one file.
 //!
-//! 1. Load the Pallas-lowered artifact (`quickstart_pallas.hlo.txt` — the
-//!    L1 crossbar kernel, lowered in interpret mode through the L2 vggmini
-//!    graph) and execute it through PJRT from rust: proves the
-//!    python-authors/rust-runs contract end to end.
+//! 1. (feature `pjrt`) Load the Pallas-lowered artifact
+//!    (`quickstart_pallas.hlo.txt` — the L1 crossbar kernel, lowered in
+//!    interpret mode through the L2 vggmini graph) and execute it through
+//!    PJRT from rust: proves the python-authors/rust-runs contract end to
+//!    end.
 //! 2. Load a trained experiment artifact and reproduce the paper's core
 //!    claim on it: variation destroys accuracy; HybridAC's channel-wise
 //!    protection restores it at a fraction of the weights.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+//! Execution goes through the backend abstraction (`hybridac::exec`); a
+//! `--no-default-features` build runs everything but step 1 on the native
+//! interpreter.
 
 use anyhow::Result;
 use hybridac::eval::{Evaluator, Method};
+use hybridac::exec::BackendKind;
 use hybridac::report::pct;
-use hybridac::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use hybridac::runtime::{Artifact, DatasetBlob};
 use hybridac::scenario::Scenario;
-use hybridac::tensor::Tensor;
 use hybridac::util::rng::Rng;
 
-fn main() -> Result<()> {
-    let dir = hybridac::artifacts_dir();
+#[cfg(feature = "pjrt")]
+fn pallas_demo(dir: &std::path::Path) -> Result<()> {
+    use hybridac::runtime::Engine;
+    use hybridac::tensor::Tensor;
 
-    // --- 1. execute the Pallas-kernel artifact ---------------------------
     let pallas = dir.join("quickstart_pallas.hlo.txt");
     let mut engine = Engine::cpu()?;
     println!("PJRT platform: {}", engine.platform());
@@ -29,7 +34,7 @@ fn main() -> Result<()> {
         // the quickstart graph follows the same contract as every model
         // graph: [x, then wa1/wa2/wd/b/lsb/clip per layer]; feed random
         // weights — this is a wiring check, not an accuracy run.
-        let art = Artifact::load(&dir, "vggmini_c10s")?;
+        let art = Artifact::load(dir, "vggmini_c10s")?;
         let mut rng = Rng::new(1);
         let mut inputs: Vec<Tensor> = Vec::new();
         let mut x = Tensor::zeros(vec![8, 16, 16, 3]);
@@ -63,13 +68,25 @@ fn main() -> Result<()> {
     } else {
         println!("(quickstart_pallas.hlo.txt not built yet — run `make artifacts`)");
     }
-    drop(engine);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let dir = hybridac::artifacts_dir();
+
+    // --- 1. execute the Pallas-kernel artifact (PJRT builds only) ---------
+    #[cfg(feature = "pjrt")]
+    pallas_demo(&dir)?;
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt backend not compiled in — skipping the pallas artifact demo)");
 
     // --- 2. the paper's core claim on a trained artifact ------------------
     // experiments are declarative scenarios: named stage compositions that
     // round-trip through JSON (see examples/scenario.json)
     let tag = "resnet18m_c10s";
-    let mut ev = Evaluator::new(&dir, tag)?;
+    let backend = BackendKind::default();
+    println!("\nexecution backend: {}", backend.name());
+    let mut ev = Evaluator::with_backend(&dir, tag, backend)?;
     let clean = ev.clean_accuracy(500)?;
     let noisy =
         ev.run_scenario(&Scenario::paper_default("unprotected", tag, Method::NoProtection))?;
@@ -78,7 +95,7 @@ fn main() -> Result<()> {
         tag,
         Method::Hybrid { frac: 0.16 },
     ))?;
-    println!("\n{tag} under conductance variation (sigma = 50%):");
+    println!("{tag} under conductance variation (sigma = 50%):");
     println!("  clean accuracy:            {}", pct(clean));
     println!("  no protection:             {}", pct(noisy.mean));
     println!("  HybridAC (16% protected):  {}", pct(protected.mean));
@@ -86,8 +103,14 @@ fn main() -> Result<()> {
     // --- 3. a single batched inference through the executor ---------------
     let art = Artifact::load(&dir, tag)?;
     let data = DatasetBlob::load(&dir, &art.dataset)?;
-    let mut engine = Engine::cpu()?;
-    let mut exec = ModelExecutor::new(&mut engine, &art, &data, 250, art.group)?;
+    let exec_backend = backend.create()?;
+    let exec = hybridac::exec::ModelExecutor::new(
+        exec_backend.as_ref(),
+        &art,
+        &data,
+        250,
+        art.group,
+    )?;
     let mut rng = Rng::new(42);
     // one variation draw = one pipeline run over the artifact's weights
     let pipeline = Scenario::paper_default("one-draw", tag, Method::Hybrid { frac: 0.16 })

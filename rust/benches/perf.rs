@@ -4,42 +4,100 @@
 //!   1. noise generation (gaussian fill over every analog weight),
 //!   2. weight preparation (the scenario pipeline: split + quantize +
 //!      perturb + polarity), with and without the extra fault stages,
-//!   3. PJRT upload + execute of one batch,
+//!   3. upload + execute of one batch on the selected backend,
 //!   4. end-to-end accuracy evaluation (one repeat),
 //!   5. batch-server round trip.
+//!
+//! Besides the human-readable stage lines, the run writes
+//! `BENCH_perf.json` — per-stage wall-clock + throughput, keyed by
+//! execution backend — so successive runs accumulate a machine-readable
+//! perf trajectory.
+//!
+//! Backend selection: `cargo bench --bench perf -- native` (or
+//! `HYBRIDAC_BACKEND=native`); default is the build default. With no built
+//! artifacts, the native backend falls back to the materialized synthetic
+//! artifact so the trajectory never comes up empty.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
-use hybridac::benchkit::{time_n, Stopwatch};
+use hybridac::benchkit::{time_stats, StageTiming, Stopwatch};
 use hybridac::coordinator::BatchServer;
-use hybridac::eval::{ExperimentConfig, Method};
-use hybridac::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use hybridac::eval::Method;
+use hybridac::exec::{BackendKind, ModelExecutor};
+use hybridac::runtime::{Artifact, DatasetBlob};
 use hybridac::scenario::{PerturbSpec, Scenario};
+use hybridac::util::json::Json;
 use hybridac::util::rng::Rng;
+
+fn stage_json(s: &StageTiming) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(s.label.clone()));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    m.insert("min_s".to_string(), Json::Num(s.min_s));
+    m.insert("mean_s".to_string(), Json::Num(s.mean_s));
+    m.insert("per_sec".to_string(), Json::Num(s.per_sec()));
+    Json::Obj(m)
+}
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("perf");
+    // backend: first non-flag CLI arg (cargo bench passes `--bench`) or
+    // the HYBRIDAC_BACKEND env var; default = build default
+    let backend_kind = match std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .or_else(|| std::env::var("HYBRIDAC_BACKEND").ok())
+    {
+        Some(s) => BackendKind::parse(&s)?,
+        None => BackendKind::default(),
+    };
+
     let dir = hybridac::artifacts_dir();
-    let tag = "resnet18m_c10s";
-    let art = Artifact::load(&dir, tag)?;
+    let want = "resnet18m_c10s";
+    let (dir, tag) = if dir.join(format!("{want}.meta.json")).exists() {
+        (dir, want.to_string())
+    } else if backend_kind == BackendKind::Native {
+        // no artifacts: the native backend still measures the full
+        // pipeline on the materialized synthetic artifact
+        let tmp = std::env::temp_dir().join(format!("hybridac-perf-{}", std::process::id()));
+        Artifact::materialize_synthetic(&tmp)?;
+        eprintln!("[bench] artifacts not built — using the synthetic artifact (native backend)");
+        (tmp, "synthetic".to_string())
+    } else {
+        anyhow::bail!(
+            "artifacts not built (`make artifacts`); the '{}' backend has no synthetic \
+             fallback — try `cargo bench --bench perf -- native`",
+            backend_kind.name()
+        );
+    };
+    let art = Artifact::load(&dir, &tag)?;
     let data = DatasetBlob::load(&dir, &art.dataset)?;
-    println!("perf targets on {tag} ({} weights, batch {})", art.total_weights, art.batch);
+    println!(
+        "perf targets on {tag} [{}] ({} weights, batch {})",
+        backend_kind.name(),
+        art.total_weights,
+        art.batch
+    );
+
+    let mut stages: Vec<StageTiming> = Vec::new();
 
     // 1. raw gaussian fill at weight-blob scale
     let n_weights = art.total_weights;
     let mut buf = vec![0.0f32; n_weights];
     let mut rng = Rng::new(7);
-    time_n("gaussian fill (all weights)", 20, || {
+    stages.push(time_stats("gaussian fill (all weights)", 20, || {
         rng.fill_normal(&mut buf);
-    });
+    }));
 
     // 2. full weight preparation through the scenario pipeline
-    let sc = Scenario::paper_default("perf", tag, Method::Hybrid { frac: 0.16 });
+    let sc = Scenario::paper_default("perf", &tag, Method::Hybrid { frac: 0.16 })
+        .with_backend(backend_kind);
     let pipeline = sc.pipeline();
     let mut rng2 = Rng::new(8);
-    time_n("pipeline.prepare() split+quant+noise", 10, || {
+    stages.push(time_stats("pipeline.prepare() split+quant+noise", 10, || {
         let _ = pipeline.prepare(&art, &mut rng2);
-    });
+    }));
 
     // 2b. the same pipeline with the extra fault stages plugged in — the
     // marginal cost of stuck-at + drift on the preparation hot path
@@ -49,41 +107,50 @@ fn main() -> anyhow::Result<()> {
         .with_stage(PerturbSpec::Drift { t_seconds: 3600.0, nu: 0.06, nu_sigma: 0.02 })
         .pipeline();
     let mut rng2b = Rng::new(8);
-    time_n("pipeline.prepare() + stuck-at + drift", 10, || {
+    stages.push(time_stats("pipeline.prepare() + stuck-at + drift", 10, || {
         let _ = faulty.prepare(&art, &mut rng2b);
-    });
+    }));
 
     // 3. upload + execute one batch — full graph (both polarity paths)
-    let mut engine = Engine::cpu()?;
+    let backend = backend_kind.create()?;
     let mut rng3 = Rng::new(9);
     let model = pipeline.prepare(&art, &mut rng3);
     {
-        let mut exec = ModelExecutor::new(&mut engine, &art, &data, art.batch, sc.group)?;
-        time_n("accuracy(): full graph (wa1+wa2 paths)", 5, || {
+        let exec = ModelExecutor::new(backend.as_ref(), &art, &data, art.batch, sc.group)?;
+        stages.push(time_stats("accuracy(): full graph (wa1+wa2 paths)", 5, || {
             let _ = exec.accuracy(&model).unwrap();
-        });
+        }));
     }
     // 3b. the §Perf offset-only variant (skips the all-zero wa2 matmuls)
     {
-        let mut exec = ModelExecutor::new_with_variant(
-            &mut engine, &art, &data, art.batch, sc.group, true)?;
-        time_n("accuracy(): offset-only variant graph", 5, || {
+        let exec = ModelExecutor::new_with_variant(
+            backend.as_ref(),
+            &art,
+            &data,
+            art.batch,
+            sc.group,
+            true,
+        )?;
+        stages.push(time_stats("accuracy(): offset-only variant graph", 5, || {
             let _ = exec.accuracy(&model).unwrap();
-        });
+        }));
 
         // 4. one full repeat (prepare + upload + execute) on the fast path
         let mut rng4 = Rng::new(10);
-        time_n("full repeat (prepare + eval, offset variant)", 5, || {
+        stages.push(time_stats("full repeat (prepare + eval, offset variant)", 5, || {
             let m = pipeline.prepare(&art, &mut rng4);
             let _ = exec.accuracy(&m).unwrap();
-        });
+        }));
     }
-    drop(engine);
+    drop(backend);
 
-    // 5. serving round trip (batched)
-    let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
-    let server = BatchServer::start(dir.clone(), tag.to_string(), cfg,
-                                    Duration::from_millis(5))?;
+    // 5. serving round trip (batched), on the same backend
+    let server = BatchServer::start_scenario(
+        dir.clone(),
+        Scenario::paper_default("perf-serve", &tag, Method::Hybrid { frac: 0.16 })
+            .with_backend(backend_kind),
+        Duration::from_millis(5),
+    )?;
     let per = data.image_elems();
     let n_req = 500;
     let t = std::time::Instant::now();
@@ -97,12 +164,35 @@ fn main() -> anyhow::Result<()> {
         rx.recv()?;
     }
     let dt = t.elapsed().as_secs_f64();
+    let mean_batch = server.metrics.mean_batch_occupancy();
+    let p99_ms = server.metrics.latency_percentile_ms(0.99);
     println!(
-        "  batch server: {n_req} reqs in {dt:.2}s = {:.0} req/s (mean batch {:.0}, p99 {:.1} ms)",
+        "  batch server: {n_req} reqs in {dt:.2}s = {:.0} req/s (mean batch {mean_batch:.0}, p99 {p99_ms:.1} ms)",
         n_req as f64 / dt,
-        server.metrics.mean_batch_occupancy(),
-        server.metrics.latency_percentile_ms(0.99)
     );
     server.shutdown()?;
+
+    // machine-readable trajectory point, keyed by backend
+    let mut serve = BTreeMap::new();
+    serve.insert("requests".to_string(), Json::Num(n_req as f64));
+    serve.insert("seconds".to_string(), Json::Num(dt));
+    serve.insert("req_per_s".to_string(), Json::Num(n_req as f64 / dt));
+    serve.insert("mean_batch_occupancy".to_string(), Json::Num(mean_batch));
+    serve.insert("p99_ms".to_string(), Json::Num(p99_ms));
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("perf".to_string()));
+    root.insert("backend".to_string(), Json::Str(backend_kind.name().to_string()));
+    root.insert("model".to_string(), Json::Str(tag.clone()));
+    root.insert("total_weights".to_string(), Json::Num(art.total_weights as f64));
+    root.insert("batch".to_string(), Json::Num(art.batch as f64));
+    root.insert("stages".to_string(), Json::Arr(stages.iter().map(stage_json).collect()));
+    root.insert("serve".to_string(), Json::Obj(serve));
+    std::fs::write("BENCH_perf.json", Json::Obj(root).to_string())?;
+    println!(
+        "wrote BENCH_perf.json ({} stages, backend {})",
+        stages.len(),
+        backend_kind.name()
+    );
     Ok(())
 }

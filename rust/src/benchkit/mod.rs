@@ -73,8 +73,35 @@ impl Drop for Stopwatch {
     }
 }
 
+/// One timed stage: label + min/mean seconds over `iters` runs. The perf
+/// bench collects these into the machine-readable `BENCH_perf.json`.
+#[derive(Clone, Debug)]
+pub struct StageTiming {
+    pub label: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub mean_s: f64,
+}
+
+impl StageTiming {
+    /// Runs per second at the mean stage time.
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Time a closure n times, reporting min/mean (the perf bench's primitive).
-pub fn time_n<F: FnMut()>(label: &str, n: usize, mut f: F) -> f64 {
+pub fn time_n<F: FnMut()>(label: &str, n: usize, f: F) -> f64 {
+    time_stats(label, n, f).min_s
+}
+
+/// [`time_n`] returning the full min/mean record for machine-readable
+/// output.
+pub fn time_stats<F: FnMut()>(label: &str, n: usize, mut f: F) -> StageTiming {
     let mut best = f64::INFINITY;
     let mut sum = 0.0;
     for _ in 0..n {
@@ -89,5 +116,10 @@ pub fn time_n<F: FnMut()>(label: &str, n: usize, mut f: F) -> f64 {
         crate::report::si_time(best),
         crate::report::si_time(sum / n as f64)
     );
-    best
+    StageTiming {
+        label: label.to_string(),
+        iters: n,
+        min_s: best,
+        mean_s: sum / n as f64,
+    }
 }

@@ -9,8 +9,8 @@
 //! fleet share one implementation:
 //!
 //! * [`collect_batch`] — deadline-bounded batch aggregation off a channel,
-//! * [`BatchContext`] — one PJRT engine + compiled executable + one noisy
-//!   (variation-drawn) model instance, uploaded once at construction,
+//! * [`BatchContext`] — one execution backend + compiled executable + one
+//!   noisy (variation-drawn) model instance, uploaded once at construction,
 //! * [`fan_out`] — shape-checked prediction scatter back to callers.
 
 use anyhow::{ensure, Result};
@@ -19,9 +19,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::eval::ExperimentConfig;
-use crate::runtime::{Artifact, DatasetMeta, Engine};
+use crate::exec::{ExecBackend, Executable, ModelInstance};
+use crate::runtime::{Artifact, DatasetMeta};
 use crate::scenario::Scenario;
-use crate::tensor::Tensor;
+use crate::tensor::{argmax_rows, Tensor};
 use crate::util::rng::Rng;
 
 use super::metrics::Metrics;
@@ -103,14 +104,8 @@ pub fn fan_out(
         pending.len(),
         batch
     );
-    for (i, r) in pending.iter().enumerate() {
-        let row = &logits[i * num_classes..(i + 1) * num_classes];
-        let pred = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(k, _)| k as i32)
-            .unwrap();
+    let preds = argmax_rows(logits, num_classes);
+    for (r, &pred) in pending.iter().zip(&preds) {
         if !r.probe {
             metrics.record_latency(r.enqueued.elapsed());
         }
@@ -119,42 +114,20 @@ pub fn fan_out(
     Ok(())
 }
 
-/// FNV-1a over the raw weight bits — a cheap identity for one variation
-/// draw, used to verify that differently-seeded replicas really hold
-/// independent noisy instances.
-fn weight_fingerprint(layers: &[crate::runtime::executor::LayerInputs]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut eat = |v: f32| {
-        for byte in v.to_bits().to_le_bytes() {
-            h ^= byte as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    };
-    for li in layers {
-        for t in [&li.wa1, &li.wa2, &li.wd] {
-            for &v in &t.data {
-                eat(v);
-            }
-        }
-    }
-    h
-}
-
-/// Everything one batching worker needs, set up once: the PJRT engine, the
-/// compiled executable (owned — compilation is hoisted out of the batch
-/// loop), and the device-resident weight buffers of one prepared noisy
-/// model instance drawn from `cfg.seed`.
+/// Everything one batching worker needs, set up once: the execution
+/// backend, the compiled executable (resolved once — the batch loop only
+/// uploads inputs and runs), and the device-resident weight buffers of one
+/// prepared noisy model instance drawn from the scenario's seed.
 pub struct BatchContext {
     // declaration order = drop order: device-resident state goes before the
-    // engine that owns the underlying PJRT client
-    exe: xla::PjRtLoadedExecutable,
-    weight_bufs: Vec<xla::PjRtBuffer>,
-    engine: Engine,
+    // backend that owns the underlying device
+    exe: Arc<Executable>,
+    instance: ModelInstance,
+    backend: Arc<dyn ExecBackend>,
     batch: usize,
     per_image: usize,
     sample_shape: Vec<usize>,
     num_classes: usize,
-    fingerprint: u64,
 }
 
 impl BatchContext {
@@ -163,49 +136,42 @@ impl BatchContext {
     }
 
     /// Build a worker context from a declarative [`Scenario`]: the model
-    /// tag, the wordline-group graph variant, the preparation pipeline, and
-    /// the variation seed all come from the spec (the serving fleet
-    /// re-seeds per replica generation).
+    /// tag, the wordline-group graph variant, the preparation pipeline, the
+    /// execution backend, and the variation seed all come from the spec
+    /// (the serving fleet re-seeds per replica generation).
     pub fn from_scenario(artifacts: &std::path::Path, sc: &Scenario) -> Result<Self> {
+        Self::with_backend(artifacts, sc, sc.backend.create()?)
+    }
+
+    /// [`BatchContext::from_scenario`] on an existing backend instance —
+    /// how a serving fleet shares one thread-safe backend (and its
+    /// compile-once graph cache) across every replica.
+    pub fn with_backend(
+        artifacts: &std::path::Path,
+        sc: &Scenario,
+        backend: Arc<dyn ExecBackend>,
+    ) -> Result<Self> {
         let art = Artifact::load(artifacts, &sc.model)?;
         // metadata only: batch shaping never touches the image payload
         let data = DatasetMeta::load(artifacts, &art.dataset)?;
-        let engine = Engine::cpu()?;
         // the graph must match the scenario's wordline group — the ADC
-        // lsb/clip the pipeline derives are group-dependent
-        let hlo = art.hlo_variant(sc.group);
-        ensure!(
-            hlo.exists(),
-            "missing HLO variant {} for group {} — re-run `make artifacts`",
-            hlo.display(),
-            sc.group
-        );
-        // compile once, own the executable: the batch loop only uploads
-        // inputs and runs
-        let exe = engine.compile_owned(&hlo)?;
+        // lsb/clip the pipeline derives are group-dependent; compiled once
+        // (and cached), the batch loop only uploads inputs and runs
+        let compiled = backend.compile(&art, sc.group, false)?;
 
         // one prepared (noisy) model instance serves the whole session
         let mut rng = Rng::new(sc.seed);
         let model = sc.pipeline().prepare(&art, &mut rng);
-        let fingerprint = weight_fingerprint(&model.layers);
-        let mut weight_bufs = Vec::with_capacity(model.layers.len() * 6);
-        for li in &model.layers {
-            for t in [&li.wa1, &li.wa2, &li.wd, &li.bias] {
-                weight_bufs.push(engine.upload(t)?);
-            }
-            weight_bufs.push(engine.upload(&Tensor::scalar(li.lsb))?);
-            weight_bufs.push(engine.upload(&Tensor::scalar(li.clip))?);
-        }
+        let instance = ModelInstance::upload(backend.as_ref(), &model, compiled.offset_variant)?;
 
         Ok(BatchContext {
-            exe,
-            weight_bufs,
-            engine,
+            exe: compiled.exe,
+            instance,
+            backend,
             batch: art.batch,
             per_image: data.image_elems(),
             sample_shape: data.shape.clone(),
             num_classes: data.num_classes,
-            fingerprint,
         })
     }
 
@@ -217,9 +183,10 @@ impl BatchContext {
         self.per_image
     }
 
-    /// Identity of this context's variation draw (see [`weight_fingerprint`]).
+    /// Identity of this context's variation draw (see
+    /// [`crate::exec::weight_fingerprint`]).
     pub fn fingerprint(&self) -> u64 {
-        self.fingerprint
+        self.instance.fingerprint()
     }
 
     /// Execute one assembled batch and fan predictions back.
@@ -227,11 +194,8 @@ impl BatchContext {
         let x = assemble_input(pending, self.batch, self.per_image);
         let mut shape = vec![self.batch];
         shape.extend_from_slice(&self.sample_shape);
-        let xbuf = self.engine.upload(&Tensor::new(shape, x))?;
-        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
-        inputs.push(&xbuf);
-        inputs.extend(self.weight_bufs.iter());
-        let logits = Engine::run_buffers(&self.exe, &inputs)?;
+        let xbuf = self.backend.upload(&Tensor::new(shape, x))?;
+        let logits = self.instance.run(self.backend.as_ref(), &self.exe, &xbuf)?;
         fan_out(pending, &logits, self.batch, self.num_classes, metrics)
     }
 }
@@ -255,8 +219,8 @@ pub fn serve_requests(
     Ok(())
 }
 
-/// Single-worker batching server: one thread owning one PJRT engine and one
-/// noisy model instance. The replicated path is `serve::Router`.
+/// Single-worker batching server: one thread owning one execution backend
+/// and one noisy model instance. The replicated path is `serve::Router`.
 pub struct BatchServer {
     tx: mpsc::Sender<InferenceRequest>,
     pub metrics: Arc<Metrics>,
@@ -264,18 +228,29 @@ pub struct BatchServer {
 }
 
 impl BatchServer {
-    /// Spawn the worker thread owning the PJRT engine.
+    /// Spawn the worker thread owning the execution backend (legacy
+    /// config; the scenario — including its backend — is derived from it).
     pub fn start(
         artifacts: std::path::PathBuf,
         tag: String,
         cfg: ExperimentConfig,
         max_wait: Duration,
     ) -> Result<BatchServer> {
+        Self::start_scenario(artifacts, Scenario::from_config("serve", &tag, &cfg), max_wait)
+    }
+
+    /// Spawn the worker thread serving one declarative [`Scenario`] (its
+    /// `backend` field selects the execution substrate).
+    pub fn start_scenario(
+        artifacts: std::path::PathBuf,
+        sc: Scenario,
+        max_wait: Duration,
+    ) -> Result<BatchServer> {
         let (tx, rx) = mpsc::channel::<InferenceRequest>();
         let metrics = Arc::new(Metrics::new());
         let m = metrics.clone();
         let worker = std::thread::spawn(move || -> Result<()> {
-            let ctx = BatchContext::new(&artifacts, &tag, &cfg)?;
+            let ctx = BatchContext::from_scenario(&artifacts, &sc)?;
             serve_requests(&ctx, &rx, max_wait, &m)
         });
         Ok(BatchServer { tx, metrics, worker: Some(worker) })

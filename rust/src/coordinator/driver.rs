@@ -1,5 +1,6 @@
-//! End-to-end experiment driver: accuracy (PJRT) + hardware estimates
-//! (mapping + analog/digital timing + chip model) in one report.
+//! End-to-end experiment driver: accuracy (on the scenario's execution
+//! backend) + hardware estimates (mapping + analog/digital timing + chip
+//! model) in one report.
 //!
 //! [`run_scenario`] is the primary entry point — it runs any declarative
 //! [`Scenario`] (including one loaded from JSON); [`run_experiment`] lowers
@@ -28,9 +29,10 @@ pub struct RunReport {
     pub digital_frac: f64,
 }
 
-/// Run accuracy + hardware estimation for one declarative scenario.
+/// Run accuracy + hardware estimation for one declarative scenario (on the
+/// scenario's `backend`).
 pub fn run_scenario(artifacts: &Path, sc: &Scenario, batch: usize) -> Result<RunReport> {
-    let mut ev = Evaluator::new(artifacts, &sc.model)?;
+    let mut ev = Evaluator::for_scenario(artifacts, sc)?;
     let acc = ev.run_scenario(sc)?;
     let clean = ev.art.clean_test_acc;
 

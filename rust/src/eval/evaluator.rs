@@ -4,12 +4,18 @@
 //! [`Evaluator::run_scenario`] is the primary entry point; the
 //! [`ExperimentConfig`]-taking [`Evaluator::accuracy`] lowers the config to
 //! a [`Scenario`] and delegates, so both paths share one implementation.
+//! Execution is backend-agnostic: [`Evaluator::new`] picks the build's
+//! default [`BackendKind`], [`Evaluator::with_backend`] selects one
+//! explicitly, and [`Evaluator::for_scenario`] honors the scenario's own
+//! `backend` field.
 
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 use super::prepare::{ExperimentConfig, Method};
-use crate::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use crate::exec::{BackendKind, ExecBackend, ModelExecutor};
+use crate::runtime::{Artifact, DatasetBlob};
 use crate::scenario::Scenario;
 use crate::util::rng::Rng;
 
@@ -21,28 +27,51 @@ pub struct AccResult {
     pub repeats: usize,
 }
 
-/// Owns the engine + one model's artifact/dataset and runs configs on it.
+/// Owns the backend + one model's artifact/dataset and runs configs on it.
 pub struct Evaluator {
     pub art: Artifact,
     pub data: DatasetBlob,
-    engine: Engine,
+    backend: Arc<dyn ExecBackend>,
 }
 
 impl Evaluator {
+    /// Evaluator on the build's default backend (PJRT when the `pjrt`
+    /// feature is compiled in, the native interpreter otherwise).
     pub fn new(dir: &Path, tag: &str) -> Result<Evaluator> {
+        Self::with_backend(dir, tag, BackendKind::default())
+    }
+
+    /// Evaluator on an explicitly selected execution backend.
+    pub fn with_backend(dir: &Path, tag: &str, kind: BackendKind) -> Result<Evaluator> {
         let art = Artifact::load(dir, tag)?;
         let data = DatasetBlob::load(dir, &art.dataset)?;
-        Ok(Evaluator { art, data, engine: Engine::cpu()? })
+        Ok(Evaluator { art, data, backend: kind.create()? })
+    }
+
+    /// Evaluator for one scenario: its model tag *and* its backend.
+    pub fn for_scenario(dir: &Path, sc: &Scenario) -> Result<Evaluator> {
+        Self::with_backend(dir, &sc.model, sc.backend)
+    }
+
+    /// The backend this evaluator executes on.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
     }
 
     /// Accuracy (mean over cfg.repeats noise draws) of one config —
-    /// lowered to a [`Scenario`] and run through the pipeline.
+    /// lowered to a [`Scenario`] on this evaluator's backend and run
+    /// through the pipeline.
     pub fn accuracy(&mut self, cfg: &ExperimentConfig) -> Result<AccResult> {
-        self.run_scenario(&Scenario::from_config("config", &self.art.tag, cfg))
+        let sc = Scenario::from_config("config", &self.art.tag, cfg)
+            .with_backend(self.backend.kind());
+        self.run_scenario(&sc)
     }
 
     /// Accuracy of one declarative scenario (mean over `sc.repeats`
-    /// independent variation draws forked off `sc.seed`).
+    /// independent variation draws forked off `sc.seed`). The scenario's
+    /// `backend` must match the backend this evaluator was constructed
+    /// with — a spec asking for a different engine is an error, never a
+    /// silent substitution (see [`Evaluator::for_scenario`]).
     pub fn run_scenario(&mut self, sc: &Scenario) -> Result<AccResult> {
         anyhow::ensure!(
             sc.model.is_empty() || sc.model == self.art.tag,
@@ -51,10 +80,24 @@ impl Evaluator {
             sc.model,
             self.art.tag
         );
+        anyhow::ensure!(
+            sc.backend == self.backend.kind(),
+            "scenario '{}' asks for backend '{}' but this evaluator executes on '{}' \
+             (construct it with Evaluator::for_scenario / with_backend)",
+            sc.name,
+            sc.backend.name(),
+            self.backend.kind().name()
+        );
         // offset cells can use the single-polarity fast-path graph (§Perf)
         let offset = !sc.differential();
-        let mut exec = ModelExecutor::new_with_variant(
-            &mut self.engine, &self.art, &self.data, sc.n_eval, sc.group, offset)?;
+        let exec = ModelExecutor::new_with_variant(
+            self.backend.as_ref(),
+            &self.art,
+            &self.data,
+            sc.n_eval,
+            sc.group,
+            offset,
+        )?;
         let pipeline = sc.pipeline();
         let mut master = Rng::new(sc.seed);
         // a perturbation-free pipeline draws no randomness: every repeat

@@ -1,5 +1,7 @@
-//! Accuracy experiments: the evaluator driving the PJRT executor
-//! (Tables 1-3, Figs 7 & 11) plus the legacy [`ExperimentConfig`] builder.
+//! Accuracy experiments: the evaluator driving the backend-agnostic
+//! executor (Tables 1-3, Figs 7 & 11) plus the legacy [`ExperimentConfig`]
+//! builder. Execution runs on any [`crate::exec::ExecBackend`] — PJRT or
+//! the pure-rust native interpreter.
 //!
 //! Weight preparation itself lives in [`crate::scenario`] as a composable
 //! stage pipeline; [`prepare`] and [`Evaluator::accuracy`] lower configs to

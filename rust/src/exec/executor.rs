@@ -1,0 +1,122 @@
+//! [`ModelExecutor`]: runs an exported inference graph over the test set.
+//!
+//! Input order (model.py contract): [x] then per layer wa1, wa2, wd, b,
+//! lsb, clip.  Weight tensors change per noisy instance; the test batches
+//! never change — so batches are uploaded to the device once and cached,
+//! and each noisy instance uploads only the weight buffers (as a
+//! [`ModelInstance`]).  The compiled executable is resolved once at
+//! construction and held for the executor's lifetime: `accuracy` is
+//! upload + run only, and needs no `&mut` borrow.
+
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+use crate::runtime::artifact::{Artifact, DatasetBlob};
+use crate::runtime::executor::PreparedModel;
+use crate::tensor::argmax_rows;
+
+use super::{DeviceBuffer, ExecBackend, Executable, ModelInstance};
+
+pub struct ModelExecutor<'a> {
+    backend: &'a dyn ExecBackend,
+    /// Compiled once in the constructor — the per-instance path never
+    /// re-enters the compile cache.
+    exe: Arc<Executable>,
+    batch: usize,
+    /// device-resident test batches + their labels
+    x_bufs: Vec<DeviceBuffer>,
+    labels: Vec<Vec<i32>>,
+    n_eval: usize,
+    num_classes: usize,
+    /// offset-only fast-path graph (no wa2 inputs) — see EXPERIMENTS.md §Perf
+    offset_variant: bool,
+}
+
+impl<'a> ModelExecutor<'a> {
+    /// Compile (cached) and stage `n_eval` test samples as device buffers.
+    /// `offset_cells` requests the offset-only fast-path graph (skips the
+    /// all-zero second polarity matmul per layer); the backend falls back
+    /// to the full graph when that variant is unavailable.
+    pub fn new_with_variant(
+        backend: &'a dyn ExecBackend,
+        art: &Artifact,
+        data: &DatasetBlob,
+        n_eval: usize,
+        group: usize,
+        offset_cells: bool,
+    ) -> Result<Self> {
+        let compiled = backend.compile(art, group, offset_cells)?;
+        let batch = art.batch;
+        let n_eval = n_eval.min(data.n).max(1);
+        let n_batches = n_eval.div_ceil(batch);
+        let mut x_bufs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n_batches {
+            let (x, mut l) = data.batch(i, batch);
+            // mark wrap-padding so it is not scored
+            let valid = n_eval.saturating_sub(i * batch).min(batch);
+            for entry in l.iter_mut().skip(valid) {
+                *entry = -1;
+            }
+            x_bufs.push(backend.upload(&x)?);
+            labels.push(l);
+        }
+        Ok(ModelExecutor {
+            backend,
+            exe: compiled.exe,
+            batch,
+            x_bufs,
+            labels,
+            n_eval,
+            num_classes: data.num_classes,
+            offset_variant: compiled.offset_variant,
+        })
+    }
+
+    pub fn new(
+        backend: &'a dyn ExecBackend,
+        art: &Artifact,
+        data: &DatasetBlob,
+        n_eval: usize,
+        group: usize,
+    ) -> Result<Self> {
+        Self::new_with_variant(backend, art, data, n_eval, group, false)
+    }
+
+    pub fn n_eval(&self) -> usize {
+        self.n_eval
+    }
+
+    /// Whether the compiled graph is the offset-only (no-wa2) variant.
+    pub fn offset_variant(&self) -> bool {
+        self.offset_variant
+    }
+
+    /// Upload one prepared instance and score accuracy over the staged set.
+    pub fn accuracy(&self, model: &PreparedModel) -> Result<f64> {
+        let instance = ModelInstance::upload(self.backend, model, self.offset_variant)?;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for (xb, labels) in self.x_bufs.iter().zip(&self.labels) {
+            let logits = instance
+                .run(self.backend, &self.exe, xb)
+                .context("executing inference graph")?;
+            ensure!(
+                logits.len() == self.batch * self.num_classes,
+                "logit shape mismatch: {} vs {}x{}",
+                logits.len(),
+                self.batch,
+                self.num_classes
+            );
+            let preds = argmax_rows(&logits, self.num_classes);
+            for (&pred, &label) in preds.iter().zip(labels) {
+                if label < 0 {
+                    continue; // wrap padding
+                }
+                hits += (pred == label) as usize;
+                total += 1;
+            }
+        }
+        Ok(hits as f64 / total.max(1) as f64)
+    }
+}

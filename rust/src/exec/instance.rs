@@ -1,0 +1,146 @@
+//! [`ModelInstance`]: one prepared model's device-resident weight buffers.
+//!
+//! Before the backend abstraction, three call sites each hand-rolled the
+//! same upload loop over a `PreparedModel` (the executor's `accuracy`, the
+//! batch context constructor, and — transitively — every serve replica).
+//! This type is that loop, once: upload `wa1 [wa2] wd b lsb clip` per layer
+//! in the `model.py` positional order, remember the variation fingerprint,
+//! and assemble `[x] + weights` input lists for execution.
+
+use anyhow::Result;
+
+use crate::runtime::executor::PreparedModel;
+use crate::tensor::Tensor;
+
+use super::{DeviceBuffer, ExecBackend, Executable};
+
+/// FNV-1a over the raw weight bits — a cheap identity for one variation
+/// draw, used to verify that differently-seeded replicas really hold
+/// independent noisy instances.
+pub fn weight_fingerprint(model: &PreparedModel) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: f32| {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for li in &model.layers {
+        for t in [&li.wa1, &li.wa2, &li.wd] {
+            for &v in &t.data {
+                eat(v);
+            }
+        }
+    }
+    h
+}
+
+/// One prepared (noisy, quantized, split) model instance resident on a
+/// backend's device. Dropping it releases the buffers; it must not outlive
+/// the backend that uploaded it.
+pub struct ModelInstance {
+    bufs: Vec<DeviceBuffer>,
+    fingerprint: u64,
+    offset_variant: bool,
+    n_layers: usize,
+}
+
+impl ModelInstance {
+    /// Upload every weight-side argument of `model`. `offset_variant` must
+    /// match the compiled graph (the offset-only graph takes no `wa2`
+    /// operand — 5 args/layer instead of 6).
+    pub fn upload(
+        backend: &dyn ExecBackend,
+        model: &PreparedModel,
+        offset_variant: bool,
+    ) -> Result<ModelInstance> {
+        let fingerprint = weight_fingerprint(model);
+        let mut bufs = Vec::with_capacity(model.layers.len() * 6);
+        for li in &model.layers {
+            bufs.push(backend.upload(&li.wa1)?);
+            if !offset_variant {
+                bufs.push(backend.upload(&li.wa2)?);
+            }
+            bufs.push(backend.upload(&li.wd)?);
+            bufs.push(backend.upload(&li.bias)?);
+            bufs.push(backend.upload(&Tensor::scalar(li.lsb))?);
+            bufs.push(backend.upload(&Tensor::scalar(li.clip))?);
+        }
+        Ok(ModelInstance {
+            bufs,
+            fingerprint,
+            offset_variant,
+            n_layers: model.layers.len(),
+        })
+    }
+
+    /// Identity of this instance's variation draw (see
+    /// [`weight_fingerprint`]).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn offset_variant(&self) -> bool {
+        self.offset_variant
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Execute `exe` on one staged input batch: assembles the positional
+    /// argument list `[x, wa1, (wa2,) wd, b, lsb, clip, ...]` and returns
+    /// the flat logits.
+    pub fn run(
+        &self,
+        backend: &dyn ExecBackend,
+        exe: &Executable,
+        x: &DeviceBuffer,
+    ) -> Result<Vec<f32>> {
+        let mut inputs: Vec<&DeviceBuffer> = Vec::with_capacity(1 + self.bufs.len());
+        inputs.push(x);
+        inputs.extend(self.bufs.iter());
+        backend.run(exe, &inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::executor::{LayerInputs, PreparedModel};
+
+    fn tiny_model(seed: f32) -> PreparedModel {
+        PreparedModel {
+            layers: vec![LayerInputs {
+                wa1: Tensor::new(vec![2, 1], vec![seed, 0.5]),
+                wa2: Tensor::zeros(vec![2, 1]),
+                wd: Tensor::zeros(vec![2, 1]),
+                bias: Tensor::zeros(vec![1]),
+                lsb: -1.0,
+                clip: 1.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_weight_bits() {
+        let a = weight_fingerprint(&tiny_model(0.25));
+        let b = weight_fingerprint(&tiny_model(0.25));
+        let c = weight_fingerprint(&tiny_model(0.26));
+        assert_eq!(a, b, "same weights, same fingerprint");
+        assert_ne!(a, c, "different weights, different fingerprint");
+    }
+
+    #[test]
+    fn upload_counts_match_the_graph_contract() {
+        let backend = super::super::BackendKind::Native.create().unwrap();
+        let model = tiny_model(0.25);
+        let full = ModelInstance::upload(backend.as_ref(), &model, false).unwrap();
+        assert_eq!(full.bufs.len(), 6, "full graph: 6 args per layer");
+        assert!(!full.offset_variant());
+        let off = ModelInstance::upload(backend.as_ref(), &model, true).unwrap();
+        assert_eq!(off.bufs.len(), 5, "offset graph: no wa2 operand");
+        assert_eq!(off.n_layers(), 1);
+        assert_eq!(full.fingerprint(), off.fingerprint());
+    }
+}

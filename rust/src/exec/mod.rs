@@ -1,0 +1,277 @@
+//! Backend-agnostic execution layer.
+//!
+//! Every consumer of the exported inference graphs — the evaluator, the
+//! batching coordinator, the replicated serving fleet, the CLI, the benches
+//! — talks to an [`ExecBackend`] instead of a concrete engine. A backend
+//! compiles one graph variant per `(artifact, wordline group, offset)` into
+//! an opaque [`Executable`], moves host tensors into opaque
+//! [`DeviceBuffer`]s, and executes the positional-argument contract of
+//! `python/compile/model.py` (`[x]` then `wa1 [wa2] wd b lsb clip` per
+//! layer, logits out).
+//!
+//! Two implementations ship:
+//!
+//! * [`PjrtBackend`] (cargo feature `pjrt`, on by default) — wraps the
+//!   [`crate::runtime::Engine`] PJRT CPU client and runs the AOT-exported
+//!   HLO text artifacts, bit-identical to the pre-abstraction runtime.
+//! * [`NativeBackend`] — a pure-rust interpreter of the exported layer
+//!   computation (im2col + wordline-group crossbar matmul + ADC lsb/clip
+//!   quantization + fp16 partial-sum merge). No xla, no artifacts' HLO
+//!   files, no network: the whole pipeline runs end-to-end on it, which is
+//!   what a `--no-default-features` build ships.
+//!
+//! The seams this opens are exactly the ROADMAP's next scaling steps: a GPU
+//! PJRT backend is a third [`ExecBackend`] impl, and cross-replica sharding
+//! needs only a backend whose [`Executable`] spans devices.
+//!
+//! Shared pieces: [`ModelInstance`] owns one prepared model's
+//! device-resident weight buffers (one upload path for the evaluator, the
+//! batch server, and every replica), and [`CompiledGraphCache`] gives each
+//! backend compile-once semantics — the native backend is `Send + Sync`,
+//! so a serving fleet shares a single instance and compiles each graph
+//! variant once for the whole fleet.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::runtime::Artifact;
+use crate::tensor::Tensor;
+
+mod cache;
+mod executor;
+mod instance;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use cache::{CompiledGraphCache, GraphKey};
+pub use executor::ModelExecutor;
+pub use instance::{weight_fingerprint, ModelInstance};
+pub use native::{NativeBackend, NativeGraph};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+/// Which execution backend runs the exported graphs. Parsed strictly from
+/// CLI flags (`--backend pjrt-cpu|native`) and scenario specs
+/// (`"backend": "native"`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// AOT-compiled HLO via the PJRT CPU client (cargo feature `pjrt`).
+    PjrtCpu,
+    /// Pure-rust interpreter of the exported layer computation.
+    Native,
+}
+
+/// The error both provisioning paths return for `pjrt-cpu` in a build
+/// without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "backend 'pjrt-cpu' is not compiled into this binary (build with the \
+         `pjrt` cargo feature) — use `--backend native`"
+    )
+}
+
+impl BackendKind {
+    /// Strict parse; anything but the two known names is an error (a typo'd
+    /// backend must never silently fall back to a different engine).
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "pjrt-cpu" => Ok(BackendKind::PjrtCpu),
+            "native" => Ok(BackendKind::Native),
+            other => anyhow::bail!("unknown backend '{other}' (pjrt-cpu|native)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::PjrtCpu => "pjrt-cpu",
+            BackendKind::Native => "native",
+        }
+    }
+
+    /// Instantiate the backend. Requesting `pjrt-cpu` from a build without
+    /// the `pjrt` feature is a runtime error, never a silent substitution.
+    // Arc rather than Rc so one handle type serves both backends; the PJRT
+    // client is !Send and its Arc never leaves the constructing thread.
+    #[allow(clippy::arc_with_non_send_sync)]
+    pub fn create(self) -> Result<Arc<dyn ExecBackend>> {
+        match self {
+            BackendKind::Native => Ok(Arc::new(NativeBackend::new())),
+            #[cfg(feature = "pjrt")]
+            BackendKind::PjrtCpu => Ok(Arc::new(PjrtBackend::cpu()?)),
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::PjrtCpu => Err(pjrt_unavailable()),
+        }
+    }
+}
+
+impl Default for BackendKind {
+    /// The backend a build runs when none is named: PJRT when compiled in
+    /// (bit-identical to the pre-abstraction behavior), otherwise native.
+    fn default() -> Self {
+        if cfg!(feature = "pjrt") {
+            BackendKind::PjrtCpu
+        } else {
+            BackendKind::Native
+        }
+    }
+}
+
+/// Opaque handle to a device-resident tensor. Only the backend that
+/// produced a buffer can consume it; handing one to a different backend is
+/// a loud error.
+pub enum DeviceBuffer {
+    /// Host-memory tensor (the native interpreter's "device").
+    Host(Tensor),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+/// Opaque handle to one compiled graph variant.
+pub enum Executable {
+    /// The native interpreter's graph: plain data, shared via `Arc` out of
+    /// the fleet-wide [`CompiledGraphCache`].
+    Native(Arc<NativeGraph>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtLoadedExecutable),
+}
+
+/// Result of [`ExecBackend::compile`]: the executable plus the variant that
+/// was *actually* compiled — a backend may fall back from the offset-only
+/// fast path to the full graph (PJRT does when the variant was not
+/// exported), and the caller must upload arguments accordingly.
+pub struct Compiled {
+    pub exe: Arc<Executable>,
+    /// True when the graph takes no `wa2` operand (5 args/layer instead
+    /// of 6).
+    pub offset_variant: bool,
+}
+
+/// One execution substrate for the exported inference graphs (see module
+/// docs). All methods take `&self`: backends cache compilations internally,
+/// so long-lived holders (executors, batch contexts) never need a `&mut`
+/// borrow on the hot path.
+pub trait ExecBackend {
+    fn kind(&self) -> BackendKind;
+
+    /// Human-readable platform string for logs and `hybridac info`.
+    fn platform(&self) -> String;
+
+    /// Compile (cached) the graph variant of `art` for `group`
+    /// simultaneously-activated wordlines; `offset_variant` requests the
+    /// no-`wa2` fast path, honored when available (see [`Compiled`]).
+    fn compile(&self, art: &Artifact, group: usize, offset_variant: bool) -> Result<Compiled>;
+
+    /// Move a host tensor to the device.
+    fn upload(&self, t: &Tensor) -> Result<DeviceBuffer>;
+
+    /// Execute with device-resident inputs in the positional-argument
+    /// order; returns the flat f32 logits payload.
+    fn run(&self, exe: &Executable, inputs: &[&DeviceBuffer]) -> Result<Vec<f32>>;
+
+    /// Graph variants this backend instance has compiled so far (its
+    /// [`CompiledGraphCache`] miss count) — the serve tests' probe for
+    /// "an N-replica fleet compiles each variant once".
+    fn compiled_graphs(&self) -> u64;
+}
+
+/// How a serving fleet provisions per-replica backends.
+///
+/// The native interpreter is `Send + Sync`, so the whole fleet shares one
+/// instance — and therefore one [`CompiledGraphCache`]: each graph variant
+/// compiles once per fleet, not once per replica. The PJRT client is not
+/// `Send`, so each replica worker thread constructs its own engine (as the
+/// fleet always has).
+#[derive(Clone)]
+pub enum BackendProvider {
+    /// One shared thread-safe backend for every replica.
+    Shared(Arc<dyn ExecBackend + Send + Sync>),
+    /// Build a fresh PJRT engine inside each replica worker thread.
+    #[cfg(feature = "pjrt")]
+    PerReplicaPjrt,
+}
+
+impl BackendProvider {
+    pub fn for_kind(kind: BackendKind) -> Result<BackendProvider> {
+        match kind {
+            BackendKind::Native => Ok(BackendProvider::Shared(Arc::new(NativeBackend::new()))),
+            #[cfg(feature = "pjrt")]
+            BackendKind::PjrtCpu => Ok(BackendProvider::PerReplicaPjrt),
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::PjrtCpu => Err(pjrt_unavailable()),
+        }
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            BackendProvider::Shared(b) => b.kind(),
+            #[cfg(feature = "pjrt")]
+            BackendProvider::PerReplicaPjrt => BackendKind::PjrtCpu,
+        }
+    }
+
+    /// The backend one replica should execute on. Called from inside the
+    /// replica's worker thread (PJRT clients must be built there).
+    // See BackendKind::create for the !Send PJRT Arc rationale.
+    #[allow(clippy::arc_with_non_send_sync)]
+    pub fn instantiate(&self) -> Result<Arc<dyn ExecBackend>> {
+        match self {
+            BackendProvider::Shared(b) => {
+                let backend: Arc<dyn ExecBackend> = b.clone();
+                Ok(backend)
+            }
+            #[cfg(feature = "pjrt")]
+            BackendProvider::PerReplicaPjrt => Ok(Arc::new(PjrtBackend::cpu()?)),
+        }
+    }
+
+    /// Compile count of the fleet-shared cache; `None` for per-replica
+    /// backends (each replica owns a private cache).
+    pub fn shared_compiled_graphs(&self) -> Option<u64> {
+        match self {
+            BackendProvider::Shared(b) => Some(b.compiled_graphs()),
+            #[cfg(feature = "pjrt")]
+            BackendProvider::PerReplicaPjrt => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_strictly() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt-cpu").unwrap(), BackendKind::PjrtCpu);
+        for bad in ["", "Native", "pjrt", "cuda", "pjrt-gpu"] {
+            assert!(BackendKind::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        for kind in [BackendKind::Native, BackendKind::PjrtCpu] {
+            assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn native_backend_always_constructs() {
+        let backend = BackendKind::Native.create().unwrap();
+        assert_eq!(backend.kind(), BackendKind::Native);
+        assert_eq!(backend.compiled_graphs(), 0);
+    }
+
+    #[test]
+    fn shared_provider_reports_its_cache() {
+        let provider = BackendProvider::for_kind(BackendKind::Native).unwrap();
+        assert_eq!(provider.kind(), BackendKind::Native);
+        assert_eq!(provider.shared_compiled_graphs(), Some(0));
+        let a = provider.instantiate().unwrap();
+        let b = provider.instantiate().unwrap();
+        // same shared instance: one cache for the whole fleet
+        assert_eq!(a.compiled_graphs(), b.compiled_graphs());
+    }
+}

@@ -1,0 +1,909 @@
+//! Pure-rust interpreter backend: the exported layer computation with no
+//! xla dependency.
+//!
+//! [`NativeGraph`] mirrors the semantics of the HLO graphs that
+//! `python/compile/model.py` exports (same positional-argument contract,
+//! same math):
+//!
+//! * activations fake-quantized at a shared 8 bits over the calibrated
+//!   per-layer range (`quant.py::fake_quant`),
+//! * convolutions lowered to im2col patches with *channel-major* columns —
+//!   input channel `c` owns rows `[c*R*R, (c+1)*R*R)`, the layout HybridAC's
+//!   channel selection relies on (`kernels/im2col.py`),
+//! * the analog path as wordline-group-tiled crossbar matmuls with a
+//!   mid-rise ADC (step `lsb`, clip `±clip`, `lsb <= 0` = ideal readout)
+//!   per group partial sum (`kernels/ref.py::crossbar_matmul_ref`); the
+//!   second polarity crossbar (`wa2`) is subtracted digitally,
+//! * the digital path as an exact f32 matmul,
+//! * the analog/digital partial results merged in fp16 (paper §2.2),
+//! * bias add + the family's structural ops (pool, residual, concat,
+//!   squeeze-excite) in f32.
+//!
+//! What it guarantees: the same contract and layer math as the exported
+//! graphs, deterministic results, every model family of `models.py` plus
+//! the in-memory `synthetic` test artifact. What it does not: bit-identity
+//! with XLA (f32 summation order differs, so logits agree only to float
+//! tolerance) and XLA-grade throughput — it is the correctness/portability
+//! leg, not the fast one.
+
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
+
+use crate::quantize::fake_quant;
+use crate::runtime::artifact::{Artifact, LayerInfo};
+use crate::tensor::Tensor;
+
+use super::cache::CompiledGraphCache;
+use super::{BackendKind, Compiled, DeviceBuffer, ExecBackend, Executable};
+
+/// Shared activation quantization width (paper §2.2, `layers.py::ACT_BITS`).
+const ACT_BITS: u32 = 8;
+
+/// Model families the interpreter can execute (the five scaled families of
+/// `python/compile/models.py` plus the in-memory test artifact).
+const SUPPORTED_FAMILIES: &[&str] =
+    &["synthetic", "vggmini", "resnet18m", "resnet34m", "densenetm", "effnetm"];
+
+/// The pure-rust execution backend. `Send + Sync`: a serving fleet shares
+/// one instance, so its [`CompiledGraphCache`] compiles each graph variant
+/// once for the whole fleet.
+pub struct NativeBackend {
+    cache: CompiledGraphCache<NativeGraph>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { cache: CompiledGraphCache::new() }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn platform(&self) -> String {
+        "native (pure-rust interpreter)".to_string()
+    }
+
+    // `Executable` is !Send only because of its (cfg-gated) PJRT variant;
+    // the value constructed here is plain data behind the shared Arc.
+    #[allow(clippy::arc_with_non_send_sync)]
+    fn compile(&self, art: &Artifact, group: usize, offset_variant: bool) -> Result<Compiled> {
+        let graph = self.cache.get_or_compile(&art.tag, group, offset_variant, || {
+            NativeGraph::build(art, group, offset_variant)
+        })?;
+        Ok(Compiled { exe: Arc::new(Executable::Native(graph)), offset_variant })
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::Host(t.clone()))
+    }
+
+    fn run(&self, exe: &Executable, inputs: &[&DeviceBuffer]) -> Result<Vec<f32>> {
+        let graph = match exe {
+            Executable::Native(g) => g,
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(_) => bail!("executable was not compiled by the native backend"),
+        };
+        let mut tensors: Vec<&Tensor> = Vec::with_capacity(inputs.len());
+        for buf in inputs {
+            match buf {
+                DeviceBuffer::Host(t) => tensors.push(t),
+                #[cfg(feature = "pjrt")]
+                DeviceBuffer::Pjrt(_) => bail!("buffer was not uploaded by the native backend"),
+            }
+        }
+        graph.run(&tensors)
+    }
+
+    fn compiled_graphs(&self) -> u64 {
+        self.cache.compiles()
+    }
+}
+
+/// One "compiled" graph variant of the interpreter: the artifact metadata
+/// the forward pass needs (layer table, calibrated activation ranges,
+/// shapes) plus the variant knobs. Plain data — cached and shared across
+/// threads via `Arc`.
+pub struct NativeGraph {
+    family: String,
+    batch: usize,
+    input_shape: Vec<usize>,
+    num_classes: usize,
+    group: usize,
+    offset_variant: bool,
+    layers: Vec<LayerInfo>,
+    act_ranges: Vec<(f32, f32)>,
+}
+
+/// Per-layer runtime arguments, in the `model.py` contract order.
+struct LayerArgs<'a> {
+    wa1: &'a Tensor,
+    /// Absent in the offset-only variant (the graph takes no second
+    /// polarity operand).
+    wa2: Option<&'a Tensor>,
+    wd: &'a Tensor,
+    bias: &'a Tensor,
+    lsb: f32,
+    clip: f32,
+}
+
+impl NativeGraph {
+    pub fn build(art: &Artifact, group: usize, offset_variant: bool) -> Result<NativeGraph> {
+        ensure!(
+            SUPPORTED_FAMILIES.contains(&art.family.as_str()),
+            "native backend cannot interpret model family '{}' (supported: {})",
+            art.family,
+            SUPPORTED_FAMILIES.join(", ")
+        );
+        ensure!(group >= 1, "wordline group must be >= 1, got {group}");
+        ensure!(
+            art.layers.len() == art.act_ranges.len(),
+            "artifact '{}': {} layers but {} activation ranges",
+            art.tag,
+            art.layers.len(),
+            art.act_ranges.len()
+        );
+        Ok(NativeGraph {
+            family: art.family.clone(),
+            batch: art.batch,
+            input_shape: art.input_shape.clone(),
+            num_classes: art.num_classes,
+            group,
+            offset_variant,
+            layers: art.layers.clone(),
+            act_ranges: art.act_ranges.clone(),
+        })
+    }
+
+    /// Positional argument count: x + (5 or 6) per layer.
+    pub fn n_args(&self) -> usize {
+        1 + self.args_per_layer() * self.layers.len()
+    }
+
+    fn args_per_layer(&self) -> usize {
+        if self.offset_variant {
+            5
+        } else {
+            6
+        }
+    }
+
+    /// Execute the graph; returns the flat `[batch, num_classes]` logits.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<f32>> {
+        ensure!(
+            inputs.len() == self.n_args(),
+            "graph '{}' takes {} args ({} layers x {} + x), got {}",
+            self.family,
+            self.n_args(),
+            self.layers.len(),
+            self.args_per_layer(),
+            inputs.len()
+        );
+        let x = inputs[0];
+        let mut want = vec![self.batch];
+        want.extend_from_slice(&self.input_shape);
+        ensure!(
+            x.shape == want,
+            "input shape {:?} does not match the compiled batch shape {:?}",
+            x.shape,
+            want
+        );
+
+        let mut args = Vec::with_capacity(self.layers.len());
+        let mut k = 1;
+        for li in &self.layers {
+            let wa1 = inputs[k];
+            k += 1;
+            let wa2 = if self.offset_variant {
+                None
+            } else {
+                k += 1;
+                Some(inputs[k - 1])
+            };
+            let wd = inputs[k];
+            let bias = inputs[k + 1];
+            let lsb = scalar_arg(inputs[k + 2], "lsb", &li.name)?;
+            let clip = scalar_arg(inputs[k + 3], "clip", &li.name)?;
+            k += 4;
+            args.push(LayerArgs { wa1, wa2, wd, bias, lsb, clip });
+        }
+
+        let mut interp = Interp { g: self, args, next: 0 };
+        let logits = forward(&self.family, &mut interp, x)?;
+        ensure!(
+            interp.next == self.layers.len(),
+            "family '{}' consumed {} of {} recorded layers — layer table drift",
+            self.family,
+            interp.next,
+            self.layers.len()
+        );
+        ensure!(
+            logits.shape == vec![self.batch, self.num_classes],
+            "logits shape {:?}, expected [{}, {}]",
+            logits.shape,
+            self.batch,
+            self.num_classes
+        );
+        Ok(logits.data)
+    }
+}
+
+fn scalar_arg(t: &Tensor, what: &str, layer: &str) -> Result<f32> {
+    ensure!(t.len() == 1, "layer '{layer}' {what} must be a scalar, got shape {:?}", t.shape);
+    Ok(t.data[0])
+}
+
+// ---------------------------------------------------------------------------
+// the per-layer executor (HybridExec's semantics)
+
+#[derive(Clone, Copy)]
+enum Act {
+    Relu,
+    Sigmoid,
+    None,
+}
+
+fn apply_act(v: f32, act: Act) -> f32 {
+    match act {
+        Act::Relu => v.max(0.0),
+        Act::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+        Act::None => v,
+    }
+}
+
+struct Interp<'a> {
+    g: &'a NativeGraph,
+    args: Vec<LayerArgs<'a>>,
+    /// Layers are consumed in forward-call order — the same order
+    /// `MetaExec` recorded them into the artifact layer table.
+    next: usize,
+}
+
+impl Interp<'_> {
+    fn next_layer(&mut self) -> Result<usize> {
+        ensure!(
+            self.next < self.g.layers.len(),
+            "family '{}' asks for more layers than the artifact recorded ({})",
+            self.g.family,
+            self.g.layers.len()
+        );
+        self.next += 1;
+        Ok(self.next - 1)
+    }
+
+    /// One hybrid layer matmul: ADC-quantized crossbar path(s) + exact
+    /// digital path, merged in fp16.
+    fn hybrid_matmul(&self, idx: usize, patches: &Tensor) -> Result<Tensor> {
+        let li = &self.g.layers[idx];
+        let a = &self.args[idx];
+        let mat = vec![li.rows(), li.cout];
+        ensure!(
+            a.wa1.shape == mat && a.wd.shape == mat,
+            "layer '{}' weight shapes {:?}/{:?}, expected {:?}",
+            li.name,
+            a.wa1.shape,
+            a.wd.shape,
+            mat
+        );
+        let mut ya = crossbar_matmul(patches, a.wa1, a.lsb, a.clip, self.g.group);
+        if let Some(wa2) = a.wa2 {
+            ensure!(
+                wa2.shape == mat,
+                "layer '{}' wa2 shape {:?}, expected {:?}",
+                li.name,
+                wa2.shape,
+                mat
+            );
+            // differential cells: the negative-polarity crossbar has its
+            // own ADC readout and is subtracted digitally
+            let y2 = crossbar_matmul(patches, wa2, a.lsb, a.clip, self.g.group);
+            for (v, s) in ya.data.iter_mut().zip(&y2.data) {
+                *v -= s;
+            }
+        }
+        let yd = matmul(patches, a.wd);
+        // FP16 merge of analog/digital partial results (paper §2.2)
+        for (v, d) in ya.data.iter_mut().zip(&yd.data) {
+            *v = f16_round(f16_round(*v) + f16_round(*d));
+        }
+        Ok(ya)
+    }
+
+    fn conv(&mut self, x: &Tensor, act: Act) -> Result<Tensor> {
+        let idx = self.next_layer()?;
+        let li = &self.g.layers[idx];
+        ensure!(
+            li.kind == "conv",
+            "layer {idx} ('{}') is '{}' but the forward expects a conv",
+            li.name,
+            li.kind
+        );
+        ensure!(
+            x.shape.len() == 4,
+            "conv '{}' input must be [b,h,w,c], got {:?}",
+            li.name,
+            x.shape
+        );
+        let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        ensure!(c == li.cin, "conv '{}' expects {} input channels, got {c}", li.name, li.cin);
+
+        let (lo, hi) = self.g.act_ranges[idx];
+        let mut xq = x.clone();
+        fake_quant(&mut xq, lo, hi, ACT_BITS);
+        let patches = im2col(&xq, li.r, li.stride, li.pad);
+        let y = self.hybrid_matmul(idx, &patches)?;
+        let (oh, ow) = conv_out_hw(h, w, li.r, li.stride, li.pad);
+
+        let bias = self.args[idx].bias;
+        ensure!(bias.len() == li.cout, "conv '{}' bias length {}", li.name, bias.len());
+        let mut data = y.data;
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = apply_act(*v + bias.data[i % li.cout], act);
+        }
+        Ok(Tensor::new(vec![b, oh, ow, li.cout], data))
+    }
+
+    fn dense(&mut self, x: &Tensor, act: Act) -> Result<Tensor> {
+        let idx = self.next_layer()?;
+        let li = &self.g.layers[idx];
+        ensure!(
+            li.kind == "dense",
+            "layer {idx} ('{}') is '{}' but the forward expects a dense",
+            li.name,
+            li.kind
+        );
+        ensure!(x.shape.len() == 2, "dense '{}' input must be [b,f], got {:?}", li.name, x.shape);
+        ensure!(
+            x.shape[1] == li.cin,
+            "dense '{}' expects {} features, got {}",
+            li.name,
+            li.cin,
+            x.shape[1]
+        );
+
+        let (lo, hi) = self.g.act_ranges[idx];
+        let mut xq = x.clone();
+        fake_quant(&mut xq, lo, hi, ACT_BITS);
+        let y = self.hybrid_matmul(idx, &xq)?;
+
+        let bias = self.args[idx].bias;
+        ensure!(bias.len() == li.cout, "dense '{}' bias length {}", li.name, bias.len());
+        let mut data = y.data;
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = apply_act(*v + bias.data[i % li.cout], act);
+        }
+        Ok(Tensor::new(vec![x.shape[0], li.cout], data))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// family forwards (models.py, layer consumption order = MetaExec record
+// order; structural constants mirror the python definitions)
+
+fn forward(family: &str, i: &mut Interp, x: &Tensor) -> Result<Tensor> {
+    match family {
+        "synthetic" => {
+            // the in-memory test artifact: two convs, three 2x pools
+            // (16 -> 2), flatten (2*2*8 = 32), classifier head
+            let x = i.conv(x, Act::Relu)?;
+            let x = i.conv(&x, Act::Relu)?;
+            let x = max_pool(&x)?;
+            let x = max_pool(&x)?;
+            let x = max_pool(&x)?;
+            let x = flatten(&x);
+            i.dense(&x, Act::None)
+        }
+        "vggmini" => {
+            let x = i.conv(x, Act::Relu)?;
+            let x = i.conv(&x, Act::Relu)?;
+            let x = max_pool(&x)?;
+            let x = i.conv(&x, Act::Relu)?;
+            let x = i.conv(&x, Act::Relu)?;
+            let x = max_pool(&x)?;
+            let x = i.conv(&x, Act::Relu)?;
+            let x = i.conv(&x, Act::Relu)?;
+            let x = max_pool(&x)?;
+            let x = flatten(&x);
+            let x = i.dense(&x, Act::Relu)?;
+            i.dense(&x, Act::None)
+        }
+        "resnet18m" => resnet(i, x, &[2, 2, 2]),
+        "resnet34m" => resnet(i, x, &[3, 4, 3]),
+        "densenetm" => {
+            let mut x = i.conv(x, Act::Relu)?;
+            for block in 0..3 {
+                for _layer in 0..4 {
+                    // dense block: every conv's output concatenates onto
+                    // the running feature stack
+                    let y = i.conv(&x, Act::Relu)?;
+                    x = concat_channels(&x, &y)?;
+                }
+                if block < 2 {
+                    // transition: 1x1 compress + avgpool
+                    x = i.conv(&x, Act::Relu)?;
+                    x = avg_pool(&x)?;
+                }
+            }
+            let x = gap(&x)?;
+            i.dense(&x, Act::None)
+        }
+        "effnetm" => {
+            let mut x = i.conv(x, Act::Relu)?;
+            // (width, stride) per MBConv block — models.py's cfg
+            for &(width, stride) in &[(16usize, 1usize), (24, 2), (40, 2)] {
+                let cin = *x.shape.last().unwrap();
+                let skip = x.clone();
+                let y = i.conv(&x, Act::Relu)?; // expand (1x1)
+                let y = i.conv(&y, Act::Relu)?; // spatial (3x3, stride)
+                // squeeze-and-excite: gap -> dense/4 -> dense -> scale
+                let s = gap(&y)?;
+                let s = i.dense(&s, Act::Relu)?;
+                let s = i.dense(&s, Act::Sigmoid)?;
+                let y = scale_channels(&y, &s)?;
+                let y = i.conv(&y, Act::None)?; // project (1x1)
+                x = if stride == 1 && cin == width { add(&y, &skip)? } else { y };
+            }
+            let x = i.conv(&x, Act::Relu)?; // headc (1x1)
+            let x = gap(&x)?;
+            i.dense(&x, Act::None)
+        }
+        other => bail!("native backend cannot interpret model family '{other}'"),
+    }
+}
+
+fn resnet(i: &mut Interp, x: &Tensor, blocks_per_stage: &[usize]) -> Result<Tensor> {
+    let mut x = i.conv(x, Act::Relu)?; // stem
+    let widths = [16usize, 32, 64];
+    for (s, (&width, &nb)) in widths.iter().zip(blocks_per_stage).enumerate() {
+        for b in 0..nb {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            // basic block: two 3x3 convs + identity/projection skip
+            let cin = *x.shape.last().unwrap();
+            let y = i.conv(&x, Act::Relu)?;
+            let y = i.conv(&y, Act::None)?;
+            let skip = if stride != 1 || cin != width {
+                i.conv(&x, Act::None)? // 1x1 projection
+            } else {
+                x.clone()
+            };
+            x = relu(add(&y, &skip)?);
+        }
+    }
+    let x = gap(&x)?;
+    i.dense(&x, Act::None)
+}
+
+// ---------------------------------------------------------------------------
+// math + structural ops
+
+pub fn conv_out_hw(h: usize, w: usize, r: usize, stride: usize, pad: usize) -> (usize, usize) {
+    ((h + 2 * pad - r) / stride + 1, (w + 2 * pad - r) / stride + 1)
+}
+
+/// `x[B,H,W,C] -> patches [B*OH*OW, C*R*R]` with channel-major columns
+/// (input channel `c` owns columns `[c*R*R, (c+1)*R*R)`), matching
+/// `kernels/im2col.py`.
+pub fn im2col(x: &Tensor, r: usize, stride: usize, pad: usize) -> Tensor {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = conv_out_hw(h, w, r, stride, pad);
+    let cols = c * r * r;
+    let mut out = vec![0.0f32; b * oh * ow * cols];
+    for bi in 0..b {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let row = ((bi * oh + oi) * ow + oj) * cols;
+                for di in 0..r {
+                    let ii = oi * stride + di;
+                    if ii < pad || ii >= h + pad {
+                        continue; // zero padding row
+                    }
+                    let ii = ii - pad;
+                    for dj in 0..r {
+                        let jj = oj * stride + dj;
+                        if jj < pad || jj >= w + pad {
+                            continue;
+                        }
+                        let jj = jj - pad;
+                        let src = ((bi * h + ii) * w + jj) * c;
+                        let rr = di * r + dj;
+                        for ci in 0..c {
+                            out[row + ci * r * r + rr] = x.data[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b * oh * ow, cols], out)
+}
+
+/// `x[M,K] @ w[K,N]` per wordline group of `group` rows; each group's
+/// partial sum goes through the ADC (mid-rise quantizer, step `lsb`,
+/// saturating at `±clip`; `lsb <= 0` = ideal readout), groups accumulate
+/// in f32 — `kernels/ref.py::crossbar_matmul_ref`. The contraction dim is
+/// implicitly zero-padded to a group multiple (a partial trailing group is
+/// its own ADC readout).
+pub fn crossbar_matmul(x: &Tensor, w: &Tensor, lsb: f32, clip: f32, group: usize) -> Tensor {
+    let (m, k) = x.dims2();
+    let (kw, n) = w.dims2();
+    assert_eq!(k, kw, "contraction mismatch: {k} vs {kw}");
+    let group = group.max(1);
+    let mut out = vec![0.0f32; m * n];
+    let mut partial = vec![0.0f32; n];
+    for mi in 0..m {
+        let xrow = x.row(mi);
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + group).min(k);
+            partial.iter_mut().for_each(|p| *p = 0.0);
+            for ki in k0..k1 {
+                let xv = xrow[ki];
+                if xv != 0.0 {
+                    for (p, &wv) in partial.iter_mut().zip(w.row(ki)) {
+                        *p += xv * wv;
+                    }
+                }
+            }
+            if lsb > 0.0 {
+                for (o, &p) in orow.iter_mut().zip(partial.iter()) {
+                    *o += ((p / lsb).round() * lsb).clamp(-clip, clip);
+                }
+            } else {
+                for (o, &p) in orow.iter_mut().zip(partial.iter()) {
+                    *o += p;
+                }
+            }
+            k0 = k1;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Plain f32 matmul (the exact digital path).
+pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (kw, n) = w.dims2();
+    assert_eq!(k, kw, "contraction mismatch: {k} vs {kw}");
+    let mut out = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let xrow = x.row(mi);
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        for (ki, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                for (o, &wv) in orow.iter_mut().zip(w.row(ki)) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+fn pool2(x: &Tensor, max: bool) -> Result<Tensor> {
+    ensure!(x.shape.len() == 4, "pool input must be [b,h,w,c], got {:?}", x.shape);
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    ensure!(h % 2 == 0 && w % 2 == 0, "pool needs even spatial dims, got {h}x{w}");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; b * oh * ow * c];
+    let at = |bi: usize, ii: usize, jj: usize, ci: usize| x.data[((bi * h + ii) * w + jj) * c + ci];
+    for bi in 0..b {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                for ci in 0..c {
+                    let vals = [
+                        at(bi, 2 * oi, 2 * oj, ci),
+                        at(bi, 2 * oi, 2 * oj + 1, ci),
+                        at(bi, 2 * oi + 1, 2 * oj, ci),
+                        at(bi, 2 * oi + 1, 2 * oj + 1, ci),
+                    ];
+                    out[((bi * oh + oi) * ow + oj) * c + ci] = if max {
+                        vals.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+                    } else {
+                        vals.iter().sum::<f32>() / 4.0
+                    };
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![b, oh, ow, c], out))
+}
+
+fn max_pool(x: &Tensor) -> Result<Tensor> {
+    pool2(x, true)
+}
+
+fn avg_pool(x: &Tensor) -> Result<Tensor> {
+    pool2(x, false)
+}
+
+/// Global average pool: `[b,h,w,c] -> [b,c]`.
+fn gap(x: &Tensor) -> Result<Tensor> {
+    ensure!(x.shape.len() == 4, "gap input must be [b,h,w,c], got {:?}", x.shape);
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = vec![0.0f32; b * c];
+    for bi in 0..b {
+        for ii in 0..h {
+            for jj in 0..w {
+                let src = ((bi * h + ii) * w + jj) * c;
+                for ci in 0..c {
+                    out[bi * c + ci] += x.data[src + ci];
+                }
+            }
+        }
+    }
+    let inv = 1.0 / (h * w) as f32;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+    Ok(Tensor::new(vec![b, c], out))
+}
+
+fn flatten(x: &Tensor) -> Tensor {
+    let b = x.shape[0];
+    let f = x.data.len() / b.max(1);
+    Tensor::new(vec![b, f], x.data.clone())
+}
+
+fn relu(mut x: Tensor) -> Tensor {
+    for v in x.data.iter_mut() {
+        *v = v.max(0.0);
+    }
+    x
+}
+
+fn add(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    ensure!(a.shape == b.shape, "residual add shapes {:?} vs {:?}", a.shape, b.shape);
+    let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+    Ok(Tensor::new(a.shape.clone(), data))
+}
+
+/// Concatenate along the channel (last) axis.
+fn concat_channels(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    ensure!(
+        a.shape.len() == 4 && b.shape.len() == 4 && a.shape[..3] == b.shape[..3],
+        "concat shapes {:?} vs {:?}",
+        a.shape,
+        b.shape
+    );
+    let (ca, cb) = (a.shape[3], b.shape[3]);
+    let rows = a.data.len() / ca;
+    let mut out = Vec::with_capacity(rows * (ca + cb));
+    for i in 0..rows {
+        out.extend_from_slice(&a.data[i * ca..(i + 1) * ca]);
+        out.extend_from_slice(&b.data[i * cb..(i + 1) * cb]);
+    }
+    let mut shape = a.shape.clone();
+    shape[3] = ca + cb;
+    Ok(Tensor::new(shape, out))
+}
+
+/// Scale `x[b,h,w,c]` per (batch, channel) by `s[b,c]` (squeeze-excite).
+fn scale_channels(x: &Tensor, s: &Tensor) -> Result<Tensor> {
+    ensure!(
+        x.shape.len() == 4 && s.shape.len() == 2,
+        "scale shapes {:?} vs {:?}",
+        x.shape,
+        s.shape
+    );
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    ensure!(s.shape == vec![b, c], "scale vector {:?}, expected [{b}, {c}]", s.shape);
+    let mut out = x.data.clone();
+    for bi in 0..b {
+        for p in 0..h * w {
+            let base = (bi * h * w + p) * c;
+            for ci in 0..c {
+                out[base + ci] *= s.data[bi * c + ci];
+            }
+        }
+    }
+    Ok(Tensor::new(x.shape.clone(), out))
+}
+
+// ---------------------------------------------------------------------------
+// IEEE fp16 rounding (the paper's §2.2 partial-sum merge precision)
+
+/// Round an f32 through IEEE binary16 (round-to-nearest-even) and back.
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15; // rebias
+    if e >= 31 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal (or underflow to zero)
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rem = m & ((1u32 << shift) - 1);
+        let mut t = m >> shift;
+        if rem > half || (rem == half && (t & 1) == 1) {
+            t += 1; // round to nearest, ties to even
+        }
+        return sign | t as u16;
+    }
+    // normal: round the 23-bit mantissa to 10 bits, ties to even; a
+    // mantissa carry correctly bumps the exponent (up to inf)
+    let rem = mant & 0x1fff;
+    let mut t = ((e as u32) << 10) | (mant >> 13);
+    if rem > 0x1000 || (rem == 0x1000 && (t & 1) == 1) {
+        t += 1;
+    }
+    sign | t as u16
+}
+
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x3ff) as f32;
+    match exp {
+        0 => sign * mant * 2.0f32.powi(-24),
+        0x1f => {
+            if mant == 0.0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        e => sign * (1.0 + mant / 1024.0) * 2.0f32.powi(e as i32 - 15),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trips_representable_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, 2.0, 65504.0, -65504.0, 0.099975586] {
+            assert_eq!(f16_round(v), v, "{v} is exactly representable in f16");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest() {
+        // 1 + 1/2048 is exactly between 1.0 and the next f16 (1 + 1/1024):
+        // ties-to-even picks 1.0; anything above goes up
+        assert_eq!(f16_round(1.0 + 1.0 / 2048.0), 1.0);
+        assert_eq!(f16_round(1.0 + 1.5 / 2048.0), 1.0 + 1.0 / 1024.0);
+        // overflow saturates to inf, matching IEEE f32->f16 casts
+        assert_eq!(f16_round(1e6), f32::INFINITY);
+        assert_eq!(f16_round(-1e6), f32::NEG_INFINITY);
+        // subnormal range survives with reduced precision
+        let tiny = 3.0e-6f32;
+        let r = f16_round(tiny);
+        assert!((r - tiny).abs() < 1e-7, "{tiny} -> {r}");
+    }
+
+    #[test]
+    fn im2col_matches_hand_example() {
+        // 1x2x2x2 input, r=2 pad=1 stride=1 -> 3x3 output positions
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let p = im2col(&x, 2, 1, 1);
+        assert_eq!(p.shape, vec![9, 8]);
+        // center patch (oi=1, oj=1) sees the full input; channel-major
+        // columns: channel 0 rows then channel 1 rows, each in (di,dj) order
+        assert_eq!(p.row(4), &[1., 2., 3., 4., 10., 20., 30., 40.]);
+        // top-left patch: only the bottom-right tap (di=1,dj=1) is in-bounds
+        assert_eq!(p.row(0), &[0., 0., 0., 1., 0., 0., 0., 10.]);
+    }
+
+    #[test]
+    fn ideal_crossbar_equals_plain_matmul() {
+        let x = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let w = Tensor::new(vec![3, 2], vec![1., 0., 0., 1., 1., 1.]);
+        let ideal = crossbar_matmul(&x, &w, -1.0, 1.0, 2);
+        let plain = matmul(&x, &w);
+        assert_eq!(ideal.data, plain.data);
+        assert_eq!(ideal.data, vec![4., 5., 10., 11.]);
+    }
+
+    #[test]
+    fn adc_quantizes_per_group_partial_sum() {
+        // one row, K=2, group=1: each element is its own ADC readout
+        let x = Tensor::new(vec![1, 2], vec![1.0, 1.0]);
+        let w = Tensor::new(vec![2, 1], vec![0.34, 0.74]);
+        let y = crossbar_matmul(&x, &w, 0.5, 10.0, 1);
+        // round(0.34/0.5)*0.5 = 0.5, round(0.74/0.5)*0.5 = 0.5
+        assert!((y.data[0] - 1.0).abs() < 1e-6, "{}", y.data[0]);
+        // group=2: single partial sum 1.08 -> 1.0
+        let y2 = crossbar_matmul(&x, &w, 0.5, 10.0, 2);
+        assert!((y2.data[0] - 1.0).abs() < 1e-6);
+        // clipping saturates at +-clip
+        let yc = crossbar_matmul(&x, &w, 0.5, 0.5, 2);
+        assert!((yc.data[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pools_and_gap() {
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        assert_eq!(max_pool(&x).unwrap().data, vec![4.0]);
+        assert_eq!(avg_pool(&x).unwrap().data, vec![2.5]);
+        assert_eq!(gap(&x).unwrap().data, vec![2.5]);
+        assert_eq!(gap(&x).unwrap().shape, vec![1, 1]);
+    }
+
+    #[test]
+    fn concat_and_scale() {
+        let a = Tensor::new(vec![1, 1, 2, 1], vec![1., 2.]);
+        let b = Tensor::new(vec![1, 1, 2, 2], vec![3., 4., 5., 6.]);
+        let c = concat_channels(&a, &b).unwrap();
+        assert_eq!(c.shape, vec![1, 1, 2, 3]);
+        assert_eq!(c.data, vec![1., 3., 4., 2., 5., 6.]);
+
+        let s = Tensor::new(vec![1, 3], vec![2., 1., 0.]);
+        let y = scale_channels(&c, &s).unwrap();
+        assert_eq!(y.data, vec![2., 3., 0., 4., 5., 0.]);
+    }
+
+    #[test]
+    fn graph_runs_the_synthetic_family_end_to_end() {
+        use crate::util::rng::Rng;
+        let art = Artifact::synthetic(11);
+        let graph = NativeGraph::build(&art, 128, false).unwrap();
+        assert_eq!(graph.n_args(), art.n_args());
+
+        // clean weights as the runtime inputs: wa1 = w, wa2 = 0, wd = 0
+        let mut inputs: Vec<Tensor> = Vec::new();
+        let mut x = Tensor::zeros(vec![art.batch, 16, 16, 3]);
+        let mut rng = Rng::new(5);
+        rng.fill_normal(&mut x.data);
+        inputs.push(x);
+        for (li, w) in art.layers.iter().zip(&art.weights) {
+            inputs.push(w.clone());
+            inputs.push(Tensor::zeros(vec![li.rows(), li.cout]));
+            inputs.push(Tensor::zeros(vec![li.rows(), li.cout]));
+            inputs.push(Tensor::zeros(vec![li.cout]));
+            inputs.push(Tensor::scalar(-1.0)); // ideal readout
+            inputs.push(Tensor::scalar(1.0));
+        }
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let logits = graph.run(&refs).unwrap();
+        assert_eq!(logits.len(), art.batch * art.num_classes);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // deterministic: a second run is bit-identical
+        let again = graph.run(&refs).unwrap();
+        assert_eq!(logits, again);
+    }
+
+    #[test]
+    fn offset_variant_takes_five_args_per_layer() {
+        let art = Artifact::synthetic(11);
+        let full = NativeGraph::build(&art, 128, false).unwrap();
+        let off = NativeGraph::build(&art, 128, true).unwrap();
+        assert_eq!(full.n_args(), 1 + 6 * art.layers.len());
+        assert_eq!(off.n_args(), 1 + 5 * art.layers.len());
+    }
+
+    #[test]
+    fn unknown_family_is_rejected_at_compile() {
+        let mut art = Artifact::synthetic(1);
+        art.family = "transformer".to_string();
+        let err = NativeGraph::build(&art, 128, false).unwrap_err();
+        assert!(err.to_string().contains("transformer"), "{err}");
+    }
+}

@@ -1,0 +1,88 @@
+//! PJRT execution backend: the AOT-exported HLO artifacts through the
+//! [`crate::runtime::Engine`] CPU client (cargo feature `pjrt`).
+//!
+//! Bit-identical to the pre-abstraction runtime: the same engine compiles
+//! the same HLO text and executes the same device buffers — this type only
+//! adapts it to the [`ExecBackend`] handle contract and adds the
+//! compile-once [`CompiledGraphCache`] keyed by graph variant.
+//!
+//! The PJRT client is not `Send`, so a `PjrtBackend` lives and dies on one
+//! thread (each serve replica builds its own — see
+//! [`super::BackendProvider`]); its cache still deduplicates compilations
+//! within that thread, e.g. across an evaluator's scenario sweep.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::runtime::{Artifact, Engine};
+use crate::tensor::Tensor;
+
+use super::cache::CompiledGraphCache;
+use super::{BackendKind, Compiled, DeviceBuffer, ExecBackend, Executable};
+
+pub struct PjrtBackend {
+    // declaration order = drop order: cached executables must go before the
+    // engine that owns the underlying PJRT client
+    cache: CompiledGraphCache<Executable>,
+    engine: Engine,
+}
+
+impl PjrtBackend {
+    pub fn cpu() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { cache: CompiledGraphCache::new(), engine: Engine::cpu()? })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::PjrtCpu
+    }
+
+    fn platform(&self) -> String {
+        format!("pjrt:{}", self.engine.platform())
+    }
+
+    fn compile(&self, art: &Artifact, group: usize, offset_variant: bool) -> Result<Compiled> {
+        // the offset-only fast path falls back to the full graph when that
+        // variant was not exported (same resolution the executor always did)
+        let (path, effective_offset) = match (offset_variant, art.hlo_offset_variant(group)) {
+            (true, Some(p)) => (p, true),
+            _ => (art.hlo_variant(group), false),
+        };
+        ensure!(
+            path.exists(),
+            "missing HLO variant {} — re-run `make artifacts`",
+            path.display()
+        );
+        // key by the *resolved path*, not the artifact tag: two artifacts
+        // sharing a tag in different dirs must never serve each other's
+        // executable
+        let key = path.to_string_lossy();
+        let exe = self.cache.get_or_compile(&key, group, effective_offset, || {
+            Ok(Executable::Pjrt(self.engine.compile_owned(&path)?))
+        })?;
+        Ok(Compiled { exe, offset_variant: effective_offset })
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer::Pjrt(self.engine.upload(t)?))
+    }
+
+    fn run(&self, exe: &Executable, inputs: &[&DeviceBuffer]) -> Result<Vec<f32>> {
+        let exe = match exe {
+            Executable::Pjrt(e) => e,
+            Executable::Native(_) => bail!("executable was not compiled by the pjrt backend"),
+        };
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for buf in inputs {
+            match buf {
+                DeviceBuffer::Pjrt(b) => bufs.push(b),
+                DeviceBuffer::Host(_) => bail!("buffer was not uploaded by the pjrt backend"),
+            }
+        }
+        Engine::run_buffers(exe, &bufs)
+    }
+
+    fn compiled_graphs(&self) -> u64 {
+        self.cache.compiles()
+    }
+}

@@ -8,11 +8,23 @@
 //!   matmul with per-group ADC quantization (`python/compile/kernels/`).
 //! * **L2** (build time): five scaled DNN families whose inference graphs
 //!   take weights as runtime inputs; lowered once to HLO text.
-//! * **L3** (this crate): the coordinator — loads artifacts via PJRT,
-//!   injects conductance variation, applies hybrid quantization and
-//!   channel-wise selection, evaluates accuracy, and simulates the
+//! * **L3** (this crate): the coordinator — loads artifacts, injects
+//!   conductance variation, applies hybrid quantization and channel-wise
+//!   selection, evaluates accuracy, and simulates the
 //!   area/power/energy/timing of HybridAC and eleven baseline
 //!   architectures.
+//!
+//! ## Execution backends
+//!
+//! Every execution-consuming layer goes through the [`exec`] abstraction
+//! ([`exec::ExecBackend`]): compile / upload / run over opaque handles.
+//! Two backends ship — [`exec::PjrtBackend`] (cargo feature `pjrt`, on by
+//! default) running the AOT-exported HLO artifacts, and
+//! [`exec::NativeBackend`], a pure-rust interpreter of the same layer
+//! semantics, so a `--no-default-features` build runs the whole pipeline
+//! (evaluator, batch server, serve fleet) with no xla dependency. A
+//! [`scenario::Scenario`] names its backend (`"backend": "native"`); the
+//! CLI exposes `--backend pjrt-cpu|native`.
 //!
 //! ## Experiments are scenarios
 //!
@@ -43,6 +55,7 @@ pub mod benchkit;
 pub mod coordinator;
 pub mod digital;
 pub mod eval;
+pub mod exec;
 pub mod hwmodel;
 pub mod mapping;
 pub mod noise;

@@ -13,6 +13,9 @@
 //!           --replicas N --window-ms MS --queue-depth D --probe P
 //!           --probe-interval-ms MS (background health monitor)
 //!           --requests R --spec FILE (serve a JSON scenario)
+//!
+//! Every execution-running subcommand takes `--backend pjrt-cpu|native`;
+//! `--model synthetic --backend native` runs with no artifacts and no xla.
 
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -21,6 +24,7 @@ use std::time::{Duration, Instant};
 
 use hybridac::coordinator::{run_scenario, RunReport};
 use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::exec::BackendKind;
 use hybridac::hwmodel::all_architectures;
 use hybridac::report;
 use hybridac::runtime::{Artifact, DatasetBlob};
@@ -30,14 +34,14 @@ use hybridac::util::cli::Args;
 
 const FLAGS: &[&str] = &[
     "model", "repeats", "n-eval", "frac", "adc", "target", "requests", "replicas", "window-ms",
-    "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name",
+    "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name", "backend",
 ];
 const SWITCHES: &[&str] = &["differential", "verbose", "list"];
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), FLAGS, SWITCHES)?;
     match args.subcommand.as_deref() {
-        Some("info") => info(),
+        Some("info") => info(&args),
         Some("scenario") => scenario_cmd(&args),
         Some("run") => run(&args),
         Some("sweep") => sweep(&args),
@@ -51,7 +55,9 @@ fn main() -> Result<()> {
                  scenario flags: --spec FILE | --name KEY | --list\n\
                  serve flags: --replicas N --window-ms MS --queue-depth D --probe P\n\
                  \x20            --probe-interval-ms MS --requests R --spec FILE\n\
-                 see README.md; artifacts must be built first (`make artifacts`)"
+                 backend: --backend pjrt-cpu|native (native needs no xla; \n\
+                 \x20        `--model synthetic --backend native` needs no artifacts)\n\
+                 see README.md; real artifacts must be built first (`make artifacts`)"
             );
             Ok(())
         }
@@ -60,6 +66,33 @@ fn main() -> Result<()> {
 
 fn model_tag(args: &Args) -> String {
     args.get_or("model", "resnet18m_c10s")
+}
+
+/// `--backend pjrt-cpu|native` (strictly parsed); absent = build default
+/// (pjrt when compiled in, native otherwise).
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    match args.get("backend") {
+        None => Ok(BackendKind::default()),
+        Some(s) => BackendKind::parse(s),
+    }
+}
+
+/// The `synthetic` model tag needs no `make artifacts`: materialize the
+/// in-memory synthetic artifact + dataset into the artifacts dir on first
+/// use. It has no exported HLO, so asking any non-native backend for it is
+/// refused up front (the PJRT compile error would suggest `make
+/// artifacts`, which can never produce one).
+fn ensure_artifact(dir: &Path, tag: &str, backend: BackendKind) -> Result<()> {
+    if tag == "synthetic" {
+        if backend != BackendKind::Native {
+            bail!(
+                "the synthetic artifact has no exported HLO and runs on the native \
+                 interpreter only — pass `--backend native`"
+            );
+        }
+        Artifact::materialize_synthetic(dir)?;
+    }
+    Ok(())
 }
 
 fn base_cfg(args: &Args, method: Method) -> Result<ExperimentConfig> {
@@ -87,13 +120,14 @@ fn print_report(rep: &RunReport) {
     );
 }
 
-fn info() -> Result<()> {
+fn info(args: &Args) -> Result<()> {
     let dir = hybridac::artifacts_dir();
     if !dir.exists() {
         bail!("artifacts directory {} missing — run `make artifacts`", dir.display());
     }
-    let engine = hybridac::runtime::Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    let kind = backend_kind(args)?;
+    let backend = kind.create()?;
+    println!("exec backend: {} ({})", kind.name(), backend.platform());
     let mut tags: Vec<String> = std::fs::read_dir(&dir)?
         .filter_map(|e| e.ok())
         .filter_map(|e| {
@@ -148,7 +182,7 @@ fn scenario_cmd(args: &Args) -> Result<()> {
     if args.has("differential") {
         bail!("--differential conflicts with the scenario subcommand (set the cell in the spec)");
     }
-    let sc = if let Some(path) = args.get("spec") {
+    let mut sc = if let Some(path) = args.get("spec") {
         if args.get("model").is_some() {
             bail!("--model conflicts with --spec (the scenario file names the model)");
         }
@@ -160,8 +194,15 @@ fn scenario_cmd(args: &Args) -> Result<()> {
     } else {
         bail!("scenario needs --spec FILE or --name KEY (or --list)");
     };
+    // --backend is an execution knob, not part of the experiment
+    // definition, so (unlike the spec-owned flags above) it may override
+    // the scenario's backend field
+    if let Some(b) = args.get("backend") {
+        sc.backend = BackendKind::parse(b)?;
+    }
     let dir = hybridac::artifacts_dir();
-    println!("scenario '{}' on {}:", sc.name, sc.model);
+    ensure_artifact(&dir, &sc.model, sc.backend)?;
+    println!("scenario '{}' on {} [{}]:", sc.name, sc.model, sc.backend.name());
     if args.has("verbose") {
         println!("  spec: {}", sc.to_json().to_string());
     }
@@ -179,6 +220,8 @@ fn scenario_cmd(args: &Args) -> Result<()> {
 fn run(args: &Args) -> Result<()> {
     let tag = model_tag(args);
     let dir = hybridac::artifacts_dir();
+    let backend = backend_kind(args)?;
+    ensure_artifact(&dir, &tag, backend)?;
     let frac = args.get_f64("frac", 0.16)?;
     println!("model {tag}: clean / unprotected / IWS / HybridAC @ {:.0}%", frac * 100.0);
     // the four classic baselines, each expressed as a scenario
@@ -188,7 +231,8 @@ fn run(args: &Args) -> Result<()> {
         ("iws", Method::Iws { frac }),
         ("hybrid", Method::Hybrid { frac }),
     ] {
-        let sc = Scenario::from_config(label, &tag, &base_cfg(args, method)?);
+        let sc = Scenario::from_config(label, &tag, &base_cfg(args, method)?)
+            .with_backend(backend);
         let rep = run_scenario(&dir, &sc, 250)?;
         print_report(&rep);
     }
@@ -198,7 +242,9 @@ fn run(args: &Args) -> Result<()> {
 fn sweep(args: &Args) -> Result<()> {
     let tag = model_tag(args);
     let dir = hybridac::artifacts_dir();
-    let mut ev = Evaluator::new(&dir, &tag)?;
+    let backend = backend_kind(args)?;
+    ensure_artifact(&dir, &tag, backend)?;
+    let mut ev = Evaluator::with_backend(&dir, &tag, backend)?;
     let mut rows = Vec::new();
     for pct in [0.0, 0.02, 0.04, 0.08, 0.12, 0.16, 0.20] {
         let hy = ev.accuracy(&base_cfg(args, Method::Hybrid { frac: pct })?)?;
@@ -223,17 +269,21 @@ fn sweep(args: &Args) -> Result<()> {
 fn adc(args: &Args) -> Result<()> {
     let tag = model_tag(args);
     let dir = hybridac::artifacts_dir();
-    let mut ev = Evaluator::new(&dir, &tag)?;
+    let backend = backend_kind(args)?;
+    ensure_artifact(&dir, &tag, backend)?;
+    let mut ev = Evaluator::with_backend(&dir, &tag, backend)?;
     let frac = args.get_f64("frac", 0.16)?;
     let mut rows = Vec::new();
     for bits in [8u32, 7, 6, 4] {
         let hy = ev.run_scenario(
             &Scenario::from_config("adc", &tag, &base_cfg(args, Method::Hybrid { frac })?)
-                .with_adc(Some(bits)),
+                .with_adc(Some(bits))
+                .with_backend(backend),
         )?;
         let iws = ev.run_scenario(
             &Scenario::from_config("adc", &tag, &base_cfg(args, Method::Iws { frac })?)
-                .with_adc(Some(bits)),
+                .with_adc(Some(bits))
+                .with_backend(backend),
         )?;
         rows.push(vec![
             format!("{bits}-bit"),
@@ -282,7 +332,9 @@ fn hw() -> Result<()> {
 fn select(args: &Args) -> Result<()> {
     let tag = model_tag(args);
     let dir = hybridac::artifacts_dir();
-    let mut ev = Evaluator::new(&dir, &tag)?;
+    let backend = backend_kind(args)?;
+    ensure_artifact(&dir, &tag, backend)?;
+    let mut ev = Evaluator::with_backend(&dir, &tag, backend)?;
     let clean = ev.art.clean_test_acc;
     let target_drop = args.get_f64("target", 0.01)?;
     let base = base_cfg(args, Method::Hybrid { frac: 0.0 })?;
@@ -311,10 +363,11 @@ fn serve(args: &Args) -> Result<()> {
 
     // the fleet serves one declarative scenario: from a JSON spec file, or
     // the paper-default HybridAC config lowered to one
-    let sc = match args.get("spec") {
+    let mut sc = match args.get("spec") {
         Some(path) => {
             // the spec defines the experiment; conflicting per-knob flags
             // would be silently ignored, so refuse them loudly instead
+            // (--backend is an execution knob and may override the spec)
             for flag in ["model", "seed", "frac", "n-eval", "repeats", "adc"] {
                 if args.get(flag).is_some() {
                     bail!("--{flag} conflicts with --spec (the scenario file defines it)");
@@ -335,7 +388,11 @@ fn serve(args: &Args) -> Result<()> {
             sc
         }
     };
+    if let Some(b) = args.get("backend") {
+        sc.backend = BackendKind::parse(b)?;
+    }
     let tag = sc.model.clone();
+    ensure_artifact(&dir, &tag, sc.backend)?;
     let data = Arc::new({
         let art = Artifact::load(&dir, &tag)?;
         DatasetBlob::load(&dir, &art.dataset)?
@@ -355,9 +412,10 @@ fn serve(args: &Args) -> Result<()> {
     }
     let router = Arc::new(Router::start_scenario(dir, sc, fleet)?);
     println!(
-        "serving scenario '{}' on {tag}: {} replicas ({} @ {:.0}%), window {} ms, \
+        "serving scenario '{}' on {tag} [{}]: {} replicas ({} @ {:.0}%), window {} ms, \
          queue depth {}, monitor {}",
         router.scenario().name,
+        router.scenario().backend.name(),
         router.replica_count(),
         router.scenario().method_label(),
         100.0 * router.scenario().protected_frac(),

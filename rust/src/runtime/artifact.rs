@@ -5,10 +5,23 @@
 //! ranking, the IWS per-weight sensitivity blob, and the clean weights.
 
 use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::tensor::{blob, Tensor};
 use crate::util::json::Json;
+
+fn f32_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn jnum(n: usize) -> Json {
+    Json::Num(n as f64)
+}
 
 /// One selectable (weight-bearing) layer, mirroring python's LayerMeta.
 #[derive(Clone, Debug)]
@@ -306,6 +319,115 @@ impl Artifact {
             dir: PathBuf::from("."),
         }
     }
+
+    /// Serialize this artifact in the `aot.py` on-disk format (meta.json +
+    /// weight/sensitivity blobs), so the by-tag loading paths — evaluator,
+    /// batch server, serve fleet — can run on it. Used to materialize the
+    /// in-memory [`Artifact::synthetic`] artifact for backend-conformance
+    /// tests and native-backend demos; real artifacts still come from
+    /// `make artifacts`. No HLO text is written: a materialized synthetic
+    /// artifact executes on the native interpreter backend only.
+    pub fn write_to_dir(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+
+        // weight blob: weights + biases at their recorded element offsets
+        let blob_len = self
+            .layers
+            .iter()
+            .map(|l| (l.w_off + l.w_len).max(l.b_off + l.b_len))
+            .max()
+            .unwrap_or(0);
+        let mut wblob = vec![0.0f32; blob_len];
+        for (li, l) in self.layers.iter().enumerate() {
+            wblob[l.w_off..l.w_off + l.w_len].copy_from_slice(&self.weights[li].data);
+            wblob[l.b_off..l.b_off + l.b_len].copy_from_slice(&self.biases[li].data);
+        }
+        std::fs::write(dir.join(format!("{}.weights.bin", self.tag)), f32_bytes(&wblob))?;
+
+        // sensitivity blob: per-layer tensors back to back
+        let mut sblob: Vec<f32> = Vec::new();
+        for s in &self.sens {
+            sblob.extend_from_slice(&s.data);
+        }
+        std::fs::write(dir.join(format!("{}.sens.bin", self.tag)), f32_bytes(&sblob))?;
+
+        let mut layers = Vec::new();
+        let mut act = BTreeMap::new();
+        let mut psum = BTreeMap::new();
+        for (li, l) in self.layers.iter().enumerate() {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(l.name.clone()));
+            m.insert("kind".to_string(), Json::Str(l.kind.clone()));
+            m.insert("r".to_string(), jnum(l.r));
+            m.insert("stride".to_string(), jnum(l.stride));
+            m.insert("pad".to_string(), jnum(l.pad));
+            m.insert("cin".to_string(), jnum(l.cin));
+            m.insert("cout".to_string(), jnum(l.cout));
+            m.insert("always_digital".to_string(), Json::Bool(l.always_digital));
+            m.insert("w_off".to_string(), jnum(l.w_off));
+            m.insert("w_len".to_string(), jnum(l.w_len));
+            m.insert("b_off".to_string(), jnum(l.b_off));
+            m.insert("b_len".to_string(), jnum(l.b_len));
+            layers.push(Json::Obj(m));
+            let (lo, hi) = self.act_ranges[li];
+            act.insert(
+                l.name.clone(),
+                Json::Arr(vec![Json::Num(lo as f64), Json::Num(hi as f64)]),
+            );
+            psum.insert(l.name.clone(), Json::Num(self.psum_p999[li] as f64));
+        }
+        let ranking: Vec<Json> = self
+            .ranking
+            .iter()
+            .map(|rc| {
+                Json::Arr(vec![
+                    jnum(rc.layer),
+                    jnum(rc.channel),
+                    Json::Num(rc.score as f64),
+                    jnum(rc.n_weights),
+                ])
+            })
+            .collect();
+
+        let mut meta = BTreeMap::new();
+        meta.insert("family".to_string(), Json::Str(self.family.clone()));
+        meta.insert("dataset".to_string(), Json::Str(self.dataset.clone()));
+        meta.insert("num_classes".to_string(), jnum(self.num_classes));
+        meta.insert(
+            "input_shape".to_string(),
+            Json::Arr(self.input_shape.iter().map(|&d| jnum(d)).collect()),
+        );
+        meta.insert("batch".to_string(), jnum(self.batch));
+        meta.insert("group".to_string(), jnum(self.group));
+        meta.insert("test_acc".to_string(), Json::Num(self.clean_test_acc));
+        meta.insert("layers".to_string(), Json::Arr(layers));
+        meta.insert("act_ranges".to_string(), Json::Obj(act));
+        meta.insert("psum_p999".to_string(), Json::Obj(psum));
+        meta.insert("ranking".to_string(), Json::Arr(ranking));
+        meta.insert("total_weights".to_string(), jnum(self.total_weights));
+        meta.insert("pinned_weights".to_string(), jnum(self.pinned_weights));
+        meta.insert("fig3".to_string(), self.fig3.clone());
+        std::fs::write(
+            dir.join(format!("{}.meta.json", self.tag)),
+            Json::Obj(meta).to_string(),
+        )?;
+        Ok(())
+    }
+
+    /// Write the synthetic artifact *and* its synthetic dataset under `dir`
+    /// (if not already present) and load it back. This is the no-`make
+    /// artifacts` entry into every by-tag pipeline — scenario runs, the
+    /// batch server, a whole serve fleet — on the native backend.
+    pub fn materialize_synthetic(dir: &Path) -> Result<Artifact> {
+        if !dir.join("synthetic.meta.json").exists() {
+            Artifact::synthetic(0xA57).write_to_dir(dir)?;
+        }
+        if !dir.join("synthetic.data.json").exists() {
+            DatasetBlob::synthetic(0xDA7A, 64).write_to_dir(dir, "synthetic")?;
+        }
+        Artifact::load(dir, "synthetic")
+    }
 }
 
 /// Dataset metadata only (no image/label payload) — enough for serving
@@ -369,6 +491,49 @@ impl DatasetBlob {
         self.shape.iter().product()
     }
 
+    /// A small random labeled dataset matching [`Artifact::synthetic`]'s
+    /// input contract (16x16x3, 10 classes). Random weights on random
+    /// images give chance-level accuracy — these exist to exercise the
+    /// execution plumbing, not the paper's accuracy claims.
+    pub fn synthetic(seed: u64, n: usize) -> DatasetBlob {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let shape = vec![16usize, 16, 3];
+        let per: usize = shape.iter().product();
+        let mut images = vec![0.0f32; n * per];
+        rng.fill_normal(&mut images);
+        for v in images.iter_mut() {
+            *v = v.abs().min(6.0); // keep inside the calibrated (0, 6) range
+        }
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+        DatasetBlob { n, shape, num_classes: 10, images, labels }
+    }
+
+    /// Serialize in the `aot.py` dataset format (`{name}.data.json` +
+    /// `{name}.data.bin`: images then labels, little-endian). The bin blob
+    /// is written *first*: `materialize_synthetic` gates regeneration on
+    /// the json file, so an interrupted write must never leave the gate
+    /// file without its payload.
+    pub fn write_to_dir(&self, dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+        let mut bytes = f32_bytes(&self.images);
+        for l in &self.labels {
+            bytes.extend_from_slice(&l.to_le_bytes());
+        }
+        std::fs::write(dir.join(format!("{name}.data.bin")), bytes)?;
+
+        let mut meta = BTreeMap::new();
+        meta.insert("n".to_string(), jnum(self.n));
+        meta.insert(
+            "shape".to_string(),
+            Json::Arr(self.shape.iter().map(|&d| jnum(d)).collect()),
+        );
+        meta.insert("num_classes".to_string(), jnum(self.num_classes));
+        std::fs::write(dir.join(format!("{name}.data.json")), Json::Obj(meta).to_string())?;
+        Ok(())
+    }
+
     /// Batch `i` of size `batch`, padded by wrapping (padding predictions are
     /// discarded by the evaluator).
     pub fn batch(&self, i: usize, batch: usize) -> (Tensor, Vec<i32>) {
@@ -383,5 +548,64 @@ impl DatasetBlob {
         let mut shape = vec![batch];
         shape.extend_from_slice(&self.shape);
         (Tensor::new(shape, data), labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hybridac-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn synthetic_artifact_round_trips_through_the_aot_format() {
+        let dir = tmp_dir("artifact-roundtrip");
+        let art = Artifact::synthetic(0xA57);
+        art.write_to_dir(&dir).unwrap();
+        let back = Artifact::load(&dir, "synthetic").unwrap();
+        assert_eq!(back.family, art.family);
+        assert_eq!(back.layers.len(), art.layers.len());
+        assert_eq!(back.total_weights, art.total_weights);
+        assert_eq!(back.pinned_weights, art.pinned_weights);
+        assert_eq!(back.ranking.len(), art.ranking.len());
+        for (a, b) in art.weights.iter().zip(&back.weights) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data, "weights must survive the blob round trip");
+        }
+        for (a, b) in art.sens.iter().zip(&back.sens) {
+            assert_eq!(a.data, b.data, "sensitivities must survive the blob round trip");
+        }
+        for ((alo, ahi), (blo, bhi)) in art.act_ranges.iter().zip(&back.act_ranges) {
+            assert_eq!(alo, blo);
+            assert_eq!(ahi, bhi);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn synthetic_dataset_round_trips() {
+        let dir = tmp_dir("dataset-roundtrip");
+        let data = DatasetBlob::synthetic(7, 12);
+        data.write_to_dir(&dir, "synthetic").unwrap();
+        let back = DatasetBlob::load(&dir, "synthetic").unwrap();
+        assert_eq!(back.n, 12);
+        assert_eq!(back.shape, vec![16, 16, 3]);
+        assert_eq!(back.images, data.images);
+        assert_eq!(back.labels, data.labels);
+        assert!(back.labels.iter().all(|&l| (0..10).contains(&l)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn materialize_synthetic_is_idempotent() {
+        let dir = tmp_dir("materialize");
+        let a = Artifact::materialize_synthetic(&dir).unwrap();
+        let b = Artifact::materialize_synthetic(&dir).unwrap();
+        assert_eq!(a.tag, "synthetic");
+        assert_eq!(a.weights[0].data, b.weights[0].data, "second call must reuse the files");
+        assert!(dir.join("synthetic.data.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,16 +1,12 @@
-//! ModelExecutor: runs an exported inference graph over the test set.
+//! Prepared-model data types: the weight-side arguments of one exported
+//! inference graph instance.
 //!
 //! Input order (model.py contract): [x] then per layer wa1, wa2, wd, b,
-//! lsb, clip.  Weight tensors change per noisy instance; the test batches
-//! never change — so batches are uploaded to the device once and cached,
-//! and each noisy instance uploads only the weight buffers (see
-//! EXPERIMENTS.md §Perf for the before/after of this buffer-reuse change).
+//! lsb, clip.  The preparation pipeline (`crate::scenario`) produces a
+//! [`PreparedModel`]; the execution layer (`crate::exec`) uploads it as a
+//! `ModelInstance` and runs it on any [`crate::exec::ExecBackend`] — the
+//! executor itself lives there as [`crate::exec::ModelExecutor`].
 
-use anyhow::{ensure, Context, Result};
-use std::path::PathBuf;
-
-use super::artifact::{Artifact, DatasetBlob};
-use super::pjrt::Engine;
 use crate::tensor::Tensor;
 
 /// Per-layer prepared inputs for one experiment instance.
@@ -28,143 +24,4 @@ pub struct LayerInputs {
 #[derive(Clone, Debug)]
 pub struct PreparedModel {
     pub layers: Vec<LayerInputs>,
-}
-
-pub struct ModelExecutor<'a> {
-    engine: &'a mut Engine,
-    hlo: PathBuf,
-    batch: usize,
-    /// device-resident test batches + their labels
-    x_bufs: Vec<xla::PjRtBuffer>,
-    labels: Vec<Vec<i32>>,
-    n_eval: usize,
-    num_classes: usize,
-    /// offset-only fast-path graph (no wa2 inputs) — see EXPERIMENTS.md §Perf
-    offset_variant: bool,
-}
-
-impl<'a> ModelExecutor<'a> {
-    /// Compile (cached) and stage `n_eval` test samples as device buffers.
-    /// `offset_cells` selects the offset-only fast-path graph when it was
-    /// exported (skips the all-zero second polarity matmul per layer).
-    pub fn new_with_variant(
-        engine: &'a mut Engine,
-        art: &Artifact,
-        data: &DatasetBlob,
-        n_eval: usize,
-        group: usize,
-        offset_cells: bool,
-    ) -> Result<Self> {
-        let (hlo, offset_variant) = match (offset_cells, art.hlo_offset_variant(group)) {
-            (true, Some(p)) => (p, true),
-            _ => (art.hlo_variant(group), false),
-        };
-        Self::build(engine, art, data, n_eval, hlo, offset_variant)
-    }
-
-    pub fn new(
-        engine: &'a mut Engine,
-        art: &Artifact,
-        data: &DatasetBlob,
-        n_eval: usize,
-        group: usize,
-    ) -> Result<Self> {
-        let hlo = art.hlo_variant(group);
-        Self::build(engine, art, data, n_eval, hlo, false)
-    }
-
-    fn build(
-        engine: &'a mut Engine,
-        art: &Artifact,
-        data: &DatasetBlob,
-        n_eval: usize,
-        hlo: PathBuf,
-        offset_variant: bool,
-    ) -> Result<Self> {
-        ensure!(
-            hlo.exists(),
-            "missing HLO variant {} — re-run `make artifacts`",
-            hlo.display()
-        );
-        engine.load(&hlo)?;
-        let batch = art.batch;
-        let n_eval = n_eval.min(data.n).max(1);
-        let n_batches = n_eval.div_ceil(batch);
-        let mut x_bufs = Vec::new();
-        let mut labels = Vec::new();
-        for i in 0..n_batches {
-            let (x, mut l) = data.batch(i, batch);
-            // mark wrap-padding so it is not scored
-            let valid = n_eval.saturating_sub(i * batch).min(batch);
-            for entry in l.iter_mut().skip(valid) {
-                *entry = -1;
-            }
-            x_bufs.push(engine.upload(&x)?);
-            labels.push(l);
-        }
-        Ok(ModelExecutor {
-            engine,
-            hlo,
-            batch,
-            x_bufs,
-            labels,
-            n_eval,
-            num_classes: data.num_classes,
-            offset_variant,
-        })
-    }
-
-    pub fn n_eval(&self) -> usize {
-        self.n_eval
-    }
-
-    /// Upload one prepared instance and score accuracy over the staged set.
-    pub fn accuracy(&mut self, model: &PreparedModel) -> Result<f64> {
-        // upload weight-side args once per instance; the offset-only graph
-        // variant takes no wa2 operand (5 args/layer instead of 6)
-        let mut weight_bufs = Vec::with_capacity(model.layers.len() * 6);
-        for li in &model.layers {
-            weight_bufs.push(self.engine.upload(&li.wa1)?);
-            if !self.offset_variant {
-                weight_bufs.push(self.engine.upload(&li.wa2)?);
-            }
-            weight_bufs.push(self.engine.upload(&li.wd)?);
-            weight_bufs.push(self.engine.upload(&li.bias)?);
-            weight_bufs.push(self.engine.upload(&Tensor::scalar(li.lsb))?);
-            weight_bufs.push(self.engine.upload(&Tensor::scalar(li.clip))?);
-        }
-        let exe = self.engine.load(&self.hlo)?;
-
-        let mut hits = 0usize;
-        let mut total = 0usize;
-        for (xb, labels) in self.x_bufs.iter().zip(&self.labels) {
-            let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weight_bufs.len());
-            inputs.push(xb);
-            inputs.extend(weight_bufs.iter());
-            let logits = Engine::run_buffers(exe, &inputs)
-                .context("executing inference graph")?;
-            ensure!(
-                logits.len() == self.batch * self.num_classes,
-                "logit shape mismatch: {} vs {}x{}",
-                logits.len(),
-                self.batch,
-                self.num_classes
-            );
-            for (b, &label) in labels.iter().enumerate() {
-                if label < 0 {
-                    continue; // wrap padding
-                }
-                let row = &logits[b * self.num_classes..(b + 1) * self.num_classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i as i32)
-                    .unwrap();
-                hits += (pred == label) as usize;
-                total += 1;
-            }
-        }
-        Ok(hits as f64 / total.max(1) as f64)
-    }
 }

@@ -1,14 +1,17 @@
-//! Runtime: load AOT-compiled HLO artifacts and execute them via PJRT.
+//! Runtime: load AOT-compiled artifacts (metadata, weight blobs, datasets).
 //!
-//! Python (jax + pallas) runs only at build time; this module is everything
-//! the request path needs: a CPU PJRT client (`xla` crate), the artifact
-//! metadata contract shared with `python/compile/aot.py`, and an executor
-//! that caches compiled executables and device-resident weight buffers.
+//! Python (jax + pallas) runs only at build time; this module holds the
+//! artifact metadata contract shared with `python/compile/aot.py` and the
+//! prepared-model data types. Execution moved behind the backend
+//! abstraction in [`crate::exec`]: the PJRT engine ([`Engine`], cargo
+//! feature `pjrt`) is one backend, the pure-rust interpreter the other.
 
 pub mod artifact;
 pub mod executor;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifact::{Artifact, DatasetBlob, DatasetMeta, LayerInfo};
-pub use executor::ModelExecutor;
+pub use executor::{LayerInputs, PreparedModel};
+#[cfg(feature = "pjrt")]
 pub use pjrt::Engine;

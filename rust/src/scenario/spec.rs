@@ -36,6 +36,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::eval::prepare::{ExperimentConfig, Method};
+use crate::exec::BackendKind;
 use crate::noise::{CellKind, CellModel};
 use crate::quantize::QuantConfig;
 use crate::util::json::Json;
@@ -99,6 +100,10 @@ pub struct Scenario {
     /// Independent variation draws to average over.
     pub repeats: usize,
     pub seed: u64,
+    /// Execution backend the scenario runs on (`"pjrt-cpu"` | `"native"`
+    /// in JSON; absent = the build's default). Parsed strictly — an
+    /// unknown backend fails the parse rather than silently substituting.
+    pub backend: BackendKind,
 }
 
 impl Scenario {
@@ -136,6 +141,7 @@ impl Scenario {
             n_eval: cfg.n_eval,
             repeats: if clean { 1 } else { cfg.repeats },
             seed: cfg.seed,
+            backend: BackendKind::default(),
         }
     }
 
@@ -230,6 +236,12 @@ impl Scenario {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Select the execution backend (see [`BackendKind`]).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -331,6 +343,7 @@ impl Scenario {
         m.insert("n_eval".to_string(), Json::Num(self.n_eval as f64));
         m.insert("repeats".to_string(), Json::Num(self.repeats as f64));
         m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("backend".to_string(), Json::Str(self.backend.name().to_string()));
         Json::Obj(m)
     }
 
@@ -339,7 +352,7 @@ impl Scenario {
             j,
             &[
                 "name", "model", "split", "quant", "perturb", "readout", "group", "n_eval",
-                "repeats", "seed",
+                "repeats", "seed", "backend",
             ],
             "scenario",
         )?;
@@ -372,6 +385,16 @@ impl Scenario {
                 .ok_or_else(|| anyhow::anyhow!("'name' is not a string"))?
                 .to_string(),
         };
+        // absent/null takes the build default; a present key must parse
+        // strictly (an unknown backend name is an error, never a fallback)
+        let backend = match j.get("backend") {
+            None | Some(Json::Null) => BackendKind::default(),
+            Some(v) => BackendKind::parse(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("'backend' is not a string"))?,
+            )
+            .context("scenario 'backend'")?,
+        };
         Ok(Scenario {
             name,
             model: j.str_of("model")?.to_string(),
@@ -383,6 +406,7 @@ impl Scenario {
             n_eval: opt_usize(j, "n_eval", 500)?,
             repeats: opt_usize(j, "repeats", 3)?,
             seed: opt_f64(j, "seed", 0xD1CE as f64)? as u64,
+            backend,
         })
     }
 
@@ -645,6 +669,31 @@ mod tests {
         assert_eq!(sc.readout, ReadoutSpec::Ideal);
         assert!(sc.perturb.is_empty());
         assert_eq!(sc.method_label(), "Clean");
+        assert_eq!(sc.backend, BackendKind::default(), "absent backend = build default");
+    }
+
+    #[test]
+    fn backend_field_parses_strictly_and_round_trips() {
+        let sc = Scenario::parse(
+            r#"{"model": "m", "split": {"kind": "all_analog"}, "backend": "native"}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.backend, BackendKind::Native);
+        let text = sc.to_json().to_string();
+        assert!(text.contains("\"backend\":\"native\""), "{text}");
+        assert_eq!(Scenario::parse(&text).unwrap(), sc);
+
+        // unknown or mistyped backends must fail loudly, never fall back
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"backend":"cuda"}"#)
+                .is_err(),
+            "unknown backend name"
+        );
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"backend":5}"#)
+                .is_err(),
+            "non-string backend"
+        );
     }
 
     #[test]

@@ -1,5 +1,9 @@
 //! Replicated serving: a router load-balancing over N replicas, each with
-//! its own PJRT engine and an *independent* conductance-variation draw.
+//! its own execution-backend handle and an *independent*
+//! conductance-variation draw. The scenario's `backend` field picks the
+//! substrate: PJRT engines are per-replica; the thread-safe native
+//! interpreter is shared fleet-wide, so each graph variant compiles once
+//! for the whole fleet (probe it via `Router::compiled_graphs`).
 //!
 //! The single-worker [`crate::coordinator::BatchServer`] caps throughput at
 //! one batch at a time and pins every request to one variation instance.
@@ -8,8 +12,9 @@
 //!
 //! * [`Router`] — round-robin + spillover load balancing, bounded
 //!   per-replica admission queues, shed-on-full with a typed [`ServeError`];
-//! * [`Replica`] — one worker thread = one engine + one dynamic-batching
-//!   loop + one variation draw, prepared from the fleet's shared
+//! * [`Replica`] — one worker thread = one backend handle + one
+//!   dynamic-batching loop + one variation draw, prepared from the fleet's
+//!   shared
 //!   [`crate::scenario::Scenario`] and seeded per (replica, generation);
 //! * [`ReplicaHealth`] / [`HealthPolicy`] — labeled canary probes whose
 //!   observed accuracy flags degraded draws, recycled via

@@ -1,15 +1,17 @@
-//! One serving replica: a worker thread owning its own PJRT engine, its own
-//! dynamic-batching loop, and — the point of the fleet — its own
-//! conductance-variation draw, seeded per (replica, generation).
+//! One serving replica: a worker thread owning its own execution backend
+//! handle, its own dynamic-batching loop, and — the point of the fleet —
+//! its own conductance-variation draw, seeded per (replica, generation).
 //!
 //! A replica is prepared from a declarative [`Scenario`]: the router hands
 //! every spawn (initial or recycle) the same scenario with only the seed
 //! swapped, so "what this fleet serves" is one JSON-roundtrippable value.
 //!
-//! The PJRT client is built *inside* the worker thread (it is not `Send`),
-//! so `spawn` hands the construction parameters in and waits on a ready
-//! channel for either the replica's variation fingerprint or the
-//! construction error.
+//! The backend comes from a [`BackendProvider`]: the thread-safe native
+//! interpreter is shared fleet-wide (one compile-once graph cache for all
+//! replicas), while a PJRT client is built *inside* the worker thread (it
+//! is not `Send`). Either way `spawn` hands the construction parameters in
+//! and waits on a ready channel for either the replica's variation
+//! fingerprint or the construction error.
 
 use anyhow::{anyhow, Context, Result};
 use std::sync::mpsc;
@@ -18,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{serve_requests, BatchContext, InferenceRequest};
 use crate::coordinator::Metrics;
+use crate::exec::BackendProvider;
 use crate::scenario::Scenario;
 
 use super::admission::{Gate, Rejection};
@@ -55,16 +58,20 @@ pub struct Replica {
 }
 
 impl Replica {
-    /// Spawn the worker and block until its engine + variation instance are
-    /// ready (or construction failed, surfaced here rather than at join).
-    /// The replica re-prepares from `scenario` with `spec.seed` as its own
-    /// variation seed — recycling passes the same scenario, new seed.
+    /// Spawn the worker and block until its backend + variation instance
+    /// are ready (or construction failed, surfaced here rather than at
+    /// join). The replica re-prepares from `scenario` with `spec.seed` as
+    /// its own variation seed — recycling passes the same scenario, new
+    /// seed — and executes on a backend from `provider` (shared for the
+    /// native interpreter, built in-thread for PJRT).
     pub fn spawn(
         artifacts: std::path::PathBuf,
         scenario: &Scenario,
+        provider: &BackendProvider,
         spec: ReplicaSpec,
     ) -> Result<Replica> {
         let sc = scenario.clone().with_seed(spec.seed);
+        let provider = provider.clone();
         let (gate, rx) = Gate::bounded(spec.queue_depth);
         let metrics = Arc::new(Metrics::new());
         let health = Arc::new(ReplicaHealth::new());
@@ -74,7 +81,10 @@ impl Replica {
         let worker = std::thread::Builder::new()
             .name(format!("replica-{}", spec.id))
             .spawn(move || -> Result<()> {
-                let ctx = match BatchContext::from_scenario(&artifacts, &sc) {
+                let built = provider
+                    .instantiate()
+                    .and_then(|backend| BatchContext::with_backend(&artifacts, &sc, backend));
+                let ctx = match built {
                     Ok(ctx) => {
                         let _ = ready_tx
                             .send(Ok((ctx.fingerprint(), ctx.batch_size(), ctx.per_image())));

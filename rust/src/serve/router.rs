@@ -20,6 +20,7 @@ use std::time::Duration;
 
 use crate::coordinator::MetricsSnapshot;
 use crate::eval::ExperimentConfig;
+use crate::exec::BackendProvider;
 use crate::runtime::{Artifact, DatasetBlob, DatasetMeta};
 use crate::scenario::Scenario;
 use crate::util::rng::Rng;
@@ -124,6 +125,11 @@ fn replica_seed(base: u64, id: usize, generation: u64) -> u64 {
 struct RouterShared {
     artifacts: std::path::PathBuf,
     scenario: Scenario,
+    /// How replicas get their execution backend (the scenario's `backend`
+    /// field decides): shared fleet-wide for the thread-safe native
+    /// interpreter — one compile-once graph cache for the whole fleet — or
+    /// per-replica for PJRT.
+    backend: BackendProvider,
     fleet: FleetConfig,
     /// Resolved admission depth (the 0-sentinel replaced by 2 × batch).
     queue_depth: usize,
@@ -170,6 +176,7 @@ impl Router {
         let art = Artifact::load(&artifacts, &scenario.model)?;
         let queue_depth = if fleet.queue_depth == 0 { 2 * art.batch } else { fleet.queue_depth };
         let per_image = DatasetMeta::load(&artifacts, &art.dataset)?.image_elems();
+        let backend = BackendProvider::for_kind(scenario.backend)?;
         let mut slots = Vec::with_capacity(fleet.replicas);
         for id in 0..fleet.replicas {
             let spec = ReplicaSpec {
@@ -179,11 +186,17 @@ impl Router {
                 max_wait: fleet.max_wait,
                 queue_depth,
             };
-            slots.push(RwLock::new(Replica::spawn(artifacts.clone(), &scenario, spec)?));
+            slots.push(RwLock::new(Replica::spawn(
+                artifacts.clone(),
+                &scenario,
+                &backend,
+                spec,
+            )?));
         }
         let shared = Arc::new(RouterShared {
             artifacts,
             scenario,
+            backend,
             fleet,
             queue_depth,
             per_image,
@@ -237,6 +250,14 @@ impl Router {
     /// Whether the background health monitor is running.
     pub fn has_monitor(&self) -> bool {
         self.monitor.is_some()
+    }
+
+    /// Graph variants compiled by the fleet-shared backend cache, or
+    /// `None` when the backend is per-replica (PJRT). With the native
+    /// backend, an N-replica fleet serving one scenario reports exactly 1
+    /// here — each variant compiles once per fleet, not once per replica.
+    pub fn compiled_graphs(&self) -> Option<u64> {
+        self.shared.backend.shared_compiled_graphs()
     }
 
     pub fn replica_count(&self) -> usize {
@@ -410,7 +431,8 @@ impl RouterShared {
                 max_wait: self.fleet.max_wait,
                 queue_depth: self.queue_depth,
             };
-            let fresh = Replica::spawn(self.artifacts.clone(), &self.scenario, spec)?;
+            let fresh =
+                Replica::spawn(self.artifacts.clone(), &self.scenario, &self.backend, spec)?;
             let swapped = {
                 let mut replica = slot.write().unwrap();
                 // a concurrent recycle may have swapped this slot while we

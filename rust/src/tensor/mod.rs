@@ -85,6 +85,28 @@ impl Tensor {
     }
 }
 
+/// Row-wise argmax over a flat `[rows, num_classes]` logits buffer — the
+/// prediction scan shared by the evaluator's accuracy scoring and the
+/// batcher's fan-out. Ties resolve to the *last* maximal index, matching
+/// `Iterator::max_by` on `f32::total_cmp` (the behavior both former copies
+/// of this loop had). `logits.len()` must be a multiple of `num_classes`;
+/// a trailing partial row would mean a shape bug upstream, so it panics in
+/// debug and is ignored by `chunks_exact` semantics otherwise.
+pub fn argmax_rows(logits: &[f32], num_classes: usize) -> Vec<i32> {
+    assert!(num_classes > 0, "argmax over zero classes");
+    debug_assert_eq!(logits.len() % num_classes, 0, "partial logits row");
+    logits
+        .chunks_exact(num_classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i as i32)
+                .unwrap()
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +129,29 @@ mod tests {
         let t = Tensor::new(vec![1, 5], vec![0.0, -2.0, 0.0, 3.0, 0.0]);
         assert_eq!(t.nonzero_range(), Some((-2.0, 3.0)));
         assert_eq!(Tensor::zeros(vec![4]).nonzero_range(), None);
+    }
+
+    #[test]
+    fn argmax_rows_scans_each_row() {
+        let logits = [0.1, 0.9, 0.8, 0.2, -1.0, -0.5];
+        assert_eq!(argmax_rows(&logits, 2), vec![1, 0, 1]);
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+        assert_eq!(argmax_rows(&[], 4), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn argmax_rows_ties_resolve_to_last_index() {
+        // both former copies of this loop used max_by(total_cmp), which
+        // keeps the *last* maximal element — pinned here so the shared
+        // helper cannot silently change fan-out predictions
+        assert_eq!(argmax_rows(&[0.7, 0.7, 0.1], 3), vec![1]);
+        // total_cmp orders -0.0 < 0.0
+        assert_eq!(argmax_rows(&[0.0, -0.0], 2), vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "argmax over zero classes")]
+    fn argmax_rows_rejects_zero_classes() {
+        argmax_rows(&[1.0], 0);
     }
 }

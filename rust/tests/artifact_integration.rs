@@ -5,7 +5,8 @@
 //! test` stays green on a fresh checkout.
 
 use hybridac::eval::{prepare, Evaluator, ExperimentConfig, Method};
-use hybridac::runtime::{Artifact, DatasetBlob, Engine, ModelExecutor};
+use hybridac::exec::{BackendKind, ModelExecutor};
+use hybridac::runtime::{Artifact, DatasetBlob};
 use hybridac::selection::{IwsMasks, Partition};
 use hybridac::util::prop::{check, gen};
 use hybridac::util::rng::Rng;
@@ -184,8 +185,9 @@ fn executor_is_deterministic_given_seed() {
     let art = Artifact::load(&dir, "vggmini_c10s").unwrap();
     let data = DatasetBlob::load(&dir, "c10s").unwrap();
     let cfg = ExperimentConfig::paper_default(Method::Hybrid { frac: 0.16 });
-    let mut engine = Engine::cpu().unwrap();
-    let mut exec = ModelExecutor::new(&mut engine, &art, &data, 250, cfg.group).unwrap();
+    // the build's default backend: pjrt when compiled in, native otherwise
+    let backend = BackendKind::default().create().unwrap();
+    let exec = ModelExecutor::new(backend.as_ref(), &art, &data, 250, cfg.group).unwrap();
     let mut r1 = Rng::new(99);
     let m1 = prepare(&art, &cfg, &mut r1);
     let a1 = exec.accuracy(&m1).unwrap();

@@ -1,0 +1,303 @@
+//! Backend conformance: one shared suite of execution-contract checks, run
+//! unconditionally against the pure-rust `NativeBackend` (on the
+//! materialized synthetic artifact — no `make artifacts`, no xla) and,
+//! behind the usual artifact gate, against `PjrtBackend`.
+//!
+//! These are also the acceptance probes for the backend abstraction:
+//! scenario evaluation, the batch server, and a whole replicated serve
+//! fleet run end-to-end on the native backend — a code path that never
+//! constructs an xla/PJRT engine (in a `--no-default-features` build that
+//! is type-level: the pjrt module does not exist) — and an N-replica
+//! native fleet compiles each graph variant exactly once through the
+//! fleet-shared `CompiledGraphCache`.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use hybridac::coordinator::BatchServer;
+use hybridac::eval::{Evaluator, Method};
+use hybridac::exec::{BackendKind, ExecBackend, ModelExecutor, ModelInstance};
+use hybridac::runtime::{Artifact, DatasetBlob, PreparedModel};
+use hybridac::scenario::Scenario;
+use hybridac::serve::{drive_workload, FleetConfig, HealthPolicy, HealthStatus, Router};
+use hybridac::util::rng::Rng;
+
+/// Materialize the synthetic artifact + dataset once per test process
+/// (`OnceLock` serializes the racing test threads).
+fn synthetic_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir()
+            .join(format!("hybridac-conformance-{}", std::process::id()));
+        Artifact::materialize_synthetic(&dir).expect("materialize synthetic artifact");
+        dir
+    })
+    .clone()
+}
+
+fn hybrid_scenario(model: &str) -> Scenario {
+    Scenario::paper_default("conformance", model, Method::Hybrid { frac: 0.16 })
+        .with_backend(BackendKind::Native)
+        .with_eval(32, 2)
+}
+
+fn prepared(art: &Artifact, sc: &Scenario) -> PreparedModel {
+    let mut rng = Rng::new(sc.seed);
+    sc.pipeline().prepare(art, &mut rng)
+}
+
+/// Compile + upload + run one staged batch; the shared primitive of the
+/// suite, exercised identically against either backend.
+fn run_one_batch(
+    backend: &dyn ExecBackend,
+    art: &Artifact,
+    data: &DatasetBlob,
+    model: &PreparedModel,
+    offset: bool,
+) -> Vec<f32> {
+    let compiled = backend.compile(art, art.group, offset).unwrap();
+    let instance = ModelInstance::upload(backend, model, compiled.offset_variant).unwrap();
+    let (x, _labels) = data.batch(0, art.batch);
+    let xbuf = backend.upload(&x).unwrap();
+    instance.run(backend, &compiled.exe, &xbuf).unwrap()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "logit counts differ");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+// ---------------------------------------------------------------------------
+// native backend: always runs, no artifacts, no xla
+
+#[test]
+fn native_logits_identical_across_backend_instances() {
+    let dir = synthetic_dir();
+    let art = Artifact::load(&dir, "synthetic").unwrap();
+    let data = DatasetBlob::load(&dir, "synthetic").unwrap();
+    let sc = hybrid_scenario("synthetic");
+    let model = prepared(&art, &sc);
+
+    let a = BackendKind::Native.create().unwrap();
+    let b = BackendKind::Native.create().unwrap();
+    assert_eq!(a.kind(), BackendKind::Native);
+    let la = run_one_batch(a.as_ref(), &art, &data, &model, false);
+    let lb = run_one_batch(b.as_ref(), &art, &data, &model, false);
+    assert_eq!(la.len(), art.batch * art.num_classes);
+    assert!(la.iter().all(|v| v.is_finite()), "logits must be finite");
+    let diff = max_abs_diff(&la, &lb);
+    assert!(diff <= 1e-4, "two backend instances diverged by {diff}");
+    // each instance compiled the variant once
+    assert_eq!(a.compiled_graphs(), 1);
+    // re-running on the same instance hits the cache
+    let _ = run_one_batch(a.as_ref(), &art, &data, &model, false);
+    assert_eq!(a.compiled_graphs(), 1, "second run must reuse the compiled graph");
+}
+
+#[test]
+fn native_offset_variant_matches_full_graph() {
+    let dir = synthetic_dir();
+    let art = Artifact::load(&dir, "synthetic").unwrap();
+    let data = DatasetBlob::load(&dir, "synthetic").unwrap();
+    // offset cells: wa2 is all zeros, so skipping it must not change math
+    let sc = hybrid_scenario("synthetic");
+    let model = prepared(&art, &sc);
+
+    let backend = BackendKind::Native.create().unwrap();
+    let full = run_one_batch(backend.as_ref(), &art, &data, &model, false);
+    let fast = run_one_batch(backend.as_ref(), &art, &data, &model, true);
+    let diff = max_abs_diff(&full, &fast);
+    assert!(diff <= 1e-4, "offset fast path diverged by {diff}");
+    assert_eq!(backend.compiled_graphs(), 2, "full + offset variants compile separately");
+}
+
+#[test]
+fn native_evaluator_runs_scenarios_end_to_end() {
+    let dir = synthetic_dir();
+    let sc = hybrid_scenario("synthetic");
+    let mut ev = Evaluator::for_scenario(&dir, &sc).unwrap();
+    assert_eq!(ev.backend_kind(), BackendKind::Native);
+    let acc = ev.run_scenario(&sc).unwrap();
+    assert_eq!(acc.repeats, 2);
+    assert!((0.0..=1.0).contains(&acc.mean), "accuracy {} out of range", acc.mean);
+
+    // deterministic: the same scenario scores identically on a fresh run
+    let again = ev.run_scenario(&sc).unwrap();
+    assert_eq!(acc.mean, again.mean, "same seed, same accuracy");
+
+    // the clean (perturbation-free) scenario runs a single repeat
+    let clean = Scenario::paper_default("clean", "synthetic", Method::Clean)
+        .with_backend(BackendKind::Native)
+        .with_eval(32, 3);
+    let clean_acc = ev.run_scenario(&clean).unwrap();
+    assert_eq!(clean_acc.repeats, 1);
+}
+
+#[test]
+fn native_scenario_driver_end_to_end() {
+    // the exact path of `hybridac scenario --name paper-hybrid --model
+    // synthetic --backend native`: accuracy + hardware estimation, with no
+    // PJRT engine anywhere on the call path
+    let dir = synthetic_dir();
+    let sc = Scenario::builtin("paper-hybrid", "synthetic")
+        .unwrap()
+        .with_backend(BackendKind::Native)
+        .with_eval(24, 1);
+    let rep = hybridac::coordinator::run_scenario(&dir, &sc, 8).unwrap();
+    assert_eq!(rep.method, "HybridAC");
+    assert!((0.0..=1.0).contains(&rep.accuracy_mean));
+    assert!(rep.crossbars > 0, "hardware mapping must allocate crossbars");
+    assert!(rep.exec_seconds > 0.0);
+}
+
+#[test]
+fn native_batch_server_round_trip() {
+    let dir = synthetic_dir();
+    let data = DatasetBlob::load(&dir, "synthetic").unwrap();
+    let sc = hybrid_scenario("synthetic");
+    let server =
+        BatchServer::start_scenario(dir.clone(), sc, Duration::from_millis(3)).unwrap();
+    let per = data.image_elems();
+    let rxs: Vec<_> = (0..24)
+        .map(|i| {
+            let idx = i % data.n;
+            server.submit(data.images[idx * per..(idx + 1) * per].to_vec())
+        })
+        .collect();
+    for rx in rxs {
+        let pred = rx.recv().expect("every request answered");
+        assert!((0..10).contains(&pred), "prediction {pred} out of class range");
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn native_fleet_compiles_each_graph_variant_exactly_once() {
+    let dir = synthetic_dir();
+    let data = Arc::new(DatasetBlob::load(&dir, "synthetic").unwrap());
+    let sc = hybrid_scenario("synthetic");
+    let mut fleet = FleetConfig::new(4);
+    fleet.max_wait = Duration::from_millis(2);
+    let router = Arc::new(Router::start_scenario(dir.clone(), sc, fleet).unwrap());
+
+    // the headline cache property: 4 replicas, 1 graph variant, exactly 1
+    // compilation through the fleet-shared CompiledGraphCache
+    assert_eq!(
+        router.compiled_graphs(),
+        Some(1),
+        "a 4-replica native fleet must compile the variant once, not 4 times"
+    );
+
+    // every replica holds an independent variation draw
+    let fm = router.fleet_metrics();
+    assert_eq!(fm.replicas.len(), 4);
+    for (i, a) in fm.replicas.iter().enumerate() {
+        assert!(a.alive, "replica {i} died");
+        for b in fm.replicas.iter().skip(i + 1) {
+            assert_ne!(
+                a.fingerprint, b.fingerprint,
+                "replicas {} and {} share a variation draw",
+                a.id, b.id
+            );
+        }
+    }
+
+    // the fleet serves traffic end-to-end
+    let (_hits, total) = drive_workload(&router, &data, 64, 4).unwrap();
+    assert_eq!(total, 64, "every request must be answered");
+    assert_eq!(router.compiled_graphs(), Some(1), "serving must not recompile");
+    Arc::try_unwrap(router).ok().unwrap().shutdown().unwrap();
+}
+
+#[test]
+fn native_recycle_redraws_without_recompiling() {
+    let dir = synthetic_dir();
+    let data = DatasetBlob::load(&dir, "synthetic").unwrap();
+    let sc = hybrid_scenario("synthetic");
+    let mut fleet = FleetConfig::new(1);
+    fleet.max_wait = Duration::from_millis(2);
+    // an unreachable accuracy floor flags any replica as degraded
+    fleet.health = HealthPolicy { accuracy_floor: 1.01, min_probes: 8 };
+    let router = Router::start_scenario(dir.clone(), sc, fleet).unwrap();
+
+    let before = router.fleet_metrics().replicas[0].clone();
+    router.probe(&data, 16);
+    assert_eq!(router.fleet_metrics().replicas[0].status, HealthStatus::Degraded);
+
+    let recycled = router.recycle_degraded().unwrap();
+    assert_eq!(recycled, vec![0]);
+    let after = router.fleet_metrics().replicas[0].clone();
+    assert_eq!(after.generation, before.generation + 1);
+    assert_ne!(after.fingerprint, before.fingerprint, "recycle must redraw variation");
+    // the recycled replica reuses the fleet-shared compiled graph
+    assert_eq!(router.compiled_graphs(), Some(1), "recycling must not recompile");
+
+    let per = data.image_elems();
+    let rx = router.submit(data.images[..per].to_vec()).unwrap();
+    assert!(rx.recv().is_ok(), "recycled replica serves traffic");
+    router.shutdown().unwrap();
+}
+
+#[test]
+fn executor_accuracy_is_deterministic_on_native() {
+    let dir = synthetic_dir();
+    let art = Artifact::load(&dir, "synthetic").unwrap();
+    let data = DatasetBlob::load(&dir, "synthetic").unwrap();
+    let sc = hybrid_scenario("synthetic");
+    let model = prepared(&art, &sc);
+    let backend = BackendKind::Native.create().unwrap();
+    let exec = ModelExecutor::new(backend.as_ref(), &art, &data, 32, art.group).unwrap();
+    let a1 = exec.accuracy(&model).unwrap();
+    let a2 = exec.accuracy(&model).unwrap();
+    assert_eq!(a1, a2, "same instance must score identically");
+    assert!((0.0..=1.0).contains(&a1));
+}
+
+// ---------------------------------------------------------------------------
+// pjrt backend: the same contract, behind the usual artifact gate
+
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_backend_conformance_over_real_artifacts() {
+    use hybridac::tensor::argmax_rows;
+
+    let dir = hybridac::artifacts_dir();
+    if !dir.join("vggmini_c10s.meta.json").exists() {
+        eprintln!("[skip] artifacts not built; run `make artifacts`");
+        return;
+    }
+    let backend = match BackendKind::PjrtCpu.create() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("[skip] pjrt backend unavailable: {e:#}");
+            return;
+        }
+    };
+    let art = Artifact::load(&dir, "vggmini_c10s").unwrap();
+    let data = DatasetBlob::load(&dir, &art.dataset).unwrap();
+    let sc = Scenario::paper_default("conformance", "vggmini_c10s", Method::Hybrid { frac: 0.16 });
+    let model = prepared(&art, &sc);
+
+    // determinism + compile-once, the same checks the native leg runs
+    let l1 = run_one_batch(backend.as_ref(), &art, &data, &model, false);
+    let l2 = run_one_batch(backend.as_ref(), &art, &data, &model, false);
+    assert_eq!(l1.len(), art.batch * art.num_classes);
+    let diff = max_abs_diff(&l1, &l2);
+    assert!(diff <= 1e-4, "pjrt reruns diverged by {diff}");
+    assert_eq!(backend.compiled_graphs(), 1, "second run must hit the graph cache");
+
+    // cross-backend: the native interpreter runs the same real artifact;
+    // f32 summation order and ADC rounding boundaries differ, so compare
+    // predictions, not bits
+    let native = BackendKind::Native.create().unwrap();
+    let ln = run_one_batch(native.as_ref(), &art, &data, &model, false);
+    let pp = argmax_rows(&l1, art.num_classes);
+    let pn = argmax_rows(&ln, art.num_classes);
+    let agree = pp.iter().zip(&pn).filter(|(a, b)| a == b).count();
+    assert!(
+        agree * 10 >= pp.len() * 9,
+        "native and pjrt predictions agree on only {agree}/{} rows",
+        pp.len()
+    );
+}

@@ -269,6 +269,11 @@ fn random_scenario(r: &mut Rng) -> Scenario {
         n_eval: 1 + r.below(2000),
         repeats: 1 + r.below(8),
         seed: r.next_u64() >> 11, // < 2^53: exact through a JSON number
+        backend: if r.below(2) == 0 {
+            hybridac::exec::BackendKind::Native
+        } else {
+            hybridac::exec::BackendKind::default()
+        },
     }
 }
 
