@@ -4,6 +4,8 @@
 //!   1. noise generation (gaussian fill over every analog weight),
 //!   2. weight preparation (the scenario pipeline: split + quantize +
 //!      perturb + polarity), with and without the extra fault stages,
+//!   2c. the packed matmul micro-kernels on the artifact's real layer
+//!       shapes (`matmul_kernels`),
 //!   3. upload + execute of one batch on the selected backend,
 //!   4. end-to-end accuracy evaluation (one repeat),
 //!   5. batch-server round trip.
@@ -14,9 +16,14 @@
 //! perf trajectory.
 //!
 //! Backend selection: `cargo bench --bench perf -- native` (or
-//! `HYBRIDAC_BACKEND=native`); default is the build default. With no built
+//! `HYBRIDAC_BACKEND=native`); default is the build default. Native kernel
+//! threads come from `HYBRIDAC_THREADS` (0/absent = auto). With no built
 //! artifacts, the native backend falls back to the materialized synthetic
 //! artifact so the trajectory never comes up empty.
+//!
+//! Regression gate: `-- --baseline path/to/BENCH_perf.json` prints the
+//! per-stage speedup against a prior run and exits nonzero if any stage
+//! regressed by more than 1.5x.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -24,7 +31,8 @@ use std::time::Duration;
 use hybridac::benchkit::{time_stats, StageTiming, Stopwatch};
 use hybridac::coordinator::BatchServer;
 use hybridac::eval::Method;
-use hybridac::exec::{BackendKind, ModelExecutor};
+use hybridac::exec::native::kernels::{crossbar_matmul_packed, PackedMatrix};
+use hybridac::exec::{BackendKind, ModelExecutor, NativeConfig};
 use hybridac::runtime::{Artifact, DatasetBlob};
 use hybridac::scenario::{PerturbSpec, Scenario};
 use hybridac::util::json::Json;
@@ -42,16 +50,48 @@ fn stage_json(s: &StageTiming) -> Json {
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("perf");
-    // backend: first non-flag CLI arg (cargo bench passes `--bench`) or
-    // the HYBRIDAC_BACKEND env var; default = build default
-    let backend_kind = match std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-'))
-        .or_else(|| std::env::var("HYBRIDAC_BACKEND").ok())
-    {
+    // backend: first non-flag CLI arg (cargo bench may pass harness flags)
+    // or the HYBRIDAC_BACKEND env var; default = build default.
+    // `--baseline FILE` compares this run's stages against a prior
+    // BENCH_perf.json and exits nonzero on a >1.5x regression.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut backend_arg: Option<String> = None;
+    let mut baseline: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--baseline" => {
+                i += 1;
+                baseline = Some(
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow::anyhow!("--baseline needs a file path"))?,
+                );
+            }
+            s if s.starts_with("--baseline=") => {
+                baseline = Some(s["--baseline=".len()..].to_string());
+            }
+            // cargo bench passes `--bench` to the binary even with
+            // harness = false; every other dash argument is a typo —
+            // failing loudly beats silently skipping the regression gate
+            "--bench" => {}
+            s if s.starts_with('-') => {
+                anyhow::bail!("unknown perf-bench flag '{s}' (known: --baseline FILE)")
+            }
+            s => backend_arg = Some(s.to_string()),
+        }
+        i += 1;
+    }
+    let backend_kind = match backend_arg.or_else(|| std::env::var("HYBRIDAC_BACKEND").ok()) {
         Some(s) => BackendKind::parse(&s)?,
         None => BackendKind::default(),
     };
+    // native kernel workers (0 = auto); a pure throughput knob
+    let threads: usize = std::env::var("HYBRIDAC_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let native_cfg = NativeConfig::with_threads(threads);
 
     let dir = hybridac::artifacts_dir();
     let want = "resnet18m_c10s";
@@ -82,17 +122,24 @@ fn main() -> anyhow::Result<()> {
 
     let mut stages: Vec<StageTiming> = Vec::new();
 
-    // 1. raw gaussian fill at weight-blob scale
+    // 1. raw gaussian fill at weight-blob scale — sequential, then the
+    // chunk-exact parallel fill (same stream, sharded over cores)
     let n_weights = art.total_weights;
     let mut buf = vec![0.0f32; n_weights];
     let mut rng = Rng::new(7);
     stages.push(time_stats("gaussian fill (all weights)", 20, || {
         rng.fill_normal(&mut buf);
     }));
+    let fill_threads = native_cfg.resolve_threads();
+    let mut rng_par = Rng::new(7);
+    stages.push(time_stats("gaussian fill (parallel, exact stream)", 20, || {
+        rng_par.fill_normal_par(&mut buf, fill_threads);
+    }));
 
     // 2. full weight preparation through the scenario pipeline
     let sc = Scenario::paper_default("perf", &tag, Method::Hybrid { frac: 0.16 })
-        .with_backend(backend_kind);
+        .with_backend(backend_kind)
+        .with_threads(threads);
     let pipeline = sc.pipeline();
     let mut rng2 = Rng::new(8);
     stages.push(time_stats("pipeline.prepare() split+quant+noise", 10, || {
@@ -111,8 +158,50 @@ fn main() -> anyhow::Result<()> {
         let _ = faulty.prepare(&art, &mut rng2b);
     }));
 
+    // 2c. the packed micro-kernels alone, on the artifact's real layer
+    // shapes: k/n from the layer table, m = batch x an 8x8 output tile for
+    // convs (batch alone for dense heads)
+    {
+        let mut shapes: Vec<(usize, usize, usize)> = art
+            .layers
+            .iter()
+            .map(|li| {
+                let m = if li.kind == "conv" { art.batch * 64 } else { art.batch };
+                (m, li.rows(), li.cout)
+            })
+            .collect();
+        shapes.dedup();
+        if shapes.len() > 4 {
+            // first, two spread through the middle, last
+            shapes = vec![
+                shapes[0],
+                shapes[shapes.len() / 3],
+                shapes[2 * shapes.len() / 3],
+                *shapes.last().unwrap(),
+            ];
+        }
+        let mut rng_k = Rng::new(12);
+        let mut problems: Vec<(usize, usize, Vec<f32>, PackedMatrix, Vec<f32>)> = shapes
+            .iter()
+            .map(|&(m, k, n)| {
+                let mut x = vec![0.0f32; m * k];
+                rng_k.fill_normal(&mut x);
+                let mut w = vec![0.0f32; k * n];
+                rng_k.fill_normal(&mut w);
+                (m, k, x, PackedMatrix::pack(&w, k, n), vec![0.0f32; m * n])
+            })
+            .collect();
+        let kthreads = native_cfg.resolve_threads();
+        println!("  matmul_kernels shapes: {shapes:?} ({kthreads} threads)");
+        stages.push(time_stats("matmul_kernels (packed, layer shapes)", 30, || {
+            for (m, k, x, pw, out) in problems.iter_mut() {
+                crossbar_matmul_packed(x, *m, *k, pw, 0.05, 8.0, 128, out, kthreads);
+            }
+        }));
+    }
+
     // 3. upload + execute one batch — full graph (both polarity paths)
-    let backend = backend_kind.create()?;
+    let backend = backend_kind.create_with(native_cfg)?;
     let mut rng3 = Rng::new(9);
     let model = pipeline.prepare(&art, &mut rng3);
     {
@@ -148,7 +237,8 @@ fn main() -> anyhow::Result<()> {
     let server = BatchServer::start_scenario(
         dir.clone(),
         Scenario::paper_default("perf-serve", &tag, Method::Hybrid { frac: 0.16 })
-            .with_backend(backend_kind),
+            .with_backend(backend_kind)
+            .with_threads(threads),
         Duration::from_millis(5),
     )?;
     let per = data.image_elems();
@@ -183,6 +273,7 @@ fn main() -> anyhow::Result<()> {
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("perf".to_string()));
     root.insert("backend".to_string(), Json::Str(backend_kind.name().to_string()));
+    root.insert("threads".to_string(), Json::Num(native_cfg.resolve_threads() as f64));
     root.insert("model".to_string(), Json::Str(tag.clone()));
     root.insert("total_weights".to_string(), Json::Num(art.total_weights as f64));
     root.insert("batch".to_string(), Json::Num(art.batch as f64));
@@ -194,5 +285,61 @@ fn main() -> anyhow::Result<()> {
         stages.len(),
         backend_kind.name()
     );
+
+    // regression gate: per-stage speedup vs a prior BENCH_perf.json;
+    // >1.5x slower on any stage fails the run
+    if let Some(path) = baseline {
+        compare_to_baseline(&path, &stages)?;
+    }
+    Ok(())
+}
+
+/// Print per-stage speedup vs `path` (a prior `BENCH_perf.json`) and exit
+/// nonzero if any matching stage regressed by more than 1.5x in mean
+/// wall-clock. Stages absent from the baseline (new stages) are reported
+/// but never fail the gate.
+fn compare_to_baseline(path: &str, stages: &[StageTiming]) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading baseline {path}: {e}"))?;
+    let base = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing baseline {path}: {e}"))?;
+    let mut base_mean: BTreeMap<String, f64> = BTreeMap::new();
+    if let Some(arr) = base.get("stages").and_then(Json::as_arr) {
+        for s in arr {
+            if let (Some(name), Some(mean)) = (
+                s.get("name").and_then(Json::as_str),
+                s.get("mean_s").and_then(Json::as_f64),
+            ) {
+                base_mean.insert(name.to_string(), mean);
+            }
+        }
+    }
+    anyhow::ensure!(!base_mean.is_empty(), "baseline {path} has no stages");
+    let mut regressions: Vec<String> = Vec::new();
+    println!(
+        "speedup vs baseline {path} (backend {}):",
+        base.get("backend").and_then(Json::as_str).unwrap_or("?")
+    );
+    for s in stages {
+        match base_mean.get(&s.label) {
+            Some(&b) if b > 0.0 && s.mean_s > 0.0 => {
+                let speedup = b / s.mean_s;
+                println!("  {:<44} {speedup:>7.2}x", s.label);
+                if s.mean_s > 1.5 * b {
+                    regressions.push(format!(
+                        "{}: {:.4}s now vs {:.4}s baseline",
+                        s.label, s.mean_s, b
+                    ));
+                }
+            }
+            _ => println!("  {:<44} (no baseline entry)", s.label),
+        }
+    }
+    if !regressions.is_empty() {
+        eprintln!("PERF REGRESSION (>1.5x) in {} stage(s):", regressions.len());
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        std::process::exit(2);
+    }
     Ok(())
 }

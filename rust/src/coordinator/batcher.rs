@@ -140,7 +140,7 @@ impl BatchContext {
     /// execution backend, and the variation seed all come from the spec
     /// (the serving fleet re-seeds per replica generation).
     pub fn from_scenario(artifacts: &std::path::Path, sc: &Scenario) -> Result<Self> {
-        Self::with_backend(artifacts, sc, sc.backend.create()?)
+        Self::with_backend(artifacts, sc, sc.create_backend()?)
     }
 
     /// [`BatchContext::from_scenario`] on an existing backend instance —

@@ -14,7 +14,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use super::prepare::{ExperimentConfig, Method};
-use crate::exec::{BackendKind, ExecBackend, ModelExecutor};
+use crate::exec::{BackendKind, ExecBackend, ModelExecutor, NativeConfig};
 use crate::runtime::{Artifact, DatasetBlob};
 use crate::scenario::Scenario;
 use crate::util::rng::Rng;
@@ -43,14 +43,26 @@ impl Evaluator {
 
     /// Evaluator on an explicitly selected execution backend.
     pub fn with_backend(dir: &Path, tag: &str, kind: BackendKind) -> Result<Evaluator> {
-        let art = Artifact::load(dir, tag)?;
-        let data = DatasetBlob::load(dir, &art.dataset)?;
-        Ok(Evaluator { art, data, backend: kind.create()? })
+        Self::with_backend_config(dir, tag, kind, NativeConfig::default())
     }
 
-    /// Evaluator for one scenario: its model tag *and* its backend.
+    /// [`Evaluator::with_backend`] with explicit native-backend tuning
+    /// (the `--threads` CLI knob lands here).
+    pub fn with_backend_config(
+        dir: &Path,
+        tag: &str,
+        kind: BackendKind,
+        native: NativeConfig,
+    ) -> Result<Evaluator> {
+        let art = Artifact::load(dir, tag)?;
+        let data = DatasetBlob::load(dir, &art.dataset)?;
+        Ok(Evaluator { art, data, backend: kind.create_with(native)? })
+    }
+
+    /// Evaluator for one scenario: its model tag, its backend, *and* its
+    /// native tuning (`threads`).
     pub fn for_scenario(dir: &Path, sc: &Scenario) -> Result<Evaluator> {
-        Self::with_backend(dir, &sc.model, sc.backend)
+        Self::with_backend_config(dir, &sc.model, sc.backend, sc.native_config())
     }
 
     /// The backend this evaluator executes on.

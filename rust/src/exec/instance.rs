@@ -48,7 +48,10 @@ pub struct ModelInstance {
 impl ModelInstance {
     /// Upload every weight-side argument of `model`. `offset_variant` must
     /// match the compiled graph (the offset-only graph takes no `wa2`
-    /// operand — 5 args/layer instead of 6).
+    /// operand — 5 args/layer instead of 6). Matrix operands go through
+    /// [`ExecBackend::upload_weight`], so a backend with a packed kernel
+    /// layout (the native interpreter) pays the re-layout exactly once per
+    /// instance here, never per batch.
     pub fn upload(
         backend: &dyn ExecBackend,
         model: &PreparedModel,
@@ -57,11 +60,11 @@ impl ModelInstance {
         let fingerprint = weight_fingerprint(model);
         let mut bufs = Vec::with_capacity(model.layers.len() * 6);
         for li in &model.layers {
-            bufs.push(backend.upload(&li.wa1)?);
+            bufs.push(backend.upload_weight(&li.wa1)?);
             if !offset_variant {
-                bufs.push(backend.upload(&li.wa2)?);
+                bufs.push(backend.upload_weight(&li.wa2)?);
             }
-            bufs.push(backend.upload(&li.wd)?);
+            bufs.push(backend.upload_weight(&li.wd)?);
             bufs.push(backend.upload(&li.bias)?);
             bufs.push(backend.upload(&Tensor::scalar(li.lsb))?);
             bufs.push(backend.upload(&Tensor::scalar(li.clip))?);

@@ -18,7 +18,11 @@
 //!   computation (im2col + wordline-group crossbar matmul + ADC lsb/clip
 //!   quantization + fp16 partial-sum merge). No xla, no artifacts' HLO
 //!   files, no network: the whole pipeline runs end-to-end on it, which is
-//!   what a `--no-default-features` build ships.
+//!   what a `--no-default-features` build ships. Since the packed-kernel
+//!   rework it is also the fast leg: weights pack once at upload
+//!   ([`ExecBackend::upload_weight`]), matmuls run as register-tiled
+//!   micro-kernels sharded over scoped threads ([`NativeConfig`]), and
+//!   scratch buffers recycle through a per-backend arena pool.
 //!
 //! The seams this opens are exactly the ROADMAP's next scaling steps: a GPU
 //! PJRT backend is a third [`ExecBackend`] impl, and cross-replica sharding
@@ -47,7 +51,7 @@ pub mod pjrt;
 pub use cache::{CompiledGraphCache, GraphKey};
 pub use executor::ModelExecutor;
 pub use instance::{weight_fingerprint, ModelInstance};
-pub use native::{NativeBackend, NativeGraph};
+pub use native::{NativeBackend, NativeConfig, NativeGraph, PackedMatrix};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
@@ -90,14 +94,21 @@ impl BackendKind {
         }
     }
 
-    /// Instantiate the backend. Requesting `pjrt-cpu` from a build without
-    /// the `pjrt` feature is a runtime error, never a silent substitution.
+    /// Instantiate the backend with default tuning. Requesting `pjrt-cpu`
+    /// from a build without the `pjrt` feature is a runtime error, never a
+    /// silent substitution.
+    pub fn create(self) -> Result<Arc<dyn ExecBackend>> {
+        self.create_with(NativeConfig::default())
+    }
+
+    /// [`BackendKind::create`] with explicit native-backend tuning (the
+    /// `threads` knob; ignored by PJRT, which XLA threads internally).
     // Arc rather than Rc so one handle type serves both backends; the PJRT
     // client is !Send and its Arc never leaves the constructing thread.
     #[allow(clippy::arc_with_non_send_sync)]
-    pub fn create(self) -> Result<Arc<dyn ExecBackend>> {
+    pub fn create_with(self, native: NativeConfig) -> Result<Arc<dyn ExecBackend>> {
         match self {
-            BackendKind::Native => Ok(Arc::new(NativeBackend::new())),
+            BackendKind::Native => Ok(Arc::new(NativeBackend::with_config(native))),
             #[cfg(feature = "pjrt")]
             BackendKind::PjrtCpu => Ok(Arc::new(PjrtBackend::cpu()?)),
             #[cfg(not(feature = "pjrt"))]
@@ -124,6 +135,9 @@ impl Default for BackendKind {
 pub enum DeviceBuffer {
     /// Host-memory tensor (the native interpreter's "device").
     Host(Tensor),
+    /// A weight matrix packed into the native kernels' column-tiled layout
+    /// at upload time (see [`ExecBackend::upload_weight`]).
+    HostPacked(PackedMatrix),
     #[cfg(feature = "pjrt")]
     Pjrt(xla::PjRtBuffer),
 }
@@ -166,6 +180,14 @@ pub trait ExecBackend {
     /// Move a host tensor to the device.
     fn upload(&self, t: &Tensor) -> Result<DeviceBuffer>;
 
+    /// Upload a weight-matrix operand. A backend may re-lay it out for its
+    /// kernels (the native backend packs 2-D matrices into the column-tiled
+    /// panel layout once here, so execution never repacks); the default is
+    /// a plain [`ExecBackend::upload`].
+    fn upload_weight(&self, t: &Tensor) -> Result<DeviceBuffer> {
+        self.upload(t)
+    }
+
     /// Execute with device-resident inputs in the positional-argument
     /// order; returns the flat f32 logits payload.
     fn run(&self, exe: &Executable, inputs: &[&DeviceBuffer]) -> Result<Vec<f32>>;
@@ -194,8 +216,16 @@ pub enum BackendProvider {
 
 impl BackendProvider {
     pub fn for_kind(kind: BackendKind) -> Result<BackendProvider> {
+        Self::for_kind_with(kind, NativeConfig::default())
+    }
+
+    /// [`BackendProvider::for_kind`] with explicit native-backend tuning
+    /// for the fleet-shared instance.
+    pub fn for_kind_with(kind: BackendKind, native: NativeConfig) -> Result<BackendProvider> {
         match kind {
-            BackendKind::Native => Ok(BackendProvider::Shared(Arc::new(NativeBackend::new()))),
+            BackendKind::Native => {
+                Ok(BackendProvider::Shared(Arc::new(NativeBackend::with_config(native))))
+            }
             #[cfg(feature = "pjrt")]
             BackendKind::PjrtCpu => Ok(BackendProvider::PerReplicaPjrt),
             #[cfg(not(feature = "pjrt"))]

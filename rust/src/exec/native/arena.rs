@@ -1,0 +1,179 @@
+//! Zero-alloc(-steady-state) execution scratch: [`Arena`] recycles the
+//! interpreter's working buffers (im2col patches, per-path partial sums,
+//! layer activations) across layers and across calls, and [`ScratchPool`]
+//! lends arenas to concurrent `run()` calls so the fleet-shared
+//! [`super::NativeBackend`] stays `Sync`.
+//!
+//! The seed interpreter allocated (and freed) a fresh `Vec` for every
+//! intermediate of every layer of every batch. After the first batch
+//! through an arena, the same handful of buffers are reused for the rest
+//! of the instance's life — allocation disappears from the hot path.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::sync::Mutex;
+
+/// Free buffers kept per arena; beyond this, returned buffers are dropped.
+const MAX_FREE: usize = 16;
+/// Idle arenas kept per backend instance; bounds memory when many
+/// short-lived callers hit one shared backend.
+const MAX_POOLED: usize = 8;
+
+/// A free-list of `Vec<f32>` buffers. `take_*` hands out the
+/// smallest-fitting recycled buffer (or grows the largest, consolidating
+/// capacity); [`Arena::put`] returns a buffer for reuse.
+#[derive(Default)]
+pub struct Arena {
+    free: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena { free: Vec::new() }
+    }
+
+    /// A recycled (or fresh) buffer with `len` capacity and length 0.
+    fn grab(&mut self, len: usize) -> Vec<f32> {
+        if self.free.is_empty() {
+            return Vec::with_capacity(len);
+        }
+        // smallest free buffer that fits; else the largest one (it grows,
+        // so repeated use converges on a few right-sized buffers)
+        let mut fit: Option<usize> = None;
+        let mut largest = 0usize;
+        for i in 0..self.free.len() {
+            let cap = self.free[i].capacity();
+            if cap > self.free[largest].capacity() {
+                largest = i;
+            }
+            let better = match fit {
+                None => true,
+                Some(j) => cap < self.free[j].capacity(),
+            };
+            if cap >= len && better {
+                fit = Some(i);
+            }
+        }
+        let mut v = self.free.swap_remove(fit.unwrap_or(largest));
+        v.clear();
+        v
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.grab(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// A buffer holding a copy of `src`.
+    pub fn take_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.grab(src.len());
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// Return a buffer for reuse (dropped past [`MAX_FREE`]).
+    pub fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.free.len() < MAX_FREE {
+            self.free.push(v);
+        }
+    }
+
+    /// Buffers currently on the free list (tests / introspection).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// A lock-guarded stack of idle [`Arena`]s. `run()` checks one out for the
+/// duration of a forward pass and returns it afterwards, so concurrent
+/// callers (a serving fleet sharing one backend) never contend on scratch
+/// memory — each in-flight execution owns its arena exclusively.
+#[derive(Default)]
+pub struct ScratchPool {
+    arenas: Mutex<Vec<Arena>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool { arenas: Mutex::new(Vec::new()) }
+    }
+
+    pub fn take(&self) -> Arena {
+        self.arenas.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    pub fn put(&self, arena: Arena) {
+        let mut pool = self.arenas.lock().unwrap();
+        if pool.len() < MAX_POOLED {
+            pool.push(arena);
+        }
+    }
+
+    /// Idle arenas currently pooled (tests / introspection).
+    pub fn idle(&self) -> usize {
+        self.arenas.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_recycles_buffers() {
+        let mut a = Arena::new();
+        let v = a.take_zeroed(100);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x == 0.0));
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        a.put(v);
+        assert_eq!(a.pooled(), 1);
+        // a fitting request reuses the same allocation, re-zeroed
+        let mut v2 = a.take_zeroed(80);
+        assert_eq!(v2.len(), 80);
+        assert_eq!(v2.as_ptr(), ptr, "recycled buffer must reuse the allocation");
+        assert!(v2.capacity() >= cap.min(80));
+        assert!(v2.iter().all(|&x| x == 0.0));
+        v2[0] = 7.0;
+        a.put(v2);
+        // take_copy also reuses and carries the source contents
+        let src = [1.0f32, 2.0, 3.0];
+        let v3 = a.take_copy(&src);
+        assert_eq!(v3, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn arena_prefers_the_smallest_fitting_buffer() {
+        let mut a = Arena::new();
+        a.put(Vec::with_capacity(1000));
+        a.put(Vec::with_capacity(10));
+        let v = a.take_zeroed(8);
+        assert!(v.capacity() < 1000, "small request must not burn the big buffer");
+        assert_eq!(a.pooled(), 1);
+    }
+
+    #[test]
+    fn free_list_is_bounded() {
+        let mut a = Arena::new();
+        for _ in 0..(MAX_FREE + 10) {
+            a.put(vec![0.0; 4]);
+        }
+        assert_eq!(a.pooled(), MAX_FREE);
+    }
+
+    #[test]
+    fn pool_checks_arenas_in_and_out() {
+        let pool = ScratchPool::new();
+        assert_eq!(pool.idle(), 0);
+        let mut a = pool.take();
+        a.put(vec![0.0; 64]);
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.take();
+        assert_eq!(b.pooled(), 1, "the pooled arena keeps its warm buffers");
+        assert_eq!(pool.idle(), 0);
+    }
+}

@@ -1,0 +1,397 @@
+//! Packed, register-tiled matmul kernels — the native backend's hot loop.
+//!
+//! The interpreter's entire compute cost is `patches @ weights` per layer
+//! (three times per hybrid layer: `wa1`, optionally `wa2`, and `wd`). The
+//! seed implementation walked the weight matrix row-by-row per input row —
+//! `m` full passes over `W` through memory, plus an `n`-wide partial-sum
+//! buffer re-read per contraction step. This module replaces it with:
+//!
+//! * **column-tiled packing** ([`PackedMatrix::pack`]): `W[K,N]` is laid
+//!   out once as `ceil(N/NR)` panels of `K x NR` (zero-padded trailing
+//!   columns), so the micro-kernel streams each panel contiguously;
+//! * **an MR x NR register-tiled micro-kernel** ([`crossbar_matmul_packed`]):
+//!   `MR` input rows are multiplied against one panel with all partial sums
+//!   held in registers — the weight panel is re-read `m/MR` times instead
+//!   of `m`, and the per-group partial-sum buffer disappears entirely;
+//! * **scoped-thread row sharding**: the M (batch · output-pixel) dimension
+//!   splits across `std::thread::scope` workers. Rows are independent, so
+//!   any thread count produces bit-identical output.
+//!
+//! Exactness contract: for every output element the kernel performs the
+//! same f32 operations in the same order as the scalar reference
+//! ([`super::reference`]) — within a wordline group the contraction index
+//! ascends, each group's partial sum goes through the same ADC expression,
+//! and groups accumulate in ascending order. The only divergence is that
+//! the reference skips exact-zero activations while the kernel multiplies
+//! them through; adding `±0.0` can flip the sign of a zero partial sum but
+//! never its value, so results compare equal (`tests/kernel_props.rs`
+//! pins exact equality over randomized shapes, groups, ADC params, and
+//! thread counts). The ideal-readout digital path is the same kernel with
+//! `lsb <= 0` and a single group spanning all of K — one code path for
+//! what used to be two hand-rolled inner loops.
+
+#![allow(clippy::needless_range_loop)]
+
+use crate::tensor::Tensor;
+
+/// Panel width: columns per packed panel (one AVX f32 vector's worth).
+pub const NR: usize = 8;
+/// Register tile height: input rows per micro-kernel invocation.
+pub const MR: usize = 4;
+
+/// Below this many flops (`2*m*k*n`) a matmul runs single-threaded — the
+/// scoped-thread spawn overhead would outweigh the work.
+const PAR_MIN_FLOPS: usize = 1 << 17;
+
+/// A weight matrix re-laid out for the micro-kernel: `ceil(n/NR)` panels,
+/// each `k * NR` floats (row `ki` of panel `p` holds columns
+/// `[p*NR, p*NR+NR)` of `W`'s row `ki`, zero-padded past `n`). Packed once
+/// per upload ([`super::NativeBackend::upload_weight`]) and reused by every
+/// subsequent execution.
+pub struct PackedMatrix {
+    k: usize,
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedMatrix {
+    /// Pack a row-major `k x n` matrix into the column-tiled panel layout.
+    pub fn pack(w: &[f32], k: usize, n: usize) -> PackedMatrix {
+        assert_eq!(w.len(), k * n, "pack: {k}x{n} matrix needs {} values", k * n);
+        let np = n.div_ceil(NR);
+        let mut data = vec![0.0f32; np * k * NR];
+        for p in 0..np {
+            let n0 = p * NR;
+            let nw = (n - n0).min(NR);
+            let panel = &mut data[p * k * NR..(p + 1) * k * NR];
+            for ki in 0..k {
+                panel[ki * NR..ki * NR + nw].copy_from_slice(&w[ki * n + n0..ki * n + n0 + nw]);
+            }
+        }
+        PackedMatrix { k, n, data }
+    }
+
+    /// `(k, n)` of the original matrix.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    fn panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+}
+
+/// One MR-or-smaller row tile against one panel: all `R x NR` partial sums
+/// live in registers; per wordline group the partial goes through the ADC
+/// expression (or straight accumulation for ideal readout), groups ascend.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_rows<const R: usize>(
+    x: &[f32],
+    mi: usize,
+    k: usize,
+    panel: &[f32],
+    n: usize,
+    n0: usize,
+    nw: usize,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0.0f32; NR]; R];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + group).min(k);
+        let mut g = [[0.0f32; NR]; R];
+        for ki in k0..k1 {
+            let wrow = &panel[ki * NR..(ki + 1) * NR];
+            for r in 0..R {
+                let xv = x[(mi + r) * k + ki];
+                for j in 0..NR {
+                    g[r][j] += xv * wrow[j];
+                }
+            }
+        }
+        if lsb > 0.0 {
+            for r in 0..R {
+                for j in 0..NR {
+                    acc[r][j] += ((g[r][j] / lsb).round() * lsb).clamp(-clip, clip);
+                }
+            }
+        } else {
+            for r in 0..R {
+                for j in 0..NR {
+                    acc[r][j] += g[r][j];
+                }
+            }
+        }
+        k0 = k1;
+    }
+    for r in 0..R {
+        let base = (mi + r) * n + n0;
+        out[base..base + nw].copy_from_slice(&acc[r][..nw]);
+    }
+}
+
+/// Sequential kernel over `m` rows of `x` (row-major, `k` columns) against
+/// a packed matrix; writes every element of `out[m * w.n]` exactly once.
+#[allow(clippy::too_many_arguments)]
+fn kernel_rows(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &PackedMatrix,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+) {
+    let n = w.n;
+    for p in 0..w.panels() {
+        let n0 = p * NR;
+        let nw = (n - n0).min(NR);
+        let panel = w.panel(p);
+        let mut mi = 0;
+        while mi + MR <= m {
+            tile_rows::<MR>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            mi += MR;
+        }
+        while mi < m {
+            tile_rows::<1>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            mi += 1;
+        }
+    }
+}
+
+/// `x[m,k] @ w` with per-wordline-group ADC readout, into `out[m * w.n]`
+/// (fully overwritten). `lsb > 0` quantizes each group's partial sum
+/// (mid-rise step `lsb`, saturation `±clip`); `lsb <= 0` is ideal readout.
+/// The plain digital matmul is this kernel with `lsb <= 0` and
+/// `group >= k` (one group spanning the whole contraction). `threads`
+/// shards the row dimension across scoped workers; results are
+/// bit-identical for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn crossbar_matmul_packed(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &PackedMatrix,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(k, w.k, "contraction mismatch: {k} vs {}", w.k);
+    assert_eq!(x.len(), m * k, "x is not {m}x{k}");
+    assert_eq!(out.len(), m * w.n, "out is not {m}x{}", w.n);
+    let group = group.max(1);
+    let threads = threads.max(1).min(m.max(1));
+    let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(w.n);
+    if threads <= 1 || flops < PAR_MIN_FLOPS {
+        kernel_rows(x, m, k, w, lsb, clip, group, out);
+        return;
+    }
+    let n = w.n;
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = &mut out[..];
+        let mut r0 = 0usize;
+        while r0 < m {
+            let r1 = (r0 + rows_per).min(m);
+            let taken = rest;
+            let (chunk, tail) = taken.split_at_mut((r1 - r0) * n);
+            rest = tail;
+            let xs = &x[r0 * k..r1 * k];
+            let rows = r1 - r0;
+            s.spawn(move || kernel_rows(xs, rows, k, w, lsb, clip, group, chunk));
+            r0 = r1;
+        }
+    });
+}
+
+/// `x[M,K] @ w[K,N]` per wordline group of `group` rows; each group's
+/// partial sum goes through the ADC (mid-rise quantizer, step `lsb`,
+/// saturating at `±clip`; `lsb <= 0` = ideal readout), groups accumulate
+/// in f32 — `kernels/ref.py::crossbar_matmul_ref`. The contraction dim is
+/// implicitly zero-padded to a group multiple (a partial trailing group is
+/// its own ADC readout). Convenience wrapper over the packed kernel
+/// (packs per call, single-threaded); the execution hot path packs once at
+/// upload instead.
+pub fn crossbar_matmul(x: &Tensor, w: &Tensor, lsb: f32, clip: f32, group: usize) -> Tensor {
+    let (m, k) = x.dims2();
+    let (kw, n) = w.dims2();
+    assert_eq!(k, kw, "contraction mismatch: {k} vs {kw}");
+    let packed = PackedMatrix::pack(&w.data, kw, n);
+    let mut out = vec![0.0f32; m * n];
+    crossbar_matmul_packed(&x.data, m, k, &packed, lsb, clip, group, &mut out, 1);
+    Tensor::new(vec![m, n], out)
+}
+
+/// Plain f32 matmul (the exact digital path): the same packed kernel with
+/// ideal readout and one group spanning all of K.
+pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (kw, n) = w.dims2();
+    assert_eq!(k, kw, "contraction mismatch: {k} vs {kw}");
+    let packed = PackedMatrix::pack(&w.data, kw, n);
+    let mut out = vec![0.0f32; m * n];
+    crossbar_matmul_packed(&x.data, m, k, &packed, -1.0, 1.0, k.max(1), &mut out, 1);
+    Tensor::new(vec![m, n], out)
+}
+
+// ---------------------------------------------------------------------------
+// IEEE fp16 rounding (the paper's §2.2 partial-sum merge precision)
+
+/// Round an f32 through IEEE binary16 (round-to-nearest-even) and back.
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15; // rebias
+    if e >= 31 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal (or underflow to zero)
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rem = m & ((1u32 << shift) - 1);
+        let mut t = m >> shift;
+        if rem > half || (rem == half && (t & 1) == 1) {
+            t += 1; // round to nearest, ties to even
+        }
+        return sign | t as u16;
+    }
+    // normal: round the 23-bit mantissa to 10 bits, ties to even; a
+    // mantissa carry correctly bumps the exponent (up to inf)
+    let rem = mant & 0x1fff;
+    let mut t = ((e as u32) << 10) | (mant >> 13);
+    if rem > 0x1000 || (rem == 0x1000 && (t & 1) == 1) {
+        t += 1;
+    }
+    sign | t as u16
+}
+
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x3ff) as f32;
+    match exp {
+        0 => sign * mant * 2.0f32.powi(-24),
+        0x1f => {
+            if mant == 0.0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        e => sign * (1.0 + mant / 1024.0) * 2.0f32.powi(e as i32 - 15),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trips_representable_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, 2.0, 65504.0, -65504.0, 0.099975586] {
+            assert_eq!(f16_round(v), v, "{v} is exactly representable in f16");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest() {
+        // 1 + 1/2048 is exactly between 1.0 and the next f16 (1 + 1/1024):
+        // ties-to-even picks 1.0; anything above goes up
+        assert_eq!(f16_round(1.0 + 1.0 / 2048.0), 1.0);
+        assert_eq!(f16_round(1.0 + 1.5 / 2048.0), 1.0 + 1.0 / 1024.0);
+        // overflow saturates to inf, matching IEEE f32->f16 casts
+        assert_eq!(f16_round(1e6), f32::INFINITY);
+        assert_eq!(f16_round(-1e6), f32::NEG_INFINITY);
+        // subnormal range survives with reduced precision
+        let tiny = 3.0e-6f32;
+        let r = f16_round(tiny);
+        assert!((r - tiny).abs() < 1e-7, "{tiny} -> {r}");
+    }
+
+    #[test]
+    fn ideal_crossbar_equals_plain_matmul() {
+        let x = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let w = Tensor::new(vec![3, 2], vec![1., 0., 0., 1., 1., 1.]);
+        let ideal = crossbar_matmul(&x, &w, -1.0, 1.0, 2);
+        let plain = matmul(&x, &w);
+        assert_eq!(ideal.data, plain.data);
+        assert_eq!(ideal.data, vec![4., 5., 10., 11.]);
+    }
+
+    #[test]
+    fn adc_quantizes_per_group_partial_sum() {
+        // one row, K=2, group=1: each element is its own ADC readout
+        let x = Tensor::new(vec![1, 2], vec![1.0, 1.0]);
+        let w = Tensor::new(vec![2, 1], vec![0.34, 0.74]);
+        let y = crossbar_matmul(&x, &w, 0.5, 10.0, 1);
+        // round(0.34/0.5)*0.5 = 0.5, round(0.74/0.5)*0.5 = 0.5
+        assert!((y.data[0] - 1.0).abs() < 1e-6, "{}", y.data[0]);
+        // group=2: single partial sum 1.08 -> 1.0
+        let y2 = crossbar_matmul(&x, &w, 0.5, 10.0, 2);
+        assert!((y2.data[0] - 1.0).abs() < 1e-6);
+        // clipping saturates at +-clip
+        let yc = crossbar_matmul(&x, &w, 0.5, 0.5, 2);
+        assert!((yc.data[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pack_pads_the_trailing_panel_with_zeros() {
+        // 2x3 matrix -> one panel of 2xNR with 5 zero columns per row
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let p = PackedMatrix::pack(&w, 2, 3);
+        assert_eq!(p.dims(), (2, 3));
+        assert_eq!(p.panels(), 1);
+        let panel = p.panel(0);
+        assert_eq!(&panel[..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&panel[3..NR], &[0.0; NR - 3]);
+        assert_eq!(&panel[NR..NR + 3], &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn threaded_kernel_is_bit_identical_to_sequential() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        // 2*m*k*n comfortably above PAR_MIN_FLOPS so sharding engages;
+        // odd sizes exercise the MR/NR tail paths
+        let (m, k, n) = (67, 64, 17);
+        assert!(2 * m * k * n >= PAR_MIN_FLOPS, "sizes must engage the threaded path");
+        let mut x = vec![0.0f32; m * k];
+        let mut w = vec![0.0f32; k * n];
+        rng.fill_normal(&mut x);
+        rng.fill_normal(&mut w);
+        let packed = PackedMatrix::pack(&w, k, n);
+        let mut seq = vec![0.0f32; m * n];
+        crossbar_matmul_packed(&x, m, k, &packed, 0.125, 2.0, 16, &mut seq, 1);
+        for threads in [2, 3, 4, 8] {
+            let mut par = vec![0.0f32; m * n];
+            crossbar_matmul_packed(&x, m, k, &packed, 0.125, 2.0, 16, &mut par, threads);
+            assert_eq!(seq, par, "threads={threads} diverged");
+        }
+    }
+}

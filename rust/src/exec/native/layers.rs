@@ -1,0 +1,614 @@
+//! The per-layer executor (HybridExec's semantics) and the family
+//! forwards of `models.py`.
+//!
+//! Every tensor an [`Interp`] produces comes out of its [`Arena`] and every
+//! tensor it consumes goes back in, so a steady-state forward pass reuses
+//! the same im2col / partial-sum / activation buffers layer after layer and
+//! call after call. The matmuls route through the packed micro-kernels of
+//! [`super::kernels`] with the backend's thread count; weight operands
+//! arrive either pre-packed (the upload hot path) or as plain tensors
+//! (packed on the fly — the direct [`super::NativeGraph::run`] test path).
+
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{bail, ensure, Result};
+
+use crate::quantize::fake_quant;
+use crate::tensor::Tensor;
+
+use super::arena::Arena;
+use super::kernels::{crossbar_matmul_packed, f16_round, PackedMatrix};
+use super::{LayerArgs, NativeArg, NativeGraph};
+
+/// Shared activation quantization width (paper §2.2, `layers.py::ACT_BITS`).
+pub(super) const ACT_BITS: u32 = 8;
+
+#[derive(Clone, Copy)]
+pub(super) enum Act {
+    Relu,
+    Sigmoid,
+    None,
+}
+
+fn apply_act(v: f32, act: Act) -> f32 {
+    match act {
+        Act::Relu => v.max(0.0),
+        Act::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+        Act::None => v,
+    }
+}
+
+/// One matmul of the layer contract: `x @ w` with per-group ADC readout
+/// into `out` (fully overwritten). A pre-packed operand is used as-is; a
+/// plain tensor is packed for this call.
+fn mat_into(
+    x: &Tensor,
+    w: NativeArg,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let (m, k) = x.dims2();
+    let tmp: PackedMatrix;
+    let packed: &PackedMatrix = match w {
+        NativeArg::Packed(p) => p,
+        NativeArg::Plain(t) => {
+            let (kw, n) = t.dims2();
+            tmp = PackedMatrix::pack(&t.data, kw, n);
+            &tmp
+        }
+    };
+    debug_assert_eq!(k, packed.dims().0);
+    crossbar_matmul_packed(&x.data, m, k, packed, lsb, clip, group, out, threads);
+}
+
+pub(super) struct Interp<'a> {
+    pub(super) g: &'a NativeGraph,
+    pub(super) args: Vec<LayerArgs<'a>>,
+    /// Layers are consumed in forward-call order — the same order
+    /// `MetaExec` recorded them into the artifact layer table.
+    pub(super) next: usize,
+    pub(super) arena: &'a mut Arena,
+    pub(super) threads: usize,
+}
+
+impl Interp<'_> {
+    fn next_layer(&mut self) -> Result<usize> {
+        ensure!(
+            self.next < self.g.layers.len(),
+            "family '{}' asks for more layers than the artifact recorded ({})",
+            self.g.family,
+            self.g.layers.len()
+        );
+        self.next += 1;
+        Ok(self.next - 1)
+    }
+
+    /// Hand a consumed tensor's buffer back to the arena.
+    fn recycle(&mut self, t: Tensor) {
+        self.arena.put(t.data);
+    }
+
+    /// One hybrid layer matmul: ADC-quantized crossbar path(s) + exact
+    /// digital path, merged in fp16 (paper §2.2). The digital path is the
+    /// same packed kernel with ideal readout over one group spanning all
+    /// of K.
+    fn hybrid_matmul(&mut self, idx: usize, patches: &Tensor) -> Result<Tensor> {
+        let g = self.g;
+        let li = &g.layers[idx];
+        let a = self.args[idx];
+        let mat = vec![li.rows(), li.cout];
+        ensure!(
+            a.wa1.shape_vec() == mat && a.wd.shape_vec() == mat,
+            "layer '{}' weight shapes {:?}/{:?}, expected {:?}",
+            li.name,
+            a.wa1.shape_vec(),
+            a.wd.shape_vec(),
+            mat
+        );
+        let (m, k) = patches.dims2();
+        let n = li.cout;
+        let mut ya = self.arena.take_zeroed(m * n);
+        mat_into(patches, a.wa1, a.lsb, a.clip, g.group, &mut ya, self.threads);
+        if let Some(wa2) = a.wa2 {
+            ensure!(
+                wa2.shape_vec() == mat,
+                "layer '{}' wa2 shape {:?}, expected {:?}",
+                li.name,
+                wa2.shape_vec(),
+                mat
+            );
+            // differential cells: the negative-polarity crossbar has its
+            // own ADC readout and is subtracted digitally
+            let mut y2 = self.arena.take_zeroed(m * n);
+            mat_into(patches, wa2, a.lsb, a.clip, g.group, &mut y2, self.threads);
+            for (v, s) in ya.iter_mut().zip(&y2) {
+                *v -= s;
+            }
+            self.arena.put(y2);
+        }
+        let mut yd = self.arena.take_zeroed(m * n);
+        mat_into(patches, a.wd, -1.0, 1.0, k.max(1), &mut yd, self.threads);
+        // FP16 merge of analog/digital partial results (paper §2.2)
+        for (v, d) in ya.iter_mut().zip(&yd) {
+            *v = f16_round(f16_round(*v) + f16_round(*d));
+        }
+        self.arena.put(yd);
+        Ok(Tensor::new(vec![m, n], ya))
+    }
+
+    fn conv(&mut self, x: &Tensor, act: Act) -> Result<Tensor> {
+        let g = self.g;
+        let idx = self.next_layer()?;
+        let li = &g.layers[idx];
+        ensure!(
+            li.kind == "conv",
+            "layer {idx} ('{}') is '{}' but the forward expects a conv",
+            li.name,
+            li.kind
+        );
+        ensure!(
+            x.shape.len() == 4,
+            "conv '{}' input must be [b,h,w,c], got {:?}",
+            li.name,
+            x.shape
+        );
+        let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        ensure!(c == li.cin, "conv '{}' expects {} input channels, got {c}", li.name, li.cin);
+
+        let (lo, hi) = g.act_ranges[idx];
+        let mut xq = Tensor::new(x.shape.clone(), self.arena.take_copy(&x.data));
+        fake_quant(&mut xq, lo, hi, ACT_BITS);
+        let patches = im2col_arena(&xq, li.r, li.stride, li.pad, self.arena);
+        self.recycle(xq);
+        let mut y = self.hybrid_matmul(idx, &patches)?;
+        self.recycle(patches);
+        let (oh, ow) = conv_out_hw(h, w, li.r, li.stride, li.pad);
+
+        let bias = self.args[idx].bias;
+        ensure!(bias.len() == li.cout, "conv '{}' bias length {}", li.name, bias.len());
+        for (i, v) in y.data.iter_mut().enumerate() {
+            *v = apply_act(*v + bias.data[i % li.cout], act);
+        }
+        ensure!(
+            y.data.len() == b * oh * ow * li.cout,
+            "conv '{}' output length {} vs [{b},{oh},{ow},{}]",
+            li.name,
+            y.data.len(),
+            li.cout
+        );
+        y.shape = vec![b, oh, ow, li.cout];
+        Ok(y)
+    }
+
+    fn dense(&mut self, x: &Tensor, act: Act) -> Result<Tensor> {
+        let g = self.g;
+        let idx = self.next_layer()?;
+        let li = &g.layers[idx];
+        ensure!(
+            li.kind == "dense",
+            "layer {idx} ('{}') is '{}' but the forward expects a dense",
+            li.name,
+            li.kind
+        );
+        ensure!(x.shape.len() == 2, "dense '{}' input must be [b,f], got {:?}", li.name, x.shape);
+        ensure!(
+            x.shape[1] == li.cin,
+            "dense '{}' expects {} features, got {}",
+            li.name,
+            li.cin,
+            x.shape[1]
+        );
+
+        let (lo, hi) = g.act_ranges[idx];
+        let mut xq = Tensor::new(x.shape.clone(), self.arena.take_copy(&x.data));
+        fake_quant(&mut xq, lo, hi, ACT_BITS);
+        let mut y = self.hybrid_matmul(idx, &xq)?;
+        self.recycle(xq);
+
+        let bias = self.args[idx].bias;
+        ensure!(bias.len() == li.cout, "dense '{}' bias length {}", li.name, bias.len());
+        for (i, v) in y.data.iter_mut().enumerate() {
+            *v = apply_act(*v + bias.data[i % li.cout], act);
+        }
+        y.shape = vec![x.shape[0], li.cout];
+        Ok(y)
+    }
+
+    // -- consuming wrappers: recycle the input buffer into the arena --------
+
+    fn conv_c(&mut self, x: Tensor, act: Act) -> Result<Tensor> {
+        let y = self.conv(&x, act)?;
+        self.recycle(x);
+        Ok(y)
+    }
+
+    fn dense_c(&mut self, x: Tensor, act: Act) -> Result<Tensor> {
+        let y = self.dense(&x, act)?;
+        self.recycle(x);
+        Ok(y)
+    }
+
+    fn max_pool_c(&mut self, x: Tensor) -> Result<Tensor> {
+        let y = pool2(&x, true, self.arena)?;
+        self.recycle(x);
+        Ok(y)
+    }
+
+    fn avg_pool_c(&mut self, x: Tensor) -> Result<Tensor> {
+        let y = pool2(&x, false, self.arena)?;
+        self.recycle(x);
+        Ok(y)
+    }
+
+    fn gap_c(&mut self, x: Tensor) -> Result<Tensor> {
+        let y = gap(&x, self.arena)?;
+        self.recycle(x);
+        Ok(y)
+    }
+
+    fn concat_c(&mut self, a: Tensor, b: Tensor) -> Result<Tensor> {
+        let y = concat_channels(&a, &b, self.arena)?;
+        self.recycle(a);
+        self.recycle(b);
+        Ok(y)
+    }
+
+    /// `y + skip` elementwise, in place on `y`; recycles `skip`.
+    fn add_c(&mut self, mut y: Tensor, skip: Tensor) -> Result<Tensor> {
+        ensure!(y.shape == skip.shape, "residual add shapes {:?} vs {:?}", y.shape, skip.shape);
+        for (v, s) in y.data.iter_mut().zip(&skip.data) {
+            *v += s;
+        }
+        self.recycle(skip);
+        Ok(y)
+    }
+
+    /// `relu(y + skip)` in place on `y`; recycles `skip`.
+    fn add_relu_c(&mut self, y: Tensor, skip: Tensor) -> Result<Tensor> {
+        let mut y = self.add_c(y, skip)?;
+        for v in y.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        Ok(y)
+    }
+
+    /// Squeeze-excite scale: `x[b,h,w,c] *= s[b,c]` in place on `x`;
+    /// recycles `s`.
+    fn scale_channels_c(&mut self, mut x: Tensor, s: Tensor) -> Result<Tensor> {
+        scale_channels_into(&mut x, &s)?;
+        self.recycle(s);
+        Ok(x)
+    }
+}
+
+/// Scale `x[b,h,w,c]` per (batch, channel) by `s[b,c]` (squeeze-excite),
+/// in place.
+fn scale_channels_into(x: &mut Tensor, s: &Tensor) -> Result<()> {
+    ensure!(
+        x.shape.len() == 4 && s.shape.len() == 2,
+        "scale shapes {:?} vs {:?}",
+        x.shape,
+        s.shape
+    );
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    ensure!(s.shape == vec![b, c], "scale vector {:?}, expected [{b}, {c}]", s.shape);
+    for bi in 0..b {
+        for p in 0..h * w {
+            let base = (bi * h * w + p) * c;
+            for ci in 0..c {
+                x.data[base + ci] *= s.data[bi * c + ci];
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// family forwards (models.py, layer consumption order = MetaExec record
+// order; structural constants mirror the python definitions)
+
+pub(super) fn forward(family: &str, i: &mut Interp, x0: &Tensor) -> Result<Tensor> {
+    match family {
+        "synthetic" => {
+            // the in-memory test artifact: two convs, three 2x pools
+            // (16 -> 2), flatten (2*2*8 = 32), classifier head
+            let x = i.conv(x0, Act::Relu)?;
+            let x = i.conv_c(x, Act::Relu)?;
+            let x = i.max_pool_c(x)?;
+            let x = i.max_pool_c(x)?;
+            let x = i.max_pool_c(x)?;
+            let x = flatten(x);
+            i.dense_c(x, Act::None)
+        }
+        "vggmini" => {
+            let x = i.conv(x0, Act::Relu)?;
+            let x = i.conv_c(x, Act::Relu)?;
+            let x = i.max_pool_c(x)?;
+            let x = i.conv_c(x, Act::Relu)?;
+            let x = i.conv_c(x, Act::Relu)?;
+            let x = i.max_pool_c(x)?;
+            let x = i.conv_c(x, Act::Relu)?;
+            let x = i.conv_c(x, Act::Relu)?;
+            let x = i.max_pool_c(x)?;
+            let x = flatten(x);
+            let x = i.dense_c(x, Act::Relu)?;
+            i.dense_c(x, Act::None)
+        }
+        "resnet18m" => resnet(i, x0, &[2, 2, 2]),
+        "resnet34m" => resnet(i, x0, &[3, 4, 3]),
+        "densenetm" => {
+            let mut x = i.conv(x0, Act::Relu)?;
+            for block in 0..3 {
+                for _layer in 0..4 {
+                    // dense block: every conv's output concatenates onto
+                    // the running feature stack
+                    let y = i.conv(&x, Act::Relu)?;
+                    x = i.concat_c(x, y)?;
+                }
+                if block < 2 {
+                    // transition: 1x1 compress + avgpool
+                    x = i.conv_c(x, Act::Relu)?;
+                    x = i.avg_pool_c(x)?;
+                }
+            }
+            let x = i.gap_c(x)?;
+            i.dense_c(x, Act::None)
+        }
+        "effnetm" => {
+            let mut x = i.conv(x0, Act::Relu)?;
+            // (width, stride) per MBConv block — models.py's cfg
+            for &(width, stride) in &[(16usize, 1usize), (24, 2), (40, 2)] {
+                let cin = *x.shape.last().unwrap();
+                let keep_skip = stride == 1 && cin == width;
+                let y = i.conv(&x, Act::Relu)?; // expand (1x1)
+                let y = i.conv_c(y, Act::Relu)?; // spatial (3x3, stride)
+                // squeeze-and-excite: gap -> dense/4 -> dense -> scale
+                let s = gap(&y, i.arena)?;
+                let s = i.dense_c(s, Act::Relu)?;
+                let s = i.dense_c(s, Act::Sigmoid)?;
+                let y = i.scale_channels_c(y, s)?;
+                let y = i.conv_c(y, Act::None)?; // project (1x1)
+                x = if keep_skip {
+                    i.add_c(y, x)?
+                } else {
+                    i.recycle(x);
+                    y
+                };
+            }
+            let x = i.conv_c(x, Act::Relu)?; // headc (1x1)
+            let x = i.gap_c(x)?;
+            i.dense_c(x, Act::None)
+        }
+        other => bail!("native backend cannot interpret model family '{other}'"),
+    }
+}
+
+fn resnet(i: &mut Interp, x0: &Tensor, blocks_per_stage: &[usize]) -> Result<Tensor> {
+    let mut x = i.conv(x0, Act::Relu)?; // stem
+    let widths = [16usize, 32, 64];
+    for (s, (&width, &nb)) in widths.iter().zip(blocks_per_stage).enumerate() {
+        for b in 0..nb {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            // basic block: two 3x3 convs + identity/projection skip
+            let cin = *x.shape.last().unwrap();
+            let y = i.conv(&x, Act::Relu)?;
+            let y = i.conv_c(y, Act::None)?;
+            let skip = if stride != 1 || cin != width {
+                let p = i.conv(&x, Act::None)?; // 1x1 projection
+                i.recycle(x);
+                p
+            } else {
+                x
+            };
+            x = i.add_relu_c(y, skip)?;
+        }
+    }
+    let x = i.gap_c(x)?;
+    i.dense_c(x, Act::None)
+}
+
+// ---------------------------------------------------------------------------
+// structural ops (arena-allocated outputs)
+
+pub fn conv_out_hw(h: usize, w: usize, r: usize, stride: usize, pad: usize) -> (usize, usize) {
+    ((h + 2 * pad - r) / stride + 1, (w + 2 * pad - r) / stride + 1)
+}
+
+fn im2col_into(x: &Tensor, r: usize, stride: usize, pad: usize, out: &mut [f32]) {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = conv_out_hw(h, w, r, stride, pad);
+    let cols = c * r * r;
+    for bi in 0..b {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let row = ((bi * oh + oi) * ow + oj) * cols;
+                for di in 0..r {
+                    let ii = oi * stride + di;
+                    if ii < pad || ii >= h + pad {
+                        continue; // zero padding row
+                    }
+                    let ii = ii - pad;
+                    for dj in 0..r {
+                        let jj = oj * stride + dj;
+                        if jj < pad || jj >= w + pad {
+                            continue;
+                        }
+                        let jj = jj - pad;
+                        let src = ((bi * h + ii) * w + jj) * c;
+                        let rr = di * r + dj;
+                        for ci in 0..c {
+                            out[row + ci * r * r + rr] = x.data[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `x[B,H,W,C] -> patches [B*OH*OW, C*R*R]` with channel-major columns
+/// (input channel `c` owns columns `[c*R*R, (c+1)*R*R)`), matching
+/// `kernels/im2col.py`.
+pub fn im2col(x: &Tensor, r: usize, stride: usize, pad: usize) -> Tensor {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = conv_out_hw(h, w, r, stride, pad);
+    let cols = c * r * r;
+    let mut out = vec![0.0f32; b * oh * ow * cols];
+    im2col_into(x, r, stride, pad, &mut out);
+    Tensor::new(vec![b * oh * ow, cols], out)
+}
+
+/// [`im2col`] with the patch buffer drawn from the arena.
+fn im2col_arena(x: &Tensor, r: usize, stride: usize, pad: usize, arena: &mut Arena) -> Tensor {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = conv_out_hw(h, w, r, stride, pad);
+    let cols = c * r * r;
+    let mut out = arena.take_zeroed(b * oh * ow * cols);
+    im2col_into(x, r, stride, pad, &mut out);
+    Tensor::new(vec![b * oh * ow, cols], out)
+}
+
+fn pool2(x: &Tensor, max: bool, arena: &mut Arena) -> Result<Tensor> {
+    ensure!(x.shape.len() == 4, "pool input must be [b,h,w,c], got {:?}", x.shape);
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    ensure!(h % 2 == 0 && w % 2 == 0, "pool needs even spatial dims, got {h}x{w}");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = arena.take_zeroed(b * oh * ow * c);
+    let at = |bi: usize, ii: usize, jj: usize, ci: usize| x.data[((bi * h + ii) * w + jj) * c + ci];
+    for bi in 0..b {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                for ci in 0..c {
+                    let vals = [
+                        at(bi, 2 * oi, 2 * oj, ci),
+                        at(bi, 2 * oi, 2 * oj + 1, ci),
+                        at(bi, 2 * oi + 1, 2 * oj, ci),
+                        at(bi, 2 * oi + 1, 2 * oj + 1, ci),
+                    ];
+                    out[((bi * oh + oi) * ow + oj) * c + ci] = if max {
+                        vals.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+                    } else {
+                        vals.iter().sum::<f32>() / 4.0
+                    };
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![b, oh, ow, c], out))
+}
+
+/// Global average pool: `[b,h,w,c] -> [b,c]`.
+fn gap(x: &Tensor, arena: &mut Arena) -> Result<Tensor> {
+    ensure!(x.shape.len() == 4, "gap input must be [b,h,w,c], got {:?}", x.shape);
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = arena.take_zeroed(b * c);
+    for bi in 0..b {
+        for ii in 0..h {
+            for jj in 0..w {
+                let src = ((bi * h + ii) * w + jj) * c;
+                for ci in 0..c {
+                    out[bi * c + ci] += x.data[src + ci];
+                }
+            }
+        }
+    }
+    let inv = 1.0 / (h * w) as f32;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+    Ok(Tensor::new(vec![b, c], out))
+}
+
+/// Reshape `[b, ...] -> [b, f]` in place (no copy, no allocation).
+fn flatten(x: Tensor) -> Tensor {
+    let b = x.shape[0];
+    let f = x.data.len() / b.max(1);
+    Tensor::new(vec![b, f], x.data)
+}
+
+/// Concatenate along the channel (last) axis.
+fn concat_channels(a: &Tensor, b: &Tensor, arena: &mut Arena) -> Result<Tensor> {
+    ensure!(
+        a.shape.len() == 4 && b.shape.len() == 4 && a.shape[..3] == b.shape[..3],
+        "concat shapes {:?} vs {:?}",
+        a.shape,
+        b.shape
+    );
+    let (ca, cb) = (a.shape[3], b.shape[3]);
+    let rows = a.data.len() / ca;
+    let cc = ca + cb;
+    let mut out = arena.take_zeroed(rows * cc);
+    for i in 0..rows {
+        out[i * cc..i * cc + ca].copy_from_slice(&a.data[i * ca..(i + 1) * ca]);
+        out[i * cc + ca..(i + 1) * cc].copy_from_slice(&b.data[i * cb..(i + 1) * cb]);
+    }
+    let mut shape = a.shape.clone();
+    shape[3] = cc;
+    Ok(Tensor::new(shape, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_matches_hand_example() {
+        // 1x2x2x2 input, r=2 pad=1 stride=1 -> 3x3 output positions
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let p = im2col(&x, 2, 1, 1);
+        assert_eq!(p.shape, vec![9, 8]);
+        // center patch (oi=1, oj=1) sees the full input; channel-major
+        // columns: channel 0 rows then channel 1 rows, each in (di,dj) order
+        assert_eq!(p.row(4), &[1., 2., 3., 4., 10., 20., 30., 40.]);
+        // top-left patch: only the bottom-right tap (di=1,dj=1) is in-bounds
+        assert_eq!(p.row(0), &[0., 0., 0., 1., 0., 0., 0., 10.]);
+    }
+
+    #[test]
+    fn im2col_arena_reuses_a_dirty_buffer() {
+        // a recycled non-zero buffer must not leak into the padding zeros
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        let mut arena = Arena::new();
+        arena.put(vec![9.0f32; 64]);
+        let p = im2col_arena(&x, 2, 1, 1, &mut arena);
+        let q = im2col(&x, 2, 1, 1);
+        assert_eq!(p.shape, q.shape);
+        assert_eq!(p.data, q.data, "arena reuse changed im2col output");
+    }
+
+    #[test]
+    fn pools_and_gap() {
+        let mut a = Arena::new();
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        assert_eq!(pool2(&x, true, &mut a).unwrap().data, vec![4.0]);
+        assert_eq!(pool2(&x, false, &mut a).unwrap().data, vec![2.5]);
+        assert_eq!(gap(&x, &mut a).unwrap().data, vec![2.5]);
+        assert_eq!(gap(&x, &mut a).unwrap().shape, vec![1, 1]);
+    }
+
+    #[test]
+    fn concat_and_scale() {
+        let mut arena = Arena::new();
+        let a = Tensor::new(vec![1, 1, 2, 1], vec![1., 2.]);
+        let b = Tensor::new(vec![1, 1, 2, 2], vec![3., 4., 5., 6.]);
+        let mut c = concat_channels(&a, &b, &mut arena).unwrap();
+        assert_eq!(c.shape, vec![1, 1, 2, 3]);
+        assert_eq!(c.data, vec![1., 3., 4., 2., 5., 6.]);
+
+        let s = Tensor::new(vec![1, 3], vec![2., 1., 0.]);
+        scale_channels_into(&mut c, &s).unwrap();
+        assert_eq!(c.data, vec![2., 3., 0., 4., 5., 0.]);
+    }
+
+    #[test]
+    fn flatten_reshapes_without_copying() {
+        let x = Tensor::new(vec![2, 1, 2, 1], vec![1., 2., 3., 4.]);
+        let ptr = x.data.as_ptr();
+        let f = flatten(x);
+        assert_eq!(f.shape, vec![2, 2]);
+        assert_eq!(f.data.as_ptr(), ptr, "flatten must not copy");
+    }
+}

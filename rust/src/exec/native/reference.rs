@@ -1,0 +1,80 @@
+//! Scalar reference kernels — the seed implementation of
+//! `crossbar_matmul` / `matmul`, kept verbatim as the ground truth the
+//! packed micro-kernels ([`super::kernels`]) are property-tested against
+//! (`tests/kernel_props.rs`; closes the ROADMAP follow-up "property-test it
+//! against `crossbar_matmul_numpy` via a shared fixture" — these loops are
+//! the rust twin of `kernels/ref.py::crossbar_matmul_ref`, which the python
+//! pytest pins against numpy).
+//!
+//! Not used on any execution path: correctness oracle only.
+
+use crate::tensor::Tensor;
+
+/// `x[M,K] @ w[K,N]` per wordline group of `group` rows; each group's
+/// partial sum goes through the ADC (mid-rise quantizer, step `lsb`,
+/// saturating at `±clip`; `lsb <= 0` = ideal readout), groups accumulate
+/// in f32. The seed scalar implementation, including its zero-activation
+/// skip.
+pub fn reference_crossbar_matmul(
+    x: &Tensor,
+    w: &Tensor,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+) -> Tensor {
+    let (m, k) = x.dims2();
+    let (kw, n) = w.dims2();
+    assert_eq!(k, kw, "contraction mismatch: {k} vs {kw}");
+    let group = group.max(1);
+    let mut out = vec![0.0f32; m * n];
+    let mut partial = vec![0.0f32; n];
+    for mi in 0..m {
+        let xrow = x.row(mi);
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + group).min(k);
+            partial.iter_mut().for_each(|p| *p = 0.0);
+            for ki in k0..k1 {
+                let xv = xrow[ki];
+                if xv != 0.0 {
+                    for (p, &wv) in partial.iter_mut().zip(w.row(ki)) {
+                        *p += xv * wv;
+                    }
+                }
+            }
+            if lsb > 0.0 {
+                for (o, &p) in orow.iter_mut().zip(partial.iter()) {
+                    *o += ((p / lsb).round() * lsb).clamp(-clip, clip);
+                }
+            } else {
+                for (o, &p) in orow.iter_mut().zip(partial.iter()) {
+                    *o += p;
+                }
+            }
+            k0 = k1;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Plain f32 matmul — the seed scalar implementation of the exact digital
+/// path (flat contraction fold with the zero-activation skip).
+pub fn reference_matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (kw, n) = w.dims2();
+    assert_eq!(k, kw, "contraction mismatch: {k} vs {kw}");
+    let mut out = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let xrow = x.row(mi);
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        for (ki, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                for (o, &wv) in orow.iter_mut().zip(w.row(ki)) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}

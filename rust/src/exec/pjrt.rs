@@ -76,7 +76,9 @@ impl ExecBackend for PjrtBackend {
         for buf in inputs {
             match buf {
                 DeviceBuffer::Pjrt(b) => bufs.push(b),
-                DeviceBuffer::Host(_) => bail!("buffer was not uploaded by the pjrt backend"),
+                DeviceBuffer::Host(_) | DeviceBuffer::HostPacked(_) => {
+                    bail!("buffer was not uploaded by the pjrt backend")
+                }
             }
         }
         Engine::run_buffers(exe, &bufs)

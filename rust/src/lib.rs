@@ -22,9 +22,15 @@
 //! default) running the AOT-exported HLO artifacts, and
 //! [`exec::NativeBackend`], a pure-rust interpreter of the same layer
 //! semantics, so a `--no-default-features` build runs the whole pipeline
-//! (evaluator, batch server, serve fleet) with no xla dependency. A
-//! [`scenario::Scenario`] names its backend (`"backend": "native"`); the
-//! CLI exposes `--backend pjrt-cpu|native`.
+//! (evaluator, batch server, serve fleet) with no xla dependency. The
+//! native backend is also the fast leg: weights pack once at upload into
+//! a column-tiled kernel layout, matmuls run as register-tiled
+//! micro-kernels sharded over scoped threads
+//! ([`exec::NativeConfig`], bit-identical at any thread count), and
+//! scratch buffers recycle through a pooled arena. A
+//! [`scenario::Scenario`] names its backend and thread count
+//! (`"backend": "native"`, `"threads": 0` = auto); the CLI exposes
+//! `--backend pjrt-cpu|native --threads N`.
 //!
 //! ## Experiments are scenarios
 //!

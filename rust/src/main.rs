@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use hybridac::coordinator::{run_scenario, RunReport};
 use hybridac::eval::{Evaluator, ExperimentConfig, Method};
-use hybridac::exec::BackendKind;
+use hybridac::exec::{BackendKind, NativeConfig};
 use hybridac::hwmodel::all_architectures;
 use hybridac::report;
 use hybridac::runtime::{Artifact, DatasetBlob};
@@ -34,7 +34,7 @@ use hybridac::util::cli::Args;
 
 const FLAGS: &[&str] = &[
     "model", "repeats", "n-eval", "frac", "adc", "target", "requests", "replicas", "window-ms",
-    "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name", "backend",
+    "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name", "backend", "threads",
 ];
 const SWITCHES: &[&str] = &["differential", "verbose", "list"];
 
@@ -57,6 +57,7 @@ fn main() -> Result<()> {
                  \x20            --probe-interval-ms MS --requests R --spec FILE\n\
                  backend: --backend pjrt-cpu|native (native needs no xla; \n\
                  \x20        `--model synthetic --backend native` needs no artifacts)\n\
+                 \x20        --threads N native kernel workers (0 = auto, default)\n\
                  see README.md; real artifacts must be built first (`make artifacts`)"
             );
             Ok(())
@@ -75,6 +76,12 @@ fn backend_kind(args: &Args) -> Result<BackendKind> {
         None => Ok(BackendKind::default()),
         Some(s) => BackendKind::parse(s),
     }
+}
+
+/// `--threads N` native-backend kernel workers (0 = auto). A throughput
+/// knob only — results are bit-identical for every value.
+fn native_cfg(args: &Args) -> Result<NativeConfig> {
+    Ok(NativeConfig::with_threads(args.get_usize("threads", 0)?))
 }
 
 /// The `synthetic` model tag needs no `make artifacts`: materialize the
@@ -194,12 +201,13 @@ fn scenario_cmd(args: &Args) -> Result<()> {
     } else {
         bail!("scenario needs --spec FILE or --name KEY (or --list)");
     };
-    // --backend is an execution knob, not part of the experiment
-    // definition, so (unlike the spec-owned flags above) it may override
-    // the scenario's backend field
+    // --backend/--threads are execution knobs, not part of the experiment
+    // definition, so (unlike the spec-owned flags above) they may override
+    // the scenario's fields
     if let Some(b) = args.get("backend") {
         sc.backend = BackendKind::parse(b)?;
     }
+    sc.threads = args.get_usize("threads", sc.threads)?;
     let dir = hybridac::artifacts_dir();
     ensure_artifact(&dir, &sc.model, sc.backend)?;
     println!("scenario '{}' on {} [{}]:", sc.name, sc.model, sc.backend.name());
@@ -232,7 +240,8 @@ fn run(args: &Args) -> Result<()> {
         ("hybrid", Method::Hybrid { frac }),
     ] {
         let sc = Scenario::from_config(label, &tag, &base_cfg(args, method)?)
-            .with_backend(backend);
+            .with_backend(backend)
+            .with_threads(args.get_usize("threads", 0)?);
         let rep = run_scenario(&dir, &sc, 250)?;
         print_report(&rep);
     }
@@ -244,7 +253,7 @@ fn sweep(args: &Args) -> Result<()> {
     let dir = hybridac::artifacts_dir();
     let backend = backend_kind(args)?;
     ensure_artifact(&dir, &tag, backend)?;
-    let mut ev = Evaluator::with_backend(&dir, &tag, backend)?;
+    let mut ev = Evaluator::with_backend_config(&dir, &tag, backend, native_cfg(args)?)?;
     let mut rows = Vec::new();
     for pct in [0.0, 0.02, 0.04, 0.08, 0.12, 0.16, 0.20] {
         let hy = ev.accuracy(&base_cfg(args, Method::Hybrid { frac: pct })?)?;
@@ -271,7 +280,7 @@ fn adc(args: &Args) -> Result<()> {
     let dir = hybridac::artifacts_dir();
     let backend = backend_kind(args)?;
     ensure_artifact(&dir, &tag, backend)?;
-    let mut ev = Evaluator::with_backend(&dir, &tag, backend)?;
+    let mut ev = Evaluator::with_backend_config(&dir, &tag, backend, native_cfg(args)?)?;
     let frac = args.get_f64("frac", 0.16)?;
     let mut rows = Vec::new();
     for bits in [8u32, 7, 6, 4] {
@@ -334,7 +343,7 @@ fn select(args: &Args) -> Result<()> {
     let dir = hybridac::artifacts_dir();
     let backend = backend_kind(args)?;
     ensure_artifact(&dir, &tag, backend)?;
-    let mut ev = Evaluator::with_backend(&dir, &tag, backend)?;
+    let mut ev = Evaluator::with_backend_config(&dir, &tag, backend, native_cfg(args)?)?;
     let clean = ev.art.clean_test_acc;
     let target_drop = args.get_f64("target", 0.01)?;
     let base = base_cfg(args, Method::Hybrid { frac: 0.0 })?;
@@ -391,6 +400,7 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(b) = args.get("backend") {
         sc.backend = BackendKind::parse(b)?;
     }
+    sc.threads = args.get_usize("threads", sc.threads)?;
     let tag = sc.model.clone();
     ensure_artifact(&dir, &tag, sc.backend)?;
     let data = Arc::new({

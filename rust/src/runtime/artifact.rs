@@ -501,7 +501,9 @@ impl DatasetBlob {
         let shape = vec![16usize, 16, 3];
         let per: usize = shape.iter().product();
         let mut images = vec![0.0f32; n * per];
-        rng.fill_normal(&mut images);
+        // sharded gaussian fill; bit-identical to the sequential stream
+        let workers = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+        rng.fill_normal_par(&mut images, workers);
         for v in images.iter_mut() {
             *v = v.abs().min(6.0); // keep inside the calibrated (0, 6) range
         }

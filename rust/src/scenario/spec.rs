@@ -36,7 +36,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::eval::prepare::{ExperimentConfig, Method};
-use crate::exec::BackendKind;
+use crate::exec::{BackendKind, ExecBackend, NativeConfig};
 use crate::noise::{CellKind, CellModel};
 use crate::quantize::QuantConfig;
 use crate::util::json::Json;
@@ -104,6 +104,10 @@ pub struct Scenario {
     /// in JSON; absent = the build's default). Parsed strictly — an
     /// unknown backend fails the parse rather than silently substituting.
     pub backend: BackendKind,
+    /// Native-backend kernel worker threads (`"threads"` in JSON; 0 =
+    /// auto = one per available core). A pure throughput knob: results
+    /// are bit-identical for every value. Ignored by PJRT.
+    pub threads: usize,
 }
 
 impl Scenario {
@@ -142,6 +146,7 @@ impl Scenario {
             repeats: if clean { 1 } else { cfg.repeats },
             seed: cfg.seed,
             backend: BackendKind::default(),
+            threads: 0,
         }
     }
 
@@ -245,6 +250,22 @@ impl Scenario {
         self
     }
 
+    /// Set the native-backend kernel thread count (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The native-backend tuning this scenario asks for.
+    pub fn native_config(&self) -> NativeConfig {
+        NativeConfig::with_threads(self.threads)
+    }
+
+    /// Instantiate this scenario's execution backend (kind + tuning).
+    pub fn create_backend(&self) -> Result<std::sync::Arc<dyn ExecBackend>> {
+        self.backend.create_with(self.native_config())
+    }
+
     // -- lowering -----------------------------------------------------------
 
     /// Whether the analog arrays use differential cells (drives the
@@ -344,6 +365,7 @@ impl Scenario {
         m.insert("repeats".to_string(), Json::Num(self.repeats as f64));
         m.insert("seed".to_string(), Json::Num(self.seed as f64));
         m.insert("backend".to_string(), Json::Str(self.backend.name().to_string()));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
         Json::Obj(m)
     }
 
@@ -352,7 +374,7 @@ impl Scenario {
             j,
             &[
                 "name", "model", "split", "quant", "perturb", "readout", "group", "n_eval",
-                "repeats", "seed", "backend",
+                "repeats", "seed", "backend", "threads",
             ],
             "scenario",
         )?;
@@ -407,6 +429,7 @@ impl Scenario {
             repeats: opt_usize(j, "repeats", 3)?,
             seed: opt_f64(j, "seed", 0xD1CE as f64)? as u64,
             backend,
+            threads: opt_usize(j, "threads", 0)?,
         })
     }
 
@@ -670,6 +693,22 @@ mod tests {
         assert!(sc.perturb.is_empty());
         assert_eq!(sc.method_label(), "Clean");
         assert_eq!(sc.backend, BackendKind::default(), "absent backend = build default");
+        assert_eq!(sc.threads, 0, "absent threads = auto");
+    }
+
+    #[test]
+    fn threads_field_round_trips_and_builds() {
+        let sc = Scenario::paper_default("t", "m", Method::Hybrid { frac: 0.16 }).with_threads(4);
+        assert_eq!(sc.native_config().resolve_threads(), 4);
+        let text = sc.to_json().to_string();
+        assert!(text.contains("\"threads\":4"), "{text}");
+        assert_eq!(Scenario::parse(&text).unwrap(), sc);
+        // mistyped threads must error, not silently fall back
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"threads":"4"}"#)
+                .is_err(),
+            "string threads"
+        );
     }
 
     #[test]

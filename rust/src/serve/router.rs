@@ -176,7 +176,7 @@ impl Router {
         let art = Artifact::load(&artifacts, &scenario.model)?;
         let queue_depth = if fleet.queue_depth == 0 { 2 * art.batch } else { fleet.queue_depth };
         let per_image = DatasetMeta::load(&artifacts, &art.dataset)?.image_elems();
-        let backend = BackendProvider::for_kind(scenario.backend)?;
+        let backend = BackendProvider::for_kind_with(scenario.backend, scenario.native_config())?;
         let mut slots = Vec::with_capacity(fleet.replicas);
         for id in 0..fleet.replicas {
             let spec = ReplicaSpec {

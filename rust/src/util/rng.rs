@@ -105,6 +105,88 @@ impl Rng {
         }
     }
 
+    /// Advance the generator state exactly as `pairs` Box-Muller draws
+    /// would — including the (astronomically rare but possible) `u1 ~ 0`
+    /// rejection retries — without computing the transcendental parts.
+    /// This is what makes the parallel fill exact: chunk-start states are
+    /// derived by this cheap sequential walk. The cached-spare slot must
+    /// be empty.
+    fn skip_normal_pairs(&mut self, pairs: usize) {
+        debug_assert!(self.spare.is_none());
+        for _ in 0..pairs {
+            loop {
+                let u1 = self.next_f64();
+                if u1 <= f64::MIN_POSITIVE {
+                    continue;
+                }
+                let _u2 = self.next_f64();
+                break;
+            }
+        }
+    }
+
+    /// [`Rng::fill_normal`] sharded over `threads` scoped workers. Output
+    /// *and* the generator's final state are bit-identical to the
+    /// sequential fill: a cached spare feeds element 0 first, every chunk
+    /// but the last is even-sized so no Box-Muller spare crosses a chunk
+    /// boundary, chunk-start states come from [`Rng::skip_normal_pairs`],
+    /// and the last worker's generator (spare included) becomes this
+    /// generator's state. Small fills fall back to the sequential path.
+    pub fn fill_normal_par(&mut self, out: &mut [f32], threads: usize) {
+        const MIN_PAR: usize = 4096;
+        let threads = threads.max(1);
+        if threads == 1 || out.len() < MIN_PAR.max(2 * threads) {
+            self.fill_normal(out);
+            return;
+        }
+        let mut start = 0usize;
+        if self.spare.is_some() {
+            out[0] = self.normal_f32();
+            start = 1;
+        }
+        let body = out.len() - start;
+        let mut chunk = body.div_ceil(threads);
+        if chunk % 2 == 1 {
+            chunk += 1;
+        }
+        // cheap sequential walk: the generator state at each chunk start
+        let mut starts: Vec<Rng> = Vec::new();
+        {
+            let mut walker = self.clone();
+            let mut done = 0usize;
+            while done < body {
+                let len = chunk.min(body - done);
+                starts.push(walker.clone());
+                walker.skip_normal_pairs(len.div_ceil(2));
+                done += len;
+            }
+        }
+        let last = starts.len() - 1;
+        let mut tail_rng: Option<Rng> = None;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(starts.len());
+            let mut rest = &mut out[start..];
+            for st in &starts {
+                let len = chunk.min(rest.len());
+                let taken = rest;
+                let (piece, tail) = taken.split_at_mut(len);
+                rest = tail;
+                let mut r = st.clone();
+                handles.push(s.spawn(move || {
+                    r.fill_normal(piece);
+                    r
+                }));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                let r = h.join().expect("fill_normal_par worker panicked");
+                if i == last {
+                    tail_rng = Some(r);
+                }
+            }
+        });
+        *self = tail_rng.expect("fill_normal_par ran at least one chunk");
+    }
+
     /// Random subset of size k from 0..n (partial Fisher-Yates).
     pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..n).collect();
@@ -184,6 +266,46 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), 20);
         assert!(sorted.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn fill_normal_par_matches_sequential_exactly() {
+        for &n in &[4097usize, 8192, 10001] {
+            for &threads in &[2usize, 3, 4, 8] {
+                let mut a = Rng::new(99);
+                let mut b = Rng::new(99);
+                // start both generators mid-stream with a cached spare so
+                // the spare-consumption path is exercised too
+                let va0 = a.normal();
+                let vb0 = b.normal();
+                assert_eq!(va0.to_bits(), vb0.to_bits());
+                let mut va = vec![0.0f32; n];
+                let mut vb = vec![0.0f32; n];
+                a.fill_normal(&mut va);
+                b.fill_normal_par(&mut vb, threads);
+                assert_eq!(va, vb, "n={n} threads={threads}: sample stream diverged");
+                // the generator state afterwards is identical too (u64
+                // stream and the cached Box-Muller spare)
+                assert_eq!(a.next_u64(), b.next_u64(), "n={n} threads={threads}");
+                assert_eq!(
+                    a.normal().to_bits(),
+                    b.normal().to_bits(),
+                    "n={n} threads={threads}: spare state diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fill_normal_par_small_fills_stay_sequential() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        let mut va = vec![0.0f32; 100];
+        let mut vb = vec![0.0f32; 100];
+        a.fill_normal(&mut va);
+        b.fill_normal_par(&mut vb, 8);
+        assert_eq!(va, vb);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

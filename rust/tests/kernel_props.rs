@@ -1,0 +1,132 @@
+//! Kernel property tests: the packed, register-tiled, thread-sharded
+//! micro-kernels must produce *exactly* the scalar reference's output —
+//! over randomized shapes (including MR/NR/group tails), wordline group
+//! sizes, ADC lsb/clip settings, activation sparsity (the reference's
+//! zero-skip path), and thread counts ∈ {1, 4}.
+//!
+//! "Exact" means element-wise `==` on the f32 payloads: the kernels
+//! replicate the reference's per-element accumulation order, so every bit
+//! of every partial sum, ADC rounding, and clamp agrees. This closes the
+//! ROADMAP follow-up "property-test it against `crossbar_matmul_numpy` via
+//! a shared fixture": `reference_*` is the rust twin of
+//! `kernels/ref.py::crossbar_matmul_ref`, which the python pytest pins
+//! against numpy.
+
+use hybridac::exec::native::kernels::{crossbar_matmul_packed, PackedMatrix};
+use hybridac::exec::native::reference::{reference_crossbar_matmul, reference_matmul};
+use hybridac::exec::native::{crossbar_matmul, matmul};
+use hybridac::tensor::Tensor;
+use hybridac::util::rng::Rng;
+
+/// Random matrix with a controllable fraction of *exact* zeros, so the
+/// reference's zero-activation skip and the kernel's multiply-through
+/// disagree on as many terms as possible (they must still match).
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize, zero_frac: f64) -> Tensor {
+    let mut data = vec![0.0f32; rows * cols];
+    for v in data.iter_mut() {
+        if rng.next_f64() >= zero_frac {
+            *v = rng.normal_f32();
+        }
+    }
+    Tensor::new(vec![rows, cols], data)
+}
+
+fn random_case(rng: &mut Rng) -> (usize, usize, usize, usize, f32, f32) {
+    let m = 1 + rng.below(40);
+    let k = 1 + rng.below(96);
+    let n = 1 + rng.below(48);
+    // group sizes: unit, sub-K with a ragged tail, exactly K, and past K
+    let group = match rng.below(5) {
+        0 => 1,
+        1 => 2 + rng.below(7),
+        2 => 16,
+        3 => k,
+        _ => 128,
+    };
+    let (lsb, clip) = match rng.below(4) {
+        0 => (-1.0f32, 1.0f32), // ideal readout
+        1 => (0.25, 4.0),
+        2 => (0.03125, 0.5), // aggressive clipping
+        _ => (0.1, 100.0),
+    };
+    (m, k, n, group, lsb, clip)
+}
+
+#[test]
+fn packed_crossbar_equals_scalar_reference_exactly() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..150 {
+        let (m, k, n, group, lsb, clip) = random_case(&mut rng);
+        let x = random_matrix(&mut rng, m, k, 0.3);
+        let w = random_matrix(&mut rng, k, n, 0.1);
+        let reference = reference_crossbar_matmul(&x, &w, lsb, clip, group);
+        let packed = PackedMatrix::pack(&w.data, k, n);
+        for &threads in &[1usize, 4] {
+            let mut out = vec![f32::NAN; m * n];
+            crossbar_matmul_packed(&x.data, m, k, &packed, lsb, clip, group, &mut out, threads);
+            assert_eq!(
+                out, reference.data,
+                "case {case}: m={m} k={k} n={n} group={group} lsb={lsb} clip={clip} \
+                 threads={threads}"
+            );
+        }
+        // the public Tensor wrapper is the same kernel
+        let wrapped = crossbar_matmul(&x, &w, lsb, clip, group);
+        assert_eq!(wrapped.shape, vec![m, n]);
+        assert_eq!(wrapped.data, reference.data, "case {case}: wrapper diverged");
+    }
+}
+
+#[test]
+fn packed_matmul_equals_scalar_reference_exactly() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..150 {
+        let (m, k, n, _, _, _) = random_case(&mut rng);
+        let x = random_matrix(&mut rng, m, k, 0.5);
+        let w = random_matrix(&mut rng, k, n, 0.0);
+        let reference = reference_matmul(&x, &w);
+        // the digital path is the crossbar kernel with ideal readout over
+        // one group spanning all of K — at both thread counts
+        let packed = PackedMatrix::pack(&w.data, k, n);
+        for &threads in &[1usize, 4] {
+            let mut out = vec![f32::NAN; m * n];
+            crossbar_matmul_packed(&x.data, m, k, &packed, -1.0, 1.0, k, &mut out, threads);
+            assert_eq!(out, reference.data, "case {case}: m={m} k={k} n={n} threads={threads}");
+        }
+        let wrapped = matmul(&x, &w);
+        assert_eq!(wrapped.data, reference.data, "case {case}: wrapper diverged");
+    }
+}
+
+#[test]
+fn degenerate_shapes_match_the_reference() {
+    // single elements, all-zero activations, group far past K, row/column
+    // counts straddling the MR/NR tile edges
+    let mut rng = Rng::new(7);
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (1, 1, 9),   // one row, NR tail
+        (4, 3, 8),   // exact MR x NR tile
+        (5, 3, 8),   // MR tail row
+        (3, 7, 17),  // everything ragged
+        (33, 2, 1),  // single column
+    ] {
+        let x = random_matrix(&mut rng, m, k, 0.2);
+        let w = random_matrix(&mut rng, k, n, 0.2);
+        for &(lsb, clip) in &[(-1.0f32, 1.0f32), (0.5, 2.0)] {
+            for &group in &[1usize, 2, 1000] {
+                let reference = reference_crossbar_matmul(&x, &w, lsb, clip, group);
+                let got = crossbar_matmul(&x, &w, lsb, clip, group);
+                assert_eq!(got.data, reference.data, "m={m} k={k} n={n} group={group}");
+            }
+        }
+        // all-zero activations: the reference skips every term
+        let zx = Tensor::zeros(vec![m, k]);
+        assert_eq!(
+            crossbar_matmul(&zx, &w, 0.5, 2.0, 2).data,
+            reference_crossbar_matmul(&zx, &w, 0.5, 2.0, 2).data,
+            "all-zero x, m={m} k={k} n={n}"
+        );
+        assert_eq!(matmul(&zx, &w).data, reference_matmul(&zx, &w).data);
+    }
+}

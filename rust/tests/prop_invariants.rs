@@ -274,6 +274,7 @@ fn random_scenario(r: &mut Rng) -> Scenario {
         } else {
             hybridac::exec::BackendKind::default()
         },
+        threads: [0usize, 1, 2, 8][r.below(4)],
     }
 }
 
