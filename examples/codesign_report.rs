@@ -25,7 +25,7 @@ fn main() -> Result<()> {
     println!("=== HybridAC co-design report ({tag}) ===");
 
     // ---- accuracy story ---------------------------------------------------
-    let mut ev = Evaluator::new(&dir, &tag)?;
+    let ev = Evaluator::new(&dir, &tag)?;
     let clean = ev.clean_accuracy(500)?;
     let noisy =
         ev.run_scenario(&Scenario::paper_default("unprotected", &tag, Method::NoProtection))?;

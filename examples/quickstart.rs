@@ -86,7 +86,7 @@ fn main() -> Result<()> {
     let tag = "resnet18m_c10s";
     let backend = BackendKind::default();
     println!("\nexecution backend: {}", backend.name());
-    let mut ev = Evaluator::with_backend(&dir, tag, backend)?;
+    let ev = Evaluator::with_backend(&dir, tag, backend)?;
     let clean = ev.clean_accuracy(500)?;
     let noisy =
         ev.run_scenario(&Scenario::paper_default("unprotected", tag, Method::NoProtection))?;

@@ -1,54 +1,50 @@
-//! Robustness sweep: Algorithm 1 in action on one model.
+//! Robustness sweep: the study API + Algorithm 1 in action on one model.
 //!
-//! Sweeps the protected-weight fraction for both selection methods (each
-//! point a declarative `Scenario`), prints the recovery curves, runs the
-//! paper's pop-until-accuracy loop to find each method's crossing point,
-//! and finishes with two beyond-the-paper scenarios — stuck-at faults and
+//! The recovery curves are a declarative `Study` — the built-in `sweep`
+//! grid (method x protected fraction) retargeted at the chosen model and
+//! executed by the parallel `StudyRunner` — followed by the paper's
+//! pop-until-accuracy search for each method's crossing point
+//! (`Evaluator::search_protection`, the same call the study `search` axis
+//! makes), and two beyond-the-paper scenarios — stuck-at faults and
 //! conductance drift — that exist only because the preparation pipeline is
 //! open (new `Perturbation` stages, no core edits).
 //!
 //! Run: `cargo run --release --example robustness_sweep [tag]`
 
 use anyhow::Result;
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
+use hybridac::eval::{Evaluator, Method};
 use hybridac::report;
-use hybridac::scenario::{PerturbSpec, Scenario};
+use hybridac::scenario::{PerturbSpec, Scenario, SplitSpec};
+use hybridac::study::{Study, StudyRunner};
 
 fn main() -> Result<()> {
     let tag = std::env::args().nth(1).unwrap_or_else(|| "resnet18m_c10s".into());
     let dir = hybridac::artifacts_dir();
-    let mut ev = Evaluator::new(&dir, &tag)?;
 
-    let clean = ev.clean_accuracy(500)?;
+    // the whole frac x method grid is one declarative study; points run in
+    // parallel and the report renders straight to a series plot
+    let study = Study::named("sweep", &tag).expect("built-in study");
+    let rep = StudyRunner::new(&dir).run(&study)?;
+    print!("{}", rep.series("frac", "method")?);
+    let clean = rep.clean.get(&tag).copied().unwrap_or(0.0);
     println!("{tag}: clean accuracy {}", report::pct(clean));
 
-    let points = [0.0, 0.02, 0.04, 0.08, 0.12, 0.16, 0.20, 0.25];
-    let mut hyb = Vec::new();
-    let mut iws = Vec::new();
-    for &p in &points {
-        let sh = Scenario::paper_default("sweep", &tag, Method::Hybrid { frac: p });
-        let si = Scenario::paper_default("sweep", &tag, Method::Iws { frac: p });
-        hyb.push(100.0 * ev.run_scenario(&sh)?.mean);
-        iws.push(100.0 * ev.run_scenario(&si)?.mean);
-    }
-    let xs: Vec<f64> = points.iter().map(|p| p * 100.0).collect();
-    print!(
-        "{}",
-        report::series_plot(
-            &format!("{tag}: recovery curves (sigma 50%/10%)"),
-            "%protected",
-            &xs,
-            &[("HybridAC", hyb), ("IWS", iws)]
-        )
-    );
-
-    // Algorithm 1's outer loop for both methods
-    let base = ExperimentConfig::paper_default(Method::NoProtection);
+    // Algorithm 1's outer loop for both methods — the same
+    // search_protection core the study `search` axis consumes
+    let ev = Evaluator::new(&dir, &tag)?;
+    let base = Scenario::paper_default("search", &tag, Method::NoProtection)
+        .with_backend(ev.backend_kind());
     for (name, mk) in [
-        ("HybridAC", Box::new(|f| Method::Hybrid { frac: f }) as Box<dyn Fn(f64) -> Method>),
-        ("IWS", Box::new(|f| Method::Iws { frac: f })),
+        ("HybridAC", Box::new(|f| SplitSpec::Channels { frac: f })
+            as Box<dyn Fn(f64) -> SplitSpec>),
+        ("IWS", Box::new(|f| SplitSpec::Iws { frac: f })),
     ] {
-        let (frac, acc) = ev.find_protection(&base, mk, clean - 0.02, 0.40)?;
+        let (frac, acc) = ev.search_protection(
+            |f| Evaluator::search_point(&base, mk(f)),
+            clean - 0.02,
+            0.40,
+            0.01,
+        )?;
         println!(
             "{name}: reaches {} at {:.0}% protected (target: clean - 2%)",
             report::pct(acc.mean),
@@ -57,7 +53,8 @@ fn main() -> Result<()> {
     }
 
     // beyond the paper: extra imperfections as pipeline stages
-    let hybrid = Scenario::paper_default("hybrid", &tag, Method::Hybrid { frac: 0.16 });
+    let hybrid = Scenario::paper_default("hybrid", &tag, Method::Hybrid { frac: 0.16 })
+        .with_backend(ev.backend_kind());
     let faulty = hybrid.clone().with_stage(PerturbSpec::StuckAt { rate: 0.002 });
     let drifted = hybrid.clone().with_stage(PerturbSpec::Drift {
         t_seconds: 3600.0 * 24.0,

@@ -1,64 +1,25 @@
 //! Fig. 11 — accuracy vs number of simultaneously activated wordlines,
 //! ResNet18/CIFAR10-analog.
 //!
-//! Scenarios: the VTEAM baseline (R-ratio R_b, sigma 50%), improved
+//! Device corners: the VTEAM baseline (R-ratio R_b, sigma 50%), improved
 //! devices (2R_b & sigma/2, 3R_b & sigma/3) — all with *no* protection —
 //! and HybridAC@16%, which stays within ~1% of clean even at 128
-//! wordlines.  Wordline count enters twice: the ADC full scale grows with
-//! the group (coarser lsb) and the exported graph variants re-group the
-//! reduction dimension (artifacts resnet18m_c10s_r{16,32,64}).
+//! wordlines. The corners are the built-in `fig11` study's `variant` axis
+//! crossed with the `group` axis; wordline count enters twice (ADC full
+//! scale + the re-grouped graph variants).
 
-use hybridac::benchkit::{eval_budget, Stopwatch};
-use hybridac::eval::{Evaluator, Method};
-use hybridac::noise::{fig11_scenario, CellModel};
-use hybridac::report;
-use hybridac::scenario::Scenario;
+use hybridac::benchkit::Stopwatch;
+use hybridac::study::{Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("fig11");
-    let dir = hybridac::artifacts_dir();
-    let (n_eval, repeats) = eval_budget();
-    let tag = "resnet18m_c10s";
-    let mut ev = Evaluator::new(&dir, tag)?;
-    let clean = ev.clean_accuracy(n_eval)?;
-    let groups = [16usize, 32, 64, 128];
-
-    let scenarios: Vec<(&str, CellModel, Method)> = vec![
-        ("Rb, s=50%", fig11_scenario(1.0, 1.0), Method::NoProtection),
-        ("2Rb, s/2", fig11_scenario(2.0, 2.0), Method::NoProtection),
-        ("3Rb, s/3", fig11_scenario(3.0, 3.0), Method::NoProtection),
-        ("HybridAC@16%", fig11_scenario(1.0, 1.0), Method::Hybrid { frac: 0.16 }),
-    ];
-
-    let mut series = Vec::new();
-    for (name, cell, method) in &scenarios {
-        let mut ys = Vec::new();
-        for &g in &groups {
-            let sc = Scenario::paper_default(name, tag, method.clone())
-                .with_cell(*cell)
-                .with_adc(Some(8))
-                .with_group(g)
-                .with_eval(n_eval, repeats);
-            ys.push(100.0 * ev.run_scenario(&sc)?.mean);
-        }
-        series.push((*name, ys));
-    }
-    let xs: Vec<f64> = groups.iter().map(|&g| g as f64).collect();
-    let plot_series: Vec<(&str, Vec<f64>)> = series
-        .iter()
-        .map(|(n, ys)| (*n, ys.clone()))
-        .collect();
-    print!(
-        "{}",
-        report::series_plot(
-            &format!("Fig. 11: accuracy vs activated wordlines (clean {:.1}%)",
-                     100.0 * clean),
-            "wordlines",
-            &xs,
-            &plot_series
-        )
+    let study = Study::named("fig11", "resnet18m_c10s").expect("built-in study");
+    let report = StudyRunner::new(hybridac::artifacts_dir()).run(&study)?;
+    print!("{}", report.series("group", "variant")?);
+    report.write_json()?;
+    println!(
+        "paper: unprotected designs degrade as wordlines grow; HybridAC \
+         holds the drop under ~1% at 128 wordlines."
     );
-    println!("paper: unprotected designs degrade as wordlines grow; HybridAC \
-              holds the drop under ~1% at 128 wordlines.");
     Ok(())
 }

@@ -1,41 +1,17 @@
 //! Fig. 7 — accuracy vs %protected weights on the ImageNet-analog dataset
 //! (in50s): ResNet18, ResNet34, DenseNet121; HybridAC vs IWS curves.
+//!
+//! One built-in study (`model` x `method` x `frac`); the series render
+//! pivots it into one recovery-curve plot per model.
 
-use hybridac::benchkit::{built_combos, eval_budget, Stopwatch};
-use hybridac::eval::{Evaluator, Method};
-use hybridac::report;
-use hybridac::scenario::Scenario;
+use hybridac::benchkit::Stopwatch;
+use hybridac::study::{Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("fig7");
-    let dir = hybridac::artifacts_dir();
-    let (n_eval, repeats) = eval_budget();
-    let points = [0.0, 0.04, 0.08, 0.12, 0.16, 0.20, 0.25];
-
-    for (tag, pretty) in built_combos("in50s") {
-        let mut ev = Evaluator::new(&dir, &tag)?;
-        let clean = ev.clean_accuracy(n_eval)?;
-        let mut hyb = Vec::new();
-        let mut iws = Vec::new();
-        for &p in &points {
-            let ch = Scenario::paper_default("fig7", &tag, Method::Hybrid { frac: p })
-                .with_eval(n_eval, repeats);
-            let ci = Scenario::paper_default("fig7", &tag, Method::Iws { frac: p })
-                .with_eval(n_eval, repeats);
-            hyb.push(100.0 * ev.run_scenario(&ch)?.mean);
-            iws.push(100.0 * ev.run_scenario(&ci)?.mean);
-        }
-        let xs: Vec<f64> = points.iter().map(|p| 100.0 * p).collect();
-        print!(
-            "{}",
-            report::series_plot(
-                &format!("Fig. 7 [{pretty}/in50s]: accuracy vs %protected (clean {:.1}%)",
-                         100.0 * clean),
-                "%protected",
-                &xs,
-                &[("HybridAC", hyb), ("IWS", iws)]
-            )
-        );
-    }
+    let study = Study::named("fig7", "").expect("built-in study");
+    let report = StudyRunner::new(hybridac::artifacts_dir()).run(&study)?;
+    print!("{}", report.series("frac", "method")?);
+    report.write_json()?;
     Ok(())
 }

@@ -1,21 +1,21 @@
 //! Fig. 8 — accuracy vs area-efficiency for ResNet18/CIFAR10-analog:
 //! how each HybridAC optimization (smaller ADC, hybrid quantization,
 //! differential cells) moves the design toward the ideal corner.
+//!
+//! The six design points are the built-in `fig8` study's `variant` axis;
+//! this driver only joins each variant with its architecture's normalized
+//! area-efficiency from the hardware model.
 
-use hybridac::benchkit::{eval_budget, Stopwatch};
-use hybridac::eval::{Evaluator, Method};
+use hybridac::benchkit::Stopwatch;
 use hybridac::hwmodel::{all_architectures, ArchSpec};
-use hybridac::noise::CellModel;
-use hybridac::quantize::QuantConfig;
 use hybridac::report;
-use hybridac::scenario::Scenario;
+use hybridac::study::{Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("fig8");
-    let dir = hybridac::artifacts_dir();
-    let (n_eval, repeats) = eval_budget();
-    let tag = "resnet18m_c10s";
-    let mut ev = Evaluator::new(&dir, tag)?;
+    let study = Study::named("fig8", "resnet18m_c10s").expect("built-in study");
+    let rep = StudyRunner::new(hybridac::artifacts_dir()).run(&study)?;
+
     let archs = all_architectures();
     let isaac = archs[0].clone();
     let eff = |name: &str| -> f64 {
@@ -25,53 +25,47 @@ fn main() -> anyhow::Result<()> {
             .map(|a: &ArchSpec| a.norm_area_eff(&isaac))
             .unwrap_or(0.0)
     };
-
-    let frac = 0.16;
-    let mk = |method: Method| {
-        Scenario::paper_default("fig8", tag, method).with_eval(n_eval, repeats)
+    // variant name -> (pretty label, matching architecture efficiency)
+    let designs: &[(&str, &str, f64)] = &[
+        ("ISAAC-noprot", "ISAAC (no protection)", eff("Ideal-ISAAC")),
+        ("IWS-2", "IWS-2", eff("IWS-2")),
+        ("HybAC-8b", "HybridAC 8b-ADC", eff("Ideal-ISAAC") * 1.05),
+        ("HybAC-6b", "HybridAC 6b-ADC", eff("HybridAC") * 0.95),
+        ("HybAC-6b-hq", "HybridAC 6b + hybrid quant", eff("HybridAC")),
+        ("HybACDi-4b", "HybridACDi 4b-ADC", eff("HybridACDi")),
+    ];
+    let variant_of = |p: &hybridac::study::PointResult| -> String {
+        p.axes
+            .iter()
+            .find(|(k, _)| k == "variant")
+            .map(|(_, v)| v.clone())
+            .unwrap_or_default()
     };
-
-    let mut rows = Vec::new();
-    // (point label, accuracy scenario, matching architecture efficiency)
-    let isaac_acc = ev.run_scenario(&mk(Method::NoProtection))?;
-    rows.push(("ISAAC (no protection)".to_string(), isaac_acc.mean, eff("Ideal-ISAAC")));
-
-    let iws = ev.run_scenario(&mk(Method::Iws { frac }))?;
-    rows.push(("IWS-2".to_string(), iws.mean, eff("IWS-2")));
-
-    let hy8 = ev.run_scenario(&mk(Method::Hybrid { frac }).with_adc(Some(8)))?;
-    rows.push(("HybridAC 8b-ADC".to_string(), hy8.mean, eff("Ideal-ISAAC") * 1.05));
-
-    let hy6 = ev.run_scenario(&mk(Method::Hybrid { frac }).with_adc(Some(6)))?;
-    rows.push(("HybridAC 6b-ADC".to_string(), hy6.mean, eff("HybridAC") * 0.95));
-
-    let hyq = ev.run_scenario(
-        &mk(Method::Hybrid { frac })
-            .with_quant(Some(QuantConfig::hybrid()))
-            .with_adc(Some(6)),
-    )?;
-    rows.push(("HybridAC 6b + hybrid quant".to_string(), hyq.mean, eff("HybridAC")));
-
-    let hydi = ev.run_scenario(
-        &mk(Method::Hybrid { frac })
-            .with_cell(CellModel::differential(0.5))
-            .with_adc(Some(4)),
-    )?;
-    rows.push(("HybridACDi 4b-ADC".to_string(), hydi.mean, eff("HybridACDi")));
-
-    let clean = ev.clean_accuracy(n_eval)?;
-    let table: Vec<Vec<String>> = rows
+    let rows: Vec<Vec<String>> = rep
+        .points
         .iter()
-        .map(|(n, acc, e)| vec![n.clone(), report::pct(*acc), format!("{e:.2}")])
+        .map(|p| {
+            let variant = variant_of(p);
+            let (label, e) = designs
+                .iter()
+                .find(|(name, _, _)| *name == variant)
+                .map(|(_, label, e)| (*label, *e))
+                .unwrap_or((variant.as_str(), 0.0));
+            vec![label.to_string(), report::pct(p.mean), format!("{e:.2}")]
+        })
         .collect();
+    let clean = rep.clean.values().next().copied().unwrap_or(0.0);
     print!(
         "{}",
         report::table(
-            &format!("Fig. 8: accuracy vs area-efficiency, ResNet18/c10s (clean {:.1}%, ideal corner = top-right)",
-                     100.0 * clean),
+            &format!(
+                "Fig. 8: accuracy vs area-efficiency, ResNet18/c10s (clean {:.1}%, ideal corner = top-right)",
+                100.0 * clean
+            ),
             &["design point", "accuracy", "norm. area-eff"],
-            &table
+            &rows
         )
     );
+    rep.write_json()?;
     Ok(())
 }

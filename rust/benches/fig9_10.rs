@@ -7,11 +7,12 @@
 //! simulator and the pipeline scheduler.
 
 use hybridac::analog::AnalogTiming;
-use hybridac::benchkit::{built_combos, Stopwatch};
+use hybridac::benchkit::Stopwatch;
 use hybridac::hwmodel::tile::TileModel;
 use hybridac::mapping::{map_model, simulate_exec, MapScheme};
 use hybridac::report;
 use hybridac::runtime::Artifact;
+use hybridac::study::built_model_combos;
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("fig9_10");
@@ -20,7 +21,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut time_rows = Vec::new();
     let mut energy_rows = Vec::new();
-    for (tag, pretty) in built_combos("c100s") {
+    for (tag, pretty) in built_model_combos(&dir, "c100s") {
         let art = Artifact::load(&dir, &tag)?;
         let isaac_tile = TileModel::isaac();
         let hybrid_tile = TileModel::hybridac();

@@ -1,58 +1,22 @@
 //! Table 1 — accuracy vs protected-weight percentage, IWS vs HybridAC,
 //! CIFAR10/CIFAR100-analog datasets, sigma = 50%/10% (paper §5.1).
 //!
-//! For each (DNN, dataset): clean accuracy, unprotected accuracy under
-//! variation, then the Algorithm-1 crossing — the %weights each method
-//! must protect to come within 1% (absolute) of the clean accuracy — and
-//! the accuracy both methods reach at that point.
+//! One built-in study per dataset: a `model` axis over the paper's combos
+//! crossed with a `search` axis — `none` (the "with PV" unprotected
+//! column) plus the Algorithm-1 crossing for each method. The measured
+//! clean accuracy per model rides along in the report.
 
-use hybridac::benchkit::{built_combos, eval_budget, Stopwatch};
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
-use hybridac::report;
+use hybridac::benchkit::Stopwatch;
+use hybridac::study::{Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("table1");
-    let dir = hybridac::artifacts_dir();
-    let (n_eval, repeats) = eval_budget();
-    let target_drop = 0.02; // scaled models carry a ~2% sigma_d floor (EXPERIMENTS.md)
-
+    let runner = StudyRunner::new(hybridac::artifacts_dir());
     for dataset in ["c10s", "c100s"] {
-        let mut rows = Vec::new();
-        for (tag, pretty) in built_combos(dataset) {
-            let mut ev = Evaluator::new(&dir, &tag)?;
-            let mut base = ExperimentConfig::paper_default(Method::NoProtection);
-            base.n_eval = n_eval;
-            base.repeats = repeats;
-
-            let clean = ev.clean_accuracy(n_eval)?;
-            let unprot = ev.accuracy(&base)?;
-            let target = clean - target_drop;
-
-            let step = if hybridac::benchkit::full_mode() { 0.01 } else { 0.02 };
-            let (f_iws, a_iws) = ev.find_protection_step(
-                &base, |f| Method::Iws { frac: f }, target, 0.30, step)?;
-            let (f_hyb, a_hyb) = ev.find_protection_step(
-                &base, |f| Method::Hybrid { frac: f }, target, 0.30, step)?;
-
-            rows.push(vec![
-                pretty.to_string(),
-                report::pct(clean),
-                report::pct(unprot.mean),
-                format!("{:.0}%", 100.0 * f_iws),
-                report::pct(a_iws.mean),
-                format!("{:.0}%", 100.0 * f_hyb),
-                report::pct(a_hyb.mean),
-            ]);
-        }
-        print!(
-            "{}",
-            report::table(
-                &format!("Table 1 [{dataset}]: accuracy vs %selected weights (sigma 50%/10%)"),
-                &["DNN", "clean", "with PV", "%sel IWS", "acc IWS",
-                  "%sel HybridAC", "acc HybridAC"],
-                &rows
-            )
-        );
+        let study = Study::named(&format!("table1-{dataset}"), "").expect("built-in study");
+        let report = runner.run(&study)?;
+        print!("{}", report.table());
+        report.write_json()?;
     }
     Ok(())
 }

@@ -1,66 +1,30 @@
 //! Table 2 — accuracy vs ADC resolution (paper §5.2).
 //!
 //! 8/7/6-bit ADCs on the offset-subtraction designs (HybAC vs IWS) and
-//! 4-bit on the differential-cell designs (HybACDi vs IWSDi).  HybridAC's
+//! 4-bit on the differential-cell designs (HybACDi vs IWSDi). HybridAC's
 //! uniform row removal shrinks each bit-line's full scale so the coarse
 //! ADC hurts far less than it hurts IWS's scattered selection.
+//!
+//! The eight design points are one `variant` axis (the 4-bit differential
+//! corner is not a cross product of single knobs) crossed with the
+//! dataset's `model` axis — see `Study::named("table2-<dataset>")`.
 
-use hybridac::benchkit::{built_combos, eval_budget, full_mode, Stopwatch};
-use hybridac::eval::{Evaluator, Method};
-use hybridac::noise::CellModel;
-use hybridac::report;
-use hybridac::scenario::Scenario;
+use hybridac::benchkit::Stopwatch;
+use hybridac::study::{full_mode, Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("table2");
-    let dir = hybridac::artifacts_dir();
-    let (n_eval, repeats) = eval_budget();
-    let frac = 0.16;
+    let runner = StudyRunner::new(hybridac::artifacts_dir());
     let datasets: &[&str] = if full_mode() {
         &["c10s", "c100s", "in50s"]
     } else {
         &["c10s", "in50s"]
     };
-
     for dataset in datasets {
-        let mut rows = Vec::new();
-        for (tag, pretty) in built_combos(dataset) {
-            let mut ev = Evaluator::new(&dir, &tag)?;
-            let mut cells = Vec::new();
-            let mk = |method: Method, bits: u32, cell: CellModel| {
-                Scenario::paper_default("table2", &tag, method)
-                    .with_adc(Some(bits))
-                    .with_cell(cell)
-                    .with_eval(n_eval, repeats)
-            };
-            for bits in [8u32, 7, 6] {
-                let hy = ev.run_scenario(&mk(Method::Hybrid { frac }, bits,
-                                             CellModel::offset(0.5)))?;
-                let iw = ev.run_scenario(&mk(Method::Iws { frac }, bits,
-                                             CellModel::offset(0.5)))?;
-                cells.push(report::pct(hy.mean));
-                cells.push(report::pct(iw.mean));
-            }
-            // 4-bit differential (HybACDi / IWSDi)
-            let hy4 = ev.run_scenario(&mk(Method::Hybrid { frac }, 4,
-                                          CellModel::differential(0.5)))?;
-            let iw4 = ev.run_scenario(&mk(Method::Iws { frac }, 4,
-                                          CellModel::differential(0.5)))?;
-            cells.push(report::pct(hy4.mean));
-            cells.push(report::pct(iw4.mean));
-            let mut row = vec![pretty.to_string()];
-            row.extend(cells);
-            rows.push(row);
-        }
-        print!(
-            "{}",
-            report::table(
-                &format!("Table 2 [{dataset}]: accuracy vs ADC resolution (16% protected)"),
-                &["DNN", "8b HybAC", "8b IWS", "7b HybAC", "7b IWS",
-                  "6b HybAC", "6b IWS", "4b HACDi", "4b IWSDi"],
-                &rows
-            )
-        );
+        let study = Study::named(&format!("table2-{dataset}"), "").expect("built-in study");
+        let report = runner.run(&study)?;
+        print!("{}", report.table());
+        report.write_json()?;
     }
     Ok(())
 }

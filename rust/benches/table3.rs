@@ -1,52 +1,26 @@
 //! Table 3 — hybrid quantization (paper §5.3): digital weights at 8 bits,
-//! analog at 6 bits, with the 8-bit and then the 6-bit ADC.  Compared
+//! analog at 6 bits, with the 8-bit and then the 6-bit ADC. Compared
 //! against the uniform-8-bit baseline of Table 2's first column.
+//!
+//! The three quant/ADC designs are one `variant` axis crossed with the
+//! dataset's `model` axis — see `Study::named("table3-<dataset>")`.
 
-use hybridac::benchkit::{built_combos, eval_budget, full_mode, Stopwatch};
-use hybridac::eval::{Evaluator, Method};
-use hybridac::quantize::QuantConfig;
-use hybridac::report;
-use hybridac::scenario::Scenario;
+use hybridac::benchkit::Stopwatch;
+use hybridac::study::{full_mode, Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("table3");
-    let dir = hybridac::artifacts_dir();
-    let (n_eval, repeats) = eval_budget();
-    let frac = 0.16;
+    let runner = StudyRunner::new(hybridac::artifacts_dir());
     let datasets: &[&str] = if full_mode() {
         &["c10s", "c100s", "in50s"]
     } else {
         &["c10s", "in50s"]
     };
-
     for dataset in datasets {
-        let mut rows = Vec::new();
-        for (tag, pretty) in built_combos(dataset) {
-            let mut ev = Evaluator::new(&dir, &tag)?;
-            let mk = |q: QuantConfig, adc: u32| {
-                Scenario::paper_default("table3", &tag, Method::Hybrid { frac })
-                    .with_quant(Some(q))
-                    .with_adc(Some(adc))
-                    .with_eval(n_eval, repeats)
-            };
-            let u8_8 = ev.run_scenario(&mk(QuantConfig::uniform8(), 8))?;
-            let h86_8 = ev.run_scenario(&mk(QuantConfig::hybrid(), 8))?;
-            let h86_6 = ev.run_scenario(&mk(QuantConfig::hybrid(), 6))?;
-            rows.push(vec![
-                pretty.to_string(),
-                report::pct(u8_8.mean),
-                report::pct(h86_8.mean),
-                report::pct(h86_6.mean),
-            ]);
-        }
-        print!(
-            "{}",
-            report::table(
-                &format!("Table 3 [{dataset}]: hybrid quantization (8-bit digital / 6-bit analog)"),
-                &["DNN", "uniform-8 8b-ADC", "(8-6) 8b-ADC", "(8-6) 6b-ADC"],
-                &rows
-            )
-        );
+        let study = Study::named(&format!("table3-{dataset}"), "").expect("built-in study");
+        let report = runner.run(&study)?;
+        print!("{}", report.table());
+        report.write_json()?;
     }
     Ok(())
 }

@@ -1,62 +1,13 @@
-//! Shared plumbing for the table/figure bench harnesses.
+//! Timing plumbing for the bench harnesses (stopwatch + stage timers).
 //!
-//! `cargo bench` regenerates every table and figure of the paper's
-//! evaluation. Accuracy benches execute real noisy inference through PJRT,
-//! so a full sweep is minutes of CPU; the default is a reduced-but-faithful
-//! configuration and `HYBRIDAC_BENCH_FULL=1` restores the paper-scale
-//! sweep (more eval samples + repeats).
+//! The sweep configuration that used to live here — the eval budget
+//! (`HYBRIDAC_BENCH_FULL`) and the per-dataset model combos — moved behind
+//! the study layer ([`crate::study::eval_budget`],
+//! [`crate::study::model_combos`]): the table/figure benches are thin
+//! drivers over [`crate::study::Study::named`] built-ins now and no longer
+//! roll their own loops.
 
 use std::time::Instant;
-
-pub fn full_mode() -> bool {
-    std::env::var("HYBRIDAC_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
-}
-
-/// (n_eval, repeats) for accuracy benches.
-pub fn eval_budget() -> (usize, usize) {
-    if full_mode() {
-        (1000, 5)
-    } else {
-        (250, 2)
-    }
-}
-
-/// All (tag, pretty) combos per dataset, in the paper's table order.
-pub fn combos(dataset: &str) -> Vec<(String, &'static str)> {
-    let fams: &[(&str, &str)] = match dataset {
-        "in50s" => &[
-            ("resnet18m", "ResNet18"),
-            ("resnet34m", "ResNet34"),
-            ("densenetm", "DenseNet121"),
-        ],
-        _ => &[
-            ("vggmini", "VGG16"),
-            ("resnet18m", "ResNet18"),
-            ("resnet34m", "ResNet34"),
-            ("densenetm", "DenseNet121"),
-            ("effnetm", "EfficientNetB3"),
-        ],
-    };
-    fams.iter()
-        .map(|(f, p)| (format!("{f}_{dataset}"), *p))
-        .collect()
-}
-
-/// Skip combos whose artifacts are not built yet (partial `make artifacts`);
-/// prints a notice so truncation is never silent.
-pub fn built_combos(dataset: &str) -> Vec<(String, &'static str)> {
-    let dir = crate::artifacts_dir();
-    combos(dataset)
-        .into_iter()
-        .filter(|(tag, _)| {
-            let ok = dir.join(format!("{tag}.meta.json")).exists();
-            if !ok {
-                eprintln!("[bench] skipping {tag}: artifact not built");
-            }
-            ok
-        })
-        .collect()
-}
 
 /// Tiny stopwatch for the per-bench timing line.
 pub struct Stopwatch(Instant, &'static str);

@@ -32,7 +32,7 @@ pub struct RunReport {
 /// Run accuracy + hardware estimation for one declarative scenario (on the
 /// scenario's `backend`).
 pub fn run_scenario(artifacts: &Path, sc: &Scenario, batch: usize) -> Result<RunReport> {
-    let mut ev = Evaluator::for_scenario(artifacts, sc)?;
+    let ev = Evaluator::for_scenario(artifacts, sc)?;
     let acc = ev.run_scenario(sc)?;
     let clean = ev.art.clean_test_acc;
 

@@ -8,6 +8,12 @@
 //! default [`BackendKind`], [`Evaluator::with_backend`] selects one
 //! explicitly, and [`Evaluator::for_scenario`] honors the scenario's own
 //! `backend` field.
+//!
+//! Every accuracy path takes `&self`: one evaluator can score many points
+//! concurrently (the study runner's worker threads share the loaded
+//! artifact/dataset through [`Evaluator::from_parts`] and, on the native
+//! backend, one fleet-shared execution backend). Per-run state — the
+//! repeat RNG, the prepared weights, the executor — is local to each call.
 
 use anyhow::Result;
 use std::path::Path;
@@ -16,7 +22,7 @@ use std::sync::Arc;
 use super::prepare::{ExperimentConfig, Method};
 use crate::exec::{BackendKind, ExecBackend, ModelExecutor, NativeConfig};
 use crate::runtime::{Artifact, DatasetBlob};
-use crate::scenario::Scenario;
+use crate::scenario::{Scenario, SplitSpec};
 use crate::util::rng::Rng;
 
 /// Mean/std accuracy of one experiment point.
@@ -28,9 +34,12 @@ pub struct AccResult {
 }
 
 /// Owns the backend + one model's artifact/dataset and runs configs on it.
+///
+/// The artifact and dataset are held behind `Arc` so several evaluators
+/// (e.g. one per study-runner worker thread) can share one loaded copy.
 pub struct Evaluator {
-    pub art: Artifact,
-    pub data: DatasetBlob,
+    pub art: Arc<Artifact>,
+    pub data: Arc<DatasetBlob>,
     backend: Arc<dyn ExecBackend>,
 }
 
@@ -56,13 +65,30 @@ impl Evaluator {
     ) -> Result<Evaluator> {
         let art = Artifact::load(dir, tag)?;
         let data = DatasetBlob::load(dir, &art.dataset)?;
-        Ok(Evaluator { art, data, backend: kind.create_with(native)? })
+        Ok(Evaluator {
+            art: Arc::new(art),
+            data: Arc::new(data),
+            backend: kind.create_with(native)?,
+        })
     }
 
     /// Evaluator for one scenario: its model tag, its backend, *and* its
     /// native tuning (`threads`).
     pub fn for_scenario(dir: &Path, sc: &Scenario) -> Result<Evaluator> {
         Self::with_backend_config(dir, &sc.model, sc.backend, sc.native_config())
+    }
+
+    /// Evaluator over already-loaded (and possibly shared) handles — the
+    /// study runner's worker threads build one per model from fleet-shared
+    /// `Arc`s instead of re-reading the blobs from disk. The caller is
+    /// responsible for handing in a backend whose kind matches the
+    /// scenarios it will run ([`Evaluator::run_scenario`] still checks).
+    pub fn from_parts(
+        art: Arc<Artifact>,
+        data: Arc<DatasetBlob>,
+        backend: Arc<dyn ExecBackend>,
+    ) -> Evaluator {
+        Evaluator { art, data, backend }
     }
 
     /// The backend this evaluator executes on.
@@ -73,7 +99,7 @@ impl Evaluator {
     /// Accuracy (mean over cfg.repeats noise draws) of one config —
     /// lowered to a [`Scenario`] on this evaluator's backend and run
     /// through the pipeline.
-    pub fn accuracy(&mut self, cfg: &ExperimentConfig) -> Result<AccResult> {
+    pub fn accuracy(&self, cfg: &ExperimentConfig) -> Result<AccResult> {
         let sc = Scenario::from_config("config", &self.art.tag, cfg)
             .with_backend(self.backend.kind());
         self.run_scenario(&sc)
@@ -84,7 +110,7 @@ impl Evaluator {
     /// `backend` must match the backend this evaluator was constructed
     /// with — a spec asking for a different engine is an error, never a
     /// silent substitution (see [`Evaluator::for_scenario`]).
-    pub fn run_scenario(&mut self, sc: &Scenario) -> Result<AccResult> {
+    pub fn run_scenario(&self, sc: &Scenario) -> Result<AccResult> {
         anyhow::ensure!(
             sc.model.is_empty() || sc.model == self.art.tag,
             "scenario '{}' targets model '{}' but this evaluator holds '{}'",
@@ -128,13 +154,45 @@ impl Evaluator {
         Ok(AccResult { mean, std: var.sqrt(), repeats })
     }
 
-    /// Algorithm 1's outer loop: grow the protected fraction until the
-    /// noisy accuracy reaches `target` (absolute). Returns
-    /// (fraction, accuracy at that fraction). Steps are coarse (the paper
-    /// pops single channels; we pop ~1%-of-weights chunks) — the crossing
-    /// is what Table 1 reports.
+    /// Algorithm 1's outer loop, step-parameterized — the one search
+    /// implementation (the study `search` axis consumes it directly, and
+    /// the legacy `find_protection*` names wrap it). Evaluates `at(frac)`
+    /// for a fraction growing from the artifact's pinned-weight floor in
+    /// `step` increments until the mean accuracy reaches `target`
+    /// (absolute) or the fraction reaches `max_frac`; returns the crossing
+    /// (fraction, accuracy at that fraction). The paper pops single
+    /// channels; benches use 1-2%-of-weights chunks for speed — the
+    /// crossing is what Table 1 reports.
+    pub fn search_protection(
+        &self,
+        at: impl Fn(f64) -> Scenario,
+        target: f64,
+        max_frac: f64,
+        step: f64,
+    ) -> Result<(f64, AccResult)> {
+        anyhow::ensure!(step > 0.0, "search step must be positive, got {step}");
+        let mut frac = self.art.pinned_weights as f64 / self.art.total_weights as f64;
+        loop {
+            let acc = self.run_scenario(&at(frac))?;
+            if acc.mean >= target || frac >= max_frac {
+                return Ok((frac, acc));
+            }
+            frac += step;
+        }
+    }
+
+    /// Scenario for one step of a [`Evaluator::search_protection`] loop:
+    /// `base` with its split replaced by `split(frac)` — the adapter the
+    /// study runner and the legacy wrappers share.
+    pub fn search_point(base: &Scenario, split: SplitSpec) -> Scenario {
+        base.clone().with_split(split)
+    }
+
+    /// Legacy name for the Algorithm-1 search at a fixed 1%-of-weights
+    /// step. Deprecated: use [`Evaluator::search_protection`] (the single
+    /// step-parameterized implementation); this remains as a thin wrapper.
     pub fn find_protection(
-        &mut self,
+        &self,
         base: &ExperimentConfig,
         mk: impl Fn(f64) -> Method,
         target: f64,
@@ -143,29 +201,32 @@ impl Evaluator {
         self.find_protection_step(base, mk, target, max_frac, 0.01)
     }
 
-    /// `find_protection` with an explicit chunk size (the paper pops one
-    /// channel at a time; benches use 2%-of-weights chunks for speed).
+    /// Legacy name for the Algorithm-1 search with an explicit chunk
+    /// size. Deprecated: use [`Evaluator::search_protection`]; this
+    /// wrapper only lowers the [`ExperimentConfig`] to a scenario per
+    /// step and delegates.
     pub fn find_protection_step(
-        &mut self,
+        &self,
         base: &ExperimentConfig,
         mk: impl Fn(f64) -> Method,
         target: f64,
         max_frac: f64,
         step: f64,
     ) -> Result<(f64, AccResult)> {
-        let mut frac = self.art.pinned_weights as f64 / self.art.total_weights as f64;
-        loop {
-            let cfg = ExperimentConfig { method: mk(frac), ..base.clone() };
-            let acc = self.accuracy(&cfg)?;
-            if acc.mean >= target || frac >= max_frac {
-                return Ok((frac, acc));
-            }
-            frac += step;
-        }
+        let kind = self.backend.kind();
+        self.search_protection(
+            |frac| {
+                let cfg = ExperimentConfig { method: mk(frac), ..base.clone() };
+                Scenario::from_config("search", &self.art.tag, &cfg).with_backend(kind)
+            },
+            target,
+            max_frac,
+            step,
+        )
     }
 
     /// Convenience: the clean (no noise/quant/ADC) pipeline anchor.
-    pub fn clean_accuracy(&mut self, n_eval: usize) -> Result<f64> {
+    pub fn clean_accuracy(&self, n_eval: usize) -> Result<f64> {
         let cfg = ExperimentConfig {
             method: Method::Clean,
             adc_bits: None,

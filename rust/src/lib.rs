@@ -42,7 +42,21 @@
 //! [`scenario::Perturbation`] impls, not enum edits; [`eval::ExperimentConfig`]
 //! remains as a thin builder that lowers to the same pipeline.
 //!
+//! ## Sweeps are studies
+//!
+//! A grid of scenarios is a [`study::Study`]: a base scenario plus named
+//! axes (`frac`, `method`, `adc_bits`, `sigma`, `group`, `model`, `seed`,
+//! `variant` patches, and the Algorithm-1 `search` axis), also
+//! JSON-round-trippable (`hybridac study --spec examples/study.json`).
+//! [`study::StudyRunner`] executes the expanded grid across worker
+//! threads — one shared native backend (each graph variant compiles once
+//! fleet-wide) or one PJRT engine per worker — and renders both the
+//! [`report`] text output and `BENCH_study_<name>.json`, byte-identical
+//! at any worker count. The paper benches are thin drivers over
+//! [`study::Study::named`] built-ins.
+//!
 //! Typical flow:
+//! * [`study::StudyRunner::run`] — a whole sweep grid in one call,
 //! * [`eval::Evaluator::run_scenario`] — accuracy of one scenario
 //!   (repeat-averaged over variation draws),
 //! * [`coordinator::run_scenario`] — accuracy + hardware
@@ -71,6 +85,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod selection;
 pub mod serve;
+pub mod study;
 pub mod tensor;
 pub mod util;
 

@@ -4,11 +4,15 @@
 //!   info                         list artifacts + platform
 //!   scenario --spec FILE         run a full experiment from a JSON scenario
 //!            --name KEY          ... or a named built-in (--list to see them)
+//!   study   --spec FILE          run a sweep grid from a JSON study spec
+//!           --name KEY           ... or a named built-in (--list to see them)
+//!           --workers N          point-level worker threads (0 = auto)
+//!           --out FILE           where to write the machine-readable report
 //!   run     --model TAG          clean + noisy + protected accuracy
-//!   sweep   --model TAG          protection-fraction sweep (Table 1 rows)
-//!   adc     --model TAG          ADC-resolution sweep (Table 2 rows)
+//!   sweep   --model TAG          alias: built-in study `sweep` (Table 1 rows)
+//!   adc     --model TAG          alias: built-in study `adc` (Table 2 rows)
+//!   select  --model TAG          alias: built-in study `select` (Algorithm 1)
 //!   hw                           architecture power/area/efficiency summary
-//!   select  --model TAG          Algorithm-1 loop: find the %weights needed
 //!   serve   --model TAG          replicated serving fleet demo (self-driven):
 //!           --replicas N --window-ms MS --queue-depth D --probe P
 //!           --probe-interval-ms MS (background health monitor)
@@ -23,18 +27,20 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hybridac::coordinator::{run_scenario, RunReport};
-use hybridac::eval::{Evaluator, ExperimentConfig, Method};
-use hybridac::exec::{BackendKind, NativeConfig};
+use hybridac::eval::{ExperimentConfig, Method};
+use hybridac::exec::BackendKind;
 use hybridac::hwmodel::all_architectures;
 use hybridac::report;
 use hybridac::runtime::{Artifact, DatasetBlob};
-use hybridac::scenario::Scenario;
+use hybridac::scenario::{Scenario, SplitSpec};
 use hybridac::serve::{self, FleetConfig, Router};
+use hybridac::study::{Axis, Study, StudyRunner};
 use hybridac::util::cli::Args;
 
 const FLAGS: &[&str] = &[
     "model", "repeats", "n-eval", "frac", "adc", "target", "requests", "replicas", "window-ms",
     "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name", "backend", "threads",
+    "workers", "out",
 ];
 const SWITCHES: &[&str] = &["differential", "verbose", "list"];
 
@@ -43,6 +49,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("scenario") => scenario_cmd(&args),
+        Some("study") => study_cmd(&args),
         Some("run") => run(&args),
         Some("sweep") => sweep(&args),
         Some("adc") => adc(&args),
@@ -51,8 +58,11 @@ fn main() -> Result<()> {
         Some("serve") => serve(&args),
         _ => {
             eprintln!(
-                "usage: hybridac <info|scenario|run|sweep|adc|hw|select|serve> [--model TAG] ...\n\
+                "usage: hybridac <info|scenario|study|run|sweep|adc|hw|select|serve> [--model TAG] ...\n\
                  scenario flags: --spec FILE | --name KEY | --list\n\
+                 study flags: --spec FILE | --name KEY | --list\n\
+                 \x20            --workers N point workers (0 = auto) --out FILE report path\n\
+                 \x20            (sweep/adc/select are aliases for built-in studies)\n\
                  serve flags: --replicas N --window-ms MS --queue-depth D --probe P\n\
                  \x20            --probe-interval-ms MS --requests R --spec FILE\n\
                  backend: --backend pjrt-cpu|native (native needs no xla; \n\
@@ -76,12 +86,6 @@ fn backend_kind(args: &Args) -> Result<BackendKind> {
         None => Ok(BackendKind::default()),
         Some(s) => BackendKind::parse(s),
     }
-}
-
-/// `--threads N` native-backend kernel workers (0 = auto). A throughput
-/// knob only — results are bit-identical for every value.
-fn native_cfg(args: &Args) -> Result<NativeConfig> {
-    Ok(NativeConfig::with_threads(args.get_usize("threads", 0)?))
 }
 
 /// The `synthetic` model tag needs no `make artifacts`: materialize the
@@ -248,67 +252,124 @@ fn run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn sweep(args: &Args) -> Result<()> {
-    let tag = model_tag(args);
-    let dir = hybridac::artifacts_dir();
-    let backend = backend_kind(args)?;
-    ensure_artifact(&dir, &tag, backend)?;
-    let mut ev = Evaluator::with_backend_config(&dir, &tag, backend, native_cfg(args)?)?;
-    let mut rows = Vec::new();
-    for pct in [0.0, 0.02, 0.04, 0.08, 0.12, 0.16, 0.20] {
-        let hy = ev.accuracy(&base_cfg(args, Method::Hybrid { frac: pct })?)?;
-        let iws = ev.accuracy(&base_cfg(args, Method::Iws { frac: pct })?)?;
-        rows.push(vec![
-            format!("{:.0}%", pct * 100.0),
-            report::pct(hy.mean),
-            report::pct(iws.mean),
-        ]);
+/// Run one declarative study — from a JSON file (`--spec`) or a named
+/// built-in (`--name`, see `--list`). The grid (base scenario + axes)
+/// comes from the spec; `--workers` fans the points out over a thread
+/// pool (reports are byte-identical at any worker count).
+fn study_cmd(args: &Args) -> Result<()> {
+    if args.has("list") {
+        println!("built-in studies (run with: study --name KEY [--model TAG]):");
+        for (key, desc) in Study::builtin_names() {
+            println!("  {key:<14} {desc}");
+        }
+        return Ok(());
     }
-    print!(
-        "{}",
-        report::table(
-            &format!("{tag}: accuracy vs protected weights (sigma=50%)"),
-            &["%protected", "HybridAC", "IWS"],
-            &rows
-        )
+    let study = if let Some(path) = args.get("spec") {
+        // the file defines the experiment grid; refuse the per-knob flags
+        // instead of silently dropping them (--model may still retarget a
+        // single-model base; --backend/--threads/--workers are execution
+        // knobs)
+        for flag in ["name", "frac", "adc", "seed", "n-eval", "repeats", "target"] {
+            if args.get(flag).is_some() {
+                bail!("--{flag} conflicts with --spec (the study file defines it)");
+            }
+        }
+        if args.has("differential") {
+            bail!("--differential conflicts with --spec (set the cell in the study file)");
+        }
+        Study::load(Path::new(path))?
+    } else if let Some(name) = args.get("name") {
+        named_study(name, args)?
+    } else {
+        bail!("study needs --spec FILE or --name KEY (or --list)");
+    };
+    run_study(study, args)
+}
+
+/// A built-in study with the classic per-knob flag overrides applied to
+/// its base scenario (the `sweep`/`adc`/`select` aliases route through
+/// here).
+fn named_study(key: &str, args: &Args) -> Result<Study> {
+    let mut study = Study::named(key, &model_tag(args))
+        .ok_or_else(|| anyhow::anyhow!("unknown built-in study '{key}' — try `study --list`"))?;
+    let n_eval = args.get_usize("n-eval", study.base.n_eval)?;
+    let repeats = args.get_usize("repeats", study.base.repeats)?;
+    study.base = study.base.with_eval(n_eval, repeats);
+    study.base.seed = args.get_usize("seed", study.base.seed as usize)? as u64;
+    if let Some(bits) = args.get("adc") {
+        study.base = study
+            .base
+            .with_adc(if bits == "none" { None } else { Some(bits.parse()?) });
+    }
+    if args.has("differential") {
+        study.base = study.base.with_cell(hybridac::noise::CellModel::differential(0.5));
+    }
+    if args.get("frac").is_some() {
+        let frac = args.get_f64("frac", 0.16)?;
+        study.base.split = match study.base.split {
+            SplitSpec::Channels { .. } => SplitSpec::Channels { frac },
+            SplitSpec::Iws { .. } => SplitSpec::Iws { frac },
+            SplitSpec::AllAnalog => {
+                bail!("--frac does not apply to '{key}' (its base has no protected split)")
+            }
+        };
+    }
+    if args.get("target").is_some() {
+        let drop = args.get_f64("target", 0.01)?;
+        let mut found = false;
+        for axis in study.axes.iter_mut() {
+            if let Axis::Search { params, .. } = axis {
+                params.target_drop = drop;
+                found = true;
+            }
+        }
+        if !found {
+            bail!("--target applies only to studies with a 'search' axis (e.g. 'select')");
+        }
+    }
+    Ok(study)
+}
+
+/// Execute a study and render text + `BENCH_study_<name>.json`.
+fn run_study(mut study: Study, args: &Args) -> Result<()> {
+    if let Some(model) = args.get("model") {
+        if study.axes.iter().any(|a| a.key() == "model") {
+            bail!("--model conflicts with this study's 'model' axis (the axis names the models)");
+        }
+        study.base = study.base.with_model(model);
+    }
+    if let Some(b) = args.get("backend") {
+        study.base.backend = BackendKind::parse(b)?;
+    }
+    study.base.threads = args.get_usize("threads", study.base.threads)?;
+    let runner = StudyRunner::new(hybridac::artifacts_dir())
+        .with_workers(args.get_usize("workers", 0)?);
+    let report = runner.run(&study)?;
+    print!("{}", report.table());
+    let path = match args.get("out") {
+        Some(p) => {
+            let p = std::path::PathBuf::from(p);
+            report.write_json_to(&p)?;
+            p
+        }
+        None => report.write_json()?,
+    };
+    println!(
+        "wrote {} ({} points, {} workers, {:.2}s)",
+        path.display(),
+        report.points.len(),
+        report.workers,
+        report.wall_s
     );
     Ok(())
 }
 
+fn sweep(args: &Args) -> Result<()> {
+    run_study(named_study("sweep", args)?, args)
+}
+
 fn adc(args: &Args) -> Result<()> {
-    let tag = model_tag(args);
-    let dir = hybridac::artifacts_dir();
-    let backend = backend_kind(args)?;
-    ensure_artifact(&dir, &tag, backend)?;
-    let mut ev = Evaluator::with_backend_config(&dir, &tag, backend, native_cfg(args)?)?;
-    let frac = args.get_f64("frac", 0.16)?;
-    let mut rows = Vec::new();
-    for bits in [8u32, 7, 6, 4] {
-        let hy = ev.run_scenario(
-            &Scenario::from_config("adc", &tag, &base_cfg(args, Method::Hybrid { frac })?)
-                .with_adc(Some(bits))
-                .with_backend(backend),
-        )?;
-        let iws = ev.run_scenario(
-            &Scenario::from_config("adc", &tag, &base_cfg(args, Method::Iws { frac })?)
-                .with_adc(Some(bits))
-                .with_backend(backend),
-        )?;
-        rows.push(vec![
-            format!("{bits}-bit"),
-            report::pct(hy.mean),
-            report::pct(iws.mean),
-        ]);
-    }
-    print!(
-        "{}",
-        report::table(
-            &format!("{tag}: accuracy vs ADC resolution"),
-            &["ADC", "HybridAC", "IWS"],
-            &rows
-        )
-    );
-    Ok(())
+    run_study(named_study("adc", args)?, args)
 }
 
 fn hw() -> Result<()> {
@@ -339,27 +400,7 @@ fn hw() -> Result<()> {
 }
 
 fn select(args: &Args) -> Result<()> {
-    let tag = model_tag(args);
-    let dir = hybridac::artifacts_dir();
-    let backend = backend_kind(args)?;
-    ensure_artifact(&dir, &tag, backend)?;
-    let mut ev = Evaluator::with_backend_config(&dir, &tag, backend, native_cfg(args)?)?;
-    let clean = ev.art.clean_test_acc;
-    let target_drop = args.get_f64("target", 0.01)?;
-    let base = base_cfg(args, Method::Hybrid { frac: 0.0 })?;
-    let (frac, acc) = ev.find_protection(
-        &base,
-        |f| Method::Hybrid { frac: f },
-        clean - target_drop,
-        0.40,
-    )?;
-    println!(
-        "{tag}: protect {:.1}% of weights -> acc {} (clean {})",
-        frac * 100.0,
-        report::pct(acc.mean),
-        report::pct(clean)
-    );
-    Ok(())
+    run_study(named_study("select", args)?, args)
 }
 
 fn serve(args: &Args) -> Result<()> {

@@ -31,7 +31,7 @@
 //! let json = sc.to_json().to_string(); // round-trips through a file
 //! assert_eq!(Scenario::parse(&json)?, sc);
 //!
-//! let mut ev = Evaluator::new(&hybridac::artifacts_dir(), "resnet18m_c10s")?;
+//! let ev = Evaluator::new(&hybridac::artifacts_dir(), "resnet18m_c10s")?;
 //! let acc = ev.run_scenario(&sc)?;
 //! println!("{}: {:.2}%", sc.name, 100.0 * acc.mean);
 //! # Ok(())

@@ -228,6 +228,20 @@ impl Scenario {
         self
     }
 
+    /// Replace the split stage (each step of
+    /// [`crate::eval::Evaluator::search_protection`] is the base scenario
+    /// with a grown split, via `Evaluator::search_point`).
+    pub fn with_split(mut self, split: SplitSpec) -> Self {
+        self.split = split;
+        self
+    }
+
+    /// Retarget the scenario at a different model artifact.
+    pub fn with_model(mut self, model: &str) -> Self {
+        self.model = model.to_string();
+        self
+    }
+
     pub fn with_eval(mut self, n_eval: usize, repeats: usize) -> Self {
         self.n_eval = n_eval;
         self.repeats = repeats;

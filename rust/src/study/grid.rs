@@ -1,0 +1,241 @@
+//! Grid expansion: a [`Study`]'s axes → concrete [`StudyPoint`]s.
+//!
+//! Expansion is row-major with the first axis outermost, and a point's
+//! identity is a pure function of the spec — `key=value` segments in axis
+//! order — so IDs are stable across runs, processes, and worker counts
+//! (the property `tests/study_props.rs` pins). Axis values apply to the
+//! base scenario *in axis order*: a `method` axis before a `frac` axis
+//! means the fraction lands on the split the method chose.
+
+use anyhow::{bail, Result};
+
+use crate::noise::CellModel;
+use crate::scenario::{PerturbSpec, ReadoutSpec, Scenario, SplitSpec};
+
+use super::spec::{Axis, MethodKey, SearchParams, SearchValue, Study, VariantPatch};
+
+/// The Algorithm-1 crossing a `search`-axis point runs instead of a single
+/// evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchTask {
+    pub method: MethodKey,
+    pub params: SearchParams,
+}
+
+impl SearchTask {
+    /// The split one step of the search loop evaluates.
+    pub fn split_at(&self, frac: f64) -> SplitSpec {
+        match self.method {
+            MethodKey::Iws => SplitSpec::Iws { frac },
+            _ => SplitSpec::Channels { frac },
+        }
+    }
+}
+
+/// One concrete grid point.
+#[derive(Clone, Debug)]
+pub struct StudyPoint {
+    /// Position in the expansion order (row-major, first axis outermost).
+    pub index: usize,
+    /// Stable identity: `key=value` segments in axis order, joined by ','.
+    pub id: String,
+    /// The fully-applied scenario this point evaluates.
+    pub scenario: Scenario,
+    /// (axis key, rendered value) pairs in axis order.
+    pub axes: Vec<(String, String)>,
+    /// Present for `search`-axis points that actually search.
+    pub search: Option<SearchTask>,
+}
+
+impl Study {
+    /// Expand the axes into the full cross-product grid (see module docs).
+    /// A study with no axes expands to the single base point.
+    pub fn points(&self) -> Result<Vec<StudyPoint>> {
+        self.validate()?;
+        let lens: Vec<usize> = self.axes.iter().map(Axis::len).collect();
+        let total: usize = lens.iter().product();
+        let mut out = Vec::with_capacity(total);
+        for index in 0..total {
+            let mut rem = index;
+            let mut picks = vec![0usize; lens.len()];
+            for ai in (0..lens.len()).rev() {
+                picks[ai] = rem % lens[ai];
+                rem /= lens[ai];
+            }
+            let mut scenario = self.base.clone();
+            let mut search = None;
+            let mut axes = Vec::with_capacity(self.axes.len());
+            for (axis, &pick) in self.axes.iter().zip(&picks) {
+                let rendered = apply_axis(axis, pick, &mut scenario, &mut search)?;
+                axes.push((axis.key().to_string(), rendered));
+            }
+            let id = axes
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(",");
+            scenario.name = if id.is_empty() {
+                self.name.clone()
+            } else {
+                format!("{}[{id}]", self.name)
+            };
+            out.push(StudyPoint { index, id, scenario, axes, search });
+        }
+        Ok(out)
+    }
+}
+
+/// Apply one axis value to the scenario; returns the rendered value used
+/// in point IDs and reports.
+fn apply_axis(
+    axis: &Axis,
+    pick: usize,
+    sc: &mut Scenario,
+    search: &mut Option<SearchTask>,
+) -> Result<String> {
+    Ok(match axis {
+        Axis::Frac(vs) => {
+            set_frac(sc, vs[pick])?;
+            fmt_num(vs[pick])
+        }
+        Axis::Method(vs) => {
+            apply_method(sc, vs[pick]);
+            vs[pick].name().to_string()
+        }
+        Axis::AdcBits(vs) => {
+            set_adc(sc, vs[pick]);
+            match vs[pick] {
+                Some(bits) => bits.to_string(),
+                None => "ideal".to_string(),
+            }
+        }
+        Axis::Sigma(vs) => {
+            set_sigma(sc, vs[pick]);
+            fmt_num(vs[pick])
+        }
+        Axis::Group(vs) => {
+            sc.group = vs[pick];
+            vs[pick].to_string()
+        }
+        Axis::Model(vs) => {
+            sc.model = vs[pick].clone();
+            vs[pick].clone()
+        }
+        Axis::Seed(vs) => {
+            sc.seed = vs[pick];
+            vs[pick].to_string()
+        }
+        Axis::Variant(vs) => {
+            apply_variant(sc, &vs[pick])?;
+            vs[pick].name.clone()
+        }
+        Axis::Search { values, params } => {
+            let value = values[pick];
+            match value {
+                SearchValue::None => {}
+                SearchValue::Hybrid => {
+                    sc.split = SplitSpec::Channels { frac: sc.protected_frac() };
+                    *search = Some(SearchTask { method: MethodKey::Hybrid, params: *params });
+                }
+                SearchValue::Iws => {
+                    sc.split = SplitSpec::Iws { frac: sc.protected_frac() };
+                    *search = Some(SearchTask { method: MethodKey::Iws, params: *params });
+                }
+            }
+            value.name().to_string()
+        }
+    })
+}
+
+fn set_frac(sc: &mut Scenario, frac: f64) -> Result<()> {
+    sc.split = match sc.split {
+        SplitSpec::Channels { .. } => SplitSpec::Channels { frac },
+        SplitSpec::Iws { .. } => SplitSpec::Iws { frac },
+        SplitSpec::AllAnalog => bail!(
+            "a 'frac' value needs a channels/iws split to land on — order a 'method' axis \
+             before the 'frac' axis, or give the base scenario a protected split"
+        ),
+    };
+    Ok(())
+}
+
+fn apply_method(sc: &mut Scenario, method: MethodKey) {
+    match method {
+        MethodKey::Hybrid => sc.split = SplitSpec::Channels { frac: sc.protected_frac() },
+        MethodKey::Iws => sc.split = SplitSpec::Iws { frac: sc.protected_frac() },
+        MethodKey::Unprotected => sc.split = SplitSpec::AllAnalog,
+        MethodKey::Clean => {
+            // the old Method::Clean semantics: anchor run with nothing on
+            sc.split = SplitSpec::AllAnalog;
+            sc.quant = None;
+            sc.perturb.clear();
+            sc.readout = ReadoutSpec::Ideal;
+        }
+    }
+}
+
+fn set_adc(sc: &mut Scenario, bits: Option<u32>) {
+    *sc = sc.clone().with_adc(bits);
+}
+
+/// Set the analog-variation sigma on *every* variation stage (keeping
+/// each stage's cell kind and R-ratio), inserting an offset-cell stage if
+/// the base carries none.
+fn set_sigma(sc: &mut Scenario, sigma: f64) {
+    let mut found = false;
+    for p in sc.perturb.iter_mut() {
+        if let PerturbSpec::AnalogVariation { cell } = p {
+            cell.sigma = sigma;
+            found = true;
+        }
+    }
+    if !found {
+        sc.perturb.insert(0, PerturbSpec::AnalogVariation { cell: CellModel::offset(sigma) });
+    }
+}
+
+/// Replace the analog-variation cell model via [`Scenario::with_cell`]
+/// (every variation stage, inserted if absent) so the grid path and the
+/// builder path cannot diverge.
+fn set_cell(sc: &mut Scenario, cell: CellModel) {
+    *sc = sc.clone().with_cell(cell);
+}
+
+/// Apply a variant patch field-by-field in a fixed order (method first so
+/// a `frac` in the same patch lands on the chosen split).
+fn apply_variant(sc: &mut Scenario, patch: &VariantPatch) -> Result<()> {
+    if let Some(method) = patch.method {
+        apply_method(sc, method);
+    }
+    if let Some(frac) = patch.frac {
+        set_frac(sc, frac)?;
+    }
+    if let Some(cell) = patch.cell {
+        set_cell(sc, cell);
+    }
+    if let Some(sigma) = patch.sigma {
+        set_sigma(sc, sigma);
+    }
+    if let Some(quant) = patch.quant {
+        sc.quant = quant;
+    }
+    if let Some(bits) = patch.adc_bits {
+        set_adc(sc, bits);
+    }
+    if let Some(group) = patch.group {
+        sc.group = group;
+    }
+    if let Some(seed) = patch.seed {
+        sc.seed = seed;
+    }
+    Ok(())
+}
+
+/// Compact float rendering for IDs/reports: integers print as integers.
+pub(crate) fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}

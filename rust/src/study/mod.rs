@@ -1,0 +1,49 @@
+//! First-class studies: declarative sweep grids over scenarios, parallel
+//! point execution, and machine-readable reports.
+//!
+//! Every paper result (Tables 1-3, Figs 7/8/11) is a *grid* over scenario
+//! axes. This module makes that grid first-class instead of a hand-rolled
+//! nested loop per bench binary:
+//!
+//! * [`Study`] — a base [`crate::scenario::Scenario`] plus named axes
+//!   (`frac`, `method`, `adc_bits`, `sigma`, `group`, `model`, `seed`,
+//!   `variant` patches, and the Algorithm-1 `search` axis), JSON-round-
+//!   trippable like the scenario spec it builds on, with strict parsing —
+//!   an unknown axis key fails the parse;
+//! * [`StudyPoint`] — the grid expansion with stable, spec-derived point
+//!   IDs ([`Study::points`]);
+//! * [`StudyRunner`] — parallel execution across worker threads sharing
+//!   one native backend (one compile per graph variant fleet-wide) or one
+//!   PJRT engine per worker, with per-model artifact/clean-accuracy
+//!   memoization; reports are byte-identical at any worker count;
+//! * [`StudyReport`] — [`crate::report`] table / series-plot text output
+//!   plus `BENCH_study_<name>.json`.
+//!
+//! The paper benches are thin drivers over [`Study::named`] built-ins, and
+//! the CLI runs any study from a file alone:
+//! `hybridac study --spec examples/study.json`.
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use hybridac::study::{Study, StudyRunner};
+//!
+//! let study = Study::named("sweep", "resnet18m_c10s").expect("built-in");
+//! let report = StudyRunner::new(hybridac::artifacts_dir()).run(&study)?;
+//! print!("{}", report.table());
+//! report.write_json()?; // BENCH_study_sweep.json
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod grid;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use grid::{SearchTask, StudyPoint};
+pub use report::{PointResult, StudyReport};
+pub use runner::StudyRunner;
+pub use spec::{
+    artifact_built, built_model_combos, eval_budget, full_mode, model_combos, Axis, MethodKey,
+    SearchParams, SearchValue, Study, VariantPatch,
+};

@@ -1,0 +1,247 @@
+//! [`StudyReport`]: study results as text (tables / series plots) and as
+//! machine-readable `BENCH_study_<name>.json`.
+//!
+//! The JSON is a pure function of the study spec and the measured
+//! accuracies: it carries no wall-clock, worker-count, or host detail, so
+//! a 4-worker run writes byte-identical output to a 1-worker run (the
+//! property CI's study smoke and `tests/study_props.rs` rely on). Timing
+//! lives on the struct ([`StudyReport::wall_s`], [`StudyReport::workers`])
+//! for stdout only.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::exec::BackendKind;
+use crate::report as text;
+use crate::util::json::Json;
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    /// Grid index in expansion order (pre-skip; gaps mean skipped models).
+    pub index: usize,
+    /// Stable point ID (`key=value` segments in axis order).
+    pub id: String,
+    pub model: String,
+    /// (axis key, rendered value) pairs in axis order.
+    pub axes: Vec<(String, String)>,
+    /// Mean accuracy over the point's repeats (at the crossing for
+    /// searched points).
+    pub mean: f64,
+    pub std: f64,
+    pub repeats: usize,
+    /// Measured clean accuracy of the point's model (shared anchor).
+    pub clean: f64,
+    /// Protected-weight fraction — the Algorithm-1 crossing for searched
+    /// points, the scenario's own fraction otherwise.
+    pub frac: f64,
+    /// Whether this point ran the Algorithm-1 search.
+    pub searched: bool,
+}
+
+/// Results of one whole study, in stable grid order.
+pub struct StudyReport {
+    pub study: String,
+    pub backend: BackendKind,
+    pub points: Vec<PointResult>,
+    /// Measured clean accuracy per model.
+    pub clean: BTreeMap<String, f64>,
+    /// Models dropped because their artifacts are not built.
+    pub skipped_models: Vec<String>,
+    /// Worker threads the run used (stdout only — never serialized).
+    pub workers: usize,
+    /// Wall-clock seconds of the run (stdout only — never serialized).
+    pub wall_s: f64,
+}
+
+impl StudyReport {
+    /// Long-format text table: one row per point, one column per axis,
+    /// then the shared anchors and the point metrics.
+    pub fn table(&self) -> String {
+        if self.points.is_empty() {
+            return format!(
+                "\n== study {} [{}] == (no points: artifacts not built?)\n",
+                self.study,
+                self.backend.name()
+            );
+        }
+        let mut headers: Vec<String> =
+            self.points[0].axes.iter().map(|(k, _)| k.clone()).collect();
+        headers.extend(["clean", "%protected", "accuracy", "std"].map(String::from));
+        let rows: Vec<Vec<String>> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut row: Vec<String> = p.axes.iter().map(|(_, v)| v.clone()).collect();
+                row.push(text::pct(p.clean));
+                row.push(format!("{:.1}%{}", 100.0 * p.frac, if p.searched { "*" } else { "" }));
+                row.push(text::pct(p.mean));
+                row.push(text::pct(p.std));
+                row
+            })
+            .collect();
+        let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut out = text::table(&self.title(), &header_refs, &rows);
+        if self.points.iter().any(|p| p.searched) {
+            out.push_str("(* = Algorithm-1 crossing: smallest fraction reaching the target)\n");
+        }
+        out
+    }
+
+    /// Series-plot render for figure-style studies: x from the numeric
+    /// `x_key` axis, one line per `series_key` value, one plot per
+    /// combination of the remaining axes.
+    pub fn series(&self, x_key: &str, series_key: &str) -> Result<String> {
+        let axis_val = |p: &PointResult, key: &str| -> Option<String> {
+            p.axes.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone())
+        };
+        let group_of = |p: &PointResult| -> String {
+            p.axes
+                .iter()
+                .filter(|(k, _)| k != x_key && k != series_key)
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        let mut groups: Vec<String> = Vec::new();
+        for p in &self.points {
+            let g = group_of(p);
+            if !groups.contains(&g) {
+                groups.push(g);
+            }
+        }
+        let mut out = String::new();
+        for group in &groups {
+            let pts: Vec<&PointResult> =
+                self.points.iter().filter(|p| &group_of(p) == group).collect();
+            let mut xs: Vec<f64> = Vec::new();
+            let mut names: Vec<String> = Vec::new();
+            for p in &pts {
+                let xv = axis_val(p, x_key)
+                    .with_context(|| format!("study has no '{x_key}' axis"))?;
+                let x: f64 = xv
+                    .parse()
+                    .with_context(|| format!("axis '{x_key}' value '{xv}' is not numeric"))?;
+                if !xs.contains(&x) {
+                    xs.push(x);
+                }
+                let s = axis_val(p, series_key)
+                    .with_context(|| format!("study has no '{series_key}' axis"))?;
+                if !names.contains(&s) {
+                    names.push(s);
+                }
+            }
+            xs.sort_by(f64::total_cmp);
+            let mut series: Vec<(&str, Vec<f64>)> = Vec::new();
+            for name in &names {
+                let mut ys = Vec::with_capacity(xs.len());
+                for &x in &xs {
+                    let y = pts
+                        .iter()
+                        .find(|p| {
+                            axis_val(p, series_key).as_deref() == Some(name.as_str())
+                                && axis_val(p, x_key)
+                                    .and_then(|v| v.parse::<f64>().ok())
+                                    == Some(x)
+                        })
+                        .map(|p| 100.0 * p.mean);
+                    ys.push(y.unwrap_or(f64::NAN));
+                }
+                series.push((name.as_str(), ys));
+            }
+            let title = if group.is_empty() {
+                format!("{} (clean {:.1}%)", self.title(), 100.0 * pts[0].clean)
+            } else {
+                format!("{} [{group}] (clean {:.1}%)", self.title(), 100.0 * pts[0].clean)
+            };
+            out.push_str(&text::series_plot(&title, x_key, &xs, &series));
+        }
+        Ok(out)
+    }
+
+    fn title(&self) -> String {
+        let mut t = format!("study {} [{}]", self.study, self.backend.name());
+        if let Some(first) = self.points.first() {
+            if self.points.iter().all(|p| p.model == first.model) {
+                t.push_str(&format!(" on {}", first.model));
+            }
+        }
+        t
+    }
+
+    /// Machine-readable report (see module docs: scheduling-independent
+    /// by construction).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("study".to_string(), Json::Str(self.study.clone()));
+        root.insert("backend".to_string(), Json::Str(self.backend.name().to_string()));
+        root.insert(
+            "clean".to_string(),
+            Json::Obj(
+                self.clean
+                    .iter()
+                    .map(|(model, acc)| (model.clone(), Json::Num(*acc)))
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "skipped_models".to_string(),
+            Json::Arr(self.skipped_models.iter().map(|m| Json::Str(m.clone())).collect()),
+        );
+        root.insert(
+            "points".to_string(),
+            Json::Arr(
+                self.points
+                    .iter()
+                    .map(|p| {
+                        let mut m = BTreeMap::new();
+                        m.insert("id".to_string(), Json::Str(p.id.clone()));
+                        m.insert("model".to_string(), Json::Str(p.model.clone()));
+                        m.insert(
+                            "axes".to_string(),
+                            Json::Obj(
+                                p.axes
+                                    .iter()
+                                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                                    .collect(),
+                            ),
+                        );
+                        m.insert("mean".to_string(), Json::Num(p.mean));
+                        m.insert("std".to_string(), Json::Num(p.std));
+                        m.insert("repeats".to_string(), Json::Num(p.repeats as f64));
+                        m.insert("clean".to_string(), Json::Num(p.clean));
+                        m.insert("frac".to_string(), Json::Num(p.frac));
+                        m.insert("searched".to_string(), Json::Bool(p.searched));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+
+    /// `BENCH_study_<name>.json` with the study name sanitized for
+    /// filesystem use.
+    pub fn json_file_name(&self) -> String {
+        let safe: String = self
+            .study
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+            .collect();
+        format!("BENCH_study_{safe}.json")
+    }
+
+    /// Write the report to `BENCH_study_<name>.json` in the current
+    /// directory; returns the path.
+    pub fn write_json(&self) -> Result<PathBuf> {
+        let path = PathBuf::from(self.json_file_name());
+        self.write_json_to(&path)?;
+        Ok(path)
+    }
+
+    pub fn write_json_to(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing study report {}", path.display()))
+    }
+}

@@ -1,0 +1,292 @@
+//! [`StudyRunner`]: execute a study's grid points across worker threads.
+//!
+//! Shared sub-results are memoized up front on the coordinating thread —
+//! each model's artifact and dataset load once (shared via `Arc` into
+//! every worker's [`Evaluator::from_parts`]), and the measured clean
+//! accuracy per model (the anchor both the report and the `search` axis
+//! target need) evaluates once. On the native backend every worker shares
+//! *one* backend instance, so the fleet-wide [`CompiledGraphCache`]
+//! compiles each `(model, group, polarity)` graph variant once for the
+//! whole study no matter how many points or workers touch it; PJRT (not
+//! `Send`) gets one engine per worker thread, exactly like the serve
+//! fleet's [`BackendProvider::PerReplicaPjrt`] path.
+//!
+//! Determinism: a point's result depends only on its scenario (its own
+//! seed forks the repeat RNG), never on scheduling, so a study renders
+//! byte-identical reports at any worker count — `tests/study_props.rs`
+//! pins 4 workers against 1.
+//!
+//! [`CompiledGraphCache`]: crate::exec::CompiledGraphCache
+//! [`BackendProvider::PerReplicaPjrt`]: crate::exec::BackendProvider
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::eval::Evaluator;
+use crate::exec::{BackendKind, BackendProvider, NativeConfig};
+use crate::runtime::{Artifact, DatasetBlob};
+
+use super::grid::StudyPoint;
+use super::report::{PointResult, StudyReport};
+use super::spec::{artifact_built, Study};
+
+/// Executes studies: point expansion, per-model memoization, parallel
+/// evaluation, report assembly.
+pub struct StudyRunner {
+    dir: PathBuf,
+    workers: usize,
+}
+
+impl StudyRunner {
+    /// Runner over the given artifacts directory, auto-sized worker pool.
+    pub fn new(dir: impl Into<PathBuf>) -> StudyRunner {
+        StudyRunner { dir: dir.into(), workers: 0 }
+    }
+
+    /// Fix the worker-thread count (0 = auto = available cores, capped at
+    /// the point count). A pure throughput knob: reports are byte-identical
+    /// at any value.
+    pub fn with_workers(mut self, workers: usize) -> StudyRunner {
+        self.workers = workers;
+        self
+    }
+
+    /// Run every point of `study` and collect the report. Models whose
+    /// artifacts are not built are skipped with a loud notice (mirroring
+    /// the old bench behavior on a partial `make artifacts`); any point
+    /// that *runs* and fails fails the whole study.
+    pub fn run(&self, study: &Study) -> Result<StudyReport> {
+        let t0 = Instant::now();
+        let kind = study.base.backend;
+        let mut points = study.points()?;
+
+        // -- artifact availability (memoized loads below) -------------------
+        let mut models: Vec<String> = Vec::new();
+        for p in &points {
+            if !models.contains(&p.scenario.model) {
+                models.push(p.scenario.model.clone());
+            }
+        }
+        let mut skipped: Vec<String> = Vec::new();
+        let mut built: Vec<String> = Vec::new();
+        for model in models {
+            if model == "synthetic" {
+                if kind != BackendKind::Native {
+                    bail!(
+                        "the synthetic artifact has no exported HLO and runs on the native \
+                         interpreter only — set the study base's backend to \"native\""
+                    );
+                }
+                Artifact::materialize_synthetic(&self.dir)?;
+            }
+            if artifact_built(&self.dir, &model) {
+                built.push(model);
+            } else {
+                eprintln!("[study] skipping {model}: artifact not built");
+                skipped.push(model);
+            }
+        }
+        points.retain(|p| built.contains(&p.scenario.model));
+
+        // -- memoized shared sub-results ------------------------------------
+        let mut arts: BTreeMap<String, Arc<Artifact>> = BTreeMap::new();
+        let mut datas: BTreeMap<String, Arc<DatasetBlob>> = BTreeMap::new();
+        for model in &built {
+            let art = Arc::new(Artifact::load(&self.dir, model)?);
+            if !datas.contains_key(&art.dataset) {
+                datas.insert(
+                    art.dataset.clone(),
+                    Arc::new(DatasetBlob::load(&self.dir, &art.dataset)?),
+                );
+            }
+            arts.insert(model.clone(), art);
+        }
+
+        let workers = self.resolve_workers(points.len());
+        // with several points in flight, default the native kernels to one
+        // thread each instead of oversubscribing every core per point
+        // (results are bit-identical at any kernel thread count)
+        let kernel_threads = if study.base.threads == 0 && workers > 1 {
+            1
+        } else {
+            study.base.threads
+        };
+        let provider =
+            BackendProvider::for_kind_with(kind, NativeConfig::with_threads(kernel_threads))?;
+
+        // clean accuracy per model — the search target and the report
+        // anchor — measured once per model and fanned out over the same
+        // worker budget as the points (anchors are independent, and the
+        // model-keyed map keeps the result scheduling-independent)
+        let model_list: Vec<(String, Arc<Artifact>, Arc<DatasetBlob>)> = arts
+            .iter()
+            .map(|(model, art)| {
+                let data = datas
+                    .get(&art.dataset)
+                    .expect("dataset preloaded for every built model")
+                    .clone();
+                (model.clone(), art.clone(), data)
+            })
+            .collect();
+        let clean_workers = workers.min(model_list.len().max(1));
+        let clean_slots: Vec<Mutex<Option<Result<f64>>>> =
+            (0..model_list.len()).map(|_| Mutex::new(None)).collect();
+        let next_model = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..clean_workers {
+                scope.spawn(|| {
+                    let backend = match provider.instantiate() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            // claim one slot for the error so the collector
+                            // below surfaces it instead of hanging on None
+                            let i = next_model.fetch_add(1, Ordering::Relaxed);
+                            if i < model_list.len() {
+                                *clean_slots[i].lock().unwrap() = Some(Err(
+                                    e.context("instantiating a study worker backend"),
+                                ));
+                            }
+                            return;
+                        }
+                    };
+                    loop {
+                        let i = next_model.fetch_add(1, Ordering::Relaxed);
+                        if i >= model_list.len() {
+                            return;
+                        }
+                        let (model, art, data) = &model_list[i];
+                        let ev =
+                            Evaluator::from_parts(art.clone(), data.clone(), backend.clone());
+                        let res = ev
+                            .clean_accuracy(study.base.n_eval)
+                            .with_context(|| format!("clean accuracy of '{model}'"));
+                        *clean_slots[i].lock().unwrap() = Some(res);
+                    }
+                });
+            }
+        });
+        let mut clean: BTreeMap<String, f64> = BTreeMap::new();
+        for ((model, _, _), slot) in model_list.iter().zip(clean_slots) {
+            match slot.into_inner().unwrap() {
+                Some(res) => {
+                    clean.insert(model.clone(), res?);
+                }
+                None => bail!(
+                    "clean anchor for '{model}' was never evaluated (worker startup failed)"
+                ),
+            }
+        }
+
+        // -- parallel point execution ---------------------------------------
+        let n = points.len();
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<PointResult>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let backend = match provider.instantiate() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            let mut f = failure.lock().unwrap();
+                            if f.is_none() {
+                                *f = Some(e.context("instantiating a study worker backend"));
+                            }
+                            return;
+                        }
+                    };
+                    let mut evs: BTreeMap<String, Evaluator> = BTreeMap::new();
+                    loop {
+                        if failure.lock().unwrap().is_some() {
+                            return;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            return;
+                        }
+                        let point = &points[i];
+                        let model = point.scenario.model.clone();
+                        let ev = evs.entry(model.clone()).or_insert_with(|| {
+                            let art = arts.get(&model).expect("artifact preloaded").clone();
+                            let data = datas
+                                .get(&art.dataset)
+                                .expect("dataset preloaded")
+                                .clone();
+                            Evaluator::from_parts(art, data, backend.clone())
+                        });
+                        match run_point(ev, point, clean[&model]) {
+                            Ok(result) => *slots[i].lock().unwrap() = Some(result),
+                            Err(e) => {
+                                let mut f = failure.lock().unwrap();
+                                if f.is_none() {
+                                    *f = Some(e.context(format!("study point '{}'", point.id)));
+                                }
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = failure.into_inner().unwrap() {
+            return Err(e);
+        }
+        let results: Vec<PointResult> = slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("every point produced a result"))
+            .collect();
+
+        Ok(StudyReport {
+            study: study.name.clone(),
+            backend: kind,
+            points: results,
+            clean,
+            skipped_models: skipped,
+            workers,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn resolve_workers(&self, n_points: usize) -> usize {
+        let auto = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let w = if self.workers == 0 { auto() } else { self.workers };
+        w.min(n_points.max(1)).max(1)
+    }
+}
+
+/// Evaluate one grid point: a plain scenario run, or the Algorithm-1
+/// crossing for `search`-axis points.
+fn run_point(ev: &Evaluator, point: &StudyPoint, clean: f64) -> Result<PointResult> {
+    let (frac, acc, searched) = match &point.search {
+        Some(task) => {
+            let target = clean - task.params.target_drop;
+            let (frac, acc) = ev.search_protection(
+                |f| Evaluator::search_point(&point.scenario, task.split_at(f)),
+                target,
+                task.params.max_frac,
+                task.params.step,
+            )?;
+            (frac, acc, true)
+        }
+        None => {
+            let acc = ev.run_scenario(&point.scenario)?;
+            (point.scenario.protected_frac(), acc, false)
+        }
+    };
+    Ok(PointResult {
+        index: point.index,
+        id: point.id.clone(),
+        model: point.scenario.model.clone(),
+        axes: point.axes.clone(),
+        mean: acc.mean,
+        std: acc.std,
+        repeats: acc.repeats,
+        clean,
+        frac,
+        searched,
+    })
+}

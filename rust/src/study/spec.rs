@@ -1,0 +1,932 @@
+//! Declarative sweep studies: a base [`Scenario`] plus named axes.
+//!
+//! Every paper result is a *grid* over scenario knobs — protection
+//! fraction, ADC resolution, sigma, wordline group, method, model, seed.
+//! A [`Study`] names that grid once: the base scenario carries everything
+//! the axes do not touch, each [`Axis`] lists the values of one knob, and
+//! the cross product (first axis outermost) is the experiment. Like
+//! [`Scenario`], a study round-trips through [`crate::util::json`]:
+//!
+//! ```json
+//! {
+//!   "name": "frac-method",
+//!   "base": { "model": "synthetic", "split": {"kind": "channels", "frac": 0.16},
+//!             "backend": "native", "n_eval": 128, "repeats": 2, "seed": 1234 },
+//!   "axes": [
+//!     {"key": "method", "values": ["hybrid", "iws"]},
+//!     {"key": "frac",   "values": [0, 0.08, 0.16, 0.24]}
+//!   ]
+//! }
+//! ```
+//!
+//! Axis kinds: `frac`, `method`, `adc_bits`, `sigma`, `group`, `model`,
+//! `seed`, `variant` (named multi-field patches for non-cross-product
+//! designs like Table 2's differential column), and `search` — the
+//! Algorithm-1 `find_protection` crossing wrapped as an axis, so Table 1's
+//! "%weights each method must protect" is one grid too. Parsing is strict
+//! throughout (mirroring `Scenario.backend`): an unknown axis key, a
+//! misspelled field, or a mistyped value fails the parse instead of
+//! silently running a different experiment than the file says.
+//!
+//! [`Study::named`] holds the built-in studies behind the paper benches
+//! and the `sweep`/`adc`/`select` CLI subcommands; `hybridac study --list`
+//! prints them.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::eval::Method;
+use crate::noise::{fig11_scenario, CellKind, CellModel};
+use crate::quantize::QuantConfig;
+use crate::scenario::Scenario;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// bench budget + model combos (moved here from `benchkit` — the study layer
+// owns the sweep configuration now)
+
+/// `HYBRIDAC_BENCH_FULL=1` restores the paper-scale sweep budget.
+pub fn full_mode() -> bool {
+    std::env::var("HYBRIDAC_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// (n_eval, repeats) for accuracy studies: reduced-but-faithful by
+/// default, paper-scale under [`full_mode`].
+pub fn eval_budget() -> (usize, usize) {
+    if full_mode() {
+        (1000, 5)
+    } else {
+        (250, 2)
+    }
+}
+
+/// All (tag, pretty) model combos per dataset, in the paper's table order.
+pub fn model_combos(dataset: &str) -> Vec<(String, &'static str)> {
+    let fams: &[(&str, &str)] = match dataset {
+        "in50s" => &[
+            ("resnet18m", "ResNet18"),
+            ("resnet34m", "ResNet34"),
+            ("densenetm", "DenseNet121"),
+        ],
+        _ => &[
+            ("vggmini", "VGG16"),
+            ("resnet18m", "ResNet18"),
+            ("resnet34m", "ResNet34"),
+            ("densenetm", "DenseNet121"),
+            ("effnetm", "EfficientNetB3"),
+        ],
+    };
+    fams.iter()
+        .map(|(f, p)| (format!("{f}_{dataset}"), *p))
+        .collect()
+}
+
+/// Whether `tag`'s artifact has been exported into `dir`.
+pub fn artifact_built(dir: &Path, tag: &str) -> bool {
+    dir.join(format!("{tag}.meta.json")).exists()
+}
+
+/// [`model_combos`] filtered to built artifacts (the same filter the
+/// runner applies to `model` axes); prints a notice per missing artifact
+/// so truncation is never silent.
+pub fn built_model_combos(dir: &Path, dataset: &str) -> Vec<(String, &'static str)> {
+    model_combos(dataset)
+        .into_iter()
+        .filter(|(tag, _)| {
+            let ok = artifact_built(dir, tag);
+            if !ok {
+                eprintln!("[study] skipping {tag}: artifact not built");
+            }
+            ok
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// axis value types
+
+/// Protection method named by a `method` axis or a variant patch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKey {
+    /// HybridAC channel-wise selection (keeps the current fraction).
+    Hybrid,
+    /// IWS individual-weight selection (keeps the current fraction).
+    Iws,
+    /// Everything analog under the base perturbations.
+    Unprotected,
+    /// Everything analog, no quant/perturb/ADC (pipeline anchor).
+    Clean,
+}
+
+impl MethodKey {
+    pub fn parse(s: &str) -> Result<MethodKey> {
+        Ok(match s {
+            "hybrid" => MethodKey::Hybrid,
+            "iws" => MethodKey::Iws,
+            "unprotected" => MethodKey::Unprotected,
+            "clean" => MethodKey::Clean,
+            other => bail!("unknown method '{other}' (hybrid|iws|unprotected|clean)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKey::Hybrid => "hybrid",
+            MethodKey::Iws => "iws",
+            MethodKey::Unprotected => "unprotected",
+            MethodKey::Clean => "clean",
+        }
+    }
+}
+
+/// One value of a `search` axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchValue {
+    /// No search: evaluate the base point as-is (Table 1's "with PV"
+    /// column rides along the method crossings this way).
+    None,
+    /// Find HybridAC's protected-fraction crossing.
+    Hybrid,
+    /// Find IWS's protected-fraction crossing.
+    Iws,
+}
+
+impl SearchValue {
+    pub fn parse(s: &str) -> Result<SearchValue> {
+        Ok(match s {
+            "none" => SearchValue::None,
+            "hybrid" => SearchValue::Hybrid,
+            "iws" => SearchValue::Iws,
+            other => bail!("unknown search value '{other}' (none|hybrid|iws)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchValue::None => "none",
+            SearchValue::Hybrid => "hybrid",
+            SearchValue::Iws => "iws",
+        }
+    }
+}
+
+/// Parameters of the Algorithm-1 crossing wrapped by a `search` axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SearchParams {
+    /// Accuracy target = measured clean accuracy − `target_drop`.
+    pub target_drop: f64,
+    /// Give up (and report the boundary point) past this fraction.
+    pub max_frac: f64,
+    /// Fraction increment per step (the paper pops single channels; the
+    /// benches pop 1-2%-of-weights chunks).
+    pub step: f64,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams { target_drop: 0.02, max_frac: 0.30, step: 0.02 }
+    }
+}
+
+/// One named value of a `variant` axis: a multi-field patch on the base
+/// scenario, for designs that are not a cross product of single knobs
+/// (Table 2's 4-bit differential corner, Fig. 8's design-point ladder).
+/// Absent fields keep the base value; `quant`/`adc_bits` distinguish
+/// "absent" (keep) from JSON `null` (set to none/ideal).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct VariantPatch {
+    pub name: String,
+    pub method: Option<MethodKey>,
+    pub frac: Option<f64>,
+    pub cell: Option<CellModel>,
+    pub sigma: Option<f64>,
+    pub quant: Option<Option<QuantConfig>>,
+    pub adc_bits: Option<Option<u32>>,
+    pub group: Option<usize>,
+    pub seed: Option<u64>,
+}
+
+/// One sweep axis: the knob it turns and the values it takes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Axis {
+    /// Protected-weight fraction of the current channels/iws split.
+    Frac(Vec<f64>),
+    /// Protection method (keeps the current fraction for hybrid/iws).
+    Method(Vec<MethodKey>),
+    /// ADC resolution; `None` (JSON `null`) = ideal readout.
+    AdcBits(Vec<Option<u32>>),
+    /// Analog-variation sigma (inserts the variation stage if absent).
+    Sigma(Vec<f64>),
+    /// Simultaneously activated wordlines.
+    Group(Vec<usize>),
+    /// Model artifact tag.
+    Model(Vec<String>),
+    /// Master seed of the repeat RNG.
+    Seed(Vec<u64>),
+    /// Named multi-field patches (see [`VariantPatch`]).
+    Variant(Vec<VariantPatch>),
+    /// Algorithm-1 crossing per value (see [`SearchValue`]); cannot be
+    /// combined with `method`/`frac` axes — the search owns the split.
+    Search { values: Vec<SearchValue>, params: SearchParams },
+}
+
+impl Axis {
+    /// The JSON `key` naming this axis kind.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Axis::Frac(_) => "frac",
+            Axis::Method(_) => "method",
+            Axis::AdcBits(_) => "adc_bits",
+            Axis::Sigma(_) => "sigma",
+            Axis::Group(_) => "group",
+            Axis::Model(_) => "model",
+            Axis::Seed(_) => "seed",
+            Axis::Variant(_) => "variant",
+            Axis::Search { .. } => "search",
+        }
+    }
+
+    /// Number of values (grid width along this axis).
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::Frac(v) => v.len(),
+            Axis::Method(v) => v.len(),
+            Axis::AdcBits(v) => v.len(),
+            Axis::Sigma(v) => v.len(),
+            Axis::Group(v) => v.len(),
+            Axis::Model(v) => v.len(),
+            Axis::Seed(v) => v.len(),
+            Axis::Variant(v) => v.len(),
+            Axis::Search { values, .. } => values.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the study itself
+
+/// A declarative sweep: base scenario + axes (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Study {
+    pub name: String,
+    pub base: Scenario,
+    pub axes: Vec<Axis>,
+}
+
+impl Study {
+    /// Structural sanity of the axes; called by the parser and by the
+    /// grid expander, so a hand-built study fails just as loudly as a
+    /// mistyped file.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen: Vec<&'static str> = Vec::new();
+        for axis in &self.axes {
+            let key = axis.key();
+            if seen.contains(&key) {
+                bail!("study '{}': duplicate '{key}' axis", self.name);
+            }
+            seen.push(key);
+            if axis.is_empty() {
+                bail!("study '{}': axis '{key}' has no values", self.name);
+            }
+            match axis {
+                Axis::Search { params, .. } => {
+                    if params.step <= 0.0 {
+                        bail!("study '{}': search step must be positive", self.name);
+                    }
+                    if !(params.target_drop.is_finite() && params.max_frac.is_finite()) {
+                        bail!("study '{}': search parameters must be finite", self.name);
+                    }
+                }
+                Axis::Variant(patches) => {
+                    let mut names: Vec<&str> = Vec::new();
+                    for p in patches {
+                        if p.name.is_empty() {
+                            bail!("study '{}': variant without a name", self.name);
+                        }
+                        if p.name.chars().any(|c| matches!(c, ',' | '=' | '/')) {
+                            bail!(
+                                "study '{}': variant name '{}' may not contain ',', '=' or '/' \
+                                 (they delimit point IDs)",
+                                self.name,
+                                p.name
+                            );
+                        }
+                        if names.contains(&p.name.as_str()) {
+                            bail!("study '{}': duplicate variant '{}'", self.name, p.name);
+                        }
+                        names.push(&p.name);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if seen.contains(&"search") && (seen.contains(&"method") || seen.contains(&"frac")) {
+            bail!(
+                "study '{}': a 'search' axis cannot be combined with 'method' or 'frac' axes \
+                 (the search owns the split)",
+                self.name
+            );
+        }
+        let total: usize = self.axes.iter().map(Axis::len).product();
+        if total > 100_000 {
+            bail!("study '{}': {total} grid points is past the 100k sanity cap", self.name);
+        }
+        Ok(())
+    }
+
+    // -- JSON ---------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("base".to_string(), self.base.to_json());
+        m.insert(
+            "axes".to_string(),
+            Json::Arr(self.axes.iter().map(axis_to_json).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Study> {
+        check_keys(j, &["name", "base", "axes"], "study")?;
+        let name = match j.get("name") {
+            None | Some(Json::Null) => "study".to_string(),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("study 'name' is not a string"))?
+                .to_string(),
+        };
+        let base = Scenario::from_json(j.req("base")?).context("study 'base'")?;
+        let mut axes = Vec::new();
+        if let Some(arr) = j.get("axes") {
+            for (i, a) in arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("study 'axes' is not an array"))?
+                .iter()
+                .enumerate()
+            {
+                axes.push(axis_from_json(a).with_context(|| format!("study 'axes'[{i}]"))?);
+            }
+        }
+        let study = Study { name, base, axes };
+        study.validate()?;
+        Ok(study)
+    }
+
+    pub fn parse(text: &str) -> Result<Study> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Study::from_json(&j)
+    }
+
+    pub fn load(path: &Path) -> Result<Study> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading study spec {}", path.display()))?;
+        Study::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    // -- built-ins ----------------------------------------------------------
+
+    /// Named built-in studies: the paper benches and the `sweep`/`adc`/
+    /// `select` CLI subcommands, re-expressed declaratively. `model` seeds
+    /// the base scenario of single-model studies; dataset-wide studies
+    /// (`table*-<dataset>`, `fig7`) carry their own `model` axis and
+    /// ignore it.
+    pub fn named(key: &str, model: &str) -> Option<Study> {
+        let (n_eval, repeats) = eval_budget();
+        let model = if model.is_empty() { "resnet18m_c10s" } else { model };
+        let base =
+            |m: Method| Scenario::paper_default(key, model, m).with_eval(n_eval, repeats);
+        Some(match key {
+            "sweep" => Study {
+                name: key.to_string(),
+                base: base(Method::NoProtection),
+                axes: vec![
+                    Axis::Method(vec![MethodKey::Hybrid, MethodKey::Iws]),
+                    Axis::Frac(vec![0.0, 0.02, 0.04, 0.08, 0.12, 0.16, 0.20]),
+                ],
+            },
+            "adc" => Study {
+                name: key.to_string(),
+                base: base(Method::Hybrid { frac: 0.16 }),
+                axes: vec![
+                    Axis::Method(vec![MethodKey::Hybrid, MethodKey::Iws]),
+                    Axis::AdcBits(vec![Some(8), Some(7), Some(6), Some(4)]),
+                ],
+            },
+            "select" => Study {
+                name: key.to_string(),
+                base: base(Method::NoProtection),
+                axes: vec![Axis::Search {
+                    values: vec![SearchValue::Hybrid],
+                    params: SearchParams { target_drop: 0.01, max_frac: 0.40, step: 0.01 },
+                }],
+            },
+            "fig7" => Study {
+                name: key.to_string(),
+                base: Scenario::paper_default(key, "", Method::NoProtection)
+                    .with_eval(n_eval, repeats),
+                axes: vec![
+                    model_axis("in50s")?,
+                    Axis::Method(vec![MethodKey::Hybrid, MethodKey::Iws]),
+                    Axis::Frac(vec![0.0, 0.04, 0.08, 0.12, 0.16, 0.20, 0.25]),
+                ],
+            },
+            "fig8" => fig8(key, &base(Method::Hybrid { frac: 0.16 })),
+            "fig11" => fig11(key, &base(Method::NoProtection)),
+            _ => {
+                if let Some(ds) = key.strip_prefix("table1-") {
+                    table1(key, ds, n_eval, repeats)?
+                } else if let Some(ds) = key.strip_prefix("table2-") {
+                    table2(key, ds, n_eval, repeats)?
+                } else if let Some(ds) = key.strip_prefix("table3-") {
+                    table3(key, ds, n_eval, repeats)?
+                } else {
+                    return None;
+                }
+            }
+        })
+    }
+
+    /// `(key, description)` of every built-in study (`study --list`).
+    pub fn builtin_names() -> &'static [(&'static str, &'static str)] {
+        &[
+            ("sweep", "method x protected-fraction recovery grid on --model"),
+            ("adc", "method x ADC-resolution grid at 16% protected on --model"),
+            ("select", "Algorithm-1 crossing search (HybridAC) on --model"),
+            ("table1-c10s", "clean/PV + per-method crossings, CIFAR10-analog models"),
+            ("table1-c100s", "clean/PV + per-method crossings, CIFAR100-analog models"),
+            ("table2-c10s", "ADC-resolution designs incl. 4b differential, c10s"),
+            ("table2-c100s", "ADC-resolution designs incl. 4b differential, c100s"),
+            ("table2-in50s", "ADC-resolution designs incl. 4b differential, in50s"),
+            ("table3-c10s", "hybrid-quantization designs, c10s"),
+            ("table3-c100s", "hybrid-quantization designs, c100s"),
+            ("table3-in50s", "hybrid-quantization designs, in50s"),
+            ("fig7", "accuracy vs %protected, ImageNet-analog models"),
+            ("fig8", "design-point ladder (ADC/quant/differential variants)"),
+            ("fig11", "accuracy vs activated wordlines across device corners"),
+        ]
+    }
+}
+
+/// A `model` axis over the dataset's paper combos; `None` for a dataset
+/// the paper does not study.
+fn model_axis(dataset: &str) -> Option<Axis> {
+    if !["c10s", "c100s", "in50s"].contains(&dataset) {
+        return None;
+    }
+    Some(Axis::Model(model_combos(dataset).into_iter().map(|(tag, _)| tag).collect()))
+}
+
+fn table1(key: &str, ds: &str, n_eval: usize, repeats: usize) -> Option<Study> {
+    if ds == "in50s" {
+        return None; // Table 1 is the CIFAR-analog table
+    }
+    let step = if full_mode() { 0.01 } else { 0.02 };
+    Some(Study {
+        name: key.to_string(),
+        base: Scenario::paper_default(key, "", Method::NoProtection).with_eval(n_eval, repeats),
+        axes: vec![
+            model_axis(ds)?,
+            Axis::Search {
+                values: vec![SearchValue::None, SearchValue::Iws, SearchValue::Hybrid],
+                params: SearchParams { target_drop: 0.02, max_frac: 0.30, step },
+            },
+        ],
+    })
+}
+
+fn table2(key: &str, ds: &str, n_eval: usize, repeats: usize) -> Option<Study> {
+    let off = CellModel::offset(0.5);
+    let di = CellModel::differential(0.5);
+    let v = |name: &str, m: MethodKey, bits: u32, cell: CellModel| VariantPatch {
+        name: name.to_string(),
+        method: Some(m),
+        adc_bits: Some(Some(bits)),
+        cell: Some(cell),
+        ..VariantPatch::default()
+    };
+    Some(Study {
+        name: key.to_string(),
+        base: Scenario::paper_default(key, "", Method::Hybrid { frac: 0.16 })
+            .with_eval(n_eval, repeats),
+        axes: vec![
+            model_axis(ds)?,
+            Axis::Variant(vec![
+                v("8b-HybAC", MethodKey::Hybrid, 8, off),
+                v("8b-IWS", MethodKey::Iws, 8, off),
+                v("7b-HybAC", MethodKey::Hybrid, 7, off),
+                v("7b-IWS", MethodKey::Iws, 7, off),
+                v("6b-HybAC", MethodKey::Hybrid, 6, off),
+                v("6b-IWS", MethodKey::Iws, 6, off),
+                v("4b-HACDi", MethodKey::Hybrid, 4, di),
+                v("4b-IWSDi", MethodKey::Iws, 4, di),
+            ]),
+        ],
+    })
+}
+
+fn table3(key: &str, ds: &str, n_eval: usize, repeats: usize) -> Option<Study> {
+    let v = |name: &str, quant: QuantConfig, bits: u32| VariantPatch {
+        name: name.to_string(),
+        quant: Some(Some(quant)),
+        adc_bits: Some(Some(bits)),
+        ..VariantPatch::default()
+    };
+    Some(Study {
+        name: key.to_string(),
+        base: Scenario::paper_default(key, "", Method::Hybrid { frac: 0.16 })
+            .with_eval(n_eval, repeats),
+        axes: vec![
+            model_axis(ds)?,
+            Axis::Variant(vec![
+                v("u8-adc8", QuantConfig::uniform8(), 8),
+                v("h86-adc8", QuantConfig::hybrid(), 8),
+                v("h86-adc6", QuantConfig::hybrid(), 6),
+            ]),
+        ],
+    })
+}
+
+/// Fig. 8's design-point ladder; the bench maps variant names to the
+/// matching architecture efficiencies.
+fn fig8(key: &str, base: &Scenario) -> Study {
+    let adc = |name: &str, bits: u32| VariantPatch {
+        name: name.to_string(),
+        adc_bits: Some(Some(bits)),
+        ..VariantPatch::default()
+    };
+    Study {
+        name: key.to_string(),
+        base: base.clone(),
+        axes: vec![Axis::Variant(vec![
+            VariantPatch {
+                name: "ISAAC-noprot".to_string(),
+                method: Some(MethodKey::Unprotected),
+                ..VariantPatch::default()
+            },
+            VariantPatch {
+                name: "IWS-2".to_string(),
+                method: Some(MethodKey::Iws),
+                ..VariantPatch::default()
+            },
+            adc("HybAC-8b", 8),
+            adc("HybAC-6b", 6),
+            VariantPatch {
+                name: "HybAC-6b-hq".to_string(),
+                quant: Some(Some(QuantConfig::hybrid())),
+                adc_bits: Some(Some(6)),
+                ..VariantPatch::default()
+            },
+            VariantPatch {
+                name: "HybACDi-4b".to_string(),
+                cell: Some(CellModel::differential(0.5)),
+                adc_bits: Some(Some(4)),
+                ..VariantPatch::default()
+            },
+        ])],
+    }
+}
+
+/// Fig. 11's device corners x wordline groups.
+fn fig11(key: &str, base: &Scenario) -> Study {
+    let corner = |name: &str, mult: f64, div: f64| VariantPatch {
+        name: name.to_string(),
+        cell: Some(fig11_scenario(mult, div)),
+        ..VariantPatch::default()
+    };
+    Study {
+        name: key.to_string(),
+        base: base.clone(),
+        axes: vec![
+            Axis::Variant(vec![
+                corner("Rb-s50", 1.0, 1.0),
+                corner("2Rb-s25", 2.0, 2.0),
+                corner("3Rb-s17", 3.0, 3.0),
+                VariantPatch {
+                    name: "HybridAC@16%".to_string(),
+                    method: Some(MethodKey::Hybrid),
+                    frac: Some(0.16),
+                    cell: Some(fig11_scenario(1.0, 1.0)),
+                    ..VariantPatch::default()
+                },
+            ]),
+            Axis::Group(vec![16, 32, 64, 128]),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON plumbing (strict: unknown keys and mistyped values fail the parse)
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn check_keys(j: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    if let Json::Obj(m) = j {
+        for key in m.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!("unknown {what} key '{key}' (allowed: {})", allowed.join(", "));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn f64_val(j: &Json, what: &str) -> Result<f64> {
+    j.as_f64().ok_or_else(|| anyhow::anyhow!("{what} is not a number"))
+}
+
+fn int_val(j: &Json, what: &str) -> Result<u64> {
+    let v = f64_val(j, what)?;
+    if v.fract() != 0.0 || !(0.0..9e15).contains(&v) {
+        bail!("{what} is not a non-negative integer");
+    }
+    Ok(v as u64)
+}
+
+fn str_val<'a>(j: &'a Json, what: &str) -> Result<&'a str> {
+    j.as_str().ok_or_else(|| anyhow::anyhow!("{what} is not a string"))
+}
+
+fn cell_to_json(c: &CellModel) -> Json {
+    obj(vec![
+        (
+            "kind",
+            Json::Str(
+                match c.kind {
+                    CellKind::Offset => "offset",
+                    CellKind::Differential => "differential",
+                }
+                .to_string(),
+            ),
+        ),
+        ("sigma", Json::Num(c.sigma)),
+        (
+            "r_ratio",
+            if c.r_ratio.is_finite() { Json::Num(c.r_ratio) } else { Json::Null },
+        ),
+    ])
+}
+
+fn cell_from_json(j: &Json) -> Result<CellModel> {
+    check_keys(j, &["kind", "sigma", "r_ratio"], "cell")?;
+    let kind = match j.str_of("kind")? {
+        "offset" => CellKind::Offset,
+        "differential" => CellKind::Differential,
+        k => bail!("unknown cell kind '{k}' (offset|differential)"),
+    };
+    let r_ratio = match j.get("r_ratio") {
+        None | Some(Json::Null) => f64::INFINITY,
+        Some(v) => f64_val(v, "'r_ratio'")?,
+    };
+    Ok(CellModel { kind, r_ratio, sigma: j.f64_of("sigma")? })
+}
+
+fn quant_to_json(q: &Option<QuantConfig>) -> Json {
+    match q {
+        None => Json::Null,
+        Some(q) if *q == QuantConfig::uniform8() => Json::Str("uniform8".to_string()),
+        Some(q) if *q == QuantConfig::hybrid() => Json::Str("hybrid".to_string()),
+        Some(q) => obj(vec![
+            ("analog_bits", Json::Num(q.analog_bits as f64)),
+            ("digital_bits", Json::Num(q.digital_bits as f64)),
+        ]),
+    }
+}
+
+fn quant_from_json(j: &Json) -> Result<Option<QuantConfig>> {
+    match j {
+        Json::Null => Ok(None),
+        Json::Str(s) => match s.as_str() {
+            "uniform8" => Ok(Some(QuantConfig::uniform8())),
+            "hybrid" => Ok(Some(QuantConfig::hybrid())),
+            other => bail!("unknown quant name '{other}' (uniform8|hybrid, an object, or null)"),
+        },
+        Json::Obj(_) => {
+            check_keys(j, &["analog_bits", "digital_bits"], "quant")?;
+            Ok(Some(QuantConfig {
+                analog_bits: int_val(j.req("analog_bits")?, "'analog_bits'")? as u32,
+                digital_bits: int_val(j.req("digital_bits")?, "'digital_bits'")? as u32,
+            }))
+        }
+        _ => bail!("'quant' must be a string, an object, or null"),
+    }
+}
+
+fn adc_bits_from_json(j: &Json) -> Result<Option<u32>> {
+    match j {
+        Json::Null => Ok(None),
+        _ => {
+            let bits = int_val(j, "adc bits")?;
+            if !(1..=32).contains(&bits) {
+                bail!("adc bits must be in 1..=32, got {bits}");
+            }
+            Ok(Some(bits as u32))
+        }
+    }
+}
+
+fn adc_bits_to_json(b: &Option<u32>) -> Json {
+    match b {
+        Some(bits) => Json::Num(*bits as f64),
+        None => Json::Null,
+    }
+}
+
+fn variant_to_json(p: &VariantPatch) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(p.name.clone()));
+    if let Some(method) = p.method {
+        m.insert("method".to_string(), Json::Str(method.name().to_string()));
+    }
+    if let Some(frac) = p.frac {
+        m.insert("frac".to_string(), Json::Num(frac));
+    }
+    if let Some(cell) = &p.cell {
+        m.insert("cell".to_string(), cell_to_json(cell));
+    }
+    if let Some(sigma) = p.sigma {
+        m.insert("sigma".to_string(), Json::Num(sigma));
+    }
+    if let Some(quant) = &p.quant {
+        m.insert("quant".to_string(), quant_to_json(quant));
+    }
+    if let Some(bits) = &p.adc_bits {
+        m.insert("adc_bits".to_string(), adc_bits_to_json(bits));
+    }
+    if let Some(group) = p.group {
+        m.insert("group".to_string(), Json::Num(group as f64));
+    }
+    if let Some(seed) = p.seed {
+        m.insert("seed".to_string(), Json::Num(seed as f64));
+    }
+    Json::Obj(m)
+}
+
+fn variant_from_json(j: &Json) -> Result<VariantPatch> {
+    check_keys(
+        j,
+        &["name", "method", "frac", "cell", "sigma", "quant", "adc_bits", "group", "seed"],
+        "variant",
+    )?;
+    let mut p = VariantPatch { name: j.str_of("name")?.to_string(), ..VariantPatch::default() };
+    if let Some(v) = j.get("method") {
+        p.method = Some(MethodKey::parse(str_val(v, "'method'")?)?);
+    }
+    if let Some(v) = j.get("frac") {
+        p.frac = Some(f64_val(v, "'frac'")?);
+    }
+    if let Some(v) = j.get("cell") {
+        p.cell = Some(cell_from_json(v).context("variant 'cell'")?);
+    }
+    if let Some(v) = j.get("sigma") {
+        p.sigma = Some(f64_val(v, "'sigma'")?);
+    }
+    if let Some(v) = j.get("quant") {
+        p.quant = Some(quant_from_json(v).context("variant 'quant'")?);
+    }
+    if let Some(v) = j.get("adc_bits") {
+        p.adc_bits = Some(adc_bits_from_json(v).context("variant 'adc_bits'")?);
+    }
+    if let Some(v) = j.get("group") {
+        p.group = Some(int_val(v, "'group'")? as usize);
+    }
+    if let Some(v) = j.get("seed") {
+        p.seed = Some(int_val(v, "'seed'")?);
+    }
+    Ok(p)
+}
+
+fn axis_to_json(a: &Axis) -> Json {
+    let key = Json::Str(a.key().to_string());
+    match a {
+        Axis::Frac(vs) => obj(vec![
+            ("key", key),
+            ("values", Json::Arr(vs.iter().map(|&v| Json::Num(v)).collect())),
+        ]),
+        Axis::Method(vs) => obj(vec![
+            ("key", key),
+            (
+                "values",
+                Json::Arr(vs.iter().map(|m| Json::Str(m.name().to_string())).collect()),
+            ),
+        ]),
+        Axis::AdcBits(vs) => obj(vec![
+            ("key", key),
+            ("values", Json::Arr(vs.iter().map(adc_bits_to_json).collect())),
+        ]),
+        Axis::Sigma(vs) => obj(vec![
+            ("key", key),
+            ("values", Json::Arr(vs.iter().map(|&v| Json::Num(v)).collect())),
+        ]),
+        Axis::Group(vs) => obj(vec![
+            ("key", key),
+            ("values", Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect())),
+        ]),
+        Axis::Model(vs) => obj(vec![
+            ("key", key),
+            ("values", Json::Arr(vs.iter().map(|v| Json::Str(v.clone())).collect())),
+        ]),
+        Axis::Seed(vs) => obj(vec![
+            ("key", key),
+            ("values", Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect())),
+        ]),
+        Axis::Variant(vs) => obj(vec![
+            ("key", key),
+            ("values", Json::Arr(vs.iter().map(variant_to_json).collect())),
+        ]),
+        Axis::Search { values, params } => obj(vec![
+            ("key", key),
+            (
+                "values",
+                Json::Arr(values.iter().map(|v| Json::Str(v.name().to_string())).collect()),
+            ),
+            ("target_drop", Json::Num(params.target_drop)),
+            ("max_frac", Json::Num(params.max_frac)),
+            ("step", Json::Num(params.step)),
+        ]),
+    }
+}
+
+fn axis_from_json(j: &Json) -> Result<Axis> {
+    let key = j.str_of("key")?;
+    if key == "search" {
+        check_keys(j, &["key", "values", "target_drop", "max_frac", "step"], "search axis")?;
+    } else {
+        check_keys(j, &["key", "values"], "axis")?;
+    }
+    let values = j.arr_of("values")?;
+    let defaults = SearchParams::default();
+    Ok(match key {
+        "frac" => Axis::Frac(
+            values
+                .iter()
+                .map(|v| f64_val(v, "frac value"))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        "method" => Axis::Method(
+            values
+                .iter()
+                .map(|v| MethodKey::parse(str_val(v, "method value")?))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        "adc_bits" => Axis::AdcBits(
+            values.iter().map(adc_bits_from_json).collect::<Result<Vec<_>>>()?,
+        ),
+        "sigma" => Axis::Sigma(
+            values
+                .iter()
+                .map(|v| f64_val(v, "sigma value"))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        "group" => Axis::Group(
+            values
+                .iter()
+                .map(|v| int_val(v, "group value").map(|g| g as usize))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        "model" => Axis::Model(
+            values
+                .iter()
+                .map(|v| str_val(v, "model value").map(str::to_string))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        "seed" => Axis::Seed(
+            values
+                .iter()
+                .map(|v| int_val(v, "seed value"))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        "variant" => Axis::Variant(
+            values.iter().map(variant_from_json).collect::<Result<Vec<_>>>()?,
+        ),
+        "search" => Axis::Search {
+            values: values
+                .iter()
+                .map(|v| SearchValue::parse(str_val(v, "search value")?))
+                .collect::<Result<Vec<_>>>()?,
+            params: SearchParams {
+                target_drop: opt_f64(j, "target_drop", defaults.target_drop)?,
+                max_frac: opt_f64(j, "max_frac", defaults.max_frac)?,
+                step: opt_f64(j, "step", defaults.step)?,
+            },
+        },
+        other => bail!(
+            "unknown axis key '{other}' (allowed: frac, method, adc_bits, sigma, group, \
+             model, seed, variant, search)"
+        ),
+    })
+}
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => f64_val(v, &format!("'{key}'")),
+    }
+}

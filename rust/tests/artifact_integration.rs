@@ -147,7 +147,7 @@ fn prepared_model_respects_contract() {
 #[test]
 fn clean_config_reproduces_export_accuracy() {
     let Some(dir) = artifacts() else { return };
-    let mut ev = Evaluator::new(&dir, "vggmini_c10s").unwrap();
+    let ev = Evaluator::new(&dir, "vggmini_c10s").unwrap();
     let clean = ev.clean_accuracy(500).unwrap();
     // exported test_acc was measured on the full 1000 in float; the staged
     // 500-sample subset through the quantized-activation graph must agree
@@ -163,7 +163,7 @@ fn clean_config_reproduces_export_accuracy() {
 #[test]
 fn protection_recovers_accuracy() {
     let Some(dir) = artifacts() else { return };
-    let mut ev = Evaluator::new(&dir, "vggmini_c10s").unwrap();
+    let ev = Evaluator::new(&dir, "vggmini_c10s").unwrap();
     let mut base = ExperimentConfig::paper_default(Method::NoProtection);
     base.n_eval = 250;
     base.repeats = 2;

@@ -116,7 +116,7 @@ fn native_offset_variant_matches_full_graph() {
 fn native_evaluator_runs_scenarios_end_to_end() {
     let dir = synthetic_dir();
     let sc = hybrid_scenario("synthetic");
-    let mut ev = Evaluator::for_scenario(&dir, &sc).unwrap();
+    let ev = Evaluator::for_scenario(&dir, &sc).unwrap();
     assert_eq!(ev.backend_kind(), BackendKind::Native);
     let acc = ev.run_scenario(&sc).unwrap();
     assert_eq!(acc.repeats, 2);

@@ -1,0 +1,258 @@
+//! Study-layer properties: grid expansion size/ordering/ID stability,
+//! Study JSON round-trip + strict parse errors, and an end-to-end
+//! native-backend run of a 2-axis synthetic study pinning 4-worker
+//! results byte-identical to sequential.
+//!
+//! Everything here runs with no built artifacts and no xla (synthetic
+//! artifact + native backend), in both the default and the
+//! `--no-default-features` builds.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use hybridac::eval::Method;
+use hybridac::exec::BackendKind;
+use hybridac::noise::CellModel;
+use hybridac::quantize::QuantConfig;
+use hybridac::runtime::Artifact;
+use hybridac::scenario::{Scenario, SplitSpec};
+use hybridac::study::{
+    Axis, MethodKey, SearchParams, SearchValue, Study, StudyRunner, VariantPatch,
+};
+
+/// Materialize the synthetic artifact + dataset once per test process.
+fn synthetic_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("hybridac-study-{}", std::process::id()));
+        Artifact::materialize_synthetic(&dir).expect("materialize synthetic artifact");
+        dir
+    })
+    .clone()
+}
+
+fn base_native() -> Scenario {
+    Scenario::paper_default("study-e2e", "synthetic", Method::Hybrid { frac: 0.16 })
+        .with_backend(BackendKind::Native)
+        .with_eval(32, 2)
+}
+
+#[test]
+fn grid_expansion_size_ordering_and_ids() {
+    let study = Study {
+        name: "grid".to_string(),
+        base: base_native(),
+        axes: vec![
+            Axis::Method(vec![MethodKey::Hybrid, MethodKey::Iws]),
+            Axis::Frac(vec![0.0, 0.08, 0.16]),
+        ],
+    };
+    let points = study.points().unwrap();
+    assert_eq!(points.len(), 6, "2 x 3 grid");
+    // row-major, first axis outermost; IDs are spec-derived and stable
+    let ids: Vec<&str> = points.iter().map(|p| p.id.as_str()).collect();
+    assert_eq!(
+        ids,
+        vec![
+            "method=hybrid,frac=0",
+            "method=hybrid,frac=0.08",
+            "method=hybrid,frac=0.16",
+            "method=iws,frac=0",
+            "method=iws,frac=0.08",
+            "method=iws,frac=0.16",
+        ]
+    );
+    for (i, p) in points.iter().enumerate() {
+        assert_eq!(p.index, i, "index matches expansion order");
+    }
+    assert_eq!(points[1].scenario.split, SplitSpec::Channels { frac: 0.08 });
+    assert_eq!(points[4].scenario.split, SplitSpec::Iws { frac: 0.08 });
+    assert_eq!(points[0].scenario.name, "grid[method=hybrid,frac=0]");
+
+    // expansion is a pure function of the spec
+    let again = study.points().unwrap();
+    for (a, b) in points.iter().zip(&again) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.scenario, b.scenario);
+    }
+}
+
+#[test]
+fn study_json_round_trips_every_axis_kind() {
+    let study = Study {
+        name: "rt".to_string(),
+        base: base_native(),
+        axes: vec![
+            Axis::Method(vec![MethodKey::Hybrid, MethodKey::Unprotected, MethodKey::Clean]),
+            Axis::Frac(vec![0.0, 0.16]),
+            Axis::AdcBits(vec![Some(8), None]),
+            Axis::Sigma(vec![0.25, 0.5]),
+            Axis::Group(vec![64, 128]),
+            Axis::Model(vec!["synthetic".to_string()]),
+            Axis::Seed(vec![7, 9]),
+            Axis::Variant(vec![
+                VariantPatch {
+                    name: "di4".to_string(),
+                    cell: Some(CellModel::differential(0.5)),
+                    adc_bits: Some(Some(4)),
+                    ..VariantPatch::default()
+                },
+                VariantPatch {
+                    name: "hq".to_string(),
+                    method: Some(MethodKey::Iws),
+                    frac: Some(0.1),
+                    quant: Some(Some(QuantConfig::hybrid())),
+                    ..VariantPatch::default()
+                },
+                VariantPatch {
+                    name: "bare".to_string(),
+                    quant: Some(None),
+                    adc_bits: Some(None),
+                    sigma: Some(0.3),
+                    group: Some(32),
+                    seed: Some(11),
+                    ..VariantPatch::default()
+                },
+            ]),
+        ],
+    };
+    let text = study.to_json().to_string();
+    let back = Study::parse(&text).unwrap();
+    assert_eq!(study, back, "{text}");
+
+    // the search axis round-trips with its parameters
+    let search = Study {
+        name: "rt-search".to_string(),
+        base: base_native(),
+        axes: vec![Axis::Search {
+            values: vec![SearchValue::None, SearchValue::Hybrid, SearchValue::Iws],
+            params: SearchParams { target_drop: 0.05, max_frac: 0.25, step: 0.05 },
+        }],
+    };
+    let text = search.to_json().to_string();
+    assert_eq!(Study::parse(&text).unwrap(), search, "{text}");
+}
+
+#[test]
+fn bad_study_specs_fail_loudly() {
+    let base = r#""base": {"model": "synthetic", "split": {"kind": "channels", "frac": 0.16},
+                  "backend": "native"}"#;
+    // unknown axis key is a strict parse error (mirrors Scenario.backend)
+    let bad = format!(r#"{{"name": "x", {base}, "axes": [{{"key": "fraction", "values": [0.1]}}]}}"#);
+    assert!(Study::parse(&bad).is_err(), "unknown axis key");
+    // unknown key inside an axis object
+    let bad = format!(r#"{{"name": "x", {base}, "axes": [{{"key": "frac", "values": [0.1], "step": 2}}]}}"#);
+    assert!(Study::parse(&bad).is_err(), "stray key in a non-search axis");
+    // unknown top-level study key
+    let bad = format!(r#"{{"name": "x", {base}, "axis": []}}"#);
+    assert!(Study::parse(&bad).is_err(), "misspelled 'axes'");
+    // mistyped values must never silently coerce
+    let bad = format!(r#"{{"name": "x", {base}, "axes": [{{"key": "frac", "values": ["0.1"]}}]}}"#);
+    assert!(Study::parse(&bad).is_err(), "string frac");
+    let bad = format!(r#"{{"name": "x", {base}, "axes": [{{"key": "seed", "values": [1.5]}}]}}"#);
+    assert!(Study::parse(&bad).is_err(), "fractional seed");
+    let bad = format!(r#"{{"name": "x", {base}, "axes": [{{"key": "adc_bits", "values": [64]}}]}}"#);
+    assert!(Study::parse(&bad).is_err(), "64-bit ADC");
+    // duplicate axes are ambiguous
+    let bad = format!(
+        r#"{{"name": "x", {base}, "axes": [{{"key": "frac", "values": [0.1]}},
+            {{"key": "frac", "values": [0.2]}}]}}"#
+    );
+    assert!(Study::parse(&bad).is_err(), "duplicate axis");
+    // the search axis owns the split: no method/frac alongside it
+    let bad = format!(
+        r#"{{"name": "x", {base}, "axes": [{{"key": "search", "values": ["hybrid"]}},
+            {{"key": "frac", "values": [0.1]}}]}}"#
+    );
+    assert!(Study::parse(&bad).is_err(), "search + frac");
+    // an unknown search value
+    let bad = format!(r#"{{"name": "x", {base}, "axes": [{{"key": "search", "values": ["all"]}}]}}"#);
+    assert!(Study::parse(&bad).is_err(), "unknown search value");
+
+    // a frac axis over an all-analog base fails at expansion, loudly
+    let study = Study {
+        name: "x".to_string(),
+        base: Scenario::paper_default("x", "synthetic", Method::NoProtection)
+            .with_backend(BackendKind::Native),
+        axes: vec![Axis::Frac(vec![0.1])],
+    };
+    assert!(study.points().is_err(), "frac without a split to land on");
+}
+
+#[test]
+fn builtin_studies_expand_and_round_trip() {
+    for (key, _) in Study::builtin_names() {
+        let study = Study::named(key, "resnet18m_c10s").expect(key);
+        assert_eq!(&study.name, key);
+        let points = study.points().unwrap_or_else(|e| panic!("{key}: {e}"));
+        assert!(!points.is_empty(), "{key} expanded to an empty grid");
+        let text = study.to_json().to_string();
+        let back = Study::parse(&text).unwrap_or_else(|e| panic!("{key}: {e}"));
+        assert_eq!(study, back, "builtin '{key}' does not round-trip");
+    }
+    assert!(Study::named("nope", "m").is_none());
+    assert!(Study::named("table1-in50s", "m").is_none(), "Table 1 is CIFAR-only");
+}
+
+#[test]
+fn parallel_study_matches_sequential_byte_for_byte() {
+    let dir = synthetic_dir();
+    let study = Study {
+        name: "par-vs-seq".to_string(),
+        base: base_native(),
+        axes: vec![
+            Axis::Method(vec![MethodKey::Hybrid, MethodKey::Iws]),
+            Axis::Frac(vec![0.0, 0.16]),
+        ],
+    };
+    let seq = StudyRunner::new(&dir).with_workers(1).run(&study).unwrap();
+    let par = StudyRunner::new(&dir).with_workers(4).run(&study).unwrap();
+    assert_eq!(seq.points.len(), 4);
+    assert_eq!(seq.workers, 1);
+    assert_eq!(par.workers, 4);
+    for p in &seq.points {
+        assert!((0.0..=1.0).contains(&p.mean), "point '{}' accuracy {}", p.id, p.mean);
+    }
+    let a = seq.to_json().to_string();
+    let b = par.to_json().to_string();
+    assert_eq!(a, b, "a 4-worker study must serialize byte-identical to 1-worker");
+}
+
+#[test]
+fn search_axis_finds_a_crossing_end_to_end() {
+    let dir = synthetic_dir();
+    let study = Study {
+        name: "search-e2e".to_string(),
+        base: Scenario::paper_default("search-e2e", "synthetic", Method::NoProtection)
+            .with_backend(BackendKind::Native)
+            .with_eval(24, 1),
+        axes: vec![Axis::Search {
+            values: vec![SearchValue::None, SearchValue::Hybrid],
+            params: SearchParams { target_drop: 0.9, max_frac: 0.3, step: 0.1 },
+        }],
+    };
+    let rep = StudyRunner::new(&dir).with_workers(2).run(&study).unwrap();
+    assert_eq!(rep.points.len(), 2);
+    assert!(!rep.points[0].searched, "the 'none' value evaluates the base as-is");
+    let crossing = &rep.points[1];
+    assert!(crossing.searched);
+    // a near-zero target is reached immediately at the pinned-weight floor
+    assert!(crossing.frac <= 0.3 + 1e-9, "crossing {} past max_frac", crossing.frac);
+    assert!(crossing.mean >= crossing.clean - 0.9, "crossing missed the target");
+    assert!(rep.table().contains("search"), "table renders the search axis column");
+    assert_eq!(rep.json_file_name(), "BENCH_study_search-e2e.json");
+}
+
+#[test]
+fn missing_artifacts_skip_loudly_not_silently() {
+    let dir = synthetic_dir();
+    let study = Study {
+        name: "skip".to_string(),
+        base: base_native(),
+        axes: vec![Axis::Model(vec!["synthetic".to_string(), "not_built_xyz".to_string()])],
+    };
+    let rep = StudyRunner::new(&dir).with_workers(1).run(&study).unwrap();
+    assert_eq!(rep.points.len(), 1, "only the built model runs");
+    assert_eq!(rep.skipped_models, vec!["not_built_xyz".to_string()]);
+    assert_eq!(rep.points[0].model, "synthetic");
+}
