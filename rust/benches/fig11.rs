@@ -8,7 +8,7 @@
 //! crossed with the `group` axis; wordline count enters twice (ADC full
 //! scale + the re-grouped graph variants).
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::study::{Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {

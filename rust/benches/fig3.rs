@@ -6,7 +6,7 @@
 //! shrinking.  We print both the rust-side recomputation and the stats the
 //! python exporter recorded.
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::report;
 use hybridac::runtime::Artifact;
 use hybridac::selection::{std_dev, IwsMasks, Partition};

@@ -4,7 +4,7 @@
 //! One built-in study (`model` x `method` x `frac`); the series render
 //! pivots it into one recovery-curve plot per model.
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::study::{Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {

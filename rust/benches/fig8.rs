@@ -6,7 +6,7 @@
 //! this driver only joins each variant with its architecture's normalized
 //! area-efficiency from the hardware model.
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::hwmodel::{all_architectures, ArchSpec};
 use hybridac::report;
 use hybridac::study::{Study, StudyRunner};

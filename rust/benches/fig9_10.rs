@@ -7,7 +7,7 @@
 //! simulator and the pipeline scheduler.
 
 use hybridac::analog::AnalogTiming;
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::hwmodel::tile::TileModel;
 use hybridac::mapping::{map_model, simulate_exec, MapScheme};
 use hybridac::report;

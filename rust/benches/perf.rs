@@ -28,7 +28,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use hybridac::benchkit::{time_stats, StageTiming, Stopwatch};
+use hybridac::obs::{time_stats, StageTiming, Stopwatch};
 use hybridac::coordinator::BatchServer;
 use hybridac::eval::Method;
 use hybridac::exec::native::kernels::{crossbar_matmul_packed, PackedMatrix};
@@ -37,16 +37,6 @@ use hybridac::runtime::{Artifact, DatasetBlob};
 use hybridac::scenario::{PerturbSpec, Scenario};
 use hybridac::util::json::Json;
 use hybridac::util::rng::Rng;
-
-fn stage_json(s: &StageTiming) -> Json {
-    let mut m = BTreeMap::new();
-    m.insert("name".to_string(), Json::Str(s.label.clone()));
-    m.insert("iters".to_string(), Json::Num(s.iters as f64));
-    m.insert("min_s".to_string(), Json::Num(s.min_s));
-    m.insert("mean_s".to_string(), Json::Num(s.mean_s));
-    m.insert("per_sec".to_string(), Json::Num(s.per_sec()));
-    Json::Obj(m)
-}
 
 fn main() -> anyhow::Result<()> {
     let _sw = Stopwatch::start("perf");
@@ -277,7 +267,7 @@ fn main() -> anyhow::Result<()> {
     root.insert("model".to_string(), Json::Str(tag.clone()));
     root.insert("total_weights".to_string(), Json::Num(art.total_weights as f64));
     root.insert("batch".to_string(), Json::Num(art.batch as f64));
-    root.insert("stages".to_string(), Json::Arr(stages.iter().map(stage_json).collect()));
+    root.insert("stages".to_string(), Json::Arr(stages.iter().map(StageTiming::to_json).collect()));
     root.insert("serve".to_string(), Json::Obj(serve));
     std::fs::write("BENCH_perf.json", Json::Obj(root).to_string())?;
     println!(

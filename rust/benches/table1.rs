@@ -6,7 +6,7 @@
 //! column) plus the Algorithm-1 crossing for each method. The measured
 //! clean accuracy per model rides along in the report.
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::study::{Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {

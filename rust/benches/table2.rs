@@ -9,7 +9,7 @@
 //! corner is not a cross product of single knobs) crossed with the
 //! dataset's `model` axis — see `Study::named("table2-<dataset>")`.
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::study::{full_mode, Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {

@@ -5,7 +5,7 @@
 //! The three quant/ADC designs are one `variant` axis crossed with the
 //! dataset's `model` axis — see `Study::named("table3-<dataset>")`.
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::study::{full_mode, Study, StudyRunner};
 
 fn main() -> anyhow::Result<()> {

@@ -1,7 +1,7 @@
 //! Table 4 — peak area-/power-efficiency of all architectures, normalized
 //! to Ideal-ISAAC (paper §5.4.2).  Pure hardware-model composition.
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::hwmodel::all_architectures;
 use hybridac::report;
 

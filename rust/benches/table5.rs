@@ -2,7 +2,7 @@
 //! the §5.2 ADC-scaling claims (7-bit: -14% tile power/-7% area; 6-bit:
 //! -29%/-13%).
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::hwmodel::adc;
 use hybridac::hwmodel::components::{hybridac_digital_chip, hybridac_mcu,
                                     hybridac_tile_periphery, isaac_mcu,

@@ -1,7 +1,7 @@
 //! Tables 6/7 — chip-level power/area of HybridAC vs IWS-1/2, SIGMA,
 //! FORMS, SRE and Ideal-ISAAC, recomposed from the component database.
 
-use hybridac::benchkit::Stopwatch;
+use hybridac::obs::Stopwatch;
 use hybridac::hwmodel::arch;
 use hybridac::hwmodel::components::{sigma_chip, total};
 use hybridac::report;

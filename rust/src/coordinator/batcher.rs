@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::eval::ExperimentConfig;
 use crate::exec::{ExecBackend, Executable, ModelInstance};
+use crate::obs::trace;
 use crate::runtime::{Artifact, DatasetMeta};
 use crate::scenario::Scenario;
 use crate::tensor::{argmax_rows, Tensor};
@@ -47,6 +48,9 @@ pub fn collect_batch(
     max_wait: Duration,
 ) -> Option<Vec<InferenceRequest>> {
     let first = rx.recv().ok()?;
+    // the span opens once traffic exists, so it measures the batching
+    // window (first request -> full/deadline), not idle channel waiting
+    let _span = trace::span("batch/collect", "batch");
     let deadline = Instant::now() + max_wait;
     let mut pending = vec![first];
     while pending.len() < batch {
@@ -191,11 +195,15 @@ impl BatchContext {
 
     /// Execute one assembled batch and fan predictions back.
     pub fn execute(&self, pending: &[InferenceRequest], metrics: &Metrics) -> Result<()> {
-        let x = assemble_input(pending, self.batch, self.per_image);
-        let mut shape = vec![self.batch];
-        shape.extend_from_slice(&self.sample_shape);
-        let xbuf = self.backend.upload(&Tensor::new(shape, x))?;
-        let logits = self.instance.run(self.backend.as_ref(), &self.exe, &xbuf)?;
+        let logits = {
+            let _span = trace::span("batch/execute", "batch");
+            let x = assemble_input(pending, self.batch, self.per_image);
+            let mut shape = vec![self.batch];
+            shape.extend_from_slice(&self.sample_shape);
+            let xbuf = self.backend.upload(&Tensor::new(shape, x))?;
+            self.instance.run(self.backend.as_ref(), &self.exe, &xbuf)?
+        };
+        let _span = trace::span("batch/fan_out", "batch");
         fan_out(pending, &logits, self.batch, self.num_classes, metrics)
     }
 }
@@ -210,6 +218,7 @@ pub fn serve_requests(
     metrics: &Metrics,
 ) -> Result<()> {
     while let Some(pending) = collect_batch(rx, ctx.batch, max_wait) {
+        metrics.record_dequeue(pending.len());
         metrics.record_batch(pending.len());
         if let Err(e) = ctx.execute(&pending, metrics) {
             metrics.record_error(pending.len());
@@ -263,7 +272,9 @@ impl BatchServer {
     /// Submit one image; returns the reply receiver.
     pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<i32> {
         let (rtx, rrx) = mpsc::channel();
+        trace::instant("batch/enqueue", "batch");
         self.metrics.record_request();
+        self.metrics.record_enqueue();
         let _ = self.tx.send(InferenceRequest {
             image,
             reply: rtx,

@@ -1,72 +1,108 @@
-//! Lightweight counters + latency histogram for the serving path.
+//! Serving-path counters + latency histogram, backed by the
+//! [`crate::obs::registry`] metric registry.
 //!
-//! `Metrics` is the live, lock-free accumulator a worker thread writes to;
-//! `MetricsSnapshot` is a plain-data copy that can be merged across
-//! replicas — the fleet router reports both per-replica snapshots and the
-//! merged total.
+//! `Metrics` is the live accumulator a worker thread writes to — each
+//! recording method bumps a pre-resolved atomic handle, so the hot path
+//! never takes the registry lock. `MetricsSnapshot` is a plain-data copy
+//! that merges across replicas — the fleet router reports both
+//! per-replica snapshots and the merged total — and lowers into a
+//! [`RegistrySnapshot`] for Prometheus text exposition (`--metrics-out`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
-/// Fixed log-scaled latency buckets (µs).
-const BUCKET_EDGES_US: [u64; 12] = [
-    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000,
-];
+use crate::obs::registry::{
+    Counter, Gauge, Histogram, HistogramSnapshot, Registry, RegistrySnapshot, LATENCY_BUCKETS_US,
+};
 
-const N_BUCKETS: usize = BUCKET_EDGES_US.len() + 1;
+/// Canonical serving metric names (shared by the live registry and the
+/// snapshot's Prometheus render, so scrapes of either line up).
+const REQUESTS: &str = "serve_requests_total";
+const BATCHES: &str = "serve_batches_total";
+const BATCHED_SAMPLES: &str = "serve_batched_samples_total";
+const ERRORS: &str = "serve_errors_total";
+const QUEUE_DEPTH: &str = "serve_queue_depth";
+const LATENCY_US: &str = "serve_latency_us";
 
-#[derive(Default)]
+/// Live serving metrics: one registry per batch server / replica, with
+/// pre-resolved handles for the recording hot path.
 pub struct Metrics {
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
-    pub batched_samples: AtomicU64,
-    pub errors: AtomicU64,
-    latency_buckets: [AtomicU64; N_BUCKETS],
-    latency_sum_us: AtomicU64,
+    registry: Registry,
+    requests: Arc<Counter>,
+    batches: Arc<Counter>,
+    batched_samples: Arc<Counter>,
+    errors: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    latency_us: Arc<Histogram>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        let registry = Registry::new();
+        Metrics {
+            requests: registry.counter(REQUESTS),
+            batches: registry.counter(BATCHES),
+            batched_samples: registry.counter(BATCHED_SAMPLES),
+            errors: registry.counter(ERRORS),
+            queue_depth: registry.gauge(QUEUE_DEPTH),
+            latency_us: registry.histogram(LATENCY_US, &LATENCY_BUCKETS_US),
+            registry,
+        }
     }
 
     pub fn record_request(&self) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.requests.inc();
     }
 
     pub fn record_batch(&self, n: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batched_samples.fetch_add(n as u64, Ordering::Relaxed);
+        self.batches.inc();
+        self.batched_samples.add(n as u64);
     }
 
     pub fn record_error(&self, n: usize) {
-        self.errors.fetch_add(n as u64, Ordering::Relaxed);
+        self.errors.add(n as u64);
     }
 
     pub fn record_latency(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        let idx = BUCKET_EDGES_US
-            .iter()
-            .position(|&e| us <= e)
-            .unwrap_or(BUCKET_EDGES_US.len());
-        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_us.record(d.as_micros() as u64);
+    }
+
+    /// A request entered the admission queue (accepted by the gate).
+    pub fn record_enqueue(&self) {
+        self.queue_depth.add(1);
+    }
+
+    /// `n` queued requests were collected into a batch.
+    pub fn record_dequeue(&self, n: usize) {
+        self.queue_depth.sub(n as i64);
+    }
+
+    /// Current admission-queue depth (enqueued minus collected).
+    pub fn queue_depth(&self) -> i64 {
+        self.queue_depth.get()
+    }
+
+    /// The backing registry, for whole-registry scrapes.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     /// Consistent-enough copy of the counters (each counter is read once;
     /// no cross-counter atomicity is needed for reporting).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut latency_buckets = [0u64; N_BUCKETS];
-        for (out, b) in latency_buckets.iter_mut().zip(&self.latency_buckets) {
-            *out = b.load(Ordering::Relaxed);
-        }
         MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            batched_samples: self.batched_samples.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            latency_buckets,
-            latency_sum_us: self.latency_sum_us.load(Ordering::Relaxed),
+            requests: self.requests.get(),
+            batches: self.batches.get(),
+            batched_samples: self.batched_samples.get(),
+            errors: self.errors.get(),
+            queue_depth: self.queue_depth.get(),
+            latency_us: self.latency_us.snapshot(),
         }
     }
 
@@ -92,8 +128,9 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub batched_samples: u64,
     pub errors: u64,
-    latency_buckets: [u64; N_BUCKETS],
-    latency_sum_us: u64,
+    /// Admission-queue depth at snapshot time (enqueued minus collected).
+    pub queue_depth: i64,
+    latency_us: HistogramSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -102,35 +139,39 @@ impl MetricsSnapshot {
         self.batches += other.batches;
         self.batched_samples += other.batched_samples;
         self.errors += other.errors;
-        for (a, b) in self.latency_buckets.iter_mut().zip(&other.latency_buckets) {
-            *a += b;
-        }
-        self.latency_sum_us += other.latency_sum_us;
+        self.queue_depth += other.queue_depth;
+        self.latency_us.merge(&other.latency_us);
     }
 
     pub fn mean_latency_ms(&self) -> f64 {
-        self.latency_sum_us as f64 / self.requests.max(1) as f64 / 1000.0
+        self.latency_us.sum as f64 / self.requests.max(1) as f64 / 1000.0
     }
 
-    /// Approximate latency percentile from the histogram (upper edge).
+    /// Approximate latency percentile from the histogram (upper edge; the
+    /// +Inf bucket reports twice the last edge, 500 ms).
     pub fn latency_percentile_ms(&self, p: f64) -> f64 {
-        let total: u64 = self.latency_buckets.iter().sum();
-        if total == 0 {
+        if self.latency_us.count() == 0 {
             return 0.0;
         }
-        let target = (total as f64 * p).ceil() as u64;
-        let mut seen = 0;
-        for (i, b) in self.latency_buckets.iter().enumerate() {
-            seen += b;
-            if seen >= target {
-                return *BUCKET_EDGES_US.get(i).unwrap_or(&500_000) as f64 / 1000.0;
-            }
-        }
-        500.0
+        self.latency_us.percentile(p) / 1000.0
     }
 
     pub fn mean_batch_occupancy(&self) -> f64 {
         self.batched_samples as f64 / self.batches.max(1) as f64
+    }
+
+    /// Lower into a [`RegistrySnapshot`] under the canonical serving
+    /// metric names, ready to merge with other registries and render as
+    /// Prometheus text.
+    pub fn to_registry_snapshot(&self) -> RegistrySnapshot {
+        let mut snap = RegistrySnapshot::default();
+        snap.counters.insert(REQUESTS.to_string(), self.requests);
+        snap.counters.insert(BATCHES.to_string(), self.batches);
+        snap.counters.insert(BATCHED_SAMPLES.to_string(), self.batched_samples);
+        snap.counters.insert(ERRORS.to_string(), self.errors);
+        snap.gauges.insert(QUEUE_DEPTH.to_string(), self.queue_depth);
+        snap.histograms.insert(LATENCY_US.to_string(), self.latency_us.clone());
+        snap
     }
 }
 
@@ -208,5 +249,33 @@ mod tests {
         let before = s.clone();
         s.merge(&MetricsSnapshot::default());
         assert_eq!(s, before);
+    }
+
+    #[test]
+    fn queue_depth_tracks_enqueue_minus_dequeue() {
+        let m = Metrics::new();
+        m.record_enqueue();
+        m.record_enqueue();
+        m.record_enqueue();
+        assert_eq!(m.queue_depth(), 3);
+        m.record_dequeue(2);
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.snapshot().queue_depth, 1);
+    }
+
+    #[test]
+    fn snapshot_lowers_to_prometheus() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_enqueue();
+        m.record_latency(Duration::from_micros(75));
+        let text = m.snapshot().to_registry_snapshot().prometheus();
+        assert!(text.contains("serve_requests_total 1\n"), "{text}");
+        assert!(text.contains("serve_queue_depth 1\n"), "{text}");
+        assert!(text.contains("serve_latency_us_bucket{le=\"100\"} 1\n"), "{text}");
+        assert!(text.contains("serve_latency_us_count 1\n"), "{text}");
+        // the live registry renders the same series
+        let live = m.registry().snapshot().prometheus();
+        assert_eq!(live, text);
     }
 }

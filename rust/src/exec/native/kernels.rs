@@ -32,6 +32,7 @@
 
 #![allow(clippy::needless_range_loop)]
 
+use crate::obs::trace;
 use crate::tensor::Tensor;
 
 /// Panel width: columns per packed panel (one AVX f32 vector's worth).
@@ -191,6 +192,9 @@ pub fn crossbar_matmul_packed(
     assert_eq!(x.len(), m * k, "x is not {m}x{k}");
     assert_eq!(out.len(), m * w.n, "out is not {m}x{}", w.n);
     let group = group.max(1);
+    // hot path: with tracing disabled this is a single relaxed load
+    let _span =
+        trace::span_dyn("exec", || format!("xbar_matmul m={m} k={k} n={} g={group}", w.n));
     let threads = threads.max(1).min(m.max(1));
     let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(w.n);
     if threads <= 1 || flops < PAR_MIN_FLOPS {

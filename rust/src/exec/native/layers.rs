@@ -8,11 +8,18 @@
 //! [`super::kernels`] with the backend's thread count; weight operands
 //! arrive either pre-packed (the upload hot path) or as plain tensors
 //! (packed on the fly — the direct [`super::NativeGraph::run`] test path).
+//!
+//! When tracing is on ([`crate::obs::trace::enable`]) every stage of a
+//! hybrid layer emits an `"exec"`-category span — `act_quant`, `im2col`,
+//! `xbar/wa1`, `xbar/wa2`, `digital/wd`, `fp16/merge` — nested under a
+//! per-layer span carrying the layer name; disabled, each site costs one
+//! relaxed atomic load.
 
 #![allow(clippy::needless_range_loop)]
 
 use anyhow::{bail, ensure, Result};
 
+use crate::obs::trace;
 use crate::quantize::fake_quant;
 use crate::tensor::Tensor;
 
@@ -111,7 +118,10 @@ impl Interp<'_> {
         let (m, k) = patches.dims2();
         let n = li.cout;
         let mut ya = self.arena.take_zeroed(m * n);
-        mat_into(patches, a.wa1, a.lsb, a.clip, g.group, &mut ya, self.threads);
+        {
+            let _s = trace::span("xbar/wa1", "exec");
+            mat_into(patches, a.wa1, a.lsb, a.clip, g.group, &mut ya, self.threads);
+        }
         if let Some(wa2) = a.wa2 {
             ensure!(
                 wa2.shape_vec() == mat,
@@ -123,17 +133,26 @@ impl Interp<'_> {
             // differential cells: the negative-polarity crossbar has its
             // own ADC readout and is subtracted digitally
             let mut y2 = self.arena.take_zeroed(m * n);
-            mat_into(patches, wa2, a.lsb, a.clip, g.group, &mut y2, self.threads);
-            for (v, s) in ya.iter_mut().zip(&y2) {
-                *v -= s;
+            {
+                let _s = trace::span("xbar/wa2", "exec");
+                mat_into(patches, wa2, a.lsb, a.clip, g.group, &mut y2, self.threads);
+                for (v, s) in ya.iter_mut().zip(&y2) {
+                    *v -= s;
+                }
             }
             self.arena.put(y2);
         }
         let mut yd = self.arena.take_zeroed(m * n);
-        mat_into(patches, a.wd, -1.0, 1.0, k.max(1), &mut yd, self.threads);
+        {
+            let _s = trace::span("digital/wd", "exec");
+            mat_into(patches, a.wd, -1.0, 1.0, k.max(1), &mut yd, self.threads);
+        }
         // FP16 merge of analog/digital partial results (paper §2.2)
-        for (v, d) in ya.iter_mut().zip(&yd) {
-            *v = f16_round(f16_round(*v) + f16_round(*d));
+        {
+            let _s = trace::span("fp16/merge", "exec");
+            for (v, d) in ya.iter_mut().zip(&yd) {
+                *v = f16_round(f16_round(*v) + f16_round(*d));
+            }
         }
         self.arena.put(yd);
         Ok(Tensor::new(vec![m, n], ya))
@@ -158,10 +177,17 @@ impl Interp<'_> {
         let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         ensure!(c == li.cin, "conv '{}' expects {} input channels, got {c}", li.name, li.cin);
 
+        let _layer_span = trace::span_dyn("exec", || format!("conv {}", li.name));
         let (lo, hi) = g.act_ranges[idx];
         let mut xq = Tensor::new(x.shape.clone(), self.arena.take_copy(&x.data));
-        fake_quant(&mut xq, lo, hi, ACT_BITS);
-        let patches = im2col_arena(&xq, li.r, li.stride, li.pad, self.arena);
+        {
+            let _s = trace::span("act_quant", "exec");
+            fake_quant(&mut xq, lo, hi, ACT_BITS);
+        }
+        let patches = {
+            let _s = trace::span("im2col", "exec");
+            im2col_arena(&xq, li.r, li.stride, li.pad, self.arena)
+        };
         self.recycle(xq);
         let mut y = self.hybrid_matmul(idx, &patches)?;
         self.recycle(patches);
@@ -202,9 +228,13 @@ impl Interp<'_> {
             x.shape[1]
         );
 
+        let _layer_span = trace::span_dyn("exec", || format!("dense {}", li.name));
         let (lo, hi) = g.act_ranges[idx];
         let mut xq = Tensor::new(x.shape.clone(), self.arena.take_copy(&x.data));
-        fake_quant(&mut xq, lo, hi, ACT_BITS);
+        {
+            let _s = trace::span("act_quant", "exec");
+            fake_quant(&mut xq, lo, hi, ACT_BITS);
+        }
         let mut y = self.hybrid_matmul(idx, &xq)?;
         self.recycle(xq);
 

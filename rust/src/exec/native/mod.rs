@@ -43,6 +43,8 @@
 use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
 
+use crate::obs::registry::{global, Counter};
+use crate::obs::trace;
 use crate::runtime::artifact::{Artifact, LayerInfo};
 use crate::tensor::Tensor;
 
@@ -99,6 +101,12 @@ pub struct NativeBackend {
     /// Resolved worker count (>= 1) for the kernel row sharding.
     threads: usize,
     pool: ScratchPool,
+    /// `exec_native_runs_total` in the global metric registry, resolved
+    /// once so the per-call cost is a single atomic add.
+    runs: Arc<Counter>,
+    /// `exec_native_compiles_total` — actual graph builds (cache misses),
+    /// not `compile()` calls.
+    compiles: Arc<Counter>,
 }
 
 impl NativeBackend {
@@ -111,6 +119,8 @@ impl NativeBackend {
             cache: CompiledGraphCache::new(),
             threads: cfg.resolve_threads().max(1),
             pool: ScratchPool::new(),
+            runs: global().counter("exec_native_runs_total"),
+            compiles: global().counter("exec_native_compiles_total"),
         }
     }
 
@@ -140,7 +150,11 @@ impl ExecBackend for NativeBackend {
     #[allow(clippy::arc_with_non_send_sync)]
     fn compile(&self, art: &Artifact, group: usize, offset_variant: bool) -> Result<Compiled> {
         let graph = self.cache.get_or_compile(&art.tag, group, offset_variant, || {
-            NativeGraph::build(art, group, offset_variant)
+            let _span =
+                trace::span_dyn("exec", || format!("native/compile {} g={group}", art.tag));
+            let g = NativeGraph::build(art, group, offset_variant)?;
+            self.compiles.inc();
+            Ok(g)
         })?;
         Ok(Compiled { exe: Arc::new(Executable::Native(graph)), offset_variant })
     }
@@ -161,6 +175,8 @@ impl ExecBackend for NativeBackend {
     }
 
     fn run(&self, exe: &Executable, inputs: &[&DeviceBuffer]) -> Result<Vec<f32>> {
+        let _span = trace::span("native/run", "exec");
+        self.runs.inc();
         let graph = match exe {
             Executable::Native(g) => g,
             #[cfg(feature = "pjrt")]

@@ -55,6 +55,18 @@
 //! at any worker count. The paper benches are thin drivers over
 //! [`study::Study::named`] built-ins.
 //!
+//! ## Observability
+//!
+//! The [`obs`] layer instruments the whole stack: [`obs::trace`] records
+//! structured spans (batch lifecycle, replica/probe lifecycle, study
+//! points, native per-layer kernel stages) into Chrome `trace_event`
+//! JSON for Perfetto — off by default, one relaxed atomic load when
+//! disabled, enabled by the CLI's `--trace FILE` flag; [`obs::registry`]
+//! holds named counters/gauges/histograms with mergeable snapshots and
+//! Prometheus text rendering (`--metrics-out FILE`), and backs
+//! [`coordinator::Metrics`] plus the fleet's queue-depth and
+//! shed-by-kind series; [`obs::timing`] is the benches' stage timer.
+//!
 //! Typical flow:
 //! * [`study::StudyRunner::run`] — a whole sweep grid in one call,
 //! * [`eval::Evaluator::run_scenario`] — accuracy of one scenario
@@ -71,7 +83,6 @@
 //! is a complete experiment as data.
 
 pub mod analog;
-pub mod benchkit;
 pub mod coordinator;
 pub mod digital;
 pub mod eval;
@@ -79,6 +90,7 @@ pub mod exec;
 pub mod hwmodel;
 pub mod mapping;
 pub mod noise;
+pub mod obs;
 pub mod quantize;
 pub mod report;
 pub mod runtime;

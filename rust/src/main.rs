@@ -20,6 +20,12 @@
 //!
 //! Every execution-running subcommand takes `--backend pjrt-cpu|native`;
 //! `--model synthetic --backend native` runs with no artifacts and no xla.
+//!
+//! Observability (any execution-running subcommand):
+//!   --trace FILE        record structured spans and write a Chrome
+//!                       trace_event JSON (load it in Perfetto / about:tracing)
+//!   --metrics-out FILE  write a Prometheus text snapshot of the metric
+//!                       registry (serve merges in the fleet's series)
 
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -40,13 +46,18 @@ use hybridac::util::cli::Args;
 const FLAGS: &[&str] = &[
     "model", "repeats", "n-eval", "frac", "adc", "target", "requests", "replicas", "window-ms",
     "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name", "backend", "threads",
-    "workers", "out",
+    "workers", "out", "trace", "metrics-out",
 ];
 const SWITCHES: &[&str] = &["differential", "verbose", "list"];
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), FLAGS, SWITCHES)?;
-    match args.subcommand.as_deref() {
+    // span recording must be armed before the command starts executing
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    if trace_path.is_some() {
+        hybridac::obs::trace::enable();
+    }
+    let result = match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("scenario") => scenario_cmd(&args),
         Some("study") => study_cmd(&args),
@@ -68,11 +79,38 @@ fn main() -> Result<()> {
                  backend: --backend pjrt-cpu|native (native needs no xla; \n\
                  \x20        `--model synthetic --backend native` needs no artifacts)\n\
                  \x20        --threads N native kernel workers (0 = auto, default)\n\
+                 observability: --trace FILE (Chrome trace_event JSON)\n\
+                 \x20              --metrics-out FILE (Prometheus text snapshot)\n\
                  see README.md; real artifacts must be built first (`make artifacts`)"
             );
             Ok(())
         }
+    };
+    // the trace is written even on command failure — it is most useful then
+    if let Some(path) = trace_path {
+        let n = hybridac::obs::trace::write_chrome_trace(&path)?;
+        println!("wrote trace {} ({n} events)", path.display());
     }
+    result
+}
+
+/// `--metrics-out FILE`: render the global metric registry (plus any
+/// command-specific series, e.g. the serve fleet's) as Prometheus text.
+fn write_metrics_out(
+    args: &Args,
+    extra: Option<hybridac::obs::RegistrySnapshot>,
+) -> Result<()> {
+    let Some(path) = args.get("metrics-out") else {
+        return Ok(());
+    };
+    let mut snap = hybridac::obs::global().snapshot();
+    if let Some(extra) = extra {
+        snap.merge(&extra);
+    }
+    std::fs::write(path, snap.prometheus())
+        .map_err(|e| anyhow::anyhow!("writing metrics {path}: {e}"))?;
+    println!("wrote metrics {path}");
+    Ok(())
 }
 
 fn model_tag(args: &Args) -> String {
@@ -226,7 +264,7 @@ fn scenario_cmd(args: &Args) -> Result<()> {
         100.0 * rep.protected_frac,
         rep.digital_frac
     );
-    Ok(())
+    write_metrics_out(args, None)
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -249,7 +287,7 @@ fn run(args: &Args) -> Result<()> {
         let rep = run_scenario(&dir, &sc, 250)?;
         print_report(&rep);
     }
-    Ok(())
+    write_metrics_out(args, None)
 }
 
 /// Run one declarative study — from a JSON file (`--spec`) or a named
@@ -361,7 +399,22 @@ fn run_study(mut study: Study, args: &Args) -> Result<()> {
         report.workers,
         report.wall_s
     );
-    Ok(())
+    // scheduling-dependent wall-clock lives in a separate side-channel file
+    // so the main report stays byte-identical at any worker count
+    let timing_path = match args.get("out") {
+        Some(p) => {
+            let tp = std::path::PathBuf::from(match p.strip_suffix(".json") {
+                Some(stem) => format!("{stem}.timing.json"),
+                None => format!("{p}.timing.json"),
+            });
+            std::fs::write(&tp, report.timing_json().to_string())
+                .map_err(|e| anyhow::anyhow!("writing study timing {}: {e}", tp.display()))?;
+            tp
+        }
+        None => report.write_timing_json()?,
+    };
+    println!("wrote timing {}", timing_path.display());
+    write_metrics_out(args, None)
 }
 
 fn sweep(args: &Args) -> Result<()> {
@@ -528,14 +581,26 @@ fn serve(args: &Args) -> Result<()> {
         )
     );
     println!(
-        "fleet totals: {} requests, {} batches (mean occupancy {:.0}), p99 {:.1} ms, {} shed, {} recycled",
+        "fleet totals: {} requests, {} batches (mean occupancy {:.0}), p99 {:.1} ms, \
+         queue depth {}, {} shed, {} recycled, {} probe failures",
         fm.total.requests,
         fm.total.batches,
         fm.total.mean_batch_occupancy(),
         fm.total.latency_percentile_ms(0.99),
+        fm.total.queue_depth,
         fm.shed,
-        fm.recycled
+        fm.recycled,
+        fm.probe_failures
     );
+    let shed_parts: Vec<String> = fm
+        .shed_by_kind
+        .iter()
+        .map(|(kind, n)| format!("{kind}={n}"))
+        .collect();
+    println!("shed by kind: {}", shed_parts.join(", "));
+    println!("prometheus snapshot:");
+    print!("{}", fm.to_registry_snapshot().prometheus());
+    write_metrics_out(args, Some(fm.to_registry_snapshot()))?;
     Arc::try_unwrap(router)
         .map_err(|_| anyhow::anyhow!("router still referenced"))?
         .shutdown()

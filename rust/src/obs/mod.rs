@@ -1,0 +1,34 @@
+//! Unified observability: span tracing, metric registry, stage timing.
+//!
+//! One instrumentation layer shared by the serve fleet, the study runner,
+//! and the native execution backend, so "where does the time go?" has a
+//! single answer across the stack:
+//!
+//! - [`trace`] — structured span tracing with scoped guards, a per-thread
+//!   lock-free-in-practice recorder, and Chrome `trace_event` JSON output
+//!   (open in Perfetto or `chrome://tracing`). Off by default; the
+//!   disabled path costs one relaxed atomic load per instrumentation
+//!   point. The CLI's `--trace FILE` flag enables it and writes the
+//!   drained trace on exit.
+//! - [`registry`] — named counters, gauges, and log-bucketed histograms
+//!   with plain-data snapshots that merge across replicas/workers and
+//!   render as Prometheus text exposition. Backs
+//!   [`crate::coordinator::Metrics`] and the serve fleet's queue-depth /
+//!   shed-by-kind / probe-failure series; scraped via `--metrics-out`.
+//! - [`timing`] — the bench harnesses' stopwatch and min/mean stage
+//!   timer (formerly `benchkit`), emitting a trace span per timed
+//!   iteration so bench stage structure lands in the same trace as the
+//!   kernel spans underneath it.
+//!
+//! Span categories in use: `"batch"` (coordinator batch lifecycle),
+//! `"serve"` (replica/probe lifecycle), `"study"` (per-point execution),
+//! `"exec"` (native backend graph/layer/kernel stages), `"bench"`
+//! (timed bench stages).
+
+pub mod registry;
+pub mod timing;
+pub mod trace;
+
+pub use registry::{global, Counter, Gauge, Histogram, Registry, RegistrySnapshot};
+pub use timing::{time_n, time_stats, StageTiming, Stopwatch};
+pub use trace::{instant, span, span_dyn, Span};

@@ -1,0 +1,389 @@
+//! Metric registry: named counters, gauges, and log-bucketed histograms
+//! with plain-data snapshots that merge across replicas and render as
+//! Prometheus text exposition.
+//!
+//! The live side ([`Registry`]) hands out `Arc` handles
+//! ([`Counter`] / [`Gauge`] / [`Histogram`]) so hot paths increment a
+//! pre-resolved atomic — the name lookup happens once, at registration,
+//! never per event. The read side ([`RegistrySnapshot`]) is plain data:
+//! each metric read once with relaxed ordering (no cross-metric atomicity,
+//! same contract the serving metrics have always had), merged bucket-wise
+//! so fleet-total histogram percentiles stay meaningful.
+//!
+//! [`crate::coordinator::Metrics`] is built on this registry; the serve
+//! fleet's queue-depth / shed-by-kind / probe-failure series and the
+//! study runner's per-point timings land here too, and any snapshot can
+//! be scraped via [`RegistrySnapshot::prometheus`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonically increasing event count.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time level that can move both ways (queue depths, pool sizes).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed log-scaled latency buckets in µs — the serving path's histogram
+/// shape, shared so merged snapshots always line up.
+pub const LATENCY_BUCKETS_US: [u64; 12] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000,
+];
+
+/// Histogram over fixed upper-edge buckets plus an implicit +Inf bucket;
+/// also accumulates the value sum for mean computation.
+pub struct Histogram {
+    edges: Vec<u64>,
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(edges: &[u64]) -> Histogram {
+        assert!(edges.windows(2).all(|w| w[0] < w[1]), "histogram edges must ascend");
+        Histogram {
+            edges: edges.to_vec(),
+            buckets: (0..edges.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (`v <= edge` picks the bucket; past the last
+    /// edge lands in the +Inf bucket).
+    pub fn record(&self, v: u64) {
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        let idx = self.edges.iter().position(|&e| v <= e).unwrap_or(self.edges.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            edges: self.edges.clone(),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data histogram state; merges bucket-wise.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub edges: Vec<u64>,
+    /// One count per edge plus the final +Inf bucket.
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum as f64 / self.count().max(1) as f64
+    }
+
+    /// Approximate percentile as the upper edge of the bucket holding the
+    /// p-th observation (the +Inf bucket reports twice the last edge).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return match self.edges.get(i) {
+                    Some(&e) => e as f64,
+                    None => self.edges.last().copied().unwrap_or(0).saturating_mul(2) as f64,
+                };
+            }
+        }
+        self.edges.last().copied().unwrap_or(0).saturating_mul(2) as f64
+    }
+
+    /// Bucket-wise add; edges must match (merging differently shaped
+    /// histograms would silently corrupt percentiles).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if other.buckets.is_empty() {
+            return;
+        }
+        if self.buckets.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(self.edges, other.edges, "merging histograms with different bucket edges");
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// The live metric store: get-or-create named metrics, snapshot them all.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a counter handle. Resolve once, increment forever.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create a histogram; `edges` applies only on first creation
+    /// (later callers share the existing shape).
+    pub fn histogram(&self, name: &str, edges: &[u64]) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new(edges)))
+            .clone()
+    }
+
+    /// Relaxed point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let inner = self.inner.lock().unwrap();
+        RegistrySnapshot {
+            counters: inner.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+            gauges: inner.gauges.iter().map(|(k, g)| (k.clone(), g.get())).collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), h.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// The process-wide default registry: coarse whole-process series (native
+/// executions/compiles, trace-agnostic totals) that the CLI's
+/// `--metrics-out` scrapes regardless of subcommand.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Plain-data copy of a registry; merges across replicas / workers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// Fold `other` in: counters and gauges add, histograms add
+    /// bucket-wise (so merged percentiles stay meaningful).
+    pub fn merge(&mut self, other: &RegistrySnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    /// Render as Prometheus text exposition (version 0.0.4): counters as
+    /// `# TYPE c counter`, gauges as gauges, histograms as cumulative
+    /// `_bucket{le="..."}` series plus `_sum` / `_count`.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, b) in h.buckets.iter().enumerate() {
+                cum += b;
+                match h.edges.get(i) {
+                    Some(e) => out.push_str(&format!("{name}_bucket{{le=\"{e}\"}} {cum}\n")),
+                    None => out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n")),
+                }
+            }
+            out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", h.sum, h.count()));
+        }
+        out
+    }
+}
+
+/// Prometheus metric names: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn sanitize(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if s.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        s.insert(0, '_');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_by_name() {
+        let reg = Registry::new();
+        let a = reg.counter("hits");
+        let b = reg.counter("hits");
+        a.add(2);
+        b.inc();
+        assert_eq!(reg.snapshot().counter("hits"), 3);
+        let g = reg.gauge("depth");
+        g.add(5);
+        g.sub(2);
+        assert_eq!(reg.snapshot().gauge("depth"), 3);
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let h = Histogram::new(&[10, 100, 1000]);
+        for v in [5, 50, 500, 5000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.buckets, vec![1, 1, 1, 1]);
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.sum, 5555);
+        assert_eq!(s.percentile(0.25), 10.0);
+        assert_eq!(s.percentile(0.75), 1000.0);
+        assert_eq!(s.percentile(1.0), 2000.0, "+Inf bucket reports 2x the last edge");
+    }
+
+    #[test]
+    fn snapshot_merge_adds_everything() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.counter("n").add(1);
+        b.counter("n").add(2);
+        b.counter("only_b").inc();
+        a.gauge("g").add(3);
+        b.gauge("g").sub(1);
+        a.histogram("h", &[10, 100]).record(5);
+        b.histogram("h", &[10, 100]).record(50);
+        let mut total = a.snapshot();
+        total.merge(&b.snapshot());
+        assert_eq!(total.counter("n"), 3);
+        assert_eq!(total.counter("only_b"), 1);
+        assert_eq!(total.gauge("g"), 2);
+        let h = &total.histograms["h"];
+        assert_eq!(h.buckets, vec![1, 1, 0]);
+        assert_eq!(h.sum, 55);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = Registry::new();
+        a.counter("n").add(7);
+        a.histogram("h", &[1]).record(9);
+        let mut s = a.snapshot();
+        let before = s.clone();
+        s.merge(&RegistrySnapshot::default());
+        assert_eq!(s, before);
+        let mut empty = RegistrySnapshot::default();
+        empty.merge(&before);
+        assert_eq!(empty, before, "merging into empty adopts the histogram shape");
+        let mut h = before.histograms["h"].clone();
+        h.merge(&HistogramSnapshot::default());
+        assert_eq!(h, before.histograms["h"], "merging an empty histogram is a no-op");
+    }
+
+    #[test]
+    fn prometheus_text_exposition() {
+        let reg = Registry::new();
+        reg.counter("requests_total").add(4);
+        reg.gauge("queue_depth").add(2);
+        let h = reg.histogram("latency_us", &[100, 1000]);
+        h.record(50);
+        h.record(5000);
+        let text = reg.snapshot().prometheus();
+        assert!(text.contains("# TYPE requests_total counter\nrequests_total 4\n"), "{text}");
+        assert!(text.contains("# TYPE queue_depth gauge\nqueue_depth 2\n"), "{text}");
+        assert!(text.contains("latency_us_bucket{le=\"100\"} 1\n"), "{text}");
+        assert!(text.contains("latency_us_bucket{le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("latency_us_sum 5050\n"), "{text}");
+        assert!(text.contains("latency_us_count 2\n"), "{text}");
+    }
+
+    #[test]
+    fn sanitize_fixes_bad_prometheus_names() {
+        assert_eq!(sanitize("a-b.c/d"), "a_b_c_d");
+        assert_eq!(sanitize("9lives"), "_9lives");
+    }
+}

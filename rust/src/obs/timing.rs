@@ -1,0 +1,130 @@
+//! Stage timing for the bench harnesses, layered on the span tracer.
+//!
+//! This absorbed `benchkit`'s bespoke `Stopwatch`/`StageTiming` so the
+//! benches share the observability stack with serve/study/exec: each
+//! [`time_stats`] iteration runs inside an [`crate::obs::trace`] span
+//! (category `"bench"`), so a bench invoked with tracing enabled drops
+//! its stage structure into the same Chrome trace as the kernel spans
+//! it exercises.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::obs::trace;
+use crate::util::json::Json;
+
+/// Tiny stopwatch for the per-bench timing line.
+pub struct Stopwatch(Instant, &'static str);
+
+impl Stopwatch {
+    pub fn start(label: &'static str) -> Self {
+        Stopwatch(Instant::now(), label)
+    }
+}
+
+impl Drop for Stopwatch {
+    fn drop(&mut self) {
+        println!("[bench] {} finished in {:.2}s", self.1, self.0.elapsed().as_secs_f64());
+    }
+}
+
+/// One timed stage: label + min/mean seconds over `iters` runs. The perf
+/// bench collects these into the machine-readable `BENCH_perf.json`.
+#[derive(Clone, Debug)]
+pub struct StageTiming {
+    pub label: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub mean_s: f64,
+}
+
+impl StageTiming {
+    /// Runs per second at the mean stage time.
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            0.0
+        }
+    }
+
+    /// The `BENCH_perf.json` stage record. The key set (name / iters /
+    /// min_s / mean_s / per_sec) is the schema prior perf trajectories
+    /// were written with — `benches/perf.rs` pins it.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.label.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("min_s".to_string(), Json::Num(self.min_s));
+        m.insert("mean_s".to_string(), Json::Num(self.mean_s));
+        m.insert("per_sec".to_string(), Json::Num(self.per_sec()));
+        Json::Obj(m)
+    }
+}
+
+/// Time a closure n times, reporting min/mean (the perf bench's primitive).
+pub fn time_n<F: FnMut()>(label: &str, n: usize, f: F) -> f64 {
+    time_stats(label, n, f).min_s
+}
+
+/// [`time_n`] returning the full min/mean record for machine-readable
+/// output. Each iteration is wrapped in a `"bench"` trace span, so the
+/// stage structure shows up in `--trace` output around whatever kernel
+/// spans the closure emits.
+pub fn time_stats<F: FnMut()>(label: &str, n: usize, mut f: F) -> StageTiming {
+    let mut best = f64::INFINITY;
+    let mut sum = 0.0;
+    for _ in 0..n {
+        let _span = trace::span_dyn("bench", || label.to_string());
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt);
+        sum += dt;
+    }
+    println!(
+        "  {label:<44} min {:>10} mean {:>10}",
+        crate::report::si_time(best),
+        crate::report::si_time(sum / n as f64)
+    );
+    StageTiming {
+        label: label.to_string(),
+        iters: n,
+        min_s: best,
+        mean_s: sum / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_json_schema_is_pinned() {
+        let s = StageTiming { label: "x".to_string(), iters: 4, min_s: 0.5, mean_s: 2.0 };
+        let json = s.to_json();
+        let keys: Vec<&str> = match &json {
+            Json::Obj(m) => m.keys().map(String::as_str).collect(),
+            _ => panic!("stage json must be an object"),
+        };
+        // BTreeMap order; this exact key set is the BENCH_perf.json schema
+        assert_eq!(keys, vec!["iters", "mean_s", "min_s", "name", "per_sec"]);
+        assert_eq!(json.get("per_sec").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(json.get("name").and_then(Json::as_str), Some("x"));
+    }
+
+    #[test]
+    fn zero_mean_has_zero_throughput() {
+        let s = StageTiming { label: "z".to_string(), iters: 1, min_s: 0.0, mean_s: 0.0 };
+        assert_eq!(s.per_sec(), 0.0);
+    }
+
+    #[test]
+    fn time_stats_measures_and_counts() {
+        let mut runs = 0;
+        let s = time_stats("noop", 3, || runs += 1);
+        assert_eq!(runs, 3);
+        assert_eq!(s.iters, 3);
+        assert!(s.min_s <= s.mean_s);
+    }
+}

@@ -23,6 +23,19 @@ pub enum ServeError {
     BadRequest { got: usize, want: usize },
 }
 
+impl ServeError {
+    /// Stable kind label for per-kind shed/error metrics (the fleet's
+    /// `serve_shed_total{kind=...}` series and Prometheus names).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::QueueFull { .. } => "queue_full",
+            ServeError::ReplicaClosed { .. } => "replica_closed",
+            ServeError::NoReplicas => "no_replicas",
+            ServeError::BadRequest { .. } => "bad_request",
+        }
+    }
+}
+
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -148,5 +161,16 @@ mod tests {
         let e = ServeError::QueueFull { replicas: 4, depth: 16 };
         assert!(e.to_string().contains("shed"));
         assert!(ServeError::ReplicaClosed { id: 2 }.to_string().contains("2"));
+    }
+
+    #[test]
+    fn serve_error_kinds_are_distinct_and_stable() {
+        let kinds = [
+            ServeError::QueueFull { replicas: 1, depth: 1 }.kind(),
+            ServeError::ReplicaClosed { id: 0 }.kind(),
+            ServeError::NoReplicas.kind(),
+            ServeError::BadRequest { got: 1, want: 2 }.kind(),
+        ];
+        assert_eq!(kinds, ["queue_full", "replica_closed", "no_replicas", "bad_request"]);
     }
 }

@@ -61,6 +61,15 @@ impl ReplicaHealth {
         self.probe_total.load(Ordering::Relaxed)
     }
 
+    /// Probes that missed (canary misclassified) — the fleet's
+    /// probe-failure gauge. Reads hits before total so a concurrent
+    /// `record_probe` can never make the difference go negative.
+    pub fn probe_failures(&self) -> u64 {
+        let hits = self.probe_hits.load(Ordering::Relaxed);
+        let total = self.probe_total.load(Ordering::Relaxed);
+        total.saturating_sub(hits)
+    }
+
     /// Observed accuracy over all probes so far; `None` before any probe.
     pub fn probe_accuracy(&self) -> Option<f64> {
         let total = self.probe_total.load(Ordering::Relaxed);
@@ -115,6 +124,17 @@ mod tests {
         let h = ReplicaHealth::new();
         assert_eq!(h.probe_accuracy(), None);
         assert_eq!(h.probes(), 0);
+        assert_eq!(h.probe_failures(), 0);
+    }
+
+    #[test]
+    fn failures_count_misses_only() {
+        let h = ReplicaHealth::new();
+        h.record_probe(true);
+        h.record_probe(false);
+        h.record_probe(false);
+        assert_eq!(h.probes(), 3);
+        assert_eq!(h.probe_failures(), 2);
     }
 
     #[test]

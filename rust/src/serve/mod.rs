@@ -23,8 +23,12 @@
 //!   background monitor thread that runs the probe + recycle sweep on an
 //!   interval instead of leaving it caller-driven;
 //! * [`FleetMetrics`] — per-replica and merged throughput, latency
-//!   percentiles, batch occupancy, and probe accuracy
-//!   (built on [`crate::coordinator::MetricsSnapshot`]).
+//!   percentiles, batch occupancy, queue depth, per-kind shed counters,
+//!   probe accuracy and probe failures (built on
+//!   [`crate::coordinator::MetricsSnapshot`]); lowered to Prometheus
+//!   text via [`FleetMetrics::to_registry_snapshot`] for the `serve`
+//!   summary and `--metrics-out`. Routing, probe, and recycle paths
+//!   emit [`crate::obs::trace`] spans under the `"serve"` category.
 //!
 //! ```no_run
 //! # fn main() -> anyhow::Result<()> {

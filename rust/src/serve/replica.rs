@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::{serve_requests, BatchContext, InferenceRequest};
 use crate::coordinator::Metrics;
 use crate::exec::BackendProvider;
+use crate::obs::trace;
 use crate::scenario::Scenario;
 
 use super::admission::{Gate, Rejection};
@@ -70,6 +71,8 @@ impl Replica {
         provider: &BackendProvider,
         spec: ReplicaSpec,
     ) -> Result<Replica> {
+        let _spawn_span =
+            trace::span_dyn("serve", || format!("replica/spawn id={} gen={}", spec.id, spec.generation));
         let sc = scenario.clone().with_seed(spec.seed);
         let provider = provider.clone();
         let (gate, rx) = Gate::bounded(spec.queue_depth);
@@ -130,7 +133,9 @@ impl Replica {
         let req = InferenceRequest { image, reply: rtx, enqueued: Instant::now(), probe: false };
         match self.gate.offer(req) {
             Ok(()) => {
+                trace::instant("batch/enqueue", "batch");
                 self.metrics.record_request();
+                self.metrics.record_enqueue();
                 Ok(rrx)
             }
             Err(r) => {
@@ -145,7 +150,11 @@ impl Replica {
     /// queue, metrics, and health record, but lets the prober submit
     /// (blocking) *without* holding whatever lock guards the `Replica`.
     pub fn probe_handle(&self) -> ProbeHandle {
-        ProbeHandle { gate: self.gate.clone(), health: self.health.clone() }
+        ProbeHandle {
+            gate: self.gate.clone(),
+            health: self.health.clone(),
+            metrics: self.metrics.clone(),
+        }
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -182,17 +191,24 @@ impl Replica {
 pub struct ProbeHandle {
     gate: Gate<InferenceRequest>,
     pub health: Arc<ReplicaHealth>,
+    /// Shared with the replica so probe enqueues keep the queue-depth
+    /// gauge consistent (the worker's dequeue counts probes too).
+    metrics: Arc<Metrics>,
 }
 
 impl ProbeHandle {
     /// Blocking admit; fails only once the worker is gone. Probes are
     /// tagged so they stay out of the serving request/latency metrics —
-    /// their outcomes land in the health record instead.
+    /// their outcomes land in the health record instead (but they do
+    /// occupy the admission queue, so the depth gauge counts them).
     pub fn submit_blocking(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, Rejection<Vec<f32>>> {
         let (rtx, rrx) = mpsc::channel();
         let req = InferenceRequest { image, reply: rtx, enqueued: Instant::now(), probe: true };
         match self.gate.send_blocking(req) {
-            Ok(()) => Ok(rrx),
+            Ok(()) => {
+                self.metrics.record_enqueue();
+                Ok(rrx)
+            }
             Err(r) => Err(Rejection::Closed(r.into_inner().image)),
         }
     }

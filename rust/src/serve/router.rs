@@ -12,8 +12,9 @@
 //! caller-driven.
 
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
@@ -21,6 +22,8 @@ use std::time::Duration;
 use crate::coordinator::MetricsSnapshot;
 use crate::eval::ExperimentConfig;
 use crate::exec::BackendProvider;
+use crate::obs::registry::{Registry, RegistrySnapshot};
+use crate::obs::trace;
 use crate::runtime::{Artifact, DatasetBlob, DatasetMeta};
 use crate::scenario::Scenario;
 use crate::util::rng::Rng;
@@ -95,8 +98,12 @@ pub struct ReplicaReport {
     pub metrics: MetricsSnapshot,
     /// Health probes answered this generation (kept out of `metrics`).
     pub probes: u64,
+    /// Probes this generation answered wrong (canary misses).
+    pub probe_failures: u64,
     pub probe_accuracy: Option<f64>,
     pub status: HealthStatus,
+    /// Admission-queue depth at snapshot time.
+    pub queue_depth: i64,
     /// False once the worker thread has exited (recyclable state).
     pub alive: bool,
 }
@@ -106,10 +113,34 @@ pub struct ReplicaReport {
 pub struct FleetMetrics {
     pub replicas: Vec<ReplicaReport>,
     pub total: MetricsSnapshot,
-    /// Requests refused by every queue (admission sheds).
+    /// Requests refused by every queue (admission sheds; the
+    /// `queue_full` entry of `shed_by_kind`).
     pub shed: u64,
+    /// Every routing refusal, keyed by [`ServeError::kind`] — all kinds
+    /// are present even at zero, so the series always exists.
+    pub shed_by_kind: BTreeMap<String, u64>,
     /// Replicas replaced by health recycling since start.
     pub recycled: u64,
+    /// Canary probe misses summed across live replica generations.
+    pub probe_failures: u64,
+}
+
+impl FleetMetrics {
+    /// Lower into a [`RegistrySnapshot`] (merged totals + fleet-level
+    /// series) for Prometheus text exposition — what `serve` prints and
+    /// `--metrics-out` writes.
+    pub fn to_registry_snapshot(&self) -> RegistrySnapshot {
+        let mut snap = self.total.to_registry_snapshot();
+        for (kind, v) in &self.shed_by_kind {
+            snap.counters.insert(format!("serve_shed_{kind}_total"), *v);
+        }
+        snap.counters.insert("serve_recycled_total".to_string(), self.recycled);
+        snap.gauges.insert("serve_replicas".to_string(), self.replicas.len() as i64);
+        // a gauge, not a counter: recycling a replica starts a fresh
+        // health record, so the fleet sum can go down
+        snap.gauges.insert("serve_probe_failures".to_string(), self.probe_failures as i64);
+        snap
+    }
 }
 
 /// Deterministic, decorrelated seed for one (replica, generation) draw.
@@ -139,8 +170,17 @@ struct RouterShared {
     /// write-locked only to swap a replica during recycling.
     slots: Vec<RwLock<Replica>>,
     next: AtomicUsize,
-    shed: AtomicU64,
-    recycled: AtomicU64,
+    /// Fleet-level series: per-kind routing refusals
+    /// (`serve_shed_<kind>_total`) and `serve_recycled_total`.
+    registry: Registry,
+}
+
+/// The [`ServeError`] kinds pre-registered at fleet start, so every
+/// shed-by-kind series exists (at zero) from the first scrape.
+const SHED_KINDS: [&str; 4] = ["queue_full", "replica_closed", "no_replicas", "bad_request"];
+
+fn shed_counter_name(kind: &str) -> String {
+    format!("serve_shed_{kind}_total")
 }
 
 pub struct Router {
@@ -193,6 +233,11 @@ impl Router {
                 spec,
             )?));
         }
+        let registry = Registry::new();
+        for kind in SHED_KINDS {
+            registry.counter(&shed_counter_name(kind));
+        }
+        registry.counter("serve_recycled_total");
         let shared = Arc::new(RouterShared {
             artifacts,
             scenario,
@@ -202,8 +247,7 @@ impl Router {
             per_image,
             slots,
             next: AtomicUsize::new(0),
-            shed: AtomicU64::new(0),
-            recycled: AtomicU64::new(0),
+            registry,
         });
         let monitor = if let Some(probe) = shared.fleet.probe.clone() {
             let stop = Arc::new(AtomicBool::new(false));
@@ -338,12 +382,13 @@ impl RouterShared {
     fn try_route(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, (Vec<f32>, ServeError)> {
         let n = self.slots.len();
         if n == 0 {
-            return Err((image, ServeError::NoReplicas));
+            return Err((image, self.count_reject(ServeError::NoReplicas)));
         }
         let got = image.len();
         if got != self.per_image {
             // reject before it can reach (and confuse) a worker
-            return Err((image, ServeError::BadRequest { got, want: self.per_image }));
+            let e = ServeError::BadRequest { got, want: self.per_image };
+            return Err((image, self.count_reject(e)));
         }
         let start = self.next.fetch_add(1, Ordering::Relaxed);
         let mut image = image;
@@ -366,19 +411,28 @@ impl RouterShared {
         }
         if saw_full {
             // overload: at least one live queue refused for capacity
-            self.shed.fetch_add(1, Ordering::Relaxed);
-            Err((image, ServeError::QueueFull { replicas: n, depth: self.queue_depth }))
+            let e = ServeError::QueueFull { replicas: n, depth: self.queue_depth };
+            Err((image, self.count_reject(e)))
         } else {
             // every replica's worker is gone — not a shed, not retryable
-            Err((image, ServeError::ReplicaClosed { id: closed_id }))
+            Err((image, self.count_reject(ServeError::ReplicaClosed { id: closed_id })))
         }
     }
 
+    /// Bump the per-kind refusal counter and hand the error back (the
+    /// rejection path is cold, so the registry name lookup is fine here).
+    fn count_reject(&self, e: ServeError) -> ServeError {
+        self.registry.counter(&shed_counter_name(e.kind())).inc();
+        e
+    }
+
     fn probe(&self, data: &DatasetBlob, n: usize) -> Vec<f64> {
+        let _sweep = trace::span("probe/sweep", "serve");
         let per = data.image_elems();
         let n = n.clamp(1, data.n);
         let mut accs = Vec::with_capacity(self.slots.len());
-        for slot in &self.slots {
+        for (id, slot) in self.slots.iter().enumerate() {
+            let _span = trace::span_dyn("serve", || format!("probe/replica id={id}"));
             // grab a detached ingress under a short lock, then do all the
             // (possibly blocking) submits with the lock released so live
             // traffic keeps spilling through this slot
@@ -395,6 +449,9 @@ impl RouterShared {
             for (label, rx) in pending {
                 if let Ok(pred) = rx.recv() {
                     let hit = pred == label;
+                    if !hit {
+                        trace::instant("probe/miss", "serve");
+                    }
                     handle.health.record_probe(hit);
                     hits += hit as u64;
                     total += 1;
@@ -424,6 +481,7 @@ impl RouterShared {
             // happens with no lock held: traffic keeps flowing to this
             // slot's old replica and spilling across the fleet meanwhile
             let next_gen = generation + 1;
+            let _span = trace::span_dyn("serve", || format!("replica/recycle id={id} gen={next_gen}"));
             let spec = ReplicaSpec {
                 id,
                 generation: next_gen,
@@ -451,7 +509,7 @@ impl RouterShared {
                     if let Err(e) = old.shutdown() {
                         eprintln!("recycled replica {id}: worker had failed: {e:#}");
                     }
-                    self.recycled.fetch_add(1, Ordering::Relaxed);
+                    self.registry.counter("serve_recycled_total").inc();
                     recycled.push(id);
                 }
                 Err(unused) => unused.shutdown()?,
@@ -472,18 +530,27 @@ impl RouterShared {
                 generation: replica.generation,
                 seed: replica.seed,
                 fingerprint: replica.fingerprint,
-                metrics: snap,
                 probes: replica.health.probes(),
+                probe_failures: replica.health.probe_failures(),
                 probe_accuracy: replica.health.probe_accuracy(),
                 status: replica.health.status(&self.fleet.health),
+                queue_depth: snap.queue_depth,
+                metrics: snap,
                 alive: replica.is_alive(),
             });
         }
+        let reg = self.registry.snapshot();
+        let shed_by_kind: BTreeMap<String, u64> = SHED_KINDS
+            .iter()
+            .map(|&kind| (kind.to_string(), reg.counter(&shed_counter_name(kind))))
+            .collect();
         FleetMetrics {
+            shed: shed_by_kind["queue_full"],
+            shed_by_kind,
+            recycled: reg.counter("serve_recycled_total"),
+            probe_failures: replicas.iter().map(|r| r.probe_failures).sum(),
             replicas,
             total,
-            shed: self.shed.load(Ordering::Relaxed),
-            recycled: self.recycled.load(Ordering::Relaxed),
         }
     }
 }
@@ -543,6 +610,29 @@ mod tests {
         assert_ne!(a, b, "different replicas must draw different variation");
         assert_ne!(a, c, "recycling must draw fresh variation");
         assert_eq!(a, replica_seed(42, 0, 0), "derivation is deterministic");
+    }
+
+    #[test]
+    fn fleet_metrics_render_shed_by_kind_series() {
+        let mut shed_by_kind = BTreeMap::new();
+        for kind in SHED_KINDS {
+            shed_by_kind.insert(kind.to_string(), 0);
+        }
+        shed_by_kind.insert("queue_full".to_string(), 3);
+        let fm = FleetMetrics {
+            replicas: Vec::new(),
+            total: MetricsSnapshot::default(),
+            shed: 3,
+            shed_by_kind,
+            recycled: 1,
+            probe_failures: 2,
+        };
+        let text = fm.to_registry_snapshot().prometheus();
+        assert!(text.contains("serve_shed_queue_full_total 3\n"), "{text}");
+        assert!(text.contains("serve_shed_bad_request_total 0\n"), "{text}");
+        assert!(text.contains("serve_recycled_total 1\n"), "{text}");
+        assert!(text.contains("serve_probe_failures 2\n"), "{text}");
+        assert!(text.contains("serve_queue_depth 0\n"), "{text}");
     }
 
     #[test]

@@ -17,7 +17,11 @@
 //!   PJRT engine per worker, with per-model artifact/clean-accuracy
 //!   memoization; reports are byte-identical at any worker count;
 //! * [`StudyReport`] — [`crate::report`] table / series-plot text output
-//!   plus `BENCH_study_<name>.json`.
+//!   plus `BENCH_study_<name>.json`; per-point wall-clock + worker id go
+//!   to the separate `BENCH_study_<name>.timing.json` side channel
+//!   ([`StudyReport::write_timing_json`]) so the main report stays
+//!   scheduling-independent. Point execution emits [`crate::obs::trace`]
+//!   spans under the `"study"` category.
 //!
 //! The paper benches are thin drivers over [`Study::named`] built-ins, and
 //! the CLI runs any study from a file alone:
@@ -41,7 +45,7 @@ pub mod runner;
 pub mod spec;
 
 pub use grid::{SearchTask, StudyPoint};
-pub use report::{PointResult, StudyReport};
+pub use report::{PointResult, PointTiming, StudyReport};
 pub use runner::StudyRunner;
 pub use spec::{
     artifact_built, built_model_combos, eval_budget, full_mode, model_combos, Axis, MethodKey,

@@ -5,8 +5,10 @@
 //! accuracies: it carries no wall-clock, worker-count, or host detail, so
 //! a 4-worker run writes byte-identical output to a 1-worker run (the
 //! property CI's study smoke and `tests/study_props.rs` rely on). Timing
-//! lives on the struct ([`StudyReport::wall_s`], [`StudyReport::workers`])
-//! for stdout only.
+//! lives on the struct ([`StudyReport::wall_s`], [`StudyReport::workers`],
+//! and the per-point [`StudyReport::timing`] records) and goes to stdout
+//! or the *separate* `BENCH_study_<name>.timing.json` side channel
+//! ([`StudyReport::write_timing_json`]) — never into the main report.
 
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -40,6 +42,18 @@ pub struct PointResult {
     pub searched: bool,
 }
 
+/// Wall-clock of one point's evaluation — scheduling-dependent by nature,
+/// so it lives beside the report (`.timing.json`), never inside it.
+#[derive(Clone, Debug)]
+pub struct PointTiming {
+    /// Grid index of the point this timing belongs to.
+    pub index: usize,
+    pub id: String,
+    pub secs: f64,
+    /// Which worker thread evaluated the point.
+    pub worker: usize,
+}
+
 /// Results of one whole study, in stable grid order.
 pub struct StudyReport {
     pub study: String,
@@ -49,10 +63,14 @@ pub struct StudyReport {
     pub clean: BTreeMap<String, f64>,
     /// Models dropped because their artifacts are not built.
     pub skipped_models: Vec<String>,
-    /// Worker threads the run used (stdout only — never serialized).
+    /// Worker threads the run used (side channel only — never serialized
+    /// into the main report).
     pub workers: usize,
-    /// Wall-clock seconds of the run (stdout only — never serialized).
+    /// Wall-clock seconds of the run (side channel only).
     pub wall_s: f64,
+    /// Per-point wall-clock + worker id, in grid order (side channel
+    /// only; see [`StudyReport::write_timing_json`]).
+    pub timing: Vec<PointTiming>,
 }
 
 impl StudyReport {
@@ -221,15 +239,53 @@ impl StudyReport {
         Json::Obj(root)
     }
 
+    /// The timing side channel: per-point wall-clock + worker id, plus the
+    /// run's totals. Deliberately a separate document from [`to_json`]
+    /// (scheduling-dependent data must never leak into the report).
+    ///
+    /// [`to_json`]: StudyReport::to_json
+    pub fn timing_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("study".to_string(), Json::Str(self.study.clone()));
+        root.insert("backend".to_string(), Json::Str(self.backend.name().to_string()));
+        root.insert("workers".to_string(), Json::Num(self.workers as f64));
+        root.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        root.insert(
+            "points".to_string(),
+            Json::Arr(
+                self.timing
+                    .iter()
+                    .map(|t| {
+                        let mut m = BTreeMap::new();
+                        m.insert("index".to_string(), Json::Num(t.index as f64));
+                        m.insert("id".to_string(), Json::Str(t.id.clone()));
+                        m.insert("secs".to_string(), Json::Num(t.secs));
+                        m.insert("worker".to_string(), Json::Num(t.worker as f64));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+
     /// `BENCH_study_<name>.json` with the study name sanitized for
     /// filesystem use.
     pub fn json_file_name(&self) -> String {
-        let safe: String = self
-            .study
+        format!("BENCH_study_{}.json", self.safe_name())
+    }
+
+    /// `BENCH_study_<name>.timing.json` — the side-channel file written
+    /// next to the main report.
+    pub fn timing_file_name(&self) -> String {
+        format!("BENCH_study_{}.timing.json", self.safe_name())
+    }
+
+    fn safe_name(&self) -> String {
+        self.study
             .chars()
             .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
-            .collect();
-        format!("BENCH_study_{safe}.json")
+            .collect()
     }
 
     /// Write the report to `BENCH_study_<name>.json` in the current
@@ -243,5 +299,14 @@ impl StudyReport {
     pub fn write_json_to(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_string())
             .with_context(|| format!("writing study report {}", path.display()))
+    }
+
+    /// Write the timing side channel to `BENCH_study_<name>.timing.json`
+    /// in the current directory; returns the path.
+    pub fn write_timing_json(&self) -> Result<PathBuf> {
+        let path = PathBuf::from(self.timing_file_name());
+        std::fs::write(&path, self.timing_json().to_string())
+            .with_context(|| format!("writing study timing {}", path.display()))?;
+        Ok(path)
     }
 }

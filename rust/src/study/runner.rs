@@ -28,10 +28,11 @@ use std::time::Instant;
 
 use crate::eval::Evaluator;
 use crate::exec::{BackendKind, BackendProvider, NativeConfig};
+use crate::obs::trace;
 use crate::runtime::{Artifact, DatasetBlob};
 
 use super::grid::StudyPoint;
-use super::report::{PointResult, StudyReport};
+use super::report::{PointResult, PointTiming, StudyReport};
 use super::spec::{artifact_built, Study};
 
 /// Executes studies: point expansion, per-model memoization, parallel
@@ -60,6 +61,7 @@ impl StudyRunner {
     /// the old bench behavior on a partial `make artifacts`); any point
     /// that *runs* and fails fails the whole study.
     pub fn run(&self, study: &Study) -> Result<StudyReport> {
+        let _span = trace::span_dyn("study", || format!("study {}", study.name));
         let t0 = Instant::now();
         let kind = study.base.backend;
         let mut points = study.points()?;
@@ -159,6 +161,8 @@ impl StudyRunner {
                             return;
                         }
                         let (model, art, data) = &model_list[i];
+                        let _span =
+                            trace::span_dyn("study", || format!("clean-anchor {model}"));
                         let ev =
                             Evaluator::from_parts(art.clone(), data.clone(), backend.clone());
                         let res = ev
@@ -184,11 +188,16 @@ impl StudyRunner {
         // -- parallel point execution ---------------------------------------
         let n = points.len();
         let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<PointResult>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        // each slot gets (result, wall-clock seconds, worker id); timing
+        // goes to the side channel, never into the serialized report
+        let slots: Vec<Mutex<Option<(PointResult, f64, usize)>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let next_worker = AtomicUsize::new(0);
         let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 scope.spawn(|| {
+                    let worker_id = next_worker.fetch_add(1, Ordering::Relaxed);
                     let backend = match provider.instantiate() {
                         Ok(b) => b,
                         Err(e) => {
@@ -218,8 +227,15 @@ impl StudyRunner {
                                 .clone();
                             Evaluator::from_parts(art, data, backend.clone())
                         });
-                        match run_point(ev, point, clean[&model]) {
-                            Ok(result) => *slots[i].lock().unwrap() = Some(result),
+                        let point_t0 = Instant::now();
+                        let span = trace::span_dyn("study", || format!("point {}", point.id));
+                        let outcome = run_point(ev, point, clean[&model]);
+                        drop(span);
+                        match outcome {
+                            Ok(result) => {
+                                *slots[i].lock().unwrap() =
+                                    Some((result, point_t0.elapsed().as_secs_f64(), worker_id));
+                            }
                             Err(e) => {
                                 let mut f = failure.lock().unwrap();
                                 if f.is_none() {
@@ -235,10 +251,19 @@ impl StudyRunner {
         if let Some(e) = failure.into_inner().unwrap() {
             return Err(e);
         }
-        let results: Vec<PointResult> = slots
-            .into_iter()
-            .map(|slot| slot.into_inner().unwrap().expect("every point produced a result"))
-            .collect();
+        let mut results: Vec<PointResult> = Vec::with_capacity(n);
+        let mut timing: Vec<PointTiming> = Vec::with_capacity(n);
+        for slot in slots {
+            let (result, secs, worker) =
+                slot.into_inner().unwrap().expect("every point produced a result");
+            timing.push(PointTiming {
+                index: result.index,
+                id: result.id.clone(),
+                secs,
+                worker,
+            });
+            results.push(result);
+        }
 
         Ok(StudyReport {
             study: study.name.clone(),
@@ -248,6 +273,7 @@ impl StudyRunner {
             skipped_models: skipped,
             workers,
             wall_s: t0.elapsed().as_secs_f64(),
+            timing,
         })
     }
 

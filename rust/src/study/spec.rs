@@ -43,7 +43,7 @@ use crate::scenario::Scenario;
 use crate::util::json::Json;
 
 // ---------------------------------------------------------------------------
-// bench budget + model combos (moved here from `benchkit` — the study layer
+// bench budget + model combos (moved here from the old `benchkit` — the study layer
 // owns the sweep configuration now)
 
 /// `HYBRIDAC_BENCH_FULL=1` restores the paper-scale sweep budget.
