@@ -1,0 +1,104 @@
+//! Networked serving quickstart: the wire protocol end to end.
+//!
+//! Spins up a self-contained elastic fleet (synthetic artifact, native
+//! backend, 1..3 replicas with the autoscaler on), puts the TCP front
+//! door on it with `net::NetServer`, then talks to it like a remote
+//! client would with `net::NetClient`: ping, a few inference round
+//! trips, a deliberately oversized request to show the typed admission
+//! error, and a Prometheus metrics fetch — all over length-prefixed JSON
+//! frames on a real socket.
+//!
+//! Run: `cargo run --release --example serve_client [addr]`
+//! With an `addr` argument the example skips the embedded server and
+//! connects to an already-running `hybridac serve --listen ADDR`.
+//!
+//! Self-contained mode needs no built artifacts (the synthetic artifact
+//! is materialized into a temp dir), so it also works with
+//! `--no-default-features`.
+
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hybridac::eval::Method;
+use hybridac::exec::BackendKind;
+use hybridac::net::{InferOutcome, NetClient, NetServer, ServerConfig};
+use hybridac::runtime::Artifact;
+use hybridac::scenario::Scenario;
+use hybridac::serve::{AutoscaleConfig, FleetConfig, Router};
+
+fn main() -> Result<()> {
+    // either connect to a listener the user already started...
+    let external = std::env::args().nth(1);
+    let (addr, embedded) = match &external {
+        Some(addr) => (addr.clone(), None),
+        None => {
+            // ...or embed one: synthetic artifact + native backend, so the
+            // example runs on a fresh checkout
+            let dir = std::env::temp_dir()
+                .join(format!("hybridac-serve-client-{}", std::process::id()));
+            Artifact::materialize_synthetic(&dir)?;
+            let sc =
+                Scenario::paper_default("serve-client", "synthetic", Method::Hybrid { frac: 0.16 })
+                    .with_backend(BackendKind::Native);
+            let fleet = FleetConfig::new(1).with_bounds(1, 3).with_autoscale(
+                AutoscaleConfig::default().with_interval(Duration::from_millis(100)),
+            );
+            let router = Arc::new(Router::start_scenario(dir, sc, fleet)?);
+            let server = NetServer::bind("127.0.0.1:0", router.clone(), ServerConfig::default())?;
+            let addr = server.local_addr().to_string();
+            println!("embedded elastic fleet (1..3 replicas) listening on {addr}");
+            (addr, Some((server, router)))
+        }
+    };
+
+    let mut client = NetClient::connect(addr.as_str())?;
+    client.ping()?;
+    println!("ping: ok");
+
+    // a valid image: synthetic inputs are 16x16x3 = 768 floats; against an
+    // external listener we learn the size from the first typed error
+    let mut image = vec![0.5f32; 768];
+    match client.infer(&image)? {
+        InferOutcome::Pred(pred) => println!("infer: pred {pred}"),
+        InferOutcome::Denied { kind, message } => println!("infer: denied [{kind}] {message}"),
+    }
+    for i in 0..4 {
+        image[i] = i as f32 * 0.1;
+        match client.infer(&image)? {
+            InferOutcome::Pred(pred) => println!("infer #{i}: pred {pred}"),
+            InferOutcome::Denied { kind, message } => {
+                println!("infer #{i}: denied [{kind}] {message}")
+            }
+        }
+    }
+
+    // a wrong-size payload comes back as a typed bad_request error — the
+    // connection keeps serving afterwards
+    let short = vec![0.0f32; 7];
+    match client.infer(&short)? {
+        InferOutcome::Pred(pred) => println!("short infer: unexpectedly predicted {pred}"),
+        InferOutcome::Denied { kind, message } => {
+            println!("short infer: denied as expected [{kind}] {message}")
+        }
+    }
+    client.ping()?;
+    println!("ping after bad request: still serving");
+
+    // fleet metrics over the wire (same Prometheus text --metrics-out writes)
+    let metrics = client.metrics()?;
+    let shown: Vec<&str> = metrics
+        .lines()
+        .filter(|l| l.starts_with("serve_requests_total") || l.starts_with("serve_replicas"))
+        .collect();
+    println!("metrics excerpt:\n  {}", shown.join("\n  "));
+
+    if let Some((server, router)) = embedded {
+        server.shutdown()?;
+        Arc::try_unwrap(router)
+            .map_err(|_| anyhow::anyhow!("router still referenced"))?
+            .shutdown()?;
+        println!("embedded server shut down cleanly");
+    }
+    Ok(())
+}

@@ -1,0 +1,291 @@
+//! Closed-loop serving load bench: an offered-QPS sweep against a live
+//! TCP listener (`net::NetServer`) fronting an autoscaling fleet.
+//!
+//! Each step spawns paced closed-loop clients (every client waits for its
+//! response before sending the next request, with sleeps to hit the
+//! offered rate), while a sampler thread records the live replica count.
+//! Per step the bench reports achieved QPS, p50/p95/p99 latency, the shed
+//! fraction, and the replicas-over-time curve; after the last step it
+//! watches the drain phase until the autoscaler shrinks the fleet back to
+//! its minimum. Everything lands in `BENCH_serve.json`.
+//!
+//! Runs on the materialized synthetic artifact with the native backend,
+//! so it needs no built artifacts and works in a `--no-default-features`
+//! build (CI runs `cargo bench --bench serve_load -- --quick` there).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hybridac::eval::Method;
+use hybridac::exec::BackendKind;
+use hybridac::net::{InferOutcome, NetClient, NetServer, ServerConfig};
+use hybridac::runtime::{Artifact, DatasetBlob};
+use hybridac::scenario::Scenario;
+use hybridac::serve::{AutoscaleConfig, FleetConfig, Router};
+use hybridac::util::json::Json;
+
+const MIN_REPLICAS: usize = 1;
+const MAX_REPLICAS: usize = 4;
+
+/// One offered-QPS step's raw observations.
+struct StepResult {
+    offered_qps: f64,
+    clients: usize,
+    sent: usize,
+    ok: usize,
+    shed: usize,
+    seconds: f64,
+    latencies_ms: Vec<f64>,
+    replicas_over_time: Vec<(f64, usize)>,
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx]
+}
+
+/// Sample `router.active_replicas()` on a fixed cadence until `stop`.
+fn spawn_sampler(
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    t0: Instant,
+) -> std::thread::JoinHandle<Vec<(f64, usize)>> {
+    std::thread::spawn(move || {
+        let mut samples = Vec::new();
+        while !stop.load(Ordering::Relaxed) {
+            samples.push((t0.elapsed().as_secs_f64() * 1e3, router.active_replicas()));
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        samples.push((t0.elapsed().as_secs_f64() * 1e3, router.active_replicas()));
+        samples
+    })
+}
+
+/// Run one offered-QPS step: `clients` paced closed-loop connections for
+/// `dur`, each recording per-request latency and shed outcomes.
+fn run_step(
+    addr: std::net::SocketAddr,
+    router: &Arc<Router>,
+    data: &Arc<DatasetBlob>,
+    offered_qps: f64,
+    clients: usize,
+    dur: Duration,
+) -> anyhow::Result<StepResult> {
+    let period = Duration::from_secs_f64(clients as f64 / offered_qps);
+    let t0 = Instant::now();
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = spawn_sampler(router.clone(), stop.clone(), t0);
+    let mut workers = Vec::new();
+    for c in 0..clients {
+        let data = data.clone();
+        workers.push(std::thread::spawn(move || -> anyhow::Result<(usize, usize, usize, Vec<f64>)> {
+            let mut client = NetClient::connect(addr)?;
+            let per = data.image_elems();
+            let (mut sent, mut ok, mut shed) = (0usize, 0usize, 0usize);
+            let mut lats = Vec::new();
+            for j in 0.. {
+                let target = period.mul_f64(j as f64);
+                let elapsed = t0.elapsed();
+                if elapsed < target {
+                    std::thread::sleep(target - elapsed);
+                }
+                if t0.elapsed() >= dur {
+                    break;
+                }
+                let idx = (c + j * clients) % data.n;
+                let image = &data.images[idx * per..(idx + 1) * per];
+                let sent_at = Instant::now();
+                sent += 1;
+                match client.infer(image)? {
+                    InferOutcome::Pred(_) => {
+                        ok += 1;
+                        lats.push(sent_at.elapsed().as_secs_f64() * 1e3);
+                    }
+                    InferOutcome::Denied { .. } => shed += 1,
+                }
+            }
+            Ok((sent, ok, shed, lats))
+        }));
+    }
+    let (mut sent, mut ok, mut shed) = (0, 0, 0);
+    let mut latencies_ms = Vec::new();
+    for w in workers {
+        let (s, o, sh, lats) = w.join().expect("client thread panicked")?;
+        sent += s;
+        ok += o;
+        shed += sh;
+        latencies_ms.extend(lats);
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    let replicas_over_time = sampler.join().expect("sampler thread panicked");
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(StepResult {
+        offered_qps,
+        clients,
+        sent,
+        ok,
+        shed,
+        seconds,
+        latencies_ms,
+        replicas_over_time,
+    })
+}
+
+impl StepResult {
+    fn shed_fraction(&self) -> f64 {
+        self.shed as f64 / self.sent.max(1) as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("offered_qps".to_string(), Json::Num(self.offered_qps));
+        o.insert("clients".to_string(), Json::Num(self.clients as f64));
+        o.insert("sent".to_string(), Json::Num(self.sent as f64));
+        o.insert("ok".to_string(), Json::Num(self.ok as f64));
+        o.insert("shed".to_string(), Json::Num(self.shed as f64));
+        o.insert("shed_fraction".to_string(), Json::Num(self.shed_fraction()));
+        o.insert("seconds".to_string(), Json::Num(self.seconds));
+        o.insert("achieved_qps".to_string(), Json::Num(self.sent as f64 / self.seconds));
+        o.insert("p50_ms".to_string(), Json::Num(percentile(&self.latencies_ms, 0.50)));
+        o.insert("p95_ms".to_string(), Json::Num(percentile(&self.latencies_ms, 0.95)));
+        o.insert("p99_ms".to_string(), Json::Num(percentile(&self.latencies_ms, 0.99)));
+        o.insert(
+            "replicas_over_time".to_string(),
+            Json::Arr(self.replicas_over_time.iter().map(|&(t, n)| replica_sample(t, n)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+fn replica_sample(t_ms: f64, active: usize) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("t_ms".to_string(), Json::Num(t_ms));
+    o.insert("active".to_string(), Json::Num(active as f64));
+    Json::Obj(o)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut quick = false;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--quick" => quick = true,
+            // cargo bench passes `--bench` to the binary even with
+            // harness = false
+            "--bench" => {}
+            s => anyhow::bail!("unknown serve_load flag '{s}' (known: --quick)"),
+        }
+    }
+
+    // self-contained: materialize the synthetic artifact next to nothing
+    let dir = std::env::temp_dir().join(format!("hybridac-serve-load-{}", std::process::id()));
+    Artifact::materialize_synthetic(&dir)?;
+    let art = Artifact::load(&dir, "synthetic")?;
+    let data = Arc::new(DatasetBlob::load(&dir, &art.dataset)?);
+
+    // one kernel thread per replica keeps the capacity of a single replica
+    // well-defined, so the sweep actually exercises the autoscaler
+    let sc = Scenario::paper_default("serve-load", "synthetic", Method::Hybrid { frac: 0.16 })
+        .with_backend(BackendKind::Native)
+        .with_threads(1);
+    let mut fleet = FleetConfig::new(MIN_REPLICAS);
+    fleet.max_wait = Duration::from_millis(2);
+    fleet.queue_depth = 4;
+    fleet = fleet.with_bounds(MIN_REPLICAS, MAX_REPLICAS).with_autoscale(
+        AutoscaleConfig {
+            interval: Duration::from_millis(60),
+            up_after: 2,
+            down_after: 5,
+            ..AutoscaleConfig::default()
+        },
+    );
+    let router = Arc::new(Router::start_scenario(dir, sc, fleet)?);
+    let server = NetServer::bind("127.0.0.1:0", router.clone(), ServerConfig::default())?;
+    let addr = server.local_addr();
+    println!(
+        "serve_load on synthetic [native]: listener {addr}, fleet {MIN_REPLICAS}..{MAX_REPLICAS}, \
+         queue depth 4, window 2 ms"
+    );
+
+    // offered-QPS sweep: low (fleet idles at min) -> beyond one replica's
+    // capacity (sheds appear, autoscaler grows, shed fraction falls)
+    let (steps, step_dur, clients): (&[f64], Duration, usize) = if quick {
+        (&[80.0, 600.0], Duration::from_millis(1200), 4)
+    } else {
+        (&[50.0, 200.0, 800.0, 2000.0], Duration::from_secs(3), 8)
+    };
+
+    let mut results: Vec<StepResult> = Vec::new();
+    for &qps in steps {
+        let r = run_step(addr, &router, &data, qps, clients, step_dur)?;
+        let max_active = r.replicas_over_time.iter().map(|&(_, n)| n).max().unwrap_or(0);
+        println!(
+            "  offered {qps:>6.0} qps: achieved {:>6.0} qps, p50 {:.1} ms, p95 {:.1} ms, \
+             p99 {:.1} ms, shed {:.1}%, replicas {}..{max_active}",
+            r.sent as f64 / r.seconds,
+            percentile(&r.latencies_ms, 0.50),
+            percentile(&r.latencies_ms, 0.95),
+            percentile(&r.latencies_ms, 0.99),
+            100.0 * r.shed_fraction(),
+            r.replicas_over_time.iter().map(|&(_, n)| n).min().unwrap_or(0),
+        );
+        results.push(r);
+    }
+
+    // drain phase: load is gone; watch the autoscaler walk back to min
+    let drain_t0 = Instant::now();
+    let drain_limit = Duration::from_secs(8);
+    let mut drain_samples = Vec::new();
+    loop {
+        let active = router.active_replicas();
+        drain_samples.push((drain_t0.elapsed().as_secs_f64() * 1e3, active));
+        if active <= MIN_REPLICAS || drain_t0.elapsed() > drain_limit {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let final_replicas = router.active_replicas();
+    println!(
+        "  drain: {} replicas after {:.1}s (min {MIN_REPLICAS})",
+        final_replicas,
+        drain_t0.elapsed().as_secs_f64()
+    );
+
+    let fm = router.fleet_metrics();
+    println!(
+        "  fleet totals: {} requests, {} shed, {} scale-ups, {} scale-downs",
+        fm.total.requests, fm.shed, fm.scale_ups, fm.scale_downs
+    );
+
+    let mut drain = BTreeMap::new();
+    drain.insert("seconds".to_string(), Json::Num(drain_t0.elapsed().as_secs_f64()));
+    drain.insert("final_replicas".to_string(), Json::Num(final_replicas as f64));
+    drain.insert(
+        "replicas_over_time".to_string(),
+        Json::Arr(drain_samples.iter().map(|&(t, n)| replica_sample(t, n)).collect()),
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serve".to_string()));
+    root.insert("backend".to_string(), Json::Str("native".to_string()));
+    root.insert("model".to_string(), Json::Str("synthetic".to_string()));
+    root.insert("quick".to_string(), Json::Bool(quick));
+    root.insert("min_replicas".to_string(), Json::Num(MIN_REPLICAS as f64));
+    root.insert("max_replicas".to_string(), Json::Num(MAX_REPLICAS as f64));
+    root.insert("scale_ups".to_string(), Json::Num(fm.scale_ups as f64));
+    root.insert("scale_downs".to_string(), Json::Num(fm.scale_downs as f64));
+    root.insert("steps".to_string(), Json::Arr(results.iter().map(StepResult::to_json).collect()));
+    root.insert("drain".to_string(), Json::Obj(drain));
+    std::fs::write("BENCH_serve.json", Json::Obj(root).to_string())?;
+    println!("wrote BENCH_serve.json ({} QPS steps)", results.len());
+
+    server.shutdown()?;
+    Arc::try_unwrap(router)
+        .map_err(|_| anyhow::anyhow!("router still referenced"))?
+        .shutdown()
+}

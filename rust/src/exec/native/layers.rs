@@ -186,7 +186,7 @@ impl Interp<'_> {
         }
         let patches = {
             let _s = trace::span("im2col", "exec");
-            im2col_arena(&xq, li.r, li.stride, li.pad, self.arena)
+            im2col_arena(&xq, li.r, li.stride, li.pad, self.arena, self.threads)
         };
         self.recycle(xq);
         let mut y = self.hybrid_matmul(idx, &patches)?;
@@ -447,36 +447,78 @@ pub fn conv_out_hw(h: usize, w: usize, r: usize, stride: usize, pad: usize) -> (
     ((h + 2 * pad - r) / stride + 1, (w + 2 * pad - r) / stride + 1)
 }
 
-fn im2col_into(x: &Tensor, r: usize, stride: usize, pad: usize, out: &mut [f32]) {
-    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+/// Fill a contiguous range of output rows (one row = one (bi, oi, oj)
+/// patch position, global index `(bi*oh + oi)*ow + oj`), starting at
+/// global row `row0`. `out_rows` must hold exactly `cols` floats per row
+/// and be pre-zeroed (padding taps are skipped, not written). Rows are
+/// disjoint, which is what makes the sharded path below trivially
+/// bit-identical to the sequential one.
+fn im2col_rows(x: &Tensor, r: usize, stride: usize, pad: usize, row0: usize, out_rows: &mut [f32]) {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
     let (oh, ow) = conv_out_hw(h, w, r, stride, pad);
     let cols = c * r * r;
-    for bi in 0..b {
-        for oi in 0..oh {
-            for oj in 0..ow {
-                let row = ((bi * oh + oi) * ow + oj) * cols;
-                for di in 0..r {
-                    let ii = oi * stride + di;
-                    if ii < pad || ii >= h + pad {
-                        continue; // zero padding row
-                    }
-                    let ii = ii - pad;
-                    for dj in 0..r {
-                        let jj = oj * stride + dj;
-                        if jj < pad || jj >= w + pad {
-                            continue;
-                        }
-                        let jj = jj - pad;
-                        let src = ((bi * h + ii) * w + jj) * c;
-                        let rr = di * r + dj;
-                        for ci in 0..c {
-                            out[row + ci * r * r + rr] = x.data[src + ci];
-                        }
-                    }
+    debug_assert_eq!(out_rows.len() % cols, 0);
+    let nrows = out_rows.len() / cols;
+    for k in 0..nrows {
+        let row = row0 + k;
+        let oj = row % ow;
+        let oi = (row / ow) % oh;
+        let bi = row / (ow * oh);
+        let dst = &mut out_rows[k * cols..(k + 1) * cols];
+        for di in 0..r {
+            let ii = oi * stride + di;
+            if ii < pad || ii >= h + pad {
+                continue; // zero padding row
+            }
+            let ii = ii - pad;
+            for dj in 0..r {
+                let jj = oj * stride + dj;
+                if jj < pad || jj >= w + pad {
+                    continue;
+                }
+                let jj = jj - pad;
+                let src = ((bi * h + ii) * w + jj) * c;
+                let rr = di * r + dj;
+                for ci in 0..c {
+                    dst[ci * r * r + rr] = x.data[src + ci];
                 }
             }
         }
     }
+}
+
+fn im2col_into(x: &Tensor, r: usize, stride: usize, pad: usize, out: &mut [f32]) {
+    im2col_rows(x, r, stride, pad, 0, out);
+}
+
+/// [`im2col_into`] sharded over `threads` scoped workers. Each worker owns
+/// a disjoint contiguous block of output rows, so the result is
+/// bit-identical to the sequential fill at any thread count. Small layers
+/// (and `threads <= 1`) stay on the sequential path — the spawn overhead
+/// only pays for itself on large spatial layers.
+fn im2col_into_par(x: &Tensor, r: usize, stride: usize, pad: usize, out: &mut [f32], threads: usize) {
+    /// Patch-matrix elements below which sharding is not worth a spawn.
+    const MIN_PAR_ELEMS: usize = 1 << 16;
+    let cols = x.shape[3] * r * r;
+    let nrows = out.len() / cols.max(1);
+    let threads = threads.max(1).min(nrows.max(1));
+    if threads <= 1 || out.len() < MIN_PAR_ELEMS {
+        im2col_rows(x, r, stride, pad, 0, out);
+        return;
+    }
+    let rows_per = nrows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take_rows = rows_per.min(nrows - row0);
+            let (piece, tail) = rest.split_at_mut(take_rows * cols);
+            rest = tail;
+            let start = row0;
+            row0 += take_rows;
+            s.spawn(move || im2col_rows(x, r, stride, pad, start, piece));
+        }
+    });
 }
 
 /// `x[B,H,W,C] -> patches [B*OH*OW, C*R*R]` with channel-major columns
@@ -491,13 +533,21 @@ pub fn im2col(x: &Tensor, r: usize, stride: usize, pad: usize) -> Tensor {
     Tensor::new(vec![b * oh * ow, cols], out)
 }
 
-/// [`im2col`] with the patch buffer drawn from the arena.
-fn im2col_arena(x: &Tensor, r: usize, stride: usize, pad: usize, arena: &mut Arena) -> Tensor {
+/// [`im2col`] with the patch buffer drawn from the arena, sharded over
+/// `threads` workers for large spatial layers.
+fn im2col_arena(
+    x: &Tensor,
+    r: usize,
+    stride: usize,
+    pad: usize,
+    arena: &mut Arena,
+    threads: usize,
+) -> Tensor {
     let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (oh, ow) = conv_out_hw(h, w, r, stride, pad);
     let cols = c * r * r;
     let mut out = arena.take_zeroed(b * oh * ow * cols);
-    im2col_into(x, r, stride, pad, &mut out);
+    im2col_into_par(x, r, stride, pad, &mut out, threads);
     Tensor::new(vec![b * oh * ow, cols], out)
 }
 
@@ -603,10 +653,48 @@ mod tests {
         let x = Tensor::new(vec![1, 2, 2, 1], vec![1., 2., 3., 4.]);
         let mut arena = Arena::new();
         arena.put(vec![9.0f32; 64]);
-        let p = im2col_arena(&x, 2, 1, 1, &mut arena);
+        let p = im2col_arena(&x, 2, 1, 1, &mut arena, 1);
         let q = im2col(&x, 2, 1, 1);
         assert_eq!(p.shape, q.shape);
         assert_eq!(p.data, q.data, "arena reuse changed im2col output");
+    }
+
+    #[test]
+    fn im2col_par_bit_identical_at_any_thread_count() {
+        // a spatial layer big enough to cross MIN_PAR_ELEMS: 2x34x34x8
+        // with r=3 pad=1 stride=1 -> 2*34*34 rows x 72 cols ≈ 166k elems
+        let (b, h, w, c) = (2usize, 34usize, 34usize, 8usize);
+        let mut src = crate::util::rng::Rng::new(404);
+        let data: Vec<f32> = (0..b * h * w * c).map(|_| src.next_f32() - 0.5).collect();
+        let x = Tensor::new(vec![b, h, w, c], data);
+        for &(r, stride, pad) in &[(3usize, 1usize, 1usize), (3, 2, 1), (2, 2, 0)] {
+            let oracle = im2col(&x, r, stride, pad);
+            for threads in [1usize, 2, 3, 4, 8] {
+                let (oh, ow) = conv_out_hw(h, w, r, stride, pad);
+                let cols = c * r * r;
+                let mut out = vec![0.0f32; b * oh * ow * cols];
+                im2col_into_par(&x, r, stride, pad, &mut out, threads);
+                assert_eq!(
+                    oracle.data, out,
+                    "r={r} stride={stride} pad={pad} threads={threads}: diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_par_arena_path_matches_reference() {
+        let (b, h, w, c) = (1usize, 40usize, 40usize, 6usize);
+        let mut src = crate::util::rng::Rng::new(7);
+        let data: Vec<f32> = (0..b * h * w * c).map(|_| src.next_f32()).collect();
+        let x = Tensor::new(vec![b, h, w, c], data);
+        let oracle = im2col(&x, 3, 1, 1);
+        let mut arena = Arena::new();
+        // dirty recycled buffer + parallel fill together
+        arena.put(vec![5.0f32; oracle.data.len()]);
+        let p = im2col_arena(&x, 3, 1, 1, &mut arena, 4);
+        assert_eq!(p.shape, oracle.shape);
+        assert_eq!(p.data, oracle.data, "parallel arena im2col diverged");
     }
 
     #[test]

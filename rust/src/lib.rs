@@ -76,7 +76,11 @@
 //! * [`serve::Router`] — a replicated serving fleet prepared from one
 //!   scenario, every replica holding an independent variation draw,
 //!   recycled (with a fresh draw from the same scenario) when the optional
-//!   background health monitor flags it,
+//!   background health monitor flags it, and elastically resized between
+//!   `min`/`max` bounds by the [`serve::AutoscalePolicy`] hysteresis
+//!   autoscaler; [`net::NetServer`] puts a TCP front door (length-prefixed
+//!   JSON frames, typed error responses) on the same fleet
+//!   (`serve --listen ADDR`),
 //! * [`hwmodel`] — the architecture studies.
 //!
 //! `examples/` shows the public API end to end; `examples/scenario.json`
@@ -89,6 +93,7 @@ pub mod eval;
 pub mod exec;
 pub mod hwmodel;
 pub mod mapping;
+pub mod net;
 pub mod noise;
 pub mod obs;
 pub mod quantize;

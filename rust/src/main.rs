@@ -17,6 +17,10 @@
 //!           --replicas N --window-ms MS --queue-depth D --probe P
 //!           --probe-interval-ms MS (background health monitor)
 //!           --requests R --spec FILE (serve a JSON scenario)
+//!           --listen ADDR        TCP front door (length-prefixed JSON frames)
+//!           --min-replicas N --max-replicas M (elastic bounds + autoscaler)
+//!           --scale-interval-ms MS (autoscaler tick)
+//!           --serve-ms MS        bounded --listen run (0 = until killed)
 //!
 //! Every execution-running subcommand takes `--backend pjrt-cpu|native`;
 //! `--model synthetic --backend native` runs with no artifacts and no xla.
@@ -39,14 +43,16 @@ use hybridac::hwmodel::all_architectures;
 use hybridac::report;
 use hybridac::runtime::{Artifact, DatasetBlob};
 use hybridac::scenario::{Scenario, SplitSpec};
-use hybridac::serve::{self, FleetConfig, Router};
+use hybridac::net::{NetServer, ServerConfig};
+use hybridac::serve::{self, AutoscaleConfig, FleetConfig, Router};
 use hybridac::study::{Axis, Study, StudyRunner};
 use hybridac::util::cli::Args;
 
 const FLAGS: &[&str] = &[
     "model", "repeats", "n-eval", "frac", "adc", "target", "requests", "replicas", "window-ms",
     "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name", "backend", "threads",
-    "workers", "out", "trace", "metrics-out",
+    "workers", "out", "trace", "metrics-out", "listen", "min-replicas", "max-replicas",
+    "scale-interval-ms", "serve-ms",
 ];
 const SWITCHES: &[&str] = &["differential", "verbose", "list"];
 
@@ -76,6 +82,8 @@ fn main() -> Result<()> {
                  \x20            (sweep/adc/select are aliases for built-in studies)\n\
                  serve flags: --replicas N --window-ms MS --queue-depth D --probe P\n\
                  \x20            --probe-interval-ms MS --requests R --spec FILE\n\
+                 \x20            --listen ADDR (TCP front door) --serve-ms MS (bounded run)\n\
+                 \x20            --min-replicas N --max-replicas M --scale-interval-ms MS\n\
                  backend: --backend pjrt-cpu|native (native needs no xla; \n\
                  \x20        `--model synthetic --backend native` needs no artifacts)\n\
                  \x20        --threads N native kernel workers (0 = auto, default)\n\
@@ -502,6 +510,9 @@ fn serve(args: &Args) -> Result<()> {
         DatasetBlob::load(&dir, &art.dataset)?
     });
 
+    let min_replicas = args.get_usize("min-replicas", 0)?;
+    let max_replicas = args.get_usize("max-replicas", 0)?;
+    let elastic = min_replicas > 0 || max_replicas > 0;
     let mut fleet = FleetConfig::new(replicas);
     fleet.max_wait = Duration::from_millis(args.get_usize("window-ms", 15)? as u64);
     fleet.queue_depth = args.get_usize("queue-depth", 0)?;
@@ -514,13 +525,19 @@ fn serve(args: &Args) -> Result<()> {
             data.clone(),
         );
     }
+    if elastic {
+        let interval = args.get_usize("scale-interval-ms", 500)? as u64;
+        fleet = fleet.with_bounds(min_replicas, max_replicas).with_autoscale(
+            AutoscaleConfig::default().with_interval(Duration::from_millis(interval)),
+        );
+    }
     let router = Arc::new(Router::start_scenario(dir, sc, fleet)?);
     println!(
         "serving scenario '{}' on {tag} [{}]: {} replicas ({} @ {:.0}%), window {} ms, \
          queue depth {}, monitor {}",
         router.scenario().name,
         router.scenario().backend.name(),
-        router.replica_count(),
+        router.active_replicas(),
         router.scenario().method_label(),
         100.0 * router.scenario().protected_frac(),
         args.get_usize("window-ms", 15)?,
@@ -531,19 +548,50 @@ fn serve(args: &Args) -> Result<()> {
             "off (caller-driven probe)".to_string()
         }
     );
+    if elastic {
+        println!(
+            "elastic fleet: {}..{} replicas, autoscaler {}",
+            router.min_replicas(),
+            router.max_replicas(),
+            if router.has_autoscaler() { "on" } else { "off (min == max)" }
+        );
+    }
 
-    // drive the fleet from several client threads; a shed request is
-    // retried after a short backoff, so admission shows up as delay + the
-    // fleet's shed counter rather than lost traffic
-    let n_clients = (replicas * 2).max(4);
-    let t0 = Instant::now();
-    let (hits, total) = serve::drive_workload(&router, &data, n_requests, n_clients)?;
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "served {total} requests in {dt:.2}s = {:.0} req/s, accuracy {}",
-        total as f64 / dt,
-        report::pct(hits as f64 / total.max(1) as f64)
-    );
+    if let Some(addr) = args.get("listen") {
+        // networked mode: put the TCP front door on the fleet and serve
+        // remote clients instead of driving a local demo workload
+        let serve_ms = args.get_usize("serve-ms", 0)? as u64;
+        let server = NetServer::bind(addr, router.clone(), ServerConfig::default())?;
+        println!(
+            "listening on {} (4-byte big-endian length prefix + JSON frames)",
+            server.local_addr()
+        );
+        if serve_ms > 0 {
+            println!("serving for {serve_ms} ms");
+            std::thread::sleep(Duration::from_millis(serve_ms));
+        } else {
+            println!("serving until killed (pass --serve-ms MS for a bounded run)");
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        server.shutdown()?;
+        let served = router.fleet_metrics().total.requests;
+        println!("listener drained; {served} requests served over the wire");
+    } else {
+        // drive the fleet from several client threads; a shed request is
+        // retried after a short backoff, so admission shows up as delay +
+        // the fleet's shed counter rather than lost traffic
+        let n_clients = (replicas * 2).max(4);
+        let t0 = Instant::now();
+        let (hits, total) = serve::drive_workload(&router, &data, n_requests, n_clients)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "served {total} requests in {dt:.2}s = {:.0} req/s, accuracy {}",
+            total as f64 / dt,
+            report::pct(hits as f64 / total.max(1) as f64)
+        );
+    }
 
     // with a monitor the sweep already ran in the background; otherwise do
     // one caller-driven labeled canary probe + recycle pass before report
@@ -582,7 +630,8 @@ fn serve(args: &Args) -> Result<()> {
     );
     println!(
         "fleet totals: {} requests, {} batches (mean occupancy {:.0}), p99 {:.1} ms, \
-         queue depth {}, {} shed, {} recycled, {} probe failures",
+         queue depth {}, {} shed, {} recycled, {} probe failures, \
+         {} scale-ups, {} scale-downs",
         fm.total.requests,
         fm.total.batches,
         fm.total.mean_batch_occupancy(),
@@ -590,7 +639,9 @@ fn serve(args: &Args) -> Result<()> {
         fm.total.queue_depth,
         fm.shed,
         fm.recycled,
-        fm.probe_failures
+        fm.probe_failures,
+        fm.scale_ups,
+        fm.scale_downs
     );
     let shed_parts: Vec<String> = fm
         .shed_by_kind

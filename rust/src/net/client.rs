@@ -1,0 +1,103 @@
+//! Blocking wire-protocol client, used by `examples/serve_client.rs`,
+//! the `serve_load` bench's closed-loop generators, and the robustness
+//! tests. One [`NetClient`] owns one connection; requests can be
+//! round-tripped one at a time ([`NetClient::infer`]) or pipelined
+//! ([`NetClient::send_infer`] + [`NetClient::recv`]) — the server answers
+//! strictly in request order either way.
+
+use anyhow::{bail, Context, Result};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::wire::{write_frame, FrameError, FrameReader, Request, Response, MAX_FRAME};
+
+/// How one inference request concluded. A denial is a *successful* round
+/// trip carrying a typed error — shed (`queue_full`), `timeout`,
+/// `bad_request`, ... — as opposed to a transport failure, which is an
+/// `Err` on the call itself.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferOutcome {
+    Pred(i32),
+    Denied { kind: String, message: String },
+}
+
+pub struct NetClient {
+    reader: FrameReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl NetClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).context("connecting to serve listener")?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone().context("cloning client stream")?;
+        Ok(NetClient { reader: FrameReader::new(stream, MAX_FRAME), writer, next_id: 0 })
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    /// Send one request frame without waiting for the response.
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        write_frame(&mut self.writer, &req.to_json()).context("sending request frame")
+    }
+
+    /// Block until the next response frame arrives.
+    pub fn recv(&mut self) -> Result<Response> {
+        loop {
+            match self.reader.poll() {
+                Ok(Some(json)) => {
+                    return Response::from_json(&json)
+                        .map_err(|msg| anyhow::anyhow!("undecodable response: {msg}"))
+                }
+                // the client socket is blocking; WouldBlock can't happen,
+                // but poll's contract allows it — just keep reading
+                Ok(None) => continue,
+                Err(FrameError::Eof) => bail!("server closed the connection"),
+                Err(e) => return Err(e).context("reading response frame"),
+            }
+        }
+    }
+
+    /// Pipelined submit: returns the request id; pair with
+    /// [`NetClient::recv`] (responses come back in send order).
+    pub fn send_infer(&mut self, image: &[f32]) -> Result<u64> {
+        let id = self.fresh_id();
+        self.send(&Request::Infer { id, image: image.to_vec() })?;
+        Ok(id)
+    }
+
+    /// One blocking inference round trip.
+    pub fn infer(&mut self, image: &[f32]) -> Result<InferOutcome> {
+        let id = self.send_infer(image)?;
+        match self.recv()? {
+            Response::Result { id: got, pred } if got == id => Ok(InferOutcome::Pred(pred)),
+            Response::Error { id: got, kind, message } if got == id || got == 0 => {
+                Ok(InferOutcome::Denied { kind, message })
+            }
+            other => bail!("out-of-order response: sent id {id}, got {other:?}"),
+        }
+    }
+
+    /// Liveness round trip.
+    pub fn ping(&mut self) -> Result<()> {
+        let id = self.fresh_id();
+        self.send(&Request::Ping { id })?;
+        match self.recv()? {
+            Response::Pong { id: got } if got == id => Ok(()),
+            other => bail!("expected pong {id}, got {other:?}"),
+        }
+    }
+
+    /// Fetch the fleet's merged metrics as Prometheus text.
+    pub fn metrics(&mut self) -> Result<String> {
+        let id = self.fresh_id();
+        self.send(&Request::Metrics { id })?;
+        match self.recv()? {
+            Response::Metrics { id: got, prometheus } if got == id => Ok(prometheus),
+            other => bail!("expected metrics {id}, got {other:?}"),
+        }
+    }
+}

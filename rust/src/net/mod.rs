@@ -1,0 +1,37 @@
+//! Networked serving: the TCP front door over [`crate::serve`].
+//!
+//! The in-process fleet ([`crate::serve::Router`]) load-balances,
+//! admission-controls, health-probes, and autoscales; this module gives it
+//! a wire. The protocol is deliberately minimal — length-prefixed JSON
+//! frames ([`wire`]) carrying three request types (`infer`, `ping`,
+//! `metrics`) — because the interesting guarantees live in the failure
+//! policy, not the encoding:
+//!
+//! * every admitted connection gets exactly one response per request, in
+//!   request order, streamed while later requests are still being read;
+//! * fleet refusals ([`crate::serve::ServeError`]: sheds, bad sizes) and
+//!   transport faults (timeouts, malformed frames) come back as typed
+//!   `error` responses with stable `kind` labels — a loaded fleet slows
+//!   and sheds, it never silently drops connections;
+//! * client misbehavior (garbage frames, oversized payloads, mid-request
+//!   disconnects) is contained to that connection: the listener and the
+//!   fleet keep serving everyone else, and no admission-queue slot leaks.
+//!
+//! [`server::NetServer`] is the listener (`serve --listen ADDR` in the
+//! CLI), [`client::NetClient`] the matching blocking client. The
+//! `serve_load` bench drives a live listener with closed-loop clients to
+//! measure the QPS → latency/shed/replica-count surface.
+//!
+//! Everything is blocking I/O on threads, consistent with the rest of the
+//! crate (no async runtime is available offline).
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{InferOutcome, NetClient};
+pub use server::{NetServer, ServerConfig};
+pub use wire::{
+    FrameError, FrameReader, Request, Response, KIND_BAD_FRAME, KIND_INTERNAL, KIND_TIMEOUT,
+    MAX_FRAME,
+};

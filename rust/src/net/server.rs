@@ -1,0 +1,329 @@
+//! TCP front door for a serving fleet.
+//!
+//! [`NetServer::bind`] puts a listener in front of an
+//! [`Arc<Router>`](crate::serve::Router): an accept thread hands each
+//! connection to its own reader thread, which decodes
+//! [`Request`](super::wire::Request) frames into the router's bounded
+//! admission queues and forwards outcomes to a per-connection writer
+//! thread. Responses stream back strictly in request order, so a
+//! pipelining client never has to reorder.
+//!
+//! Failure policy (the "never drop a connection silently" contract):
+//!
+//! * a shed / bad-size request ([`crate::serve::ServeError`]) becomes a
+//!   typed `error` response with the same stable `kind` the fleet metrics
+//!   use; the connection keeps serving;
+//! * a malformed-but-well-framed payload gets a `bad_frame` error and the
+//!   connection keeps serving (the framing layer is still aligned);
+//! * an oversized frame gets a final `bad_frame` error, then the
+//!   connection closes (the payload was never read, so the stream cannot
+//!   be resynchronized);
+//! * a reply the fleet fails to produce within
+//!   [`ServerConfig::reply_timeout`] becomes a `timeout` error — the
+//!   request may still complete server-side, but the client is never left
+//!   hanging;
+//! * a mid-request disconnect tears the connection down cleanly: requests
+//!   already admitted still execute, and their dropped reply channels are
+//!   harmless to the workers (fan-out ignores closed receivers), so no
+//!   queue slot leaks.
+//!
+//! The whole stack is plain blocking I/O on threads — same discipline as
+//! the rest of the crate (no async runtime available offline); sockets
+//! carry a short read timeout so every thread notices the server's stop
+//! flag promptly.
+
+use anyhow::{Context, Result};
+use std::io::BufWriter;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::obs::registry::{self, Counter};
+use crate::obs::trace;
+use crate::serve::Router;
+use crate::util::json::Json;
+
+use super::wire::{
+    write_frame, FrameError, FrameReader, Request, Response, KIND_BAD_FRAME, KIND_INTERNAL,
+    KIND_TIMEOUT, MAX_FRAME,
+};
+
+/// Transport knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Largest accepted frame payload in bytes.
+    pub max_frame: usize,
+    /// How long the writer waits for a fleet reply before answering with
+    /// a `timeout` error.
+    pub reply_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_frame: MAX_FRAME, reply_timeout: Duration::from_secs(5) }
+    }
+}
+
+/// Process-wide transport counters (the global registry, so
+/// `--metrics-out` picks them up next to the fleet series).
+#[derive(Clone)]
+struct NetCounters {
+    connections: Arc<Counter>,
+    requests: Arc<Counter>,
+    wire_errors: Arc<Counter>,
+}
+
+impl NetCounters {
+    fn resolve() -> NetCounters {
+        let reg = registry::global();
+        NetCounters {
+            connections: reg.counter("net_connections_total"),
+            requests: reg.counter("net_requests_total"),
+            wire_errors: reg.counter("net_wire_errors_total"),
+        }
+    }
+}
+
+/// A live listener; dropping it without [`NetServer::shutdown`] leaves
+/// the background threads running until process exit.
+pub struct NetServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting connections against `router`.
+    pub fn bind(addr: &str, router: Arc<Router>, cfg: ServerConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let counters = NetCounters::resolve();
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("net-accept".to_string())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, peer)) => {
+                                counters.connections.inc();
+                                let router = router.clone();
+                                let cfg = cfg.clone();
+                                let stop = stop.clone();
+                                let counters = counters.clone();
+                                let spawned = std::thread::Builder::new()
+                                    .name("net-conn".to_string())
+                                    .spawn(move || {
+                                        if let Err(e) =
+                                            serve_conn(stream, peer, router, cfg, stop, counters)
+                                        {
+                                            eprintln!("net: connection {peer}: {e:#}");
+                                        }
+                                    });
+                                match spawned {
+                                    Ok(handle) => {
+                                        let mut conns = conns.lock().unwrap();
+                                        // reap finished threads so a
+                                        // long-lived server doesn't hoard
+                                        // handles
+                                        conns.retain(|h| !h.is_finished());
+                                        conns.push(handle);
+                                    }
+                                    Err(e) => eprintln!("net: spawning connection thread: {e}"),
+                                }
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(20));
+                            }
+                            Err(e) => {
+                                eprintln!("net: accept failed: {e}");
+                                std::thread::sleep(Duration::from_millis(100));
+                            }
+                        }
+                    }
+                })
+                .context("spawning net-accept thread")?
+        };
+        Ok(NetServer { local, stop, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting, let in-flight connections notice the flag, and
+    /// join every transport thread. The router outlives the server — shut
+    /// it down separately afterwards.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// What the reader hands the writer, strictly in request order.
+enum WriterJob {
+    /// A response that's already decided (pong, metrics, typed error).
+    Ready(Response),
+    /// An admitted inference: the writer waits on the fleet's reply.
+    Wait { id: u64, rx: mpsc::Receiver<i32> },
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    peer: SocketAddr,
+    router: Arc<Router>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    counters: NetCounters,
+) -> Result<()> {
+    let _span = trace::span_dyn("net", || format!("conn peer={peer}"));
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .context("setting connection read timeout")?;
+    let write_half = stream.try_clone().context("cloning connection stream")?;
+    let (tx, jobs) = mpsc::channel::<WriterJob>();
+    let reply_timeout = cfg.reply_timeout;
+    let writer = std::thread::Builder::new()
+        .name("net-conn-writer".to_string())
+        .spawn(move || {
+            let mut w = BufWriter::new(write_half);
+            while let Ok(job) = jobs.recv() {
+                let resp = match job {
+                    WriterJob::Ready(resp) => resp,
+                    WriterJob::Wait { id, rx } => match rx.recv_timeout(reply_timeout) {
+                        Ok(pred) => Response::Result { id, pred },
+                        Err(mpsc::RecvTimeoutError::Timeout) => Response::Error {
+                            id,
+                            kind: KIND_TIMEOUT.to_string(),
+                            message: format!("no reply within {reply_timeout:?}"),
+                        },
+                        Err(mpsc::RecvTimeoutError::Disconnected) => Response::Error {
+                            id,
+                            kind: KIND_INTERNAL.to_string(),
+                            message: "worker dropped the reply".to_string(),
+                        },
+                    },
+                };
+                if write_frame(&mut w, &resp.to_json()).is_err() {
+                    // peer stopped reading; keep draining jobs so every
+                    // admitted request's reply is received (dropped
+                    // receivers are harmless to workers), then exit when
+                    // the reader hangs up
+                    break;
+                }
+            }
+        })
+        .context("spawning net-conn-writer thread")?;
+    let mut reader = FrameReader::new(stream, cfg.max_frame);
+    loop {
+        match reader.poll() {
+            Ok(Some(json)) => {
+                let job = match Request::from_json(&json) {
+                    Ok(Request::Ping { id }) => WriterJob::Ready(Response::Pong { id }),
+                    Ok(Request::Metrics { id }) => WriterJob::Ready(Response::Metrics {
+                        id,
+                        prometheus: router.fleet_metrics().to_registry_snapshot().prometheus(),
+                    }),
+                    Ok(Request::Infer { id, image }) => {
+                        counters.requests.inc();
+                        match router.submit(image) {
+                            Ok(rx) => WriterJob::Wait { id, rx },
+                            // sheds and bad sizes are answers, not
+                            // disconnects
+                            Err(e) => WriterJob::Ready(Response::Error {
+                                id,
+                                kind: e.kind().to_string(),
+                                message: e.to_string(),
+                            }),
+                        }
+                    }
+                    Err(msg) => {
+                        counters.wire_errors.inc();
+                        trace::instant("net/bad_frame", "net");
+                        let id = json.get("id").and_then(Json::as_f64).map_or(0, |f| f as u64);
+                        WriterJob::Ready(Response::Error {
+                            id,
+                            kind: KIND_BAD_FRAME.to_string(),
+                            message: msg,
+                        })
+                    }
+                };
+                if tx.send(job).is_err() {
+                    break; // writer exited on a dead socket
+                }
+            }
+            Ok(None) => {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(FrameError::BadJson(msg)) => {
+                // framing still aligned: answer and keep serving
+                counters.wire_errors.inc();
+                trace::instant("net/bad_frame", "net");
+                let err =
+                    Response::Error { id: 0, kind: KIND_BAD_FRAME.to_string(), message: msg };
+                if tx.send(WriterJob::Ready(err)).is_err() {
+                    break;
+                }
+            }
+            Err(FrameError::Eof) => break,
+            Err(e @ FrameError::TooLarge { .. }) => {
+                // unread payload ⇒ unrecoverable stream position: one
+                // final typed error, then close
+                counters.wire_errors.inc();
+                let err = Response::Error {
+                    id: 0,
+                    kind: KIND_BAD_FRAME.to_string(),
+                    message: e.to_string(),
+                };
+                let _ = tx.send(WriterJob::Ready(err));
+                break;
+            }
+            Err(FrameError::Truncated) => {
+                // mid-request disconnect: nobody left to answer; admitted
+                // work still drains through the writer below
+                counters.wire_errors.inc();
+                trace::instant("net/disconnect", "net");
+                break;
+            }
+            Err(FrameError::Io(e)) => {
+                counters.wire_errors.inc();
+                eprintln!("net: connection {peer}: {e}");
+                break;
+            }
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_config_defaults_are_sane() {
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.max_frame, MAX_FRAME);
+        assert!(cfg.reply_timeout >= Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,436 @@
+//! Wire protocol: length-prefixed JSON frames.
+//!
+//! Every message is a 4-byte big-endian payload length followed by that
+//! many bytes of UTF-8 JSON. The framing layer is deliberately dumb —
+//! [`FrameReader`] accumulates exactly one frame at a time and classifies
+//! every failure ([`FrameError`]) by whether the connection can keep
+//! going:
+//!
+//! * **recoverable** — [`FrameError::BadJson`]: the declared payload
+//!   arrived in full but didn't parse. The stream is still aligned on a
+//!   frame boundary, so the server answers with a typed `error` response
+//!   and keeps reading.
+//! * **fatal** — [`FrameError::TooLarge`] (the payload was never read, so
+//!   the stream can't be resynchronized), [`FrameError::Truncated`]
+//!   (peer vanished mid-frame), [`FrameError::Io`]. The server sends a
+//!   final error frame where possible, then closes.
+//! * **clean** — [`FrameError::Eof`]: the peer closed exactly on a frame
+//!   boundary. Normal end of conversation, not an error.
+//!
+//! On top of the framing sit the typed messages: [`Request`] (what
+//! clients send) and [`Response`] (what the server streams back, one per
+//! request, in order). Shed/timeout outcomes are structured
+//! [`Response::Error`] frames carrying a stable `kind` — the
+//! [`crate::serve::ServeError::kind`] labels plus the transport-level
+//! [`KIND_TIMEOUT`], [`KIND_BAD_FRAME`], and [`KIND_INTERNAL`] — never
+//! dropped connections.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+
+use crate::util::json::Json;
+
+/// Default cap on a frame's declared payload length. Generous: the
+/// largest legitimate frame is an `infer` request whose image is a few
+/// thousand f32s rendered as JSON numbers.
+pub const MAX_FRAME: usize = 8 << 20;
+
+/// `kind` of the error response sent when a reply wasn't produced within
+/// the server's reply timeout.
+pub const KIND_TIMEOUT: &str = "timeout";
+/// `kind` of the error response sent for unparseable, malformed, or
+/// oversized frames.
+pub const KIND_BAD_FRAME: &str = "bad_frame";
+/// `kind` of the error response for server-side faults (a worker died
+/// holding a reply).
+pub const KIND_INTERNAL: &str = "internal";
+
+/// Why a frame could not be produced; see the module docs for the
+/// recoverable / fatal / clean split.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean close on a frame boundary.
+    Eof,
+    /// The peer disconnected mid-frame (prefix or payload).
+    Truncated,
+    /// Declared length exceeds the cap; the payload was not consumed.
+    TooLarge { len: usize, max: usize },
+    /// A complete payload that isn't valid UTF-8 JSON (recoverable).
+    BadJson(String),
+    Io(io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "connection closed"),
+            FrameError::Truncated => write!(f, "connection dropped mid-frame"),
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame of {len} bytes exceeds the {max}-byte cap")
+            }
+            FrameError::BadJson(msg) => write!(f, "malformed frame payload: {msg}"),
+            FrameError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Serialize one frame: 4-byte big-endian length + JSON payload.
+pub fn write_frame(w: &mut impl Write, json: &Json) -> io::Result<()> {
+    let payload = json.to_string();
+    let len = payload.len() as u32;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(payload.as_bytes())?;
+    w.flush()
+}
+
+/// Incremental frame decoder over any [`Read`].
+///
+/// [`FrameReader::poll`] is restartable: on `WouldBlock`/`TimedOut` it
+/// returns `Ok(None)` with all partial bytes retained, so the server can
+/// run it over a socket with a read timeout and check its stop flag
+/// between polls. On a blocking socket it simply loops until a frame (or
+/// error) is complete.
+pub struct FrameReader<R: Read> {
+    r: R,
+    max: usize,
+    buf: Vec<u8>,
+    filled: usize,
+    /// False while accumulating the 4-byte prefix, true for the payload.
+    in_payload: bool,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(r: R, max: usize) -> FrameReader<R> {
+        FrameReader { r, max, buf: vec![0; 4], filled: 0, in_payload: false }
+    }
+
+    /// True if some bytes of the current frame have arrived (a disconnect
+    /// now would be mid-frame, not clean).
+    pub fn mid_frame(&self) -> bool {
+        self.filled > 0 || self.in_payload
+    }
+
+    fn reset(&mut self) {
+        self.buf = vec![0; 4];
+        self.filled = 0;
+        self.in_payload = false;
+    }
+
+    /// Advance the decoder. `Ok(Some(json))` when a frame completed,
+    /// `Ok(None)` when the underlying read would block or timed out
+    /// (partial state kept — call again), `Err` otherwise. After a
+    /// [`FrameError::BadJson`] the decoder is reset to a frame boundary
+    /// and can keep being polled; every other error is terminal.
+    pub fn poll(&mut self) -> Result<Option<Json>, FrameError> {
+        loop {
+            if self.filled == self.buf.len() {
+                if !self.in_payload {
+                    let len =
+                        u32::from_be_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]])
+                            as usize;
+                    if len > self.max {
+                        return Err(FrameError::TooLarge { len, max: self.max });
+                    }
+                    self.in_payload = true;
+                    self.buf = vec![0; len];
+                    self.filled = 0;
+                    continue;
+                }
+                let parsed = std::str::from_utf8(&self.buf)
+                    .map_err(|e| e.to_string())
+                    .and_then(|text| Json::parse(text).map_err(|e| e.to_string()));
+                self.reset();
+                return match parsed {
+                    Ok(json) => Ok(Some(json)),
+                    Err(msg) => Err(FrameError::BadJson(msg)),
+                };
+            }
+            let filled = self.filled;
+            match self.r.read(&mut self.buf[filled..]) {
+                Ok(0) => {
+                    return Err(if self.mid_frame() {
+                        FrameError::Truncated
+                    } else {
+                        FrameError::Eof
+                    })
+                }
+                Ok(n) => self.filled += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Ok(None)
+                }
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+    }
+}
+
+/// A client → server message. `id` is an opaque correlator echoed back in
+/// the matching response (responses arrive in request order anyway; the
+/// id lets pipelining clients double-check).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// One inference over a flat image payload.
+    Infer { id: u64, image: Vec<f32> },
+    /// Liveness round trip.
+    Ping { id: u64 },
+    /// Fetch the fleet's merged metrics as Prometheus text.
+    Metrics { id: u64 },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Infer { id, .. } | Request::Ping { id } | Request::Metrics { id } => *id,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            Request::Infer { id, image } => {
+                m.insert("type".into(), Json::Str("infer".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert(
+                    "image".into(),
+                    Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+            }
+            Request::Ping { id } => {
+                m.insert("type".into(), Json::Str("ping".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+            }
+            Request::Metrics { id } => {
+                m.insert("type".into(), Json::Str("metrics".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Decode a parsed frame; the error string is safe to echo back to
+    /// the client in a `bad_frame` response.
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        let ty = j.str_of("type").map_err(|e| e.to_string())?;
+        let id = j.f64_of("id").map_err(|e| e.to_string())? as u64;
+        match ty {
+            "infer" => {
+                let arr = j.arr_of("image").map_err(|e| e.to_string())?;
+                let mut image = Vec::with_capacity(arr.len());
+                for (i, v) in arr.iter().enumerate() {
+                    match v.as_f64() {
+                        Some(x) => image.push(x as f32),
+                        None => return Err(format!("image[{i}] is not a number")),
+                    }
+                }
+                Ok(Request::Infer { id, image })
+            }
+            "ping" => Ok(Request::Ping { id }),
+            "metrics" => Ok(Request::Metrics { id }),
+            other => Err(format!("unknown request type '{other}'")),
+        }
+    }
+}
+
+/// A server → client message; exactly one per request, in request order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Successful inference: the predicted class.
+    Result { id: u64, pred: i32 },
+    Pong { id: u64 },
+    /// Prometheus text exposition of the fleet metrics.
+    Metrics { id: u64, prometheus: String },
+    /// Typed failure: `kind` is a [`crate::serve::ServeError::kind`]
+    /// label or one of [`KIND_TIMEOUT`] / [`KIND_BAD_FRAME`] /
+    /// [`KIND_INTERNAL`]. `id` is 0 when the request never parsed far
+    /// enough to have one.
+    Error { id: u64, kind: String, message: String },
+}
+
+impl Response {
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Result { id, .. }
+            | Response::Pong { id }
+            | Response::Metrics { id, .. }
+            | Response::Error { id, .. } => *id,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            Response::Result { id, pred } => {
+                m.insert("type".into(), Json::Str("result".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("pred".into(), Json::Num(*pred as f64));
+            }
+            Response::Pong { id } => {
+                m.insert("type".into(), Json::Str("pong".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+            }
+            Response::Metrics { id, prometheus } => {
+                m.insert("type".into(), Json::Str("metrics".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("prometheus".into(), Json::Str(prometheus.clone()));
+            }
+            Response::Error { id, kind, message } => {
+                m.insert("type".into(), Json::Str("error".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("kind".into(), Json::Str(kind.clone()));
+                m.insert("message".into(), Json::Str(message.clone()));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response, String> {
+        let ty = j.str_of("type").map_err(|e| e.to_string())?;
+        let id = j.f64_of("id").map_err(|e| e.to_string())? as u64;
+        match ty {
+            "result" => Ok(Response::Result {
+                id,
+                pred: j.f64_of("pred").map_err(|e| e.to_string())? as i32,
+            }),
+            "pong" => Ok(Response::Pong { id }),
+            "metrics" => Ok(Response::Metrics {
+                id,
+                prometheus: j.str_of("prometheus").map_err(|e| e.to_string())?.to_string(),
+            }),
+            "error" => Ok(Response::Error {
+                id,
+                kind: j.str_of("kind").map_err(|e| e.to_string())?.to_string(),
+                message: j.str_of("message").map_err(|e| e.to_string())?.to_string(),
+            }),
+            other => Err(format!("unknown response type '{other}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame_bytes(json: &Json) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, json).unwrap();
+        out
+    }
+
+    fn read_all(bytes: &[u8]) -> Vec<Result<Option<Json>, FrameError>> {
+        let mut r = FrameReader::new(Cursor::new(bytes.to_vec()), MAX_FRAME);
+        let mut out = Vec::new();
+        loop {
+            let item = r.poll();
+            let stop = !matches!(item, Ok(Some(_)));
+            out.push(item);
+            if stop {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn requests_round_trip_through_frames() {
+        for req in [
+            Request::Infer { id: 7, image: vec![0.0, -1.5, 0.25] },
+            Request::Ping { id: 1 },
+            Request::Metrics { id: u64::MAX >> 12 },
+        ] {
+            let bytes = frame_bytes(&req.to_json());
+            let mut r = FrameReader::new(Cursor::new(bytes), MAX_FRAME);
+            let json = r.poll().unwrap().expect("one whole frame buffered");
+            assert_eq!(Request::from_json(&json).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        for resp in [
+            Response::Result { id: 3, pred: 9 },
+            Response::Pong { id: 0 },
+            Response::Metrics { id: 4, prometheus: "# TYPE x counter\nx 1\n".into() },
+            Response::Error { id: 5, kind: "queue_full".into(), message: "shed".into() },
+        ] {
+            let json = Json::parse(&resp.to_json().to_string()).unwrap();
+            assert_eq!(Response::from_json(&json).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_in_order() {
+        let mut bytes = frame_bytes(&Request::Ping { id: 1 }.to_json());
+        bytes.extend(frame_bytes(&Request::Ping { id: 2 }.to_json()));
+        let items = read_all(&bytes);
+        assert_eq!(items.len(), 3);
+        let ids: Vec<u64> = items[..2]
+            .iter()
+            .map(|i| match i {
+                Ok(Some(j)) => Request::from_json(j).unwrap().id(),
+                other => panic!("expected frame, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(ids, [1, 2]);
+        assert!(matches!(items[2], Err(FrameError::Eof)), "clean eof after the last frame");
+    }
+
+    #[test]
+    fn clean_eof_vs_truncation() {
+        let bytes = frame_bytes(&Request::Ping { id: 1 }.to_json());
+        // cut mid-payload, and mid-prefix
+        for cut in [bytes.len() - 3, 2] {
+            let mut r = FrameReader::new(Cursor::new(bytes[..cut].to_vec()), MAX_FRAME);
+            assert!(matches!(r.poll(), Err(FrameError::Truncated)), "cut at {cut}");
+        }
+        let mut r = FrameReader::new(Cursor::new(Vec::new()), MAX_FRAME);
+        assert!(matches!(r.poll(), Err(FrameError::Eof)));
+    }
+
+    #[test]
+    fn oversized_declared_length_is_rejected_before_reading() {
+        let mut bytes = (64u32).to_be_bytes().to_vec();
+        bytes.extend([b'x'; 8]); // payload never inspected
+        let mut r = FrameReader::new(Cursor::new(bytes), 16);
+        match r.poll() {
+            Err(FrameError::TooLarge { len, max }) => assert_eq!((len, max), (64, 16)),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_json_is_recoverable_at_the_frame_boundary() {
+        let mut bytes = Vec::new();
+        let garbage = b"{not json";
+        bytes.extend((garbage.len() as u32).to_be_bytes());
+        bytes.extend(garbage);
+        bytes.extend(frame_bytes(&Request::Ping { id: 5 }.to_json()));
+        let mut r = FrameReader::new(Cursor::new(bytes), MAX_FRAME);
+        assert!(matches!(r.poll(), Err(FrameError::BadJson(_))));
+        let json = r.poll().unwrap().expect("reader resynchronized");
+        assert_eq!(Request::from_json(&json).unwrap().id(), 5);
+    }
+
+    #[test]
+    fn well_formed_json_with_wrong_shape_names_the_problem() {
+        let j = Json::parse(r#"{"type":"infer","id":1,"image":[1,"x"]}"#).unwrap();
+        let err = Request::from_json(&j).unwrap_err();
+        assert!(err.contains("image[1]"), "{err}");
+        let j = Json::parse(r#"{"type":"warp","id":1}"#).unwrap();
+        assert!(Request::from_json(&j).unwrap_err().contains("warp"));
+        let j = Json::parse(r#"{"id":1}"#).unwrap();
+        assert!(Request::from_json(&j).unwrap_err().contains("type"));
+    }
+
+    #[test]
+    fn empty_frame_is_bad_json_not_a_hang() {
+        let bytes = 0u32.to_be_bytes().to_vec();
+        let mut r = FrameReader::new(Cursor::new(bytes), MAX_FRAME);
+        assert!(matches!(r.poll(), Err(FrameError::BadJson(_))));
+    }
+}

@@ -115,6 +115,26 @@ impl CellModel {
             *v += (rng.normal() * std) as f32;
         }
     }
+
+    /// [`CellModel::perturb`] sharded over `threads` scoped workers via
+    /// [`Rng::perturb_par`]. Output and the generator's final state are
+    /// bit-identical to the sequential path at any thread count, so a
+    /// parallel variation draw reproduces the same noisy instance (and the
+    /// same downstream stream) as a single-threaded one.
+    pub fn perturb_par(&self, w: &mut Tensor, rng: &mut Rng, noisy_zeros: bool, threads: usize) {
+        let (lo, hi) = match w.nonzero_range() {
+            Some(r) => r,
+            None => return,
+        };
+        let (lo, hi) = (lo as f64, hi as f64);
+        let cell = *self;
+        rng.perturb_par(
+            &mut w.data,
+            threads,
+            &move |v| v == 0.0 && !noisy_zeros,
+            &move |v| cell.weight_noise_std(v as f64, lo, hi),
+        );
+    }
 }
 
 /// Fig.-11 scenario row: scale R-ratio up and sigma down together.
@@ -183,6 +203,37 @@ mod tests {
         let mut t2 = Tensor::new(vec![4], vec![0.0, 0.5, 0.0, -0.5]);
         cell.perturb(&mut t2, &mut rng, true);
         assert_ne!(t2.data[0], 0.0, "IWS zeros must carry pedestal noise");
+    }
+
+    #[test]
+    fn perturb_par_matches_sequential_exactly() {
+        // large enough to cross the parallel threshold, with exact zeros
+        // sprinkled in so the skip predicate shifts draw positions
+        let n = 12_000;
+        let mut src = Rng::new(2024);
+        let data: Vec<f32> = (0..n)
+            .map(|i| if i % 5 == 2 { 0.0 } else { src.next_f32() * 2.0 - 1.0 })
+            .collect();
+        for cell in [CellModel::analog_default(), CellModel::differential(0.5)] {
+            for noisy_zeros in [false, true] {
+                for threads in [2usize, 4, 7] {
+                    let mut a = Rng::new(31);
+                    let mut b = Rng::new(31);
+                    // warm a cached spare into both generators
+                    assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+                    let mut ta = Tensor::new(vec![n], data.clone());
+                    let mut tb = Tensor::new(vec![n], data.clone());
+                    cell.perturb(&mut ta, &mut a, noisy_zeros);
+                    cell.perturb_par(&mut tb, &mut b, noisy_zeros, threads);
+                    assert_eq!(
+                        ta.data, tb.data,
+                        "threads={threads} noisy_zeros={noisy_zeros}: diverged"
+                    );
+                    assert_eq!(a.next_u64(), b.next_u64(), "rng state diverged");
+                    assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+                }
+            }
+        }
     }
 
     #[test]

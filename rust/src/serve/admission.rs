@@ -24,6 +24,13 @@ pub enum ServeError {
 }
 
 impl ServeError {
+    /// Every [`ServeError::kind`] label, in declaration order — what the
+    /// router pre-registers so each shed-by-kind series exists from the
+    /// first scrape, and what the wire protocol documents as its
+    /// admission-derived error kinds.
+    pub const KINDS: [&'static str; 4] =
+        ["queue_full", "replica_closed", "no_replicas", "bad_request"];
+
     /// Stable kind label for per-kind shed/error metrics (the fleet's
     /// `serve_shed_total{kind=...}` series and Prometheus names).
     pub fn kind(&self) -> &'static str {
@@ -172,5 +179,6 @@ mod tests {
             ServeError::BadRequest { got: 1, want: 2 }.kind(),
         ];
         assert_eq!(kinds, ["queue_full", "replica_closed", "no_replicas", "bad_request"]);
+        assert_eq!(kinds, ServeError::KINDS, "KINDS must track the kind() labels");
     }
 }

@@ -1,0 +1,256 @@
+//! Fleet autoscaling policy: grow/shrink decisions from signals the obs
+//! registry already collects (queue-depth gauges, the `queue_full` shed
+//! counter, the health probes' failure rate).
+//!
+//! The policy is deliberately pure — [`AutoscalePolicy::decide`] maps one
+//! tick's [`ScaleSignals`] to a [`ScaleDecision`] with no clocks, threads,
+//! or fleet handles — so hysteresis behavior is unit-testable tick by
+//! tick. The router owns the background thread that samples signals,
+//! feeds the policy, and applies decisions via `scale_to`.
+//!
+//! Hysteresis is consecutive-tick counting: the fleet must look *hot*
+//! (sheds observed, or queue utilization at/above [`AutoscaleConfig::high_util`])
+//! for [`AutoscaleConfig::up_after`] ticks in a row before growing, and
+//! *idle* (no sheds and utilization at/below [`AutoscaleConfig::low_util`])
+//! for [`AutoscaleConfig::down_after`] ticks before shrinking. Any tick in
+//! the comfortable middle band resets both streaks, so oscillating load
+//! holds the current size. A degraded fleet (probe-failure rate above
+//! [`AutoscaleConfig::max_probe_failure_rate`]) vetoes shrinking: the
+//! health monitor is busy replacing bad draws and removing capacity under
+//! it would amplify the brownout.
+
+use std::time::Duration;
+
+/// Knobs for the autoscaler; defaults favor fast growth, slow shrink
+/// (shedding is user-visible, an idle replica is just warm memory).
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// How often signals are sampled and the policy ticks.
+    pub interval: Duration,
+    /// Queue utilization (summed depth / summed capacity) at or above
+    /// which a tick counts as hot even without sheds.
+    pub high_util: f64,
+    /// Utilization at or below which a shed-free tick counts as idle.
+    pub low_util: f64,
+    /// Consecutive hot ticks before growing.
+    pub up_after: u32,
+    /// Consecutive idle ticks before shrinking.
+    pub down_after: u32,
+    /// Replicas added/removed per decision.
+    pub step: usize,
+    /// Probe-failure rate above which shrinking is vetoed.
+    pub max_probe_failure_rate: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            interval: Duration::from_millis(500),
+            high_util: 0.5,
+            low_util: 0.05,
+            up_after: 2,
+            down_after: 6,
+            step: 1,
+            max_probe_failure_rate: 0.5,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Same thresholds on a different clock (tests and the load bench
+    /// run the whole hysteresis cycle in tens of milliseconds).
+    pub fn with_interval(mut self, interval: Duration) -> Self {
+        self.interval = interval;
+        self
+    }
+}
+
+/// One tick's observations, sampled from the live fleet.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleSignals {
+    /// Live replicas right now.
+    pub active: usize,
+    /// Admission-queue occupancy summed across live replicas.
+    pub queue_depth: i64,
+    /// Total admission capacity (live replicas × per-replica depth).
+    pub queue_capacity: usize,
+    /// `queue_full` sheds since the previous tick.
+    pub shed_delta: u64,
+    /// Canary probe failures / probes across live replica generations.
+    pub probe_failure_rate: f64,
+}
+
+impl ScaleSignals {
+    /// Fraction of admission capacity in use, in `[0, 1]`-ish (transient
+    /// reads can exceed 1 when a gauge decrement races the sample).
+    pub fn utilization(&self) -> f64 {
+        if self.queue_capacity == 0 {
+            return 0.0;
+        }
+        self.queue_depth.max(0) as f64 / self.queue_capacity as f64
+    }
+}
+
+/// What one tick concluded; targets are absolute live-replica counts,
+/// already clamped to the fleet bounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    Grow(usize),
+    Shrink(usize),
+}
+
+/// Tick-driven hysteresis state machine; see the module docs for the
+/// policy. Bounds are fixed at construction (the fleet's
+/// `--min-replicas` / `--max-replicas`).
+#[derive(Debug)]
+pub struct AutoscalePolicy {
+    cfg: AutoscaleConfig,
+    min: usize,
+    max: usize,
+    hot_ticks: u32,
+    idle_ticks: u32,
+}
+
+impl AutoscalePolicy {
+    pub fn new(cfg: AutoscaleConfig, min: usize, max: usize) -> AutoscalePolicy {
+        assert!(min >= 1 && min <= max, "autoscale bounds must satisfy 1 <= min <= max");
+        AutoscalePolicy { cfg, min, max, hot_ticks: 0, idle_ticks: 0 }
+    }
+
+    /// Advance one tick. Mutates the hysteresis streaks; a returned
+    /// `Grow`/`Shrink` resets the streak that fired so the next decision
+    /// needs a fresh run of evidence at the new size.
+    pub fn decide(&mut self, s: &ScaleSignals) -> ScaleDecision {
+        let util = s.utilization();
+        let hot = s.shed_delta > 0 || util >= self.cfg.high_util;
+        let idle = s.shed_delta == 0 && util <= self.cfg.low_util;
+        if hot {
+            self.idle_ticks = 0;
+            self.hot_ticks = self.hot_ticks.saturating_add(1);
+            if self.hot_ticks >= self.cfg.up_after {
+                let target = s.active.saturating_add(self.cfg.step).min(self.max);
+                if target > s.active {
+                    // keep the streak only while pinned at max: the moment
+                    // capacity frees up, sustained pressure acts at once
+                    self.hot_ticks = 0;
+                    return ScaleDecision::Grow(target);
+                }
+            }
+        } else if idle {
+            self.hot_ticks = 0;
+            if s.probe_failure_rate > self.cfg.max_probe_failure_rate {
+                // degraded fleet: recycling is replacing bad draws; hold
+                // capacity steady instead of shrinking under it
+                self.idle_ticks = 0;
+                return ScaleDecision::Hold;
+            }
+            self.idle_ticks = self.idle_ticks.saturating_add(1);
+            if self.idle_ticks >= self.cfg.down_after {
+                let target = s.active.saturating_sub(self.cfg.step).max(self.min);
+                if target < s.active {
+                    self.idle_ticks = 0;
+                    return ScaleDecision::Shrink(target);
+                }
+            }
+        } else {
+            // comfortable middle band: both streaks restart
+            self.hot_ticks = 0;
+            self.idle_ticks = 0;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig { up_after: 2, down_after: 3, ..AutoscaleConfig::default() }
+    }
+
+    fn sig(active: usize, depth: i64, cap: usize, shed: u64) -> ScaleSignals {
+        ScaleSignals {
+            active,
+            queue_depth: depth,
+            queue_capacity: cap,
+            shed_delta: shed,
+            probe_failure_rate: 0.0,
+        }
+    }
+
+    #[test]
+    fn grows_only_after_sustained_pressure() {
+        let mut p = AutoscalePolicy::new(cfg(), 1, 4);
+        assert_eq!(p.decide(&sig(1, 0, 8, 5)), ScaleDecision::Hold, "one hot tick is a blip");
+        assert_eq!(p.decide(&sig(1, 0, 8, 5)), ScaleDecision::Grow(2), "two in a row fire");
+        // streak reset: the next hot tick starts a fresh run
+        assert_eq!(p.decide(&sig(2, 0, 16, 3)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn high_utilization_counts_as_hot_without_sheds() {
+        let mut p = AutoscalePolicy::new(cfg(), 1, 4);
+        // 6/8 = 0.75 >= high_util 0.5
+        assert_eq!(p.decide(&sig(1, 6, 8, 0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&sig(1, 6, 8, 0)), ScaleDecision::Grow(2));
+    }
+
+    #[test]
+    fn middle_band_resets_the_hot_streak() {
+        let mut p = AutoscalePolicy::new(cfg(), 1, 4);
+        assert_eq!(p.decide(&sig(1, 0, 8, 5)), ScaleDecision::Hold);
+        // 2/8 = 0.25: neither hot nor idle
+        assert_eq!(p.decide(&sig(1, 2, 8, 0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&sig(1, 0, 8, 5)), ScaleDecision::Hold, "streak restarted");
+        assert_eq!(p.decide(&sig(1, 0, 8, 5)), ScaleDecision::Grow(2));
+    }
+
+    #[test]
+    fn grow_clamps_at_max_and_fires_once_capacity_frees() {
+        let mut p = AutoscalePolicy::new(cfg(), 1, 2);
+        assert_eq!(p.decide(&sig(2, 0, 16, 9)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&sig(2, 0, 16, 9)), ScaleDecision::Hold, "pinned at max");
+        // a slot freed (operator scaled down / recycle); pressure persists
+        assert_eq!(p.decide(&sig(1, 0, 8, 9)), ScaleDecision::Grow(2), "streak was kept at max");
+    }
+
+    #[test]
+    fn shrinks_after_sustained_idle_down_to_min() {
+        let mut p = AutoscalePolicy::new(cfg(), 1, 4);
+        assert_eq!(p.decide(&sig(3, 0, 24, 0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&sig(3, 0, 24, 0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&sig(3, 0, 24, 0)), ScaleDecision::Shrink(2));
+        for _ in 0..2 {
+            assert_eq!(p.decide(&sig(2, 0, 16, 0)), ScaleDecision::Hold);
+        }
+        assert_eq!(p.decide(&sig(2, 0, 16, 0)), ScaleDecision::Shrink(1));
+        // at min: idle forever still holds
+        for _ in 0..5 {
+            assert_eq!(p.decide(&sig(1, 0, 8, 0)), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn probe_failures_veto_shrink() {
+        let mut p = AutoscalePolicy::new(cfg(), 1, 4);
+        let mut bad = sig(3, 0, 24, 0);
+        bad.probe_failure_rate = 0.8;
+        for _ in 0..10 {
+            assert_eq!(p.decide(&bad), ScaleDecision::Hold, "degraded fleet never shrinks");
+        }
+        // recovered: the idle streak starts from zero
+        assert_eq!(p.decide(&sig(3, 0, 24, 0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&sig(3, 0, 24, 0)), ScaleDecision::Hold);
+        assert_eq!(p.decide(&sig(3, 0, 24, 0)), ScaleDecision::Shrink(2));
+    }
+
+    #[test]
+    fn empty_capacity_reads_as_zero_utilization() {
+        let s = sig(0, 0, 0, 0);
+        assert_eq!(s.utilization(), 0.0);
+        let mut p = AutoscalePolicy::new(cfg(), 1, 2);
+        assert_eq!(p.decide(&s), ScaleDecision::Hold);
+    }
+}

@@ -70,6 +70,17 @@ impl ReplicaHealth {
         total.saturating_sub(hits)
     }
 
+    /// Fraction of probes that missed, 0.0 before any probe — the
+    /// autoscaler's "is this fleet degraded" signal (a high rate vetoes
+    /// shrinking while recycling replaces bad draws).
+    pub fn failure_rate(&self) -> f64 {
+        let total = self.probe_total.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        self.probe_failures() as f64 / total as f64
+    }
+
     /// Observed accuracy over all probes so far; `None` before any probe.
     pub fn probe_accuracy(&self) -> Option<f64> {
         let total = self.probe_total.load(Ordering::Relaxed);
@@ -135,6 +146,8 @@ mod tests {
         h.record_probe(false);
         assert_eq!(h.probes(), 3);
         assert_eq!(h.probe_failures(), 2);
+        assert!((h.failure_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(ReplicaHealth::new().failure_rate(), 0.0);
     }
 
     #[test]

@@ -27,8 +27,15 @@
 //!   probe accuracy and probe failures (built on
 //!   [`crate::coordinator::MetricsSnapshot`]); lowered to Prometheus
 //!   text via [`FleetMetrics::to_registry_snapshot`] for the `serve`
-//!   summary and `--metrics-out`. Routing, probe, and recycle paths
-//!   emit [`crate::obs::trace`] spans under the `"serve"` category.
+//!   summary and `--metrics-out`. Routing, probe, recycle, and scaling
+//!   paths emit [`crate::obs::trace`] spans under the `"serve"` category;
+//! * [`AutoscalePolicy`] / [`AutoscaleConfig`] — the fleet is elastic
+//!   within [`FleetConfig::with_bounds`]: [`Router::scale_to`] fills or
+//!   drains slots, and [`FleetConfig::with_autoscale`] spawns a
+//!   background thread that grows on sustained queue pressure/sheds and
+//!   shrinks (with hysteresis, never past `min`) when idle — the signals
+//!   come from the same registry series the metrics export. The
+//!   [`crate::net`] subsystem puts a TCP front door on all of this.
 //!
 //! ```no_run
 //! # fn main() -> anyhow::Result<()> {
@@ -51,11 +58,13 @@
 //! ```
 
 pub mod admission;
+pub mod autoscale;
 pub mod health;
 pub mod replica;
 pub mod router;
 
 pub use admission::{Gate, Rejection, ServeError};
+pub use autoscale::{AutoscaleConfig, AutoscalePolicy, ScaleDecision, ScaleSignals};
 pub use health::{HealthPolicy, HealthStatus, ReplicaHealth};
 pub use replica::{ProbeHandle, Replica, ReplicaSpec};
 pub use router::{drive_workload, FleetConfig, FleetMetrics, ProbeConfig, ReplicaReport, Router};

@@ -10,13 +10,24 @@
 //! [`FleetConfig::probe`] set, a background monitor thread runs the
 //! probe + recycle sweep on an interval so canaries are no longer
 //! caller-driven.
+//!
+//! The fleet is elastic: slots hold `Option<Replica>` up to
+//! [`FleetConfig::max_replicas`], and [`Router::scale_to`] grows (fills
+//! empty slots with fresh generation draws) or shrinks (drains the
+//! highest-id live replicas) within the `[min_replicas, max_replicas]`
+//! bounds. With [`FleetConfig::autoscale`] set, a background autoscaler
+//! thread samples queue depth / shed counters / probe-failure rate each
+//! interval and applies [`super::autoscale::AutoscalePolicy`] decisions
+//! automatically; scale events land in the fleet registry as
+//! `serve_scale_{up,down}_total` counters, the `serve_replicas_active`
+//! gauge, and trace spans.
 
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::coordinator::MetricsSnapshot;
@@ -29,6 +40,7 @@ use crate::scenario::Scenario;
 use crate::util::rng::Rng;
 
 use super::admission::{Rejection, ServeError};
+use super::autoscale::{AutoscaleConfig, AutoscalePolicy, ScaleDecision, ScaleSignals};
 use super::health::{HealthPolicy, HealthStatus};
 use super::replica::{Replica, ReplicaSpec};
 
@@ -55,6 +67,7 @@ impl fmt::Debug for ProbeConfig {
 /// Fleet-level configuration.
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
+    /// Replicas spawned at start (clamped into the scaling bounds).
     pub replicas: usize,
     /// Dynamic-batching window per replica.
     pub max_wait: Duration,
@@ -67,6 +80,14 @@ pub struct FleetConfig {
     /// When set, the router spawns a monitor thread that probes every
     /// replica and recycles degraded ones on this interval.
     pub probe: Option<ProbeConfig>,
+    /// Lower scaling bound; 0 means "`replicas`" (a fixed fleet).
+    pub min_replicas: usize,
+    /// Upper scaling bound — the physical slot count; 0 means
+    /// "`replicas`" (a fixed fleet).
+    pub max_replicas: usize,
+    /// When set (and the bounds leave room), a background autoscaler
+    /// thread grows/shrinks the live replica set each interval.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl FleetConfig {
@@ -78,12 +99,29 @@ impl FleetConfig {
             base_seed: 0xF1EE7,
             health: HealthPolicy::default(),
             probe: None,
+            min_replicas: 0,
+            max_replicas: 0,
+            autoscale: None,
         }
     }
 
     /// Enable the background health monitor.
     pub fn with_probe(mut self, interval: Duration, n: usize, data: Arc<DatasetBlob>) -> Self {
         self.probe = Some(ProbeConfig { interval, n, data });
+        self
+    }
+
+    /// Set the elastic bounds (0 keeps the corresponding bound at
+    /// `replicas`).
+    pub fn with_bounds(mut self, min: usize, max: usize) -> Self {
+        self.min_replicas = min;
+        self.max_replicas = max;
+        self
+    }
+
+    /// Enable the background autoscaler.
+    pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> Self {
+        self.autoscale = Some(cfg);
         self
     }
 }
@@ -111,6 +149,7 @@ pub struct ReplicaReport {
 /// Per-replica reports plus the merged fleet totals.
 #[derive(Clone, Debug)]
 pub struct FleetMetrics {
+    /// Live replicas only (empty autoscaler slots don't report).
     pub replicas: Vec<ReplicaReport>,
     pub total: MetricsSnapshot,
     /// Requests refused by every queue (admission sheds; the
@@ -123,6 +162,10 @@ pub struct FleetMetrics {
     pub recycled: u64,
     /// Canary probe misses summed across live replica generations.
     pub probe_failures: u64,
+    /// Replicas added by scaling (autoscaler or [`Router::scale_to`]).
+    pub scale_ups: u64,
+    /// Replicas drained by scaling.
+    pub scale_downs: u64,
 }
 
 impl FleetMetrics {
@@ -135,6 +178,8 @@ impl FleetMetrics {
             snap.counters.insert(format!("serve_shed_{kind}_total"), *v);
         }
         snap.counters.insert("serve_recycled_total".to_string(), self.recycled);
+        snap.counters.insert("serve_scale_up_total".to_string(), self.scale_ups);
+        snap.counters.insert("serve_scale_down_total".to_string(), self.scale_downs);
         snap.gauges.insert("serve_replicas".to_string(), self.replicas.len() as i64);
         // a gauge, not a counter: recycling a replica starts a fresh
         // health record, so the fleet sum can go down
@@ -151,8 +196,8 @@ fn replica_seed(base: u64, id: usize, generation: u64) -> u64 {
     Rng::new(mixed).next_u64()
 }
 
-/// Everything the routing/probing paths need. Shared between the
-/// caller-facing [`Router`] and the background monitor thread.
+/// Everything the routing/probing/scaling paths need. Shared between the
+/// caller-facing [`Router`] and the background monitor/autoscaler threads.
 struct RouterShared {
     artifacts: std::path::PathBuf,
     scenario: Scenario,
@@ -166,18 +211,27 @@ struct RouterShared {
     queue_depth: usize,
     /// Flat input size every request must carry (validated at admission).
     per_image: usize,
+    /// Resolved elastic bounds (the 0-sentinels replaced by `replicas`).
+    min_replicas: usize,
+    max_replicas: usize,
     /// Read-locked on the hot path (try_submit needs only `&Replica`);
-    /// write-locked only to swap a replica during recycling.
-    slots: Vec<RwLock<Replica>>,
+    /// write-locked only to swap/insert/drain a replica. `None` slots are
+    /// scaling headroom: the ring is `max_replicas` wide from birth.
+    slots: Vec<RwLock<Option<Replica>>>,
+    /// Next generation to spawn per slot — monotonic across recycling
+    /// *and* scale-down/up cycles, so a slot never re-serves a seed it
+    /// already drew.
+    slot_gens: Vec<AtomicU64>,
+    /// Serializes the two slot-mutating sweeps (recycling and scaling) so
+    /// the monitor and autoscaler threads can't race each other; the hot
+    /// routing path never takes it.
+    maintenance: Mutex<()>,
     next: AtomicUsize,
     /// Fleet-level series: per-kind routing refusals
-    /// (`serve_shed_<kind>_total`) and `serve_recycled_total`.
+    /// (`serve_shed_<kind>_total`), `serve_recycled_total`, and the
+    /// scaling counters/gauge.
     registry: Registry,
 }
-
-/// The [`ServeError`] kinds pre-registered at fleet start, so every
-/// shed-by-kind series exists (at zero) from the first scrape.
-const SHED_KINDS: [&str; 4] = ["queue_full", "replica_closed", "no_replicas", "bad_request"];
 
 fn shed_counter_name(kind: &str) -> String {
     format!("serve_shed_{kind}_total")
@@ -186,11 +240,24 @@ fn shed_counter_name(kind: &str) -> String {
 pub struct Router {
     shared: Arc<RouterShared>,
     monitor: Option<Monitor>,
+    scaler: Option<Monitor>,
 }
 
+/// A stoppable background thread (health monitor or autoscaler).
 struct Monitor {
     stop: Arc<AtomicBool>,
     thread: std::thread::JoinHandle<()>,
+}
+
+/// Sleep `interval` in 50 ms slices so shutdown never waits a full
+/// interval for a background thread to notice the stop flag.
+fn sliced_sleep(interval: Duration, stop: &AtomicBool) {
+    let mut slept = Duration::ZERO;
+    while slept < interval && !stop.load(Ordering::Relaxed) {
+        let chunk = (interval - slept).min(Duration::from_millis(50));
+        std::thread::sleep(chunk);
+        slept += chunk;
+    }
 }
 
 impl Router {
@@ -213,31 +280,51 @@ impl Router {
     ) -> Result<Router> {
         anyhow::ensure!(fleet.replicas >= 1, "fleet needs at least one replica");
         anyhow::ensure!(!scenario.model.is_empty(), "scenario must name a model artifact");
+        let min_replicas =
+            if fleet.min_replicas == 0 { fleet.replicas } else { fleet.min_replicas };
+        let max_replicas =
+            if fleet.max_replicas == 0 { fleet.replicas } else { fleet.max_replicas };
+        anyhow::ensure!(min_replicas >= 1, "min_replicas must be at least 1");
+        anyhow::ensure!(
+            min_replicas <= max_replicas,
+            "min_replicas {min_replicas} exceeds max_replicas {max_replicas}"
+        );
+        let initial = fleet.replicas.clamp(min_replicas, max_replicas);
         let art = Artifact::load(&artifacts, &scenario.model)?;
         let queue_depth = if fleet.queue_depth == 0 { 2 * art.batch } else { fleet.queue_depth };
         let per_image = DatasetMeta::load(&artifacts, &art.dataset)?.image_elems();
         let backend = BackendProvider::for_kind_with(scenario.backend, scenario.native_config())?;
-        let mut slots = Vec::with_capacity(fleet.replicas);
-        for id in 0..fleet.replicas {
-            let spec = ReplicaSpec {
-                id,
-                generation: 0,
-                seed: replica_seed(fleet.base_seed, id, 0),
-                max_wait: fleet.max_wait,
-                queue_depth,
-            };
-            slots.push(RwLock::new(Replica::spawn(
-                artifacts.clone(),
-                &scenario,
-                &backend,
-                spec,
-            )?));
+        let mut slots = Vec::with_capacity(max_replicas);
+        let mut slot_gens = Vec::with_capacity(max_replicas);
+        for id in 0..max_replicas {
+            if id < initial {
+                let spec = ReplicaSpec {
+                    id,
+                    generation: 0,
+                    seed: replica_seed(fleet.base_seed, id, 0),
+                    max_wait: fleet.max_wait,
+                    queue_depth,
+                };
+                slots.push(RwLock::new(Some(Replica::spawn(
+                    artifacts.clone(),
+                    &scenario,
+                    &backend,
+                    spec,
+                )?)));
+                slot_gens.push(AtomicU64::new(1));
+            } else {
+                slots.push(RwLock::new(None));
+                slot_gens.push(AtomicU64::new(0));
+            }
         }
         let registry = Registry::new();
-        for kind in SHED_KINDS {
+        for kind in ServeError::KINDS {
             registry.counter(&shed_counter_name(kind));
         }
         registry.counter("serve_recycled_total");
+        registry.counter("serve_scale_up_total");
+        registry.counter("serve_scale_down_total");
+        registry.gauge("serve_replicas_active").set(initial as i64);
         let shared = Arc::new(RouterShared {
             artifacts,
             scenario,
@@ -245,7 +332,11 @@ impl Router {
             fleet,
             queue_depth,
             per_image,
+            min_replicas,
+            max_replicas,
             slots,
+            slot_gens,
+            maintenance: Mutex::new(()),
             next: AtomicUsize::new(0),
             registry,
         });
@@ -257,14 +348,7 @@ impl Router {
                 .name("fleet-monitor".to_string())
                 .spawn(move || {
                     while !flag.load(Ordering::Relaxed) {
-                        // sleep in slices so shutdown never waits a full
-                        // interval for the monitor to notice
-                        let mut slept = Duration::ZERO;
-                        while slept < probe.interval && !flag.load(Ordering::Relaxed) {
-                            let chunk = (probe.interval - slept).min(Duration::from_millis(50));
-                            std::thread::sleep(chunk);
-                            slept += chunk;
-                        }
+                        sliced_sleep(probe.interval, &flag);
                         if flag.load(Ordering::Relaxed) {
                             break;
                         }
@@ -283,7 +367,55 @@ impl Router {
         } else {
             None
         };
-        Ok(Router { shared, monitor })
+        let scaler = match shared.fleet.autoscale.clone() {
+            Some(cfg) if shared.max_replicas > shared.min_replicas => {
+                let stop = Arc::new(AtomicBool::new(false));
+                let flag = stop.clone();
+                let s = shared.clone();
+                let thread = std::thread::Builder::new()
+                    .name("fleet-autoscaler".to_string())
+                    .spawn(move || {
+                        let mut policy =
+                            AutoscalePolicy::new(cfg.clone(), s.min_replicas, s.max_replicas);
+                        // shed delta is tracked against this pre-resolved
+                        // handle so each tick is two relaxed loads plus the
+                        // per-slot gauge reads
+                        let shed_full = s.registry.counter(&shed_counter_name("queue_full"));
+                        let mut last_shed = shed_full.get();
+                        while !flag.load(Ordering::Relaxed) {
+                            sliced_sleep(cfg.interval, &flag);
+                            if flag.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let shed_now = shed_full.get();
+                            let signals = s.scale_signals(shed_now.saturating_sub(last_shed));
+                            last_shed = shed_now;
+                            match policy.decide(&signals) {
+                                ScaleDecision::Hold => {}
+                                ScaleDecision::Grow(t) | ScaleDecision::Shrink(t) => {
+                                    match s.scale_to(t) {
+                                        Ok((grown, drained)) if grown + drained > 0 => {
+                                            eprintln!(
+                                                "fleet autoscaler: {} -> {} replicas",
+                                                signals.active,
+                                                signals.active + grown - drained
+                                            );
+                                        }
+                                        Ok(_) => {}
+                                        Err(e) => {
+                                            eprintln!("fleet autoscaler: scale failed: {e:#}")
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .context("spawning fleet-autoscaler thread")?;
+                Some(Monitor { stop, thread })
+            }
+            _ => None,
+        };
+        Ok(Router { shared, monitor, scaler })
     }
 
     /// The scenario every replica (re-)prepares from.
@@ -296,6 +428,11 @@ impl Router {
         self.monitor.is_some()
     }
 
+    /// Whether the background autoscaler is running.
+    pub fn has_autoscaler(&self) -> bool {
+        self.scaler.is_some()
+    }
+
     /// Graph variants compiled by the fleet-shared backend cache, or
     /// `None` when the backend is per-replica (PJRT). With the native
     /// backend, an N-replica fleet serving one scenario reports exactly 1
@@ -304,12 +441,32 @@ impl Router {
         self.shared.backend.shared_compiled_graphs()
     }
 
+    /// Physical slot count (the `max_replicas` bound).
     pub fn replica_count(&self) -> usize {
         self.shared.slots.len()
     }
 
+    /// Live replicas right now (≤ [`Router::replica_count`]).
+    pub fn active_replicas(&self) -> usize {
+        self.shared.active_replicas()
+    }
+
+    pub fn min_replicas(&self) -> usize {
+        self.shared.min_replicas
+    }
+
+    pub fn max_replicas(&self) -> usize {
+        self.shared.max_replicas
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.shared.queue_depth
+    }
+
+    /// Manually grow/shrink the live replica set to `target` (clamped to
+    /// the fleet bounds). Returns `(grown, drained)`.
+    pub fn scale_to(&self, target: usize) -> Result<(usize, usize)> {
+        self.shared.scale_to(target)
     }
 
     /// Route one request; see [`RouterShared::try_route`] for the policy.
@@ -339,37 +496,39 @@ impl Router {
         }
     }
 
-    /// Replay the first `n` labeled samples of `data` through *every*
+    /// Replay the first `n` labeled samples of `data` through every *live*
     /// replica (bypassing load balancing, never shed), record the outcomes
-    /// in each replica's health probe, and return the observed per-replica
-    /// accuracies in slot order.
+    /// in each replica's health probe, and return the observed accuracies
+    /// in slot order (empty slots are skipped).
     pub fn probe(&self, data: &DatasetBlob, n: usize) -> Vec<f64> {
         self.shared.probe(data, n)
     }
 
-    /// Replace every replica whose health verdict is `Degraded` — or whose
-    /// worker thread has died — with a fresh one: generation + 1 ⇒ a new
-    /// variation seed drawn from the same scenario, new metrics, and a
-    /// clean health record. Returns the recycled slot ids.
+    /// Replace every live replica whose health verdict is `Degraded` — or
+    /// whose worker thread has died — with a fresh one: a new generation ⇒
+    /// a new variation seed drawn from the same scenario, new metrics, and
+    /// a clean health record. Returns the recycled slot ids.
     pub fn recycle_degraded(&self) -> Result<Vec<usize>> {
         self.shared.recycle_degraded()
     }
 
-    /// Snapshot every replica plus merged fleet totals.
+    /// Snapshot every live replica plus merged fleet totals.
     pub fn fleet_metrics(&self) -> FleetMetrics {
         self.shared.fleet_metrics()
     }
 
-    /// Stop the monitor (if any), drain and join every replica.
+    /// Stop the background threads (if any), drain and join every replica.
     pub fn shutdown(self) -> Result<()> {
-        if let Some(m) = self.monitor {
+        for m in [self.scaler, self.monitor].into_iter().flatten() {
             m.stop.store(true, Ordering::Relaxed);
             let _ = m.thread.join();
         }
         let shared = Arc::try_unwrap(self.shared)
             .map_err(|_| anyhow::anyhow!("router still referenced"))?;
         for slot in shared.slots {
-            slot.into_inner().unwrap().shutdown()?;
+            if let Some(replica) = slot.into_inner().unwrap() {
+                replica.shutdown()?;
+            }
         }
         Ok(())
     }
@@ -381,9 +540,6 @@ impl RouterShared {
     /// the error so retry wrappers don't have to clone it.
     fn try_route(&self, image: Vec<f32>) -> Result<mpsc::Receiver<i32>, (Vec<f32>, ServeError)> {
         let n = self.slots.len();
-        if n == 0 {
-            return Err((image, self.count_reject(ServeError::NoReplicas)));
-        }
         let got = image.len();
         if got != self.per_image {
             // reject before it can reach (and confuse) a worker
@@ -392,11 +548,16 @@ impl RouterShared {
         }
         let start = self.next.fetch_add(1, Ordering::Relaxed);
         let mut image = image;
+        let mut live = 0usize;
         let mut saw_full = false;
-        let mut closed_id = 0;
+        let mut closed_id = None;
         for k in 0..n {
             let id = (start + k) % n;
-            let replica = self.slots[id].read().unwrap();
+            let guard = self.slots[id].read().unwrap();
+            let Some(replica) = guard.as_ref() else {
+                continue; // scaling headroom, not a refusal
+            };
+            live += 1;
             match replica.try_submit(image) {
                 Ok(rx) => return Ok(rx),
                 Err(Rejection::Full(img)) => {
@@ -404,18 +565,22 @@ impl RouterShared {
                     image = img;
                 }
                 Err(Rejection::Closed(img)) => {
-                    closed_id = id;
+                    closed_id = Some(id);
                     image = img;
                 }
             }
         }
+        if live == 0 {
+            return Err((image, self.count_reject(ServeError::NoReplicas)));
+        }
         if saw_full {
             // overload: at least one live queue refused for capacity
-            let e = ServeError::QueueFull { replicas: n, depth: self.queue_depth };
+            let e = ServeError::QueueFull { replicas: live, depth: self.queue_depth };
             Err((image, self.count_reject(e)))
         } else {
-            // every replica's worker is gone — not a shed, not retryable
-            Err((image, self.count_reject(ServeError::ReplicaClosed { id: closed_id })))
+            // every live replica's worker is gone — not a shed, not retryable
+            let id = closed_id.unwrap_or(0);
+            Err((image, self.count_reject(ServeError::ReplicaClosed { id })))
         }
     }
 
@@ -426,17 +591,102 @@ impl RouterShared {
         e
     }
 
+    fn active_replicas(&self) -> usize {
+        self.slots.iter().filter(|s| s.read().unwrap().is_some()).count()
+    }
+
+    /// Sample one autoscaler tick's worth of signals from the live fleet
+    /// (the shed delta is tracked by the autoscaler thread itself).
+    fn scale_signals(&self, shed_delta: u64) -> ScaleSignals {
+        let mut active = 0usize;
+        let mut depth = 0i64;
+        let mut probes = 0u64;
+        let mut failures = 0u64;
+        for slot in &self.slots {
+            let guard = slot.read().unwrap();
+            if let Some(replica) = guard.as_ref() {
+                active += 1;
+                depth += replica.metrics.queue_depth().max(0);
+                probes += replica.health.probes();
+                failures += replica.health.probe_failures();
+            }
+        }
+        ScaleSignals {
+            active,
+            queue_depth: depth,
+            queue_capacity: active * self.queue_depth,
+            shed_delta,
+            probe_failure_rate: if probes == 0 { 0.0 } else { failures as f64 / probes as f64 },
+        }
+    }
+
+    /// Bring the live replica count to `target`, clamped to the fleet
+    /// bounds. Growth fills empty slots lowest-id-first, each with a fresh
+    /// generation draw (the expensive spawn happens with no slot lock
+    /// held); shrink drains the highest-id live replicas (queued requests
+    /// are answered before the worker joins). Serialized with recycling
+    /// via the maintenance lock. Returns `(grown, drained)`.
+    fn scale_to(&self, target: usize) -> Result<(usize, usize)> {
+        let _maint = self.maintenance.lock().unwrap();
+        let target = target.clamp(self.min_replicas, self.max_replicas);
+        let mut live: Vec<bool> =
+            self.slots.iter().map(|s| s.read().unwrap().is_some()).collect();
+        let mut active = live.iter().filter(|&&b| b).count();
+        let mut grown = 0usize;
+        let mut drained = 0usize;
+        while active < target {
+            let Some(id) = live.iter().position(|&b| !b) else { break };
+            let generation = self.slot_gens[id].fetch_add(1, Ordering::Relaxed);
+            let _span =
+                trace::span_dyn("serve", || format!("autoscale/grow id={id} gen={generation}"));
+            let spec = ReplicaSpec {
+                id,
+                generation,
+                seed: replica_seed(self.fleet.base_seed, id, generation),
+                max_wait: self.fleet.max_wait,
+                queue_depth: self.queue_depth,
+            };
+            let fresh =
+                Replica::spawn(self.artifacts.clone(), &self.scenario, &self.backend, spec)?;
+            *self.slots[id].write().unwrap() = Some(fresh);
+            self.registry.counter("serve_scale_up_total").inc();
+            live[id] = true;
+            active += 1;
+            grown += 1;
+        }
+        while active > target {
+            let Some(id) = live.iter().rposition(|&b| b) else { break };
+            let _span = trace::span_dyn("serve", || format!("autoscale/shrink id={id}"));
+            // the write-lock guard is a temporary: the drain/join below
+            // runs with the slot already released (and routing around it)
+            let old = self.slots[id].write().unwrap().take();
+            if let Some(old) = old {
+                if let Err(e) = old.shutdown() {
+                    eprintln!("fleet autoscaler: draining replica {id}: {e:#}");
+                }
+                self.registry.counter("serve_scale_down_total").inc();
+            }
+            live[id] = false;
+            active -= 1;
+            drained += 1;
+        }
+        self.registry.gauge("serve_replicas_active").set(active as i64);
+        Ok((grown, drained))
+    }
+
     fn probe(&self, data: &DatasetBlob, n: usize) -> Vec<f64> {
         let _sweep = trace::span("probe/sweep", "serve");
         let per = data.image_elems();
         let n = n.clamp(1, data.n);
-        let mut accs = Vec::with_capacity(self.slots.len());
+        let mut accs = Vec::new();
         for (id, slot) in self.slots.iter().enumerate() {
-            let _span = trace::span_dyn("serve", || format!("probe/replica id={id}"));
             // grab a detached ingress under a short lock, then do all the
             // (possibly blocking) submits with the lock released so live
             // traffic keeps spilling through this slot
-            let handle = slot.read().unwrap().probe_handle();
+            let Some(handle) = slot.read().unwrap().as_ref().map(|r| r.probe_handle()) else {
+                continue;
+            };
+            let _span = trace::span_dyn("serve", || format!("probe/replica id={id}"));
             let mut pending = Vec::with_capacity(n);
             for i in 0..n {
                 let image = data.images[i * per..(i + 1) * per].to_vec();
@@ -463,13 +713,17 @@ impl RouterShared {
     }
 
     fn recycle_degraded(&self) -> Result<Vec<usize>> {
+        // serialized with scaling so a slot can't be drained out from
+        // under a recycle (the hot routing path is untouched)
+        let _maint = self.maintenance.lock().unwrap();
         let mut recycled = Vec::new();
         for (id, slot) in self.slots.iter().enumerate() {
             // verdict + generation under a short read lock; a dead worker
             // is recyclable no matter what the probe record says (it will
             // never accumulate probes to become Degraded on its own)
             let generation = {
-                let replica = slot.read().unwrap();
+                let guard = slot.read().unwrap();
+                let Some(replica) = guard.as_ref() else { continue };
                 let degraded =
                     replica.health.status(&self.fleet.health) == HealthStatus::Degraded;
                 if !degraded && replica.is_alive() {
@@ -480,8 +734,9 @@ impl RouterShared {
             // the expensive spawn (engine + compile + prepare + uploads)
             // happens with no lock held: traffic keeps flowing to this
             // slot's old replica and spilling across the fleet meanwhile
-            let next_gen = generation + 1;
-            let _span = trace::span_dyn("serve", || format!("replica/recycle id={id} gen={next_gen}"));
+            let next_gen = self.slot_gens[id].fetch_add(1, Ordering::Relaxed);
+            let _span =
+                trace::span_dyn("serve", || format!("replica/recycle id={id} gen={next_gen}"));
             let spec = ReplicaSpec {
                 id,
                 generation: next_gen,
@@ -492,13 +747,15 @@ impl RouterShared {
             let fresh =
                 Replica::spawn(self.artifacts.clone(), &self.scenario, &self.backend, spec)?;
             let swapped = {
-                let mut replica = slot.write().unwrap();
-                // a concurrent recycle may have swapped this slot while we
-                // were spawning; keep the newer generation, discard ours
-                if replica.generation == generation {
-                    Ok(std::mem::replace(&mut *replica, fresh))
-                } else {
-                    Err(fresh)
+                let mut guard = slot.write().unwrap();
+                // under the maintenance lock the slot can't have been
+                // swapped or drained, but keep the cheap generation check
+                // as a structural invariant
+                match guard.as_ref() {
+                    Some(current) if current.generation == generation => {
+                        Ok(std::mem::replace(&mut *guard, Some(fresh)).expect("slot checked live"))
+                    }
+                    _ => Err(fresh),
                 }
             };
             match swapped {
@@ -522,7 +779,8 @@ impl RouterShared {
         let mut replicas = Vec::with_capacity(self.slots.len());
         let mut total = MetricsSnapshot::default();
         for slot in &self.slots {
-            let replica = slot.read().unwrap();
+            let guard = slot.read().unwrap();
+            let Some(replica) = guard.as_ref() else { continue };
             let snap = replica.metrics.snapshot();
             total.merge(&snap);
             replicas.push(ReplicaReport {
@@ -540,7 +798,7 @@ impl RouterShared {
             });
         }
         let reg = self.registry.snapshot();
-        let shed_by_kind: BTreeMap<String, u64> = SHED_KINDS
+        let shed_by_kind: BTreeMap<String, u64> = ServeError::KINDS
             .iter()
             .map(|&kind| (kind.to_string(), reg.counter(&shed_counter_name(kind))))
             .collect();
@@ -549,6 +807,8 @@ impl RouterShared {
             shed_by_kind,
             recycled: reg.counter("serve_recycled_total"),
             probe_failures: replicas.iter().map(|r| r.probe_failures).sum(),
+            scale_ups: reg.counter("serve_scale_up_total"),
+            scale_downs: reg.counter("serve_scale_down_total"),
             replicas,
             total,
         }
@@ -615,7 +875,7 @@ mod tests {
     #[test]
     fn fleet_metrics_render_shed_by_kind_series() {
         let mut shed_by_kind = BTreeMap::new();
-        for kind in SHED_KINDS {
+        for kind in ServeError::KINDS {
             shed_by_kind.insert(kind.to_string(), 0);
         }
         shed_by_kind.insert("queue_full".to_string(), 3);
@@ -626,11 +886,15 @@ mod tests {
             shed_by_kind,
             recycled: 1,
             probe_failures: 2,
+            scale_ups: 4,
+            scale_downs: 2,
         };
         let text = fm.to_registry_snapshot().prometheus();
         assert!(text.contains("serve_shed_queue_full_total 3\n"), "{text}");
         assert!(text.contains("serve_shed_bad_request_total 0\n"), "{text}");
         assert!(text.contains("serve_recycled_total 1\n"), "{text}");
+        assert!(text.contains("serve_scale_up_total 4\n"), "{text}");
+        assert!(text.contains("serve_scale_down_total 2\n"), "{text}");
         assert!(text.contains("serve_probe_failures 2\n"), "{text}");
         assert!(text.contains("serve_queue_depth 0\n"), "{text}");
     }
@@ -639,6 +903,8 @@ mod tests {
     fn fleet_config_defaults_have_no_monitor() {
         let fleet = FleetConfig::new(2);
         assert!(fleet.probe.is_none(), "probing stays caller-driven unless enabled");
+        assert!(fleet.autoscale.is_none(), "fleets are fixed-size unless enabled");
+        assert_eq!((fleet.min_replicas, fleet.max_replicas), (0, 0), "bounds default to replicas");
         let data = Arc::new(DatasetBlob {
             n: 4,
             shape: vec![2, 2, 1],
@@ -653,5 +919,15 @@ mod tests {
         // Debug must not dump the image payload
         let dbg = format!("{probe:?}");
         assert!(dbg.contains("dataset_n"), "{dbg}");
+    }
+
+    #[test]
+    fn fleet_config_elastic_builders() {
+        let fleet = FleetConfig::new(2)
+            .with_bounds(1, 6)
+            .with_autoscale(AutoscaleConfig::default().with_interval(Duration::from_millis(100)));
+        assert_eq!((fleet.min_replicas, fleet.max_replicas), (1, 6));
+        let auto = fleet.autoscale.as_ref().unwrap();
+        assert_eq!(auto.interval, Duration::from_millis(100));
     }
 }

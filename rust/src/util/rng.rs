@@ -187,6 +187,128 @@ impl Rng {
         *self = tail_rng.expect("fill_normal_par ran at least one chunk");
     }
 
+    /// Sequential kernel shared by [`Rng::perturb_par`]: one Box-Muller
+    /// draw per element `skip` rejects nothing for, scaled by `sigma(v)`.
+    fn perturb_slice<S, F>(&mut self, data: &mut [f32], skip: &S, sigma: &F)
+    where
+        S: Fn(f32) -> bool,
+        F: Fn(f32) -> f64,
+    {
+        for v in data.iter_mut() {
+            if skip(*v) {
+                continue;
+            }
+            *v += (self.normal() * sigma(*v)) as f32;
+        }
+    }
+
+    /// Value-dependent gaussian perturbation, sharded over `threads` scoped
+    /// workers: `*v += normal() * sigma(*v)` for every element where
+    /// `skip(*v)` is false. Output *and* the generator's final state are
+    /// bit-identical to the sequential loop at any thread count — the same
+    /// contract as [`Rng::fill_normal_par`], extended to a stream whose
+    /// draw positions depend on the data: a cached spare is consumed
+    /// sequentially on the first drawing element, chunk boundaries are
+    /// placed after an *even* cumulative number of draws so no Box-Muller
+    /// spare crosses a chunk, chunk-start states come from
+    /// [`Rng::skip_normal_pairs`], and the last worker's generator (spare
+    /// included) becomes this generator's state.
+    ///
+    /// `skip` and `sigma` must be pure: `skip` is evaluated more than once
+    /// per element (draw counting, boundary placement, the worker pass).
+    pub fn perturb_par<S, F>(&mut self, data: &mut [f32], threads: usize, skip: &S, sigma: &F)
+    where
+        S: Fn(f32) -> bool + Sync,
+        F: Fn(f32) -> f64 + Sync,
+    {
+        const MIN_PAR: usize = 4096;
+        let threads = threads.max(1);
+        if threads == 1 || data.len() < MIN_PAR.max(2 * threads) {
+            self.perturb_slice(data, skip, sigma);
+            return;
+        }
+        // one draw per non-skipped element; mostly-sparse tensors fall back
+        let total = data.iter().filter(|v| !skip(**v)).count();
+        if total < MIN_PAR.max(2 * threads) {
+            self.perturb_slice(data, skip, sigma);
+            return;
+        }
+        let mut rest: &mut [f32] = data;
+        let mut consumed_spare = 0usize;
+        if self.spare.is_some() {
+            // consume the cached spare on the first drawing element so every
+            // chunk below starts from a spare-free generator
+            let first = rest
+                .iter()
+                .position(|v| !skip(*v))
+                .expect("total > 0 implies a drawing element");
+            let (head, tail) = rest.split_at_mut(first + 1);
+            self.perturb_slice(head, skip, sigma);
+            rest = tail;
+            consumed_spare = 1;
+        }
+        // segment `rest` so every chunk but the last holds an even number
+        // of draws: (exclusive end index, draws inside) per chunk
+        let body_draws = total - consumed_spare;
+        let mut per_chunk = body_draws.div_ceil(threads);
+        if per_chunk % 2 == 1 {
+            per_chunk += 1;
+        }
+        let mut bounds: Vec<(usize, usize)> = Vec::new();
+        {
+            let mut draws = 0usize;
+            for (i, v) in rest.iter().enumerate() {
+                if !skip(*v) {
+                    draws += 1;
+                    if draws == per_chunk {
+                        bounds.push((i + 1, draws));
+                        draws = 0;
+                    }
+                }
+            }
+            if draws > 0 || bounds.is_empty() {
+                bounds.push((rest.len(), draws));
+            } else {
+                // trailing skipped elements carry no draws: extend the last
+                // draw-bearing chunk so its worker state stays the final one
+                bounds.last_mut().expect("non-empty").0 = rest.len();
+            }
+        }
+        // cheap sequential walk: the generator state at each chunk start
+        let mut starts: Vec<Rng> = Vec::with_capacity(bounds.len());
+        {
+            let mut walker = self.clone();
+            for &(_, draws) in &bounds {
+                starts.push(walker.clone());
+                walker.skip_normal_pairs(draws.div_ceil(2));
+            }
+        }
+        let last = bounds.len() - 1;
+        let mut tail_rng: Option<Rng> = None;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(bounds.len());
+            let mut remaining = rest;
+            let mut prev_end = 0usize;
+            for (bi, &(end, _)) in bounds.iter().enumerate() {
+                let (piece, tail) = remaining.split_at_mut(end - prev_end);
+                remaining = tail;
+                prev_end = end;
+                let mut r = starts[bi].clone();
+                handles.push(s.spawn(move || {
+                    r.perturb_slice(piece, skip, sigma);
+                    r
+                }));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                let r = h.join().expect("perturb_par worker panicked");
+                if i == last {
+                    tail_rng = Some(r);
+                }
+            }
+        });
+        *self = tail_rng.expect("perturb_par ran at least one chunk");
+    }
+
     /// Random subset of size k from 0..n (partial Fisher-Yates).
     pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..n).collect();
@@ -306,6 +428,103 @@ mod tests {
         b.fill_normal_par(&mut vb, 8);
         assert_eq!(va, vb);
         assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    /// Value-dependent sigma + zero-skip reference loop for perturb_par.
+    fn perturb_seq(rng: &mut Rng, data: &mut [f32]) {
+        for v in data.iter_mut() {
+            if *v == 0.0 {
+                continue;
+            }
+            *v += (rng.normal() * (0.1 + (*v as f64).abs())) as f32;
+        }
+    }
+
+    fn perturb_input(n: usize) -> Vec<f32> {
+        // deterministic mix of values and exact zeros (every 7th element)
+        let mut src = Rng::new(1234);
+        (0..n)
+            .map(|i| if i % 7 == 3 { 0.0 } else { src.next_f32() - 0.5 })
+            .collect()
+    }
+
+    #[test]
+    fn perturb_par_matches_sequential_exactly() {
+        for &n in &[4801usize, 8192, 10007] {
+            for &threads in &[2usize, 3, 4, 8] {
+                let base = perturb_input(n);
+                let mut a = Rng::new(77);
+                let mut b = Rng::new(77);
+                // warm both generators up with a cached spare so the
+                // spare-consumption path is exercised
+                assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+                let mut va = base.clone();
+                let mut vb = base.clone();
+                perturb_seq(&mut a, &mut va);
+                b.perturb_par(
+                    &mut vb,
+                    threads,
+                    &|v| v == 0.0,
+                    &|v| 0.1 + (v as f64).abs(),
+                );
+                assert_eq!(va, vb, "n={n} threads={threads}: sample stream diverged");
+                // zeros stayed exact
+                for (i, v) in vb.iter().enumerate() {
+                    if base[i] == 0.0 {
+                        assert_eq!(*v, 0.0, "skipped element {i} was perturbed");
+                    }
+                }
+                // generator state afterwards is identical too (u64 stream
+                // and the cached Box-Muller spare)
+                assert_eq!(a.next_u64(), b.next_u64(), "n={n} threads={threads}");
+                assert_eq!(
+                    a.normal().to_bits(),
+                    b.normal().to_bits(),
+                    "n={n} threads={threads}: spare state diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn perturb_par_no_spare_start_matches() {
+        let base = perturb_input(9000);
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        let mut va = base.clone();
+        let mut vb = base;
+        perturb_seq(&mut a, &mut va);
+        b.perturb_par(&mut vb, 4, &|v| v == 0.0, &|v| 0.1 + (v as f64).abs());
+        assert_eq!(va, vb);
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+    }
+
+    #[test]
+    fn perturb_par_small_or_sparse_stays_sequential() {
+        // small slice
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let base = perturb_input(128);
+        let mut va = base.clone();
+        let mut vb = base;
+        perturb_seq(&mut a, &mut va);
+        b.perturb_par(&mut vb, 8, &|v| v == 0.0, &|v| 0.1 + (v as f64).abs());
+        assert_eq!(va, vb);
+        assert_eq!(a.next_u64(), b.next_u64());
+        // large slice but nearly all skipped (few draws): sparse fallback
+        let mut c = Rng::new(13);
+        let mut d = Rng::new(13);
+        let mut sparse: Vec<f32> = vec![0.0; 16384];
+        for i in (0..sparse.len()).step_by(97) {
+            sparse[i] = 0.25;
+        }
+        let mut vc = sparse.clone();
+        let mut vd = sparse;
+        perturb_seq(&mut c, &mut vc);
+        d.perturb_par(&mut vd, 8, &|v| v == 0.0, &|v| 0.1 + (v as f64).abs());
+        assert_eq!(vc, vd);
+        assert_eq!(c.next_u64(), d.next_u64());
     }
 
     #[test]

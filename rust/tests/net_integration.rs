@@ -1,0 +1,351 @@
+//! Integration tests for the networked serving front door: wire-protocol
+//! robustness (malformed frames, oversized payloads, mid-request
+//! disconnects must surface as typed errors, never as hung connections or
+//! leaked admission-queue slots) and fleet elasticity (the autoscaler
+//! grows under sustained load and shrinks back to the minimum when it
+//! stops).
+//!
+//! Everything runs on the materialized synthetic artifact with the native
+//! backend, so these tests need no built artifacts and run in both CI
+//! feature configurations.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hybridac::eval::Method;
+use hybridac::exec::BackendKind;
+use hybridac::net::{
+    FrameError, FrameReader, InferOutcome, NetClient, NetServer, Request, Response, ServerConfig,
+    KIND_BAD_FRAME, MAX_FRAME,
+};
+use hybridac::runtime::{Artifact, DatasetBlob};
+use hybridac::scenario::Scenario;
+use hybridac::serve::{AutoscaleConfig, FleetConfig, Router};
+
+/// Synthetic-artifact fleet + listener; `name` keeps parallel tests out of
+/// each other's artifact directories.
+fn start(
+    name: &str,
+    fleet: FleetConfig,
+    cfg: ServerConfig,
+) -> (Arc<Router>, Arc<DatasetBlob>, NetServer) {
+    let dir = std::env::temp_dir().join(format!("hybridac-net-{name}-{}", std::process::id()));
+    Artifact::materialize_synthetic(&dir).unwrap();
+    let art = Artifact::load(&dir, "synthetic").unwrap();
+    let data = Arc::new(DatasetBlob::load(&dir, &art.dataset).unwrap());
+    let sc = Scenario::paper_default(name, "synthetic", Method::Hybrid { frac: 0.16 })
+        .with_backend(BackendKind::Native)
+        .with_threads(1);
+    let router = Arc::new(Router::start_scenario(dir, sc, fleet).unwrap());
+    let server = NetServer::bind("127.0.0.1:0", router.clone(), cfg).unwrap();
+    (router, data, server)
+}
+
+fn stop(router: Arc<Router>, server: NetServer) {
+    server.shutdown().unwrap();
+    Arc::try_unwrap(router).ok().expect("router still referenced").shutdown().unwrap();
+}
+
+/// Raw frame writer: lets tests send payloads `write_frame` never would.
+fn raw_frame(stream: &mut TcpStream, payload: &[u8]) {
+    stream.write_all(&(payload.len() as u32).to_be_bytes()).unwrap();
+    stream.write_all(payload).unwrap();
+    stream.flush().unwrap();
+}
+
+/// Next response frame, with a deadline so a server bug fails the test
+/// instead of hanging it (the test sockets carry a short read timeout).
+fn read_response(r: &mut FrameReader<TcpStream>) -> Response {
+    let t0 = Instant::now();
+    loop {
+        match r.poll() {
+            Ok(Some(j)) => return Response::from_json(&j).expect("decodable response"),
+            Ok(None) => assert!(t0.elapsed() < Duration::from_secs(10), "no response within 10s"),
+            Err(e) => panic!("transport error while waiting for a response: {e}"),
+        }
+    }
+}
+
+/// Assert the server closed the connection (clean EOF or a reset).
+fn expect_closed(r: &mut FrameReader<TcpStream>) {
+    let t0 = Instant::now();
+    loop {
+        match r.poll() {
+            Ok(Some(j)) => panic!("unexpected frame after close: {j:?}"),
+            Ok(None) => {
+                assert!(t0.elapsed() < Duration::from_secs(10), "connection not closed within 10s")
+            }
+            Err(FrameError::Eof | FrameError::Truncated | FrameError::Io(_)) => return,
+            Err(e) => panic!("unexpected error waiting for close: {e}"),
+        }
+    }
+}
+
+fn raw_conn(addr: std::net::SocketAddr) -> (TcpStream, FrameReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let reader = FrameReader::new(stream.try_clone().unwrap(), MAX_FRAME);
+    (stream, reader)
+}
+
+/// Garbage and wrong-shape frames come back as typed `bad_frame` errors
+/// and the same connection keeps serving real traffic afterwards.
+#[test]
+fn malformed_frames_get_typed_errors_and_the_connection_keeps_serving() {
+    let mut fleet = FleetConfig::new(1);
+    fleet.max_wait = Duration::from_millis(2);
+    let (router, data, server) = start("badframe", fleet, ServerConfig::default());
+    let (mut stream, mut reader) = raw_conn(server.local_addr());
+
+    // unparseable payload: framing is still aligned, so it's an answer
+    raw_frame(&mut stream, b"{not json");
+    match read_response(&mut reader) {
+        Response::Error { id, kind, .. } => {
+            assert_eq!(kind, KIND_BAD_FRAME);
+            assert_eq!(id, 0, "no id was decodable");
+        }
+        other => panic!("expected bad_frame error, got {other:?}"),
+    }
+
+    // valid JSON, wrong shape: still bad_frame, and the id is echoed back
+    raw_frame(&mut stream, br#"{"type":"warp","id":9}"#);
+    match read_response(&mut reader) {
+        Response::Error { id, kind, message } => {
+            assert_eq!(kind, KIND_BAD_FRAME);
+            assert_eq!(id, 9);
+            assert!(message.contains("warp"), "error names the problem: {message}");
+        }
+        other => panic!("expected bad_frame error, got {other:?}"),
+    }
+
+    // the connection is not poisoned: a ping and a real inference work
+    let mut w = stream.try_clone().unwrap();
+    hybridac::net::wire::write_frame(&mut w, &Request::Ping { id: 3 }.to_json()).unwrap();
+    assert_eq!(read_response(&mut reader), Response::Pong { id: 3 });
+    let per = data.image_elems();
+    let image = data.images[..per].to_vec();
+    hybridac::net::wire::write_frame(&mut w, &Request::Infer { id: 4, image }.to_json()).unwrap();
+    assert!(matches!(read_response(&mut reader), Response::Result { id: 4, .. }));
+
+    // admission refusals are typed answers too, and don't end the session
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let too_big = vec![0.0f32; per + 1];
+    match client.infer(&too_big).unwrap() {
+        InferOutcome::Denied { kind, .. } => assert_eq!(kind, "bad_request"),
+        other => panic!("wrong-size image must be denied, got {other:?}"),
+    }
+    assert!(matches!(client.infer(&data.images[..per]).unwrap(), InferOutcome::Pred(_)));
+
+    drop(stream);
+    stop(router, server);
+}
+
+/// An oversized declared length gets one final typed error, then the
+/// connection closes (the unread payload makes the stream unrecoverable);
+/// the listener keeps accepting everyone else.
+#[test]
+fn oversized_frame_gets_a_final_error_then_the_connection_closes() {
+    let mut fleet = FleetConfig::new(1);
+    fleet.max_wait = Duration::from_millis(2);
+    let cfg = ServerConfig { max_frame: 1024, ..ServerConfig::default() };
+    let (router, data, server) = start("oversize", fleet, cfg);
+
+    let (mut stream, mut reader) = raw_conn(server.local_addr());
+    stream.write_all(&(8u32 << 20).to_be_bytes()).unwrap();
+    stream.flush().unwrap();
+    match read_response(&mut reader) {
+        Response::Error { kind, message, .. } => {
+            assert_eq!(kind, KIND_BAD_FRAME);
+            assert!(message.contains("1024"), "error cites the cap: {message}");
+        }
+        other => panic!("expected bad_frame error, got {other:?}"),
+    }
+    expect_closed(&mut reader);
+
+    // that client's misbehavior was contained to its connection
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    client.ping().unwrap();
+    let per = data.image_elems();
+    assert!(matches!(client.infer(&data.images[..per]).unwrap(), InferOutcome::Pred(_)));
+    stop(router, server);
+}
+
+/// A client that vanishes mid-frame — with a request already admitted —
+/// must not leak an admission-queue slot or wedge the fleet.
+#[test]
+fn mid_request_disconnect_leaks_no_queue_slots() {
+    let mut fleet = FleetConfig::new(1);
+    fleet.max_wait = Duration::from_millis(2);
+    fleet.queue_depth = 4;
+    let (router, data, server) = start("disconnect", fleet, ServerConfig::default());
+    let per = data.image_elems();
+
+    {
+        let (mut stream, _reader) = raw_conn(server.local_addr());
+        // one admitted request, then a partial frame, then gone
+        let image = data.images[..per].to_vec();
+        let mut w = stream.try_clone().unwrap();
+        hybridac::net::wire::write_frame(&mut w, &Request::Infer { id: 1, image }.to_json())
+            .unwrap();
+        stream.write_all(&100u32.to_be_bytes()).unwrap();
+        stream.write_all(b"only-ten-b").unwrap();
+        stream.flush().unwrap();
+        // dropping both halves closes the socket mid-frame
+    }
+
+    // the admitted request still drains; the gauge must return to zero
+    let t0 = Instant::now();
+    loop {
+        let depth = router.fleet_metrics().total.queue_depth;
+        if depth == 0 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "queue slot leaked: depth {depth}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // fleet and listener keep serving new connections at full capacity
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    client.ping().unwrap();
+    for i in 0..4 {
+        let idx = i % data.n;
+        let image = &data.images[idx * per..(idx + 1) * per];
+        assert!(matches!(client.infer(image).unwrap(), InferOutcome::Pred(_)));
+    }
+    let fm = router.fleet_metrics();
+    assert!(fm.total.requests >= 5, "admitted requests were all served: {}", fm.total.requests);
+    stop(router, server);
+}
+
+/// Pipelined requests get their responses strictly in request order.
+#[test]
+fn pipelined_requests_answered_in_order() {
+    let mut fleet = FleetConfig::new(2);
+    fleet.max_wait = Duration::from_millis(2);
+    fleet.queue_depth = 32;
+    let (router, data, server) = start("pipeline", fleet, ServerConfig::default());
+    let per = data.image_elems();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let ids: Vec<u64> = (0..16)
+        .map(|i| {
+            let idx = i % data.n;
+            client.send_infer(&data.images[idx * per..(idx + 1) * per]).unwrap()
+        })
+        .collect();
+    for id in ids {
+        match client.recv().unwrap() {
+            Response::Result { id: got, .. } | Response::Error { id: got, .. } => {
+                assert_eq!(got, id, "responses must arrive in request order")
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    stop(router, server);
+}
+
+/// The elasticity contract end to end: under sustained network load the
+/// autoscaler grows the fleet and the shed fraction falls; when the load
+/// stops it drains back down to the configured minimum.
+#[test]
+fn autoscaler_grows_under_load_and_shrinks_back_to_min() {
+    let mut fleet = FleetConfig::new(1);
+    fleet.max_wait = Duration::from_millis(1);
+    fleet.queue_depth = 2;
+    fleet = fleet.with_bounds(1, 3).with_autoscale(AutoscaleConfig {
+        interval: Duration::from_millis(50),
+        up_after: 2,
+        down_after: 3,
+        ..AutoscaleConfig::default()
+    });
+    let (router, data, server) = start("elastic", fleet, ServerConfig::default());
+    assert_eq!(router.active_replicas(), 1);
+    assert!(router.has_autoscaler());
+
+    // hammer the listener from closed-loop clients; each records
+    // (elapsed seconds, was_shed) per request
+    let stop_flag = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let addr = server.local_addr();
+    let workers: Vec<_> = (0..6)
+        .map(|c| {
+            let data = data.clone();
+            let stop_flag = stop_flag.clone();
+            std::thread::spawn(move || {
+                let mut client = NetClient::connect(addr).unwrap();
+                let per = data.image_elems();
+                let mut log: Vec<(f64, bool)> = Vec::new();
+                let mut j = 0usize;
+                while !stop_flag.load(Ordering::Relaxed) {
+                    let idx = (c + j * 6) % data.n;
+                    let image = &data.images[idx * per..(idx + 1) * per];
+                    let shed = match client.infer(image).unwrap() {
+                        InferOutcome::Pred(_) => false,
+                        InferOutcome::Denied { .. } => true,
+                    };
+                    log.push((t0.elapsed().as_secs_f64(), shed));
+                    j += 1;
+                }
+                log
+            })
+        })
+        .collect();
+
+    // growth: sustained pressure must add replicas
+    let grow_deadline = Duration::from_secs(10);
+    let grown_at = loop {
+        if router.active_replicas() >= 2 {
+            break t0.elapsed().as_secs_f64();
+        }
+        assert!(t0.elapsed() < grow_deadline, "autoscaler never grew the fleet under load");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    // keep the load on the bigger fleet long enough to compare shed rates
+    std::thread::sleep(Duration::from_millis(1200));
+    stop_flag.store(true, Ordering::Relaxed);
+    let log: Vec<(f64, bool)> =
+        workers.into_iter().flat_map(|w| w.join().expect("client thread panicked")).collect();
+
+    let shed_fraction = |lo: f64, hi: f64| {
+        let (mut sent, mut shed) = (0usize, 0usize);
+        for &(t, s) in &log {
+            if t >= lo && t < hi {
+                sent += 1;
+                shed += s as usize;
+            }
+        }
+        (sent, shed as f64 / sent.max(1) as f64)
+    };
+    // before growth vs. well after it (0.3s settle): same offered pattern,
+    // more capacity, fewer sheds
+    let (sent_before, frac_before) = shed_fraction(0.0, grown_at);
+    let (sent_after, frac_after) = shed_fraction(grown_at + 0.3, f64::INFINITY);
+    assert!(sent_before > 0 && sent_after > 0, "both phases saw traffic");
+    assert!(
+        frac_before > 0.0,
+        "a 6-client hammer against one depth-2 queue must shed (sent {sent_before})"
+    );
+    assert!(
+        frac_after < frac_before,
+        "shed fraction must fall after growth: {frac_before:.3} -> {frac_after:.3} \
+         (sent {sent_before} -> {sent_after})"
+    );
+
+    // drain: with the load gone the fleet walks back to --min-replicas
+    let t1 = Instant::now();
+    while router.active_replicas() > 1 {
+        assert!(
+            t1.elapsed() < Duration::from_secs(15),
+            "autoscaler never shrank back to min: {} replicas",
+            router.active_replicas()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let fm = router.fleet_metrics();
+    assert!(fm.scale_ups >= 1, "growth recorded in fleet metrics");
+    assert!(fm.scale_downs >= 1, "shrink recorded in fleet metrics");
+    assert_eq!(fm.total.queue_depth, 0, "drained fleet holds no queued work");
+    stop(router, server);
+}
