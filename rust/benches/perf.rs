@@ -31,7 +31,10 @@ use std::time::Duration;
 use hybridac::obs::{time_stats, StageTiming, Stopwatch};
 use hybridac::coordinator::BatchServer;
 use hybridac::eval::Method;
-use hybridac::exec::native::kernels::{crossbar_matmul_packed, PackedMatrix};
+use hybridac::exec::native::kernels::{
+    crossbar_matmul_packed, crossbar_matmul_packed_with, KernelKind, KernelPath, KernelSel,
+    PackedMatrix,
+};
 use hybridac::exec::{BackendKind, ModelExecutor, NativeConfig};
 use hybridac::runtime::{Artifact, DatasetBlob};
 use hybridac::scenario::{PerturbSpec, Scenario};
@@ -188,6 +191,48 @@ fn main() -> anyhow::Result<()> {
                 crossbar_matmul_packed(x, *m, *k, pw, 0.05, 8.0, 128, out, kthreads);
             }
         }));
+
+        // 2d. per-path comparison on the same shapes: scalar vs simd vs
+        // int, with grid-representable operands (2^-7 step, |q| <= 127) so
+        // the int path engages. Every path is bit-equal by construction;
+        // the stage rows make the speedups visible in BENCH_perf.json and
+        // feed the --baseline regression gate.
+        let mut rng_g = Rng::new(13);
+        let mut grid_problems: Vec<(usize, usize, Vec<f32>, PackedMatrix, Vec<f32>)> = shapes
+            .iter()
+            .map(|&(m, k, n)| {
+                let gridded = |rng: &mut Rng, len: usize| -> Vec<f32> {
+                    (0..len)
+                        .map(|_| ((rng.below(255) as i32) - 127) as f32 / 128.0)
+                        .collect()
+                };
+                let x = gridded(&mut rng_g, m * k);
+                let w = gridded(&mut rng_g, k * n);
+                (m, k, x, PackedMatrix::pack_with(&w, k, n, true), vec![0.0f32; m * n])
+            })
+            .collect();
+        for kind in [KernelKind::Scalar, KernelKind::Simd, KernelKind::Int] {
+            let sel = KernelSel::resolve(kind);
+            let mut served: Option<KernelPath> = None;
+            stages.push(time_stats(
+                &format!("matmul_kernels [{}]", kind.name()),
+                30,
+                || {
+                    for (m, k, x, pw, out) in grid_problems.iter_mut() {
+                        let p = crossbar_matmul_packed_with(
+                            x, *m, *k, pw, 0.05, 8.0, 128, out, kthreads, sel,
+                        );
+                        served = Some(p);
+                    }
+                },
+            ));
+            if let Some(p) = served {
+                println!("    [{}] served by the '{}' path", kind.name(), p.name());
+                if kind == KernelKind::Int && p != KernelPath::Int {
+                    eprintln!("    warning: int path did not engage on grid operands");
+                }
+            }
+        }
     }
 
     // 3. upload + execute one batch — full graph (both polarity paths)

@@ -51,7 +51,10 @@ pub mod pjrt;
 pub use cache::{CompiledGraphCache, GraphKey};
 pub use executor::ModelExecutor;
 pub use instance::{weight_fingerprint, ModelInstance};
-pub use native::{NativeBackend, NativeConfig, NativeGraph, PackedMatrix};
+pub use native::{
+    KernelKind, KernelPath, KernelSel, NativeBackend, NativeConfig, NativeGraph, PackedMatrix,
+    SimdLevel,
+};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 

@@ -1,0 +1,116 @@
+//! NEON micro-kernels (aarch64), f32 only — the integer ADC-domain path
+//! stays on the portable scalar kernel on this architecture.
+//!
+//! Same exactness contract as the AVX2 leg: `vmulq`/`vaddq` (never a fused
+//! `vfmaq`, the scalar MAC rounds twice), division stays a division, and
+//! `vrndaq_f32` is round-half-away-from-zero natively, so no bit trickery
+//! is needed for the ADC rounding. aarch64 FMIN/FMAX propagate NaN like
+//! scalar `f32::clamp`. An NR = 8 panel row is two `float32x4_t`.
+
+use core::arch::aarch64::*;
+
+use super::{PackedMatrix, MR, NR};
+
+// the kernel below hard-codes two float32x4_t per NR-wide panel row
+const _: () = assert!(NR == 8);
+
+/// `((g/lsb).round()*lsb).clamp(-clip, clip)` for 4 lanes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn adc(g: float32x4_t, lsbv: float32x4_t, clipv: float32x4_t, nclipv: float32x4_t) -> float32x4_t {
+    let q = vdivq_f32(g, lsbv);
+    let q = vmulq_f32(vrndaq_f32(q), lsbv);
+    vminq_f32(clipv, vmaxq_f32(nclipv, q))
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn tile_rows_f32<const R: usize>(
+    x: &[f32],
+    mi: usize,
+    k: usize,
+    panel: &[f32],
+    n: usize,
+    n0: usize,
+    nw: usize,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+) {
+    let lsbv = vdupq_n_f32(lsb);
+    let clipv = vdupq_n_f32(clip);
+    let nclipv = vdupq_n_f32(-clip);
+    let zero = vdupq_n_f32(0.0);
+    let mut acc_lo = [zero; R];
+    let mut acc_hi = [zero; R];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + group).min(k);
+        let mut g_lo = [zero; R];
+        let mut g_hi = [zero; R];
+        for ki in k0..k1 {
+            let w_lo = vld1q_f32(panel.as_ptr().add(ki * NR));
+            let w_hi = vld1q_f32(panel.as_ptr().add(ki * NR + 4));
+            for r in 0..R {
+                let xv = vdupq_n_f32(*x.get_unchecked((mi + r) * k + ki));
+                g_lo[r] = vaddq_f32(g_lo[r], vmulq_f32(xv, w_lo));
+                g_hi[r] = vaddq_f32(g_hi[r], vmulq_f32(xv, w_hi));
+            }
+        }
+        if lsb > 0.0 {
+            for r in 0..R {
+                acc_lo[r] = vaddq_f32(acc_lo[r], adc(g_lo[r], lsbv, clipv, nclipv));
+                acc_hi[r] = vaddq_f32(acc_hi[r], adc(g_hi[r], lsbv, clipv, nclipv));
+            }
+        } else {
+            for r in 0..R {
+                acc_lo[r] = vaddq_f32(acc_lo[r], g_lo[r]);
+                acc_hi[r] = vaddq_f32(acc_hi[r], g_hi[r]);
+            }
+        }
+        k0 = k1;
+    }
+    for r in 0..R {
+        let mut tmp = [0.0f32; NR];
+        vst1q_f32(tmp.as_mut_ptr(), acc_lo[r]);
+        vst1q_f32(tmp.as_mut_ptr().add(4), acc_hi[r]);
+        let base = (mi + r) * n + n0;
+        out[base..base + nw].copy_from_slice(&tmp[..nw]);
+    }
+}
+
+/// NEON f32 kernel over `m` rows; bit-equal to `scalar::kernel_rows`
+/// (up to the sign of zero partial sums — never their value).
+///
+/// # Safety
+/// The CPU must support neon (always true on aarch64, still checked once
+/// by `SimdLevel::detect`).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn kernel_rows_f32(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &PackedMatrix,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+) {
+    let n = w.n;
+    for p in 0..w.panels() {
+        let n0 = p * NR;
+        let nw = (n - n0).min(NR);
+        let panel = w.panel(p);
+        let mut mi = 0;
+        while mi + MR <= m {
+            tile_rows_f32::<MR>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            mi += MR;
+        }
+        while mi < m {
+            tile_rows_f32::<1>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            mi += 1;
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Scalar micro-kernels — the portable leg of the dispatch and the code
+//! the SIMD legs are pinned against.
+//!
+//! `tile_rows` / `kernel_rows` are the original packed f32 register tile
+//! (exact-equality contract with `exec::native::reference`, see the parent
+//! module docs). `kernel_rows_int` is the portable integer ADC-domain
+//! kernel: it consumes the pair-interleaved i16 panels and produces the
+//! *same* i32 group sums as the AVX2 `pmaddwd` kernel (integer addition is
+//! associative, so pairing does not change the sum), then the same f32 ADC
+//! expression on the exactly-dequantized group sum.
+
+use super::{PackedMatrix, MR, NR};
+
+/// One MR-or-smaller row tile against one panel: all `R x NR` partial sums
+/// live in registers; per wordline group the partial goes through the ADC
+/// expression (or straight accumulation for ideal readout), groups ascend.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_rows<const R: usize>(
+    x: &[f32],
+    mi: usize,
+    k: usize,
+    panel: &[f32],
+    n: usize,
+    n0: usize,
+    nw: usize,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0.0f32; NR]; R];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + group).min(k);
+        let mut g = [[0.0f32; NR]; R];
+        for ki in k0..k1 {
+            let wrow = &panel[ki * NR..(ki + 1) * NR];
+            for r in 0..R {
+                let xv = x[(mi + r) * k + ki];
+                for j in 0..NR {
+                    g[r][j] += xv * wrow[j];
+                }
+            }
+        }
+        if lsb > 0.0 {
+            for r in 0..R {
+                for j in 0..NR {
+                    acc[r][j] += ((g[r][j] / lsb).round() * lsb).clamp(-clip, clip);
+                }
+            }
+        } else {
+            for r in 0..R {
+                for j in 0..NR {
+                    acc[r][j] += g[r][j];
+                }
+            }
+        }
+        k0 = k1;
+    }
+    for r in 0..R {
+        let base = (mi + r) * n + n0;
+        out[base..base + nw].copy_from_slice(&acc[r][..nw]);
+    }
+}
+
+/// Sequential f32 kernel over `m` rows of `x` (row-major, `k` columns)
+/// against a packed matrix; writes every element of `out[m * w.n]` exactly
+/// once.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn kernel_rows(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &PackedMatrix,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+) {
+    let n = w.n;
+    for p in 0..w.panels() {
+        let n0 = p * NR;
+        let nw = (n - n0).min(NR);
+        let panel = w.panel(p);
+        let mut mi = 0;
+        while mi + MR <= m {
+            tile_rows::<MR>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            mi += MR;
+        }
+        while mi < m {
+            tile_rows::<1>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            mi += 1;
+        }
+    }
+}
+
+/// Sequential integer ADC-domain kernel: i16 activations (stride `kp`,
+/// zero-padded past `k`) against the pair-interleaved i16 panels, i32
+/// accumulation per wordline group, the shared f32 ADC expression on the
+/// exactly-dequantized group sum `s * sfs[panel]`. The engagement
+/// preconditions (see `int_plan`) guarantee every step is exact, so the
+/// output is bit-equal to the f32 kernels'.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn kernel_rows_int(
+    qx: &[i16],
+    m: usize,
+    k: usize,
+    w: &PackedMatrix,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    sfs: &[f32],
+    out: &mut [f32],
+) {
+    let ints = w.int.as_ref().expect("int kernel without int panels");
+    let kp = ints.kp;
+    let n = w.n;
+    for p in 0..w.panels() {
+        let n0 = p * NR;
+        let nw = (n - n0).min(NR);
+        let panel = ints.panel(p);
+        let sf = sfs[p];
+        for mi in 0..m {
+            let xrow = &qx[mi * kp..(mi + 1) * kp];
+            let mut acc = [0.0f32; NR];
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + group).min(k);
+                let mut s = [0i32; NR];
+                for ki in k0..k1 {
+                    let xv = xrow[ki] as i32;
+                    if xv != 0 {
+                        // element (ki, j) of the pair-interleaved panel
+                        let base = (ki >> 1) * 2 * NR + (ki & 1);
+                        for j in 0..NR {
+                            s[j] += xv * panel[base + 2 * j] as i32;
+                        }
+                    }
+                }
+                if lsb > 0.0 {
+                    for j in 0..NR {
+                        let g = s[j] as f32 * sf;
+                        acc[j] += ((g / lsb).round() * lsb).clamp(-clip, clip);
+                    }
+                } else {
+                    for j in 0..NR {
+                        acc[j] += s[j] as f32 * sf;
+                    }
+                }
+                k0 = k1;
+            }
+            let base = mi * n + n0;
+            out[base..base + nw].copy_from_slice(&acc[..nw]);
+        }
+    }
+}

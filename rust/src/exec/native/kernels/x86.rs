@@ -1,0 +1,236 @@
+//! AVX2 micro-kernels (x86_64).
+//!
+//! The f32 kernel reproduces the scalar tile op-for-op: broadcast one
+//! activation, multiply against an 8-wide panel row, add — deliberately
+//! `mul` + `add` and **not** FMA, because the exactness contract is "the
+//! same f32 ops in the same order as `exec::native::reference`", and the
+//! scalar MAC rounds twice. The backend therefore detects (and requires)
+//! `avx2+fma` but never emits a fused multiply-add on this path.
+//!
+//! The ADC needs round-half-away-from-zero (`f32::round`);
+//! `_mm256_round_ps` only offers the IEEE ties-to-even mode, so
+//! [`round_half_away`] builds it from an exact truncate: the fraction
+//! `v - trunc(v)` is exact (Sterbenz), comparing `|frac| >= 0.5` is exact,
+//! and the conditional `±1.0` step is exact. NaN and ±inf fall through
+//! unchanged (the compare is ordered, so NaN selects no step).
+//!
+//! The integer kernel consumes the pair-interleaved i16 panels with
+//! `pmaddwd` (`_mm256_madd_epi16`): each 32-bit lane multiplies two
+//! adjacent-`k` i16 pairs and sums them — exact because the grid bound
+//! keeps `|q| <= 32767`, so a pair sum is `< 2^31`. Integer addition is
+//! associative, so the pairwise sum equals the scalar ascending sum, and
+//! the engagement plan bounds `|S| <= 2^24` so `_mm256_cvtepi32_ps` and
+//! the power-of-two dequantize are both exact.
+
+use core::arch::x86_64::*;
+
+use super::{PackedMatrix, MR, NR};
+
+// the kernels below hard-code one __m256 per NR-wide panel row
+const _: () = assert!(NR == 8);
+
+/// `f32::round` (ties away from zero) for 8 lanes. See module docs.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn round_half_away(v: __m256) -> __m256 {
+    let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(v);
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+    let frac = _mm256_sub_ps(v, t);
+    let afrac = _mm256_and_ps(frac, absmask);
+    let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(afrac, _mm256_set1_ps(0.5));
+    let sign = _mm256_andnot_ps(absmask, v);
+    let step = _mm256_or_ps(_mm256_set1_ps(1.0), sign); // ±1.0, v's sign
+    _mm256_add_ps(t, _mm256_and_ps(ge, step))
+}
+
+/// The shared ADC expression `((g/lsb).round()*lsb).clamp(-clip, clip)`.
+/// The min/max operand order makes a NaN group sum propagate exactly like
+/// scalar `f32::clamp` (x86 min/max return the second operand on NaN).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn adc(g: __m256, lsbv: __m256, clipv: __m256, nclipv: __m256) -> __m256 {
+    let q = _mm256_div_ps(g, lsbv);
+    let q = _mm256_mul_ps(round_half_away(q), lsbv);
+    _mm256_min_ps(clipv, _mm256_max_ps(nclipv, q))
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_rows_f32<const R: usize>(
+    x: &[f32],
+    mi: usize,
+    k: usize,
+    panel: &[f32],
+    n: usize,
+    n0: usize,
+    nw: usize,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+) {
+    let lsbv = _mm256_set1_ps(lsb);
+    let clipv = _mm256_set1_ps(clip);
+    let nclipv = _mm256_set1_ps(-clip);
+    let mut acc = [_mm256_setzero_ps(); R];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + group).min(k);
+        let mut g = [_mm256_setzero_ps(); R];
+        for ki in k0..k1 {
+            let wv = _mm256_loadu_ps(panel.as_ptr().add(ki * NR));
+            for r in 0..R {
+                let xv = _mm256_set1_ps(*x.get_unchecked((mi + r) * k + ki));
+                g[r] = _mm256_add_ps(g[r], _mm256_mul_ps(xv, wv));
+            }
+        }
+        if lsb > 0.0 {
+            for r in 0..R {
+                acc[r] = _mm256_add_ps(acc[r], adc(g[r], lsbv, clipv, nclipv));
+            }
+        } else {
+            for r in 0..R {
+                acc[r] = _mm256_add_ps(acc[r], g[r]);
+            }
+        }
+        k0 = k1;
+    }
+    for r in 0..R {
+        let mut tmp = [0.0f32; NR];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc[r]);
+        let base = (mi + r) * n + n0;
+        out[base..base + nw].copy_from_slice(&tmp[..nw]);
+    }
+}
+
+/// AVX2 f32 kernel over `m` rows; bit-equal to `scalar::kernel_rows`
+/// (up to the sign of zero partial sums — never their value).
+///
+/// # Safety
+/// The CPU must support avx2 (checked once by `SimdLevel::detect`).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn kernel_rows_f32(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &PackedMatrix,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    out: &mut [f32],
+) {
+    let n = w.n;
+    for p in 0..w.panels() {
+        let n0 = p * NR;
+        let nw = (n - n0).min(NR);
+        let panel = w.panel(p);
+        let mut mi = 0;
+        while mi + MR <= m {
+            tile_rows_f32::<MR>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            mi += MR;
+        }
+        while mi < m {
+            tile_rows_f32::<1>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            mi += 1;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_rows_int<const R: usize>(
+    qx: &[i16],
+    mi: usize,
+    k: usize,
+    kp: usize,
+    panel: &[i16],
+    n: usize,
+    n0: usize,
+    nw: usize,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    sf: f32,
+    out: &mut [f32],
+) {
+    let lsbv = _mm256_set1_ps(lsb);
+    let clipv = _mm256_set1_ps(clip);
+    let nclipv = _mm256_set1_ps(-clip);
+    let sfv = _mm256_set1_ps(sf);
+    let mut acc = [_mm256_setzero_ps(); R];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + group).min(k);
+        let mut s = [_mm256_setzero_si256(); R];
+        // group boundaries are even (or the group spans all of k), so the
+        // pair walk never straddles a boundary; the odd-k tail pair reads
+        // the zero padding on both operands
+        for pi in (k0 / 2)..k1.div_ceil(2) {
+            let wv = _mm256_loadu_si256(panel.as_ptr().add(pi * 2 * NR) as *const __m256i);
+            for r in 0..R {
+                let row = (mi + r) * kp;
+                let lo = *qx.get_unchecked(row + 2 * pi) as u16 as u32;
+                let hi = *qx.get_unchecked(row + 2 * pi + 1) as u16 as u32;
+                let xb = _mm256_set1_epi32(((hi << 16) | lo) as i32);
+                s[r] = _mm256_add_epi32(s[r], _mm256_madd_epi16(wv, xb));
+            }
+        }
+        if lsb > 0.0 {
+            for r in 0..R {
+                let g = _mm256_mul_ps(_mm256_cvtepi32_ps(s[r]), sfv);
+                acc[r] = _mm256_add_ps(acc[r], adc(g, lsbv, clipv, nclipv));
+            }
+        } else {
+            for r in 0..R {
+                let g = _mm256_mul_ps(_mm256_cvtepi32_ps(s[r]), sfv);
+                acc[r] = _mm256_add_ps(acc[r], g);
+            }
+        }
+        k0 = k1;
+    }
+    for r in 0..R {
+        let mut tmp = [0.0f32; NR];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acc[r]);
+        let base = (mi + r) * n + n0;
+        out[base..base + nw].copy_from_slice(&tmp[..nw]);
+    }
+}
+
+/// AVX2 integer ADC-domain kernel; bit-equal to `scalar::kernel_rows_int`
+/// whenever the engagement plan admitted the operands.
+///
+/// # Safety
+/// The CPU must support avx2 (checked once by `SimdLevel::detect`).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn kernel_rows_int(
+    qx: &[i16],
+    m: usize,
+    k: usize,
+    w: &PackedMatrix,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+    sfs: &[f32],
+    out: &mut [f32],
+) {
+    let ints = w.int.as_ref().expect("int kernel without int panels");
+    let kp = ints.kp;
+    let n = w.n;
+    for p in 0..w.panels() {
+        let n0 = p * NR;
+        let nw = (n - n0).min(NR);
+        let panel = ints.panel(p);
+        let sf = sfs[p];
+        let mut mi = 0;
+        while mi + MR <= m {
+            tile_rows_int::<MR>(qx, mi, k, kp, panel, n, n0, nw, lsb, clip, group, sf, out);
+            mi += MR;
+        }
+        while mi < m {
+            tile_rows_int::<1>(qx, mi, k, kp, panel, n, n0, nw, lsb, clip, group, sf, out);
+            mi += 1;
+        }
+    }
+}

@@ -24,7 +24,9 @@ use crate::quantize::fake_quant;
 use crate::tensor::Tensor;
 
 use super::arena::Arena;
-use super::kernels::{crossbar_matmul_packed, f16_round, PackedMatrix};
+use super::kernels::{
+    crossbar_matmul_packed_with, f16_round, KernelSel, PackedMatrix, PAR_MIN_COST,
+};
 use super::{LayerArgs, NativeArg, NativeGraph};
 
 /// Shared activation quantization width (paper §2.2, `layers.py::ACT_BITS`).
@@ -48,6 +50,7 @@ fn apply_act(v: f32, act: Act) -> f32 {
 /// One matmul of the layer contract: `x @ w` with per-group ADC readout
 /// into `out` (fully overwritten). A pre-packed operand is used as-is; a
 /// plain tensor is packed for this call.
+#[allow(clippy::too_many_arguments)]
 fn mat_into(
     x: &Tensor,
     w: NativeArg,
@@ -56,6 +59,7 @@ fn mat_into(
     group: usize,
     out: &mut [f32],
     threads: usize,
+    sel: KernelSel,
 ) {
     let (m, k) = x.dims2();
     let tmp: PackedMatrix;
@@ -63,12 +67,12 @@ fn mat_into(
         NativeArg::Packed(p) => p,
         NativeArg::Plain(t) => {
             let (kw, n) = t.dims2();
-            tmp = PackedMatrix::pack(&t.data, kw, n);
+            tmp = PackedMatrix::pack_with(&t.data, kw, n, sel.try_int());
             &tmp
         }
     };
     debug_assert_eq!(k, packed.dims().0);
-    crossbar_matmul_packed(&x.data, m, k, packed, lsb, clip, group, out, threads);
+    crossbar_matmul_packed_with(&x.data, m, k, packed, lsb, clip, group, out, threads, sel);
 }
 
 pub(super) struct Interp<'a> {
@@ -79,6 +83,7 @@ pub(super) struct Interp<'a> {
     pub(super) next: usize,
     pub(super) arena: &'a mut Arena,
     pub(super) threads: usize,
+    pub(super) sel: KernelSel,
 }
 
 impl Interp<'_> {
@@ -120,7 +125,7 @@ impl Interp<'_> {
         let mut ya = self.arena.take_zeroed(m * n);
         {
             let _s = trace::span("xbar/wa1", "exec");
-            mat_into(patches, a.wa1, a.lsb, a.clip, g.group, &mut ya, self.threads);
+            mat_into(patches, a.wa1, a.lsb, a.clip, g.group, &mut ya, self.threads, self.sel);
         }
         if let Some(wa2) = a.wa2 {
             ensure!(
@@ -135,7 +140,7 @@ impl Interp<'_> {
             let mut y2 = self.arena.take_zeroed(m * n);
             {
                 let _s = trace::span("xbar/wa2", "exec");
-                mat_into(patches, wa2, a.lsb, a.clip, g.group, &mut y2, self.threads);
+                mat_into(patches, wa2, a.lsb, a.clip, g.group, &mut y2, self.threads, self.sel);
                 for (v, s) in ya.iter_mut().zip(&y2) {
                     *v -= s;
                 }
@@ -145,7 +150,7 @@ impl Interp<'_> {
         let mut yd = self.arena.take_zeroed(m * n);
         {
             let _s = trace::span("digital/wd", "exec");
-            mat_into(patches, a.wd, -1.0, 1.0, k.max(1), &mut yd, self.threads);
+            mat_into(patches, a.wd, -1.0, 1.0, k.max(1), &mut yd, self.threads, self.sel);
         }
         // FP16 merge of analog/digital partial results (paper §2.2)
         {
@@ -497,12 +502,13 @@ fn im2col_into(x: &Tensor, r: usize, stride: usize, pad: usize, out: &mut [f32])
 /// (and `threads <= 1`) stay on the sequential path — the spawn overhead
 /// only pays for itself on large spatial layers.
 fn im2col_into_par(x: &Tensor, r: usize, stride: usize, pad: usize, out: &mut [f32], threads: usize) {
-    /// Patch-matrix elements below which sharding is not worth a spawn.
-    const MIN_PAR_ELEMS: usize = 1 << 16;
     let cols = x.shape[3] * r * r;
     let nrows = out.len() / cols.max(1);
     let threads = threads.max(1).min(nrows.max(1));
-    if threads <= 1 || out.len() < MIN_PAR_ELEMS {
+    // shares the kernels' parallel-dispatch scale: one patch element is
+    // roughly half a matmul flop's worth of work, so `2 * elems` against
+    // the same PAR_MIN_COST floor keeps the historical 2^16 cutoff
+    if threads <= 1 || out.len().saturating_mul(2) < PAR_MIN_COST {
         im2col_rows(x, r, stride, pad, 0, out);
         return;
     }
@@ -661,7 +667,7 @@ mod tests {
 
     #[test]
     fn im2col_par_bit_identical_at_any_thread_count() {
-        // a spatial layer big enough to cross MIN_PAR_ELEMS: 2x34x34x8
+        // a spatial layer big enough to cross the parallel cutoff: 2x34x34x8
         // with r=3 pad=1 stride=1 -> 2*34*34 rows x 72 cols ≈ 166k elems
         let (b, h, w, c) = (2usize, 34usize, 34usize, 8usize);
         let mut src = crate::util::rng::Rng::new(404);

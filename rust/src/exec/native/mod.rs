@@ -56,7 +56,10 @@ pub mod kernels;
 mod layers;
 pub mod reference;
 
-pub use kernels::{crossbar_matmul, f16_round, matmul, PackedMatrix};
+pub use kernels::{
+    crossbar_matmul, f16_round, matmul, KernelKind, KernelPath, KernelSel, PackedMatrix,
+    SimdLevel,
+};
 pub use layers::{conv_out_hw, im2col};
 
 use arena::{Arena, ScratchPool};
@@ -74,11 +77,20 @@ const SUPPORTED_FAMILIES: &[&str] =
 pub struct NativeConfig {
     /// Worker threads for the matmul row sharding (0 = auto).
     pub threads: usize,
+    /// Which micro-kernel family the dispatch may use (default: auto —
+    /// int where it engages exactly, else SIMD where detected, else
+    /// scalar). Never changes results, only throughput.
+    pub kernel: KernelKind,
 }
 
 impl NativeConfig {
     pub fn with_threads(threads: usize) -> NativeConfig {
-        NativeConfig { threads }
+        NativeConfig { threads, kernel: KernelKind::default() }
+    }
+
+    pub fn with_kernel(mut self, kernel: KernelKind) -> NativeConfig {
+        self.kernel = kernel;
+        self
     }
 
     /// The concrete worker count (`threads`, or the machine's available
@@ -100,6 +112,9 @@ pub struct NativeBackend {
     cache: CompiledGraphCache<NativeGraph>,
     /// Resolved worker count (>= 1) for the kernel row sharding.
     threads: usize,
+    /// Kernel selection (requested kind + detected SIMD level), resolved
+    /// once at construction and passed through every execution.
+    sel: KernelSel,
     pool: ScratchPool,
     /// `exec_native_runs_total` in the global metric registry, resolved
     /// once so the per-call cost is a single atomic add.
@@ -118,6 +133,7 @@ impl NativeBackend {
         NativeBackend {
             cache: CompiledGraphCache::new(),
             threads: cfg.resolve_threads().max(1),
+            sel: KernelSel::resolve(cfg.kernel),
             pool: ScratchPool::new(),
             runs: global().counter("exec_native_runs_total"),
             compiles: global().counter("exec_native_compiles_total"),
@@ -142,7 +158,11 @@ impl ExecBackend for NativeBackend {
     }
 
     fn platform(&self) -> String {
-        format!("native (pure-rust packed kernels, {} threads)", self.threads)
+        format!(
+            "native (pure-rust packed kernels, {} threads, {})",
+            self.threads,
+            self.sel.describe()
+        )
     }
 
     // `Executable` is !Send only because of its (cfg-gated) PJRT variant;
@@ -168,7 +188,12 @@ impl ExecBackend for NativeBackend {
     fn upload_weight(&self, t: &Tensor) -> Result<DeviceBuffer> {
         if t.shape.len() == 2 {
             let (k, n) = t.dims2();
-            Ok(DeviceBuffer::HostPacked(PackedMatrix::pack(&t.data, k, n)))
+            Ok(DeviceBuffer::HostPacked(PackedMatrix::pack_with(
+                &t.data,
+                k,
+                n,
+                self.sel.try_int(),
+            )))
         } else {
             self.upload(t)
         }
@@ -192,7 +217,7 @@ impl ExecBackend for NativeBackend {
             }
         }
         let mut arena = self.pool.take();
-        let result = graph.run_args(&args, self.threads, &mut arena);
+        let result = graph.run_args(&args, self.threads, &mut arena, self.sel);
         self.pool.put(arena);
         result
     }
@@ -307,7 +332,7 @@ impl NativeGraph {
     /// pre-packs weights, pools arenas, and shards rows across threads.
     pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<f32>> {
         let args: Vec<NativeArg> = inputs.iter().map(|t| NativeArg::Plain(t)).collect();
-        self.run_args(&args, 1, &mut Arena::new())
+        self.run_args(&args, 1, &mut Arena::new(), KernelSel::auto())
     }
 
     /// Execute the graph; `threads` shards the matmul row dimension
@@ -318,6 +343,7 @@ impl NativeGraph {
         inputs: &[NativeArg],
         threads: usize,
         arena: &mut Arena,
+        sel: KernelSel,
     ) -> Result<Vec<f32>> {
         ensure!(
             inputs.len() == self.n_args(),
@@ -358,7 +384,7 @@ impl NativeGraph {
         }
 
         let threads = threads.max(1);
-        let mut interp = layers::Interp { g: self, args, next: 0, arena, threads };
+        let mut interp = layers::Interp { g: self, args, next: 0, arena, threads, sel };
         let logits = layers::forward(&self.family, &mut interp, x)?;
         let consumed = interp.next;
         ensure!(

@@ -8,6 +8,7 @@
 //!
 //! Not used on any execution path: correctness oracle only.
 
+use crate::quantize::intgrid;
 use crate::tensor::Tensor;
 
 /// `x[M,K] @ w[K,N]` per wordline group of `group` rows; each group's
@@ -56,6 +57,117 @@ pub fn reference_crossbar_matmul(
         }
     }
     Tensor::new(vec![m, n], out)
+}
+
+/// Integer ADC-domain oracle: the crossbar matmul carried out with i64
+/// group accumulation on exact power-of-two grids, independent of the
+/// packed int kernel's layout. Returns `None` when the operands do not
+/// admit the integer path under the same preconditions the production
+/// dispatch uses; when it returns `Some`, the result is **bit-equal** to
+/// [`reference_crossbar_matmul`].
+///
+/// Equivalence proof (`tests/kernel_props.rs` pins it empirically):
+///
+/// 1. Every activation is exactly `qx * 2^ex` and every weight in an
+///    NR-column block exactly `qw * 2^ew(b)` (|q| <= 32767), per the
+///    bit-pattern scans of `quantize::intgrid` — no rounding happened to
+///    get onto the grid; the values *are* the grid points.
+/// 2. A product term is `qx*qw * 2^(ex+ew)`. With the per-block bound
+///    `geff * ax * aw <= 2^24` every term and every ascending partial sum
+///    within a group is an integer `S` with `|S| <= 2^24` times the scale
+///    `2^(ex+ew)`, which this oracle requires to be a normal power of two
+///    (`ex+ew` in `[-126, 100]`). Integers up to 2^24 scale exactly in
+///    f32, so each f32 addition in the float path is exact — the float
+///    group sum equals `S * 2^(ex+ew)` with no rounding anywhere.
+/// 3. The int path computes the same `S` by i64 (or i32 SIMD) addition —
+///    integer addition is associative, so accumulation order is free —
+///    and dequantizes `S as f32 * 2^(ex+ew)`, both steps exact by (2).
+///    Hence the ADC sees the *identical* f32 group sum, the shared ADC
+///    expression `((g/lsb).round()*lsb).clamp(-clip,clip)` is evaluated
+///    on identical inputs, and the f32 accumulation across groups is the
+///    same op sequence — bit equality end to end.
+/// 4. Group boundaries must fall on even contraction indices (or one
+///    group must span all of K) so the SIMD pair-sum (`pmaddwd`) never
+///    straddles an ADC readout; the oracle enforces the same rule so its
+///    engagement domain matches the production dispatch.
+pub fn reference_crossbar_int(
+    x: &Tensor,
+    w: &Tensor,
+    lsb: f32,
+    clip: f32,
+    group: usize,
+) -> Option<Tensor> {
+    use super::kernels::NR;
+    let (m, k) = x.dims2();
+    let (kw, n) = w.dims2();
+    assert_eq!(k, kw, "contraction mismatch: {k} vs {kw}");
+    let group = group.max(1);
+    if group % 2 != 0 && group < k {
+        return None;
+    }
+    let gx = intgrid::scan(&x.data)?;
+    // per NR-column block (mirrors the packed panels): grid + scale
+    let blocks = n.div_ceil(NR).max(1);
+    let geff = group.min(k).max(1) as i64;
+    let mut grids = Vec::with_capacity(blocks);
+    for b in 0..blocks {
+        let n0 = b * NR;
+        let nw = (n - n0).min(NR);
+        let mut s = intgrid::GridScan::new();
+        for ki in 0..k {
+            for &wv in &w.row(ki)[n0..n0 + nw] {
+                if !s.feed(wv) {
+                    return None;
+                }
+            }
+        }
+        let gw = s.finish()?;
+        let bound = geff.checked_mul(gx.amax)?.checked_mul(gw.amax)?;
+        if bound > 1 << 24 {
+            return None;
+        }
+        let e = gx.exp + gw.exp;
+        if !(-126..=100).contains(&e) {
+            return None;
+        }
+        grids.push(gw);
+    }
+    let mut out = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let xrow = x.row(mi);
+        for b in 0..blocks {
+            let n0 = b * NR;
+            let nw = (n - n0).min(NR);
+            let sf = intgrid::pow2f(gx.exp + grids[b].exp);
+            let orow = &mut out[mi * n + n0..mi * n + n0 + nw];
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + group).min(k);
+                let mut s = [0i64; NR];
+                for ki in k0..k1 {
+                    let qx = intgrid::to_int(xrow[ki], gx.exp);
+                    if qx != 0 {
+                        let wrow = &w.row(ki)[n0..n0 + nw];
+                        for (j, &wv) in wrow.iter().enumerate() {
+                            s[j] += qx * intgrid::to_int(wv, grids[b].exp);
+                        }
+                    }
+                }
+                if lsb > 0.0 {
+                    for (o, &sj) in orow.iter_mut().zip(s.iter()) {
+                        let g = sj as f32 * sf;
+                        *o += ((g / lsb).round() * lsb).clamp(-clip, clip);
+                    }
+                } else {
+                    for (o, &sj) in orow.iter_mut().zip(s.iter()) {
+                        *o += sj as f32 * sf;
+                    }
+                }
+                k0 = k1;
+            }
+        }
+    }
+    Some(Tensor::new(vec![m, n], out))
 }
 
 /// Plain f32 matmul — the seed scalar implementation of the exact digital

@@ -38,7 +38,7 @@ use std::time::{Duration, Instant};
 
 use hybridac::coordinator::{run_scenario, RunReport};
 use hybridac::eval::{ExperimentConfig, Method};
-use hybridac::exec::BackendKind;
+use hybridac::exec::{BackendKind, KernelKind};
 use hybridac::hwmodel::all_architectures;
 use hybridac::report;
 use hybridac::runtime::{Artifact, DatasetBlob};
@@ -51,6 +51,7 @@ use hybridac::util::cli::Args;
 const FLAGS: &[&str] = &[
     "model", "repeats", "n-eval", "frac", "adc", "target", "requests", "replicas", "window-ms",
     "queue-depth", "probe", "probe-interval-ms", "seed", "spec", "name", "backend", "threads",
+    "kernel",
     "workers", "out", "trace", "metrics-out", "listen", "min-replicas", "max-replicas",
     "scale-interval-ms", "serve-ms",
 ];
@@ -87,6 +88,8 @@ fn main() -> Result<()> {
                  backend: --backend pjrt-cpu|native (native needs no xla; \n\
                  \x20        `--model synthetic --backend native` needs no artifacts)\n\
                  \x20        --threads N native kernel workers (0 = auto, default)\n\
+                 \x20        --kernel auto|scalar|simd|int native micro-kernel path\n\
+                 \x20        (all paths bit-equal; int engages on exact i16 grids)\n\
                  observability: --trace FILE (Chrome trace_event JSON)\n\
                  \x20              --metrics-out FILE (Prometheus text snapshot)\n\
                  see README.md; real artifacts must be built first (`make artifacts`)"
@@ -258,6 +261,9 @@ fn scenario_cmd(args: &Args) -> Result<()> {
         sc.backend = BackendKind::parse(b)?;
     }
     sc.threads = args.get_usize("threads", sc.threads)?;
+    if let Some(ks) = args.get("kernel") {
+        sc.kernel = KernelKind::parse(ks)?;
+    }
     let dir = hybridac::artifacts_dir();
     ensure_artifact(&dir, &sc.model, sc.backend)?;
     println!("scenario '{}' on {} [{}]:", sc.name, sc.model, sc.backend.name());
@@ -291,7 +297,11 @@ fn run(args: &Args) -> Result<()> {
     ] {
         let sc = Scenario::from_config(label, &tag, &base_cfg(args, method)?)
             .with_backend(backend)
-            .with_threads(args.get_usize("threads", 0)?);
+            .with_threads(args.get_usize("threads", 0)?)
+            .with_kernel(match args.get("kernel") {
+                Some(ks) => KernelKind::parse(ks)?,
+                None => KernelKind::default(),
+            });
         let rep = run_scenario(&dir, &sc, 250)?;
         print_report(&rep);
     }
@@ -388,6 +398,9 @@ fn run_study(mut study: Study, args: &Args) -> Result<()> {
         study.base.backend = BackendKind::parse(b)?;
     }
     study.base.threads = args.get_usize("threads", study.base.threads)?;
+    if let Some(ks) = args.get("kernel") {
+        study.base.kernel = KernelKind::parse(ks)?;
+    }
     let runner = StudyRunner::new(hybridac::artifacts_dir())
         .with_workers(args.get_usize("workers", 0)?);
     let report = runner.run(&study)?;
@@ -503,6 +516,9 @@ fn serve(args: &Args) -> Result<()> {
         sc.backend = BackendKind::parse(b)?;
     }
     sc.threads = args.get_usize("threads", sc.threads)?;
+    if let Some(ks) = args.get("kernel") {
+        sc.kernel = KernelKind::parse(ks)?;
+    }
     let tag = sc.model.clone();
     ensure_artifact(&dir, &tag, sc.backend)?;
     let data = Arc::new({

@@ -1,0 +1,237 @@
+//! Exact power-of-two integer grids — the dispatch probe for the integer
+//! ADC-domain kernel (`exec::native::kernels`).
+//!
+//! The int kernel may only engage when every operand is *exactly* an
+//! integer multiple of a common power-of-two step: `v = q * 2^exp` with
+//! `q` an i16. [`GridScan`] decides that from the f32 bit patterns alone,
+//! with no tolerance: for each nonzero value it extracts
+//!
+//! * its **trailing exponent** `texp` — the exponent of its lowest set
+//!   significand bit (the coarsest grid the value sits on), and
+//! * its **value exponent** `vexp` — `floor(log2 |v|)`.
+//!
+//! A set of values shares an i16 grid iff `max(vexp) - min(texp) <= 14`:
+//! the common step is `2^min(texp)`, and every quotient then satisfies
+//! `|q| < 2^15` (so it fits an i16, and products of two such grids fit the
+//! AVX2 `pmaddwd` pair-sum headroom). The criterion is integer-only and
+//! monotone, so the scan early-bails on the first value that breaks it —
+//! on continuous (noise-perturbed) data that is typically within a few
+//! elements, which is what makes probing at dispatch time affordable.
+//!
+//! Note that `fake_quant_val` outputs (`(q+zp)/scale`) are per-value
+//! rounded *quotients*, not exact grid multiples, unless the scale happens
+//! to be a power of two — so the probe really can go either way at
+//! runtime, and the kernel falls back to f32 (bit-identically) whenever it
+//! fails.
+
+/// A power-of-two integer grid: every scanned value is exactly
+/// `q * 2^exp` with `|q| <= amax <= 32767`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IntGrid {
+    /// Exponent of the common step (the grid is `2^exp`-spaced).
+    pub exp: i32,
+    /// Largest |quotient| on the grid (bounds accumulator growth).
+    pub amax: i64,
+}
+
+/// Incremental scan for a common i16 power-of-two grid. Feed values one
+/// at a time; the scan poisons itself (and keeps returning `false`) as
+/// soon as the running set no longer fits, so callers can bail early.
+pub struct GridScan {
+    /// Minimum trailing exponent seen (the candidate grid step).
+    min_exp: i32,
+    /// Maximum value exponent seen.
+    max_vexp: i32,
+    max_abs: f32,
+    seen: bool,
+    ok: bool,
+}
+
+impl GridScan {
+    pub fn new() -> GridScan {
+        GridScan { min_exp: i32::MAX, max_vexp: i32::MIN, max_abs: 0.0, seen: false, ok: true }
+    }
+
+    /// Feed one value. Returns `false` once the set cannot share an i16
+    /// power-of-two grid (non-finite value, or dynamic range past 2^14).
+    #[inline]
+    pub fn feed(&mut self, v: f32) -> bool {
+        if !self.ok {
+            return false;
+        }
+        if v == 0.0 {
+            return true; // zeros sit on every grid
+        }
+        let bits = v.to_bits();
+        let exp_bits = ((bits >> 23) & 0xff) as i32;
+        let mant = bits & 0x007f_ffff;
+        if exp_bits == 0xff {
+            self.ok = false; // inf / nan never sit on a grid
+            return false;
+        }
+        let (texp, vexp) = if exp_bits == 0 {
+            // subnormal: value = mant * 2^-149
+            (-149 + mant.trailing_zeros() as i32, -149 + (31 - mant.leading_zeros() as i32))
+        } else {
+            let sig = mant | 0x0080_0000; // implicit leading 1
+            (exp_bits - 127 - 23 + sig.trailing_zeros() as i32, exp_bits - 127)
+        };
+        self.seen = true;
+        self.min_exp = self.min_exp.min(texp);
+        self.max_vexp = self.max_vexp.max(vexp);
+        let a = v.abs();
+        if a > self.max_abs {
+            self.max_abs = a;
+        }
+        // |q| = |v| / 2^min_exp < 2^(vexp - min_exp + 1) <= 2^15
+        if self.max_vexp - self.min_exp > 14 {
+            self.ok = false;
+            return false;
+        }
+        true
+    }
+
+    /// The grid, if every fed value fit one. An all-zero (or empty) scan
+    /// reports the trivial grid `{exp: 0, amax: 0}`.
+    pub fn finish(&self) -> Option<IntGrid> {
+        if !self.ok {
+            return None;
+        }
+        if !self.seen {
+            return Some(IntGrid { exp: 0, amax: 0 });
+        }
+        let exp = self.min_exp;
+        // exact: max_abs is q * 2^exp with q <= 32767, and scaling an f64
+        // by a power of two is exact
+        let amax = (self.max_abs as f64 * 2f64.powi(-exp)) as i64;
+        Some(IntGrid { exp, amax })
+    }
+}
+
+impl Default for GridScan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Scan a whole slice for a common grid.
+pub fn scan(values: &[f32]) -> Option<IntGrid> {
+    let mut s = GridScan::new();
+    for &v in values {
+        if !s.feed(v) {
+            return None;
+        }
+    }
+    s.finish()
+}
+
+/// The exact quotient `v / 2^exp` of a value known to sit on the grid.
+/// Exact for every f32 and every `exp >= -149` (f64 holds the product).
+#[inline]
+pub fn to_int(v: f32, exp: i32) -> i64 {
+    (v as f64 * 2f64.powi(-exp)) as i64
+}
+
+/// `2^e` as an f32, for `e` in the normal range `[-126, 127]`.
+#[inline]
+pub fn pow2f(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e), "pow2f exponent {e} outside the normal range");
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Quantize `rows` rows of `x` (row-major, `k` columns) onto the grid
+/// `2^exp`, writing i16 rows of stride `kp >= k` into `out` (columns past
+/// `k` zero-padded — the int kernel's even-pair padding). Every value must
+/// already be known (via [`scan`]) to sit on the grid.
+pub fn quantize_rows(x: &[f32], rows: usize, k: usize, kp: usize, exp: i32, out: &mut [i16]) {
+    debug_assert!(kp >= k);
+    debug_assert!(x.len() >= rows * k);
+    debug_assert!(out.len() >= rows * kp);
+    let s = 2f64.powi(-exp);
+    for r in 0..rows {
+        let src = &x[r * k..(r + 1) * k];
+        let dst = &mut out[r * kp..(r + 1) * kp];
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = (v as f64 * s) as i16;
+        }
+        for d in dst[k..].iter_mut() {
+            *d = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_grids_are_recognized() {
+        // multiples of 2^-7, |q| <= 127
+        let vals: Vec<f32> = (-127i32..=127).map(|q| q as f32 / 128.0).collect();
+        let g = scan(&vals).expect("exact grid");
+        assert_eq!(g.exp, -7);
+        assert_eq!(g.amax, 127);
+        for &v in &vals {
+            let q = to_int(v, g.exp);
+            assert_eq!(q as f32 * pow2f(g.exp), v, "{v} round-trips through the grid");
+        }
+    }
+
+    #[test]
+    fn continuous_data_bails_fast() {
+        // 0.3 is not a power-of-two multiple of anything near 0.1
+        assert_eq!(scan(&[0.1f32, 0.3]), None);
+        let mut s = GridScan::new();
+        assert!(s.feed(0.5));
+        assert!(!s.feed(0.1f32 + 0.2), "poisoned on the first off-grid value");
+        assert!(!s.feed(0.5), "stays poisoned");
+        assert_eq!(s.finish(), None);
+    }
+
+    #[test]
+    fn dynamic_range_limit_is_fourteen() {
+        // 2^14 apart: q in {1, 2^14} fits i16
+        assert!(scan(&[1.0f32, 16384.0]).is_some());
+        // 2^15 apart: q would need 2^15 — off the i16 grid
+        assert_eq!(scan(&[1.0f32, 32768.0]), None);
+        assert_eq!(scan(&[f32::INFINITY]), None);
+        assert_eq!(scan(&[f32::NAN]), None);
+    }
+
+    #[test]
+    fn zeros_and_empty_are_the_trivial_grid() {
+        assert_eq!(scan(&[]), Some(IntGrid { exp: 0, amax: 0 }));
+        assert_eq!(scan(&[0.0, -0.0]), Some(IntGrid { exp: 0, amax: 0 }));
+        // zeros never constrain a real grid
+        let g = scan(&[0.0, 0.25, -0.75]).unwrap();
+        assert_eq!(g.exp, -2);
+        assert_eq!(g.amax, 3);
+    }
+
+    #[test]
+    fn subnormals_scan_exactly() {
+        let tiny = f32::from_bits(0b110); // 6 * 2^-149
+        let g = scan(&[tiny]).unwrap();
+        assert_eq!(g.exp, -148); // 3 * 2^-148
+        assert_eq!(g.amax, 3);
+        assert_eq!(to_int(tiny, g.exp), 3);
+    }
+
+    #[test]
+    fn quantize_rows_pads_to_stride() {
+        let x = [0.5f32, -1.0, 1.5, 0.0, 0.25, -0.25];
+        let g = scan(&x).unwrap();
+        assert_eq!(g.exp, -2);
+        let mut q = vec![7i16; 8];
+        quantize_rows(&x, 2, 3, 4, g.exp, &mut q);
+        assert_eq!(q, vec![2, -4, 6, 0, 0, 1, -1, 0]);
+    }
+
+    #[test]
+    fn pow2f_covers_the_normal_range() {
+        assert_eq!(pow2f(0), 1.0);
+        assert_eq!(pow2f(-7), 1.0 / 128.0);
+        assert_eq!(pow2f(-126), f32::MIN_POSITIVE);
+        assert_eq!(pow2f(127), 2.0f32.powi(127));
+    }
+}

@@ -10,6 +10,8 @@
 
 use crate::tensor::Tensor;
 
+pub mod intgrid;
+
 /// Scale/zero-point of the asymmetric affine quantizer (eq. 3).
 pub fn qparams(lo: f32, hi: f32, bits: u32) -> (f32, f32) {
     let lo = lo.min(0.0); // keep 0 exactly representable

@@ -36,7 +36,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::eval::prepare::{ExperimentConfig, Method};
-use crate::exec::{BackendKind, ExecBackend, NativeConfig};
+use crate::exec::{BackendKind, ExecBackend, KernelKind, NativeConfig};
 use crate::noise::{CellKind, CellModel};
 use crate::quantize::QuantConfig;
 use crate::util::json::Json;
@@ -108,6 +108,11 @@ pub struct Scenario {
     /// auto = one per available core). A pure throughput knob: results
     /// are bit-identical for every value. Ignored by PJRT.
     pub threads: usize,
+    /// Native-backend micro-kernel selection (`"kernel"` in JSON:
+    /// `auto|scalar|simd|int`; absent = auto). Like `threads`, a pure
+    /// throughput knob — every path is bit-equal to the scalar oracle.
+    /// Ignored by PJRT.
+    pub kernel: KernelKind,
 }
 
 impl Scenario {
@@ -147,6 +152,7 @@ impl Scenario {
             seed: cfg.seed,
             backend: BackendKind::default(),
             threads: 0,
+            kernel: KernelKind::default(),
         }
     }
 
@@ -270,9 +276,15 @@ impl Scenario {
         self
     }
 
+    /// Select the native-backend micro-kernel family (see [`KernelKind`]).
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
     /// The native-backend tuning this scenario asks for.
     pub fn native_config(&self) -> NativeConfig {
-        NativeConfig::with_threads(self.threads)
+        NativeConfig::with_threads(self.threads).with_kernel(self.kernel)
     }
 
     /// Instantiate this scenario's execution backend (kind + tuning).
@@ -380,6 +392,7 @@ impl Scenario {
         m.insert("seed".to_string(), Json::Num(self.seed as f64));
         m.insert("backend".to_string(), Json::Str(self.backend.name().to_string()));
         m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert("kernel".to_string(), Json::Str(self.kernel.name().to_string()));
         Json::Obj(m)
     }
 
@@ -388,7 +401,7 @@ impl Scenario {
             j,
             &[
                 "name", "model", "split", "quant", "perturb", "readout", "group", "n_eval",
-                "repeats", "seed", "backend", "threads",
+                "repeats", "seed", "backend", "threads", "kernel",
             ],
             "scenario",
         )?;
@@ -431,6 +444,15 @@ impl Scenario {
             )
             .context("scenario 'backend'")?,
         };
+        // same contract as 'backend': absent/null = default, present = strict
+        let kernel = match j.get("kernel") {
+            None | Some(Json::Null) => KernelKind::default(),
+            Some(v) => KernelKind::parse(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("'kernel' is not a string"))?,
+            )
+            .context("scenario 'kernel'")?,
+        };
         Ok(Scenario {
             name,
             model: j.str_of("model")?.to_string(),
@@ -444,6 +466,7 @@ impl Scenario {
             seed: opt_f64(j, "seed", 0xD1CE as f64)? as u64,
             backend,
             threads: opt_usize(j, "threads", 0)?,
+            kernel,
         })
     }
 
@@ -708,6 +731,7 @@ mod tests {
         assert_eq!(sc.method_label(), "Clean");
         assert_eq!(sc.backend, BackendKind::default(), "absent backend = build default");
         assert_eq!(sc.threads, 0, "absent threads = auto");
+        assert_eq!(sc.kernel, KernelKind::Auto, "absent kernel = auto dispatch");
     }
 
     #[test]
@@ -722,6 +746,27 @@ mod tests {
             Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"threads":"4"}"#)
                 .is_err(),
             "string threads"
+        );
+    }
+
+    #[test]
+    fn kernel_field_round_trips_and_parses_strictly() {
+        let sc = Scenario::paper_default("k", "m", Method::Hybrid { frac: 0.16 })
+            .with_kernel(KernelKind::Simd);
+        assert_eq!(sc.native_config().kernel, KernelKind::Simd);
+        let text = sc.to_json().to_string();
+        assert!(text.contains("\"kernel\":\"simd\""), "{text}");
+        assert_eq!(Scenario::parse(&text).unwrap(), sc);
+        // unknown or mistyped kernels must fail loudly, never fall back
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"kernel":"fast"}"#)
+                .is_err(),
+            "unknown kernel name"
+        );
+        assert!(
+            Scenario::parse(r#"{"model":"m","split":{"kind":"all_analog"},"kernel":7}"#)
+                .is_err(),
+            "non-string kernel"
         );
     }
 

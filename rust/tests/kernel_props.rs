@@ -12,8 +12,13 @@
 //! `kernels/ref.py::crossbar_matmul_ref`, which the python pytest pins
 //! against numpy.
 
-use hybridac::exec::native::kernels::{crossbar_matmul_packed, PackedMatrix};
-use hybridac::exec::native::reference::{reference_crossbar_matmul, reference_matmul};
+use hybridac::exec::native::kernels::{
+    crossbar_matmul_packed, crossbar_matmul_packed_with, KernelKind, KernelPath, KernelSel,
+    PackedMatrix,
+};
+use hybridac::exec::native::reference::{
+    reference_crossbar_int, reference_crossbar_matmul, reference_matmul,
+};
 use hybridac::exec::native::{crossbar_matmul, matmul};
 use hybridac::tensor::Tensor;
 use hybridac::util::rng::Rng;
@@ -128,5 +133,155 @@ fn degenerate_shapes_match_the_reference() {
             "all-zero x, m={m} k={k} n={n}"
         );
         assert_eq!(matmul(&zx, &w).data, reference_matmul(&zx, &w).data);
+    }
+}
+
+/// A matrix whose every value sits exactly on the `2^-7` i16 grid
+/// (|q| <= 127), with a controllable fraction of exact zeros — the operand
+/// class the integer ADC-domain path engages on.
+fn grid_matrix(rng: &mut Rng, rows: usize, cols: usize, zero_frac: f64) -> Tensor {
+    let mut data = vec![0.0f32; rows * cols];
+    for v in data.iter_mut() {
+        if rng.next_f64() >= zero_frac {
+            *v = ((rng.below(255) as i32) - 127) as f32 / 128.0;
+        }
+    }
+    Tensor::new(vec![rows, cols], data)
+}
+
+#[test]
+fn forced_simd_is_bit_identical_to_forced_scalar() {
+    // the explicit-intrinsics kernel against the scalar tile, over
+    // randomized shapes/groups/lsb/clip/sparsity and threads {1, 4} —
+    // on hosts without SIMD this degenerates to scalar-vs-scalar (still a
+    // valid, if vacuous, equality; CI pins an AVX2 runner)
+    let mut rng = Rng::new(0x51AD);
+    let simd = KernelSel::resolve(KernelKind::Simd);
+    let scalar = KernelSel::resolve(KernelKind::Scalar);
+    for case in 0..150 {
+        let (m, k, n, group, lsb, clip) = random_case(&mut rng);
+        let x = random_matrix(&mut rng, m, k, 0.3);
+        let w = random_matrix(&mut rng, k, n, 0.1);
+        let packed = PackedMatrix::pack(&w.data, k, n);
+        let mut want = vec![f32::NAN; m * n];
+        crossbar_matmul_packed_with(&x.data, m, k, &packed, lsb, clip, group, &mut want, 1, scalar);
+        for &threads in &[1usize, 4] {
+            let mut got = vec![f32::NAN; m * n];
+            let path = crossbar_matmul_packed_with(
+                &x.data, m, k, &packed, lsb, clip, group, &mut got, threads, simd,
+            );
+            assert_ne!(path, KernelPath::Int, "f32-only packing must never go int");
+            assert_eq!(
+                got, want,
+                "case {case}: m={m} k={k} n={n} group={group} lsb={lsb} clip={clip} \
+                 threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn int_path_is_exact_on_representable_operands() {
+    // operands on exact power-of-two grids: the int oracle must engage,
+    // match the f32 reference bit-for-bit, and the production dispatch
+    // must take the int path and agree — at threads {1, 4}
+    let mut rng = Rng::new(0x1A7E);
+    let int = KernelSel::resolve(KernelKind::Int);
+    for case in 0..100 {
+        let m = 1 + rng.below(24);
+        let k = 1 + rng.below(96);
+        let n = 1 + rng.below(48);
+        // even groups (plus the spans-all-of-K case) engage; group=128
+        // exceeds most sampled k, exercising the single-group path
+        let group = match rng.below(4) {
+            0 => 2 + 2 * rng.below(8),
+            1 => 16,
+            2 => 128,
+            _ => k + (k & 1),
+        };
+        let (lsb, clip) = match rng.below(3) {
+            0 => (-1.0f32, 1.0f32),
+            1 => (0.25, 4.0),
+            _ => (0.05, 8.0),
+        };
+        let x = grid_matrix(&mut rng, m, k, 0.2);
+        let w = grid_matrix(&mut rng, k, n, 0.1);
+        let reference = reference_crossbar_matmul(&x, &w, lsb, clip, group);
+        let int_ref = reference_crossbar_int(&x, &w, lsb, clip, group)
+            .expect("grid operands with an even group must admit the int oracle");
+        assert_eq!(
+            int_ref.data, reference.data,
+            "case {case}: int oracle diverged (m={m} k={k} n={n} group={group} lsb={lsb})"
+        );
+        let packed = PackedMatrix::pack_with(&w.data, k, n, true);
+        for &threads in &[1usize, 4] {
+            let mut got = vec![f32::NAN; m * n];
+            let path = crossbar_matmul_packed_with(
+                &x.data, m, k, &packed, lsb, clip, group, &mut got, threads, int,
+            );
+            assert_eq!(path, KernelPath::Int, "case {case}: int path must engage");
+            assert_eq!(
+                got, reference.data,
+                "case {case}: m={m} k={k} n={n} group={group} lsb={lsb} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn int_path_declines_inexact_operands_and_stays_correct() {
+    let mut rng = Rng::new(0xDEC1);
+    let int = KernelSel::resolve(KernelKind::Int);
+    let (m, k, n) = (11, 48, 19);
+    // continuous activations never sit on a grid: forced int must fall
+    // back to f32 and still match the reference exactly
+    let x = random_matrix(&mut rng, m, k, 0.3);
+    let gw = grid_matrix(&mut rng, k, n, 0.1);
+    assert!(reference_crossbar_int(&x, &gw, 0.25, 4.0, 8).is_none());
+    let packed = PackedMatrix::pack_with(&gw.data, k, n, true);
+    let reference = reference_crossbar_matmul(&x, &gw, 0.25, 4.0, 8);
+    let mut got = vec![f32::NAN; m * n];
+    let path =
+        crossbar_matmul_packed_with(&x.data, m, k, &packed, 0.25, 4.0, 8, &mut got, 1, int);
+    assert_ne!(path, KernelPath::Int, "continuous x must not engage int");
+    assert_eq!(got, reference.data);
+    // odd sub-K groups straddle the pmaddwd pairing: declined, still exact
+    let gx = grid_matrix(&mut rng, m, k, 0.2);
+    assert!(reference_crossbar_int(&gx, &gw, 0.25, 4.0, 7).is_none());
+    let reference = reference_crossbar_matmul(&gx, &gw, 0.25, 4.0, 7);
+    let mut got = vec![f32::NAN; m * n];
+    let path =
+        crossbar_matmul_packed_with(&gx.data, m, k, &packed, 0.25, 4.0, 7, &mut got, 1, int);
+    assert_ne!(path, KernelPath::Int, "odd group must not engage int");
+    assert_eq!(got, reference.data);
+}
+
+#[test]
+fn simd_tail_sweep_covers_every_nr_mr_remainder() {
+    // proptest-style exhaustive sweep of the tile tails: n % NR in 1..=7
+    // and m % MR in 1..=3 (plus the exact-tile cases), forced simd vs
+    // forced scalar
+    let mut rng = Rng::new(0x7A11);
+    let simd = KernelSel::resolve(KernelKind::Simd);
+    let scalar = KernelSel::resolve(KernelKind::Scalar);
+    for mrem in 0..4usize {
+        for nrem in 0..8usize {
+            let m = 8 + mrem; // 8 % MR == 0, so m % MR == mrem
+            let n = 16 + nrem; // 16 % NR == 0, so n % NR == nrem
+            let k = 1 + rng.below(64);
+            let group = 1 + rng.below(24);
+            let x = random_matrix(&mut rng, m, k, 0.25);
+            let w = random_matrix(&mut rng, k, n, 0.1);
+            let packed = PackedMatrix::pack(&w.data, k, n);
+            let mut want = vec![f32::NAN; m * n];
+            crossbar_matmul_packed_with(
+                &x.data, m, k, &packed, 0.125, 2.0, group, &mut want, 1, scalar,
+            );
+            let mut got = vec![f32::NAN; m * n];
+            crossbar_matmul_packed_with(
+                &x.data, m, k, &packed, 0.125, 2.0, group, &mut got, 1, simd,
+            );
+            assert_eq!(got, want, "m={m} n={n} k={k} group={group} (tails {mrem}/{nrem})");
+        }
     }
 }
