@@ -6,6 +6,8 @@
 //!      perturb + polarity), with and without the extra fault stages,
 //!   2c. the packed matmul micro-kernels on the artifact's real layer
 //!       shapes (`matmul_kernels`),
+//!   2e. incremental prepare: cached base vs per-repeat delta vs the full
+//!       prepare it replaces (the repeat-loop speedup of the base cache),
 //!   3. upload + execute of one batch on the selected backend,
 //!   4. end-to-end accuracy evaluation (one repeat),
 //!   5. batch-server round trip.
@@ -150,6 +152,29 @@ fn main() -> anyhow::Result<()> {
     stages.push(time_stats("pipeline.prepare() + stuck-at + drift", 10, || {
         let _ = faulty.prepare(&art, &mut rng2b);
     }));
+
+    // 2e. incremental prepare: the cached deterministic base (built once
+    // per (model, split, quant, group, differential) key) vs the per-repeat
+    // delta (perturb + polarity on copy-on-write tensors) vs the seed full
+    // prepare it replaces. delta-vs-full is the repeat-loop speedup the
+    // PreparedBaseCache buys; all three feed the --baseline gate.
+    let prepared_base = pipeline.prepare_base(&art);
+    let base_stage = time_stats("prepare: base (split+quant+polarity)", 10, || {
+        let _ = pipeline.prepare_base(&art);
+    });
+    let mut rng_d = Rng::new(8);
+    let delta_stage = time_stats("prepare: delta (perturb-only repeat)", 20, || {
+        let _ = pipeline.prepare_delta(&prepared_base, &art, &mut rng_d);
+    });
+    let mut rng_f = Rng::new(8);
+    let full_stage = time_stats("prepare: full (uncached repeat)", 10, || {
+        let _ = pipeline.prepare(&art, &mut rng_f);
+    });
+    let prepare_delta_speedup = full_stage.mean_s / delta_stage.mean_s.max(1e-12);
+    println!("  prepare: delta repeat is {prepare_delta_speedup:.2}x faster than full prepare");
+    stages.push(base_stage);
+    stages.push(delta_stage);
+    stages.push(full_stage);
 
     // 2c. the packed micro-kernels alone, on the artifact's real layer
     // shapes: k/n from the layer table, m = batch x an 8x8 output tile for
@@ -313,6 +338,10 @@ fn main() -> anyhow::Result<()> {
     root.insert("total_weights".to_string(), Json::Num(art.total_weights as f64));
     root.insert("batch".to_string(), Json::Num(art.batch as f64));
     root.insert("stages".to_string(), Json::Arr(stages.iter().map(StageTiming::to_json).collect()));
+    root.insert(
+        "prepare_delta_speedup".to_string(),
+        Json::Num(prepare_delta_speedup),
+    );
     root.insert("serve".to_string(), Json::Obj(serve));
     std::fs::write("BENCH_perf.json", Json::Obj(root).to_string())?;
     println!(

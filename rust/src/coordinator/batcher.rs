@@ -22,7 +22,7 @@ use crate::eval::ExperimentConfig;
 use crate::exec::{ExecBackend, Executable, ModelInstance};
 use crate::obs::trace;
 use crate::runtime::{Artifact, DatasetMeta};
-use crate::scenario::Scenario;
+use crate::scenario::{PreparedBaseCache, Scenario};
 use crate::tensor::{argmax_rows, Tensor};
 use crate::util::rng::Rng;
 
@@ -155,6 +155,21 @@ impl BatchContext {
         sc: &Scenario,
         backend: Arc<dyn ExecBackend>,
     ) -> Result<Self> {
+        Self::with_backend_cached(artifacts, sc, backend, None)
+    }
+
+    /// [`BatchContext::with_backend`] with an optional fleet-shared
+    /// [`PreparedBaseCache`]: replicas of one scenario differ only in
+    /// their variation seed, so with the cache each spawn/recycle fetches
+    /// the split + quantized base and replays only its own perturbation
+    /// delta (bit-identical weights either way — the delta path shares
+    /// the full pipeline's RNG stream).
+    pub fn with_backend_cached(
+        artifacts: &std::path::Path,
+        sc: &Scenario,
+        backend: Arc<dyn ExecBackend>,
+        base_cache: Option<&PreparedBaseCache>,
+    ) -> Result<Self> {
         let art = Artifact::load(artifacts, &sc.model)?;
         // metadata only: batch shaping never touches the image payload
         let data = DatasetMeta::load(artifacts, &art.dataset)?;
@@ -165,8 +180,32 @@ impl BatchContext {
 
         // one prepared (noisy) model instance serves the whole session
         let mut rng = Rng::new(sc.seed);
-        let model = sc.pipeline().prepare(&art, &mut rng);
-        let instance = ModelInstance::upload(backend.as_ref(), &model, compiled.offset_variant)?;
+        let pipeline = sc.pipeline();
+        let instance = match base_cache {
+            Some(cache) => {
+                let base = cache.get_or_build(&sc.base_key(), || {
+                    let _s = trace::span("prepare/base", "prepare");
+                    Ok(pipeline.prepare_base(&art))
+                })?;
+                let inst = {
+                    let _s = trace::span("prepare/delta", "prepare");
+                    pipeline.prepare_delta(&base, &art, &mut rng)
+                };
+                ModelInstance::upload_instance(
+                    backend.as_ref(),
+                    &inst,
+                    compiled.offset_variant,
+                    None,
+                )?
+            }
+            None => {
+                let model = {
+                    let _s = trace::span("prepare/full", "prepare");
+                    pipeline.prepare(&art, &mut rng)
+                };
+                ModelInstance::upload(backend.as_ref(), &model, compiled.offset_variant)?
+            }
+        };
 
         Ok(BatchContext {
             exe: compiled.exe,

@@ -32,7 +32,22 @@ pub struct RunReport {
 /// Run accuracy + hardware estimation for one declarative scenario (on the
 /// scenario's `backend`).
 pub fn run_scenario(artifacts: &Path, sc: &Scenario, batch: usize) -> Result<RunReport> {
-    let ev = Evaluator::for_scenario(artifacts, sc)?;
+    run_scenario_opts(artifacts, sc, batch, true)
+}
+
+/// [`run_scenario`] with the prepare cache switchable — `prepare_cache =
+/// false` is the CLI's `--no-prepare-cache` escape hatch (results are
+/// bit-identical; this only forces the full per-repeat pipeline).
+pub fn run_scenario_opts(
+    artifacts: &Path,
+    sc: &Scenario,
+    batch: usize,
+    prepare_cache: bool,
+) -> Result<RunReport> {
+    let mut ev = Evaluator::for_scenario(artifacts, sc)?;
+    if !prepare_cache {
+        ev = ev.with_base_cache(None);
+    }
     let acc = ev.run_scenario(sc)?;
     let clean = ev.art.clean_test_acc;
 

@@ -14,15 +14,31 @@
 //! artifact/dataset through [`Evaluator::from_parts`] and, on the native
 //! backend, one fleet-shared execution backend). Per-run state — the
 //! repeat RNG, the prepared weights, the executor — is local to each call.
+//!
+//! ## Incremental prepare
+//!
+//! The repeat loop runs on the incremental path by default: the
+//! deterministic prepare prefix is fetched from a [`PreparedBaseCache`]
+//! (per-evaluator unless a shared one is handed in via
+//! [`Evaluator::with_base_cache`] — the study runner and the serve fleet
+//! do), each repeat replays only the perturbation delta
+//! ([`crate::scenario::PreparePipeline::prepare_delta`]), and unchanged
+//! weight buffers are reused device-side across repeats
+//! ([`crate::exec::ModelInstance::upload_instance`]). Results are
+//! bit-identical to the full pipeline (pinned by
+//! `tests/prepare_cache_props.rs`); `with_base_cache(None)` — the CLI's
+//! `--no-prepare-cache` — forces the original full-prepare path.
 
 use anyhow::Result;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::prepare::{ExperimentConfig, Method};
-use crate::exec::{BackendKind, ExecBackend, ModelExecutor, NativeConfig};
+use crate::exec::{BackendKind, ExecBackend, ModelExecutor, ModelInstance, NativeConfig};
+use crate::obs::trace;
 use crate::runtime::{Artifact, DatasetBlob};
-use crate::scenario::{Scenario, SplitSpec};
+use crate::scenario::{PreparedBaseCache, Scenario, SplitSpec};
 use crate::util::rng::Rng;
 
 /// Mean/std accuracy of one experiment point.
@@ -33,6 +49,26 @@ pub struct AccResult {
     pub repeats: usize,
 }
 
+/// Wall-clock split of one scenario run (or one whole search crossing):
+/// weight preparation vs graph execution. Feeds the study timing side
+/// channel (`BENCH_study_<name>.timing.json`) — scheduling-dependent, so
+/// never part of the byte-identical main report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScenarioTiming {
+    /// Seconds in prepare (base lookup/build + per-repeat delta, or the
+    /// full pipeline when the cache is off).
+    pub prepare_s: f64,
+    /// Seconds in upload + graph execution.
+    pub exec_s: f64,
+}
+
+impl ScenarioTiming {
+    pub fn accumulate(&mut self, other: ScenarioTiming) {
+        self.prepare_s += other.prepare_s;
+        self.exec_s += other.exec_s;
+    }
+}
+
 /// Owns the backend + one model's artifact/dataset and runs configs on it.
 ///
 /// The artifact and dataset are held behind `Arc` so several evaluators
@@ -41,6 +77,8 @@ pub struct Evaluator {
     pub art: Arc<Artifact>,
     pub data: Arc<DatasetBlob>,
     backend: Arc<dyn ExecBackend>,
+    /// Deterministic-prefix cache; `None` disables the incremental path.
+    base_cache: Option<Arc<PreparedBaseCache>>,
 }
 
 impl Evaluator {
@@ -69,6 +107,7 @@ impl Evaluator {
             art: Arc::new(art),
             data: Arc::new(data),
             backend: kind.create_with(native)?,
+            base_cache: Some(Arc::new(PreparedBaseCache::new())),
         })
     }
 
@@ -88,7 +127,23 @@ impl Evaluator {
         data: Arc<DatasetBlob>,
         backend: Arc<dyn ExecBackend>,
     ) -> Evaluator {
-        Evaluator { art, data, backend }
+        Evaluator {
+            art,
+            data,
+            backend,
+            base_cache: Some(Arc::new(PreparedBaseCache::new())),
+        }
+    }
+
+    /// Replace the prepared-base cache: `Some(shared)` lets several
+    /// evaluators (study workers, serve replicas) share one set of
+    /// deterministic prefixes; `None` disables the incremental path
+    /// entirely and every repeat runs the full pipeline (the
+    /// `--no-prepare-cache` escape hatch). Either way results are
+    /// bit-identical.
+    pub fn with_base_cache(mut self, cache: Option<Arc<PreparedBaseCache>>) -> Evaluator {
+        self.base_cache = cache;
+        self
     }
 
     /// The backend this evaluator executes on.
@@ -111,6 +166,38 @@ impl Evaluator {
     /// with — a spec asking for a different engine is an error, never a
     /// silent substitution (see [`Evaluator::for_scenario`]).
     pub fn run_scenario(&self, sc: &Scenario) -> Result<AccResult> {
+        Ok(self.run_scenario_timed(sc)?.0)
+    }
+
+    /// [`Evaluator::run_scenario`] plus the prepare/exec wall-clock split.
+    pub fn run_scenario_timed(&self, sc: &Scenario) -> Result<(AccResult, ScenarioTiming)> {
+        let exec = self.executor_for(sc)?;
+        self.run_scenario_with(sc, &exec)
+    }
+
+    /// Stage the executor for one scenario: compile (cached) + upload the
+    /// eval batches. Split out so the Algorithm-1 search loop can build it
+    /// once across steps that share `(n_eval, group, differential)`.
+    fn executor_for(&self, sc: &Scenario) -> Result<ModelExecutor<'_>> {
+        // offset cells can use the single-polarity fast-path graph (§Perf)
+        let offset = !sc.differential();
+        ModelExecutor::new_with_variant(
+            self.backend.as_ref(),
+            &self.art,
+            &self.data,
+            sc.n_eval,
+            sc.group,
+            offset,
+        )
+    }
+
+    /// The shared repeat loop over an already-staged executor. `exec` must
+    /// have been built for this scenario's `(n_eval, group, differential)`.
+    fn run_scenario_with(
+        &self,
+        sc: &Scenario,
+        exec: &ModelExecutor<'_>,
+    ) -> Result<(AccResult, ScenarioTiming)> {
         anyhow::ensure!(
             sc.model.is_empty() || sc.model == self.art.tag,
             "scenario '{}' targets model '{}' but this evaluator holds '{}'",
@@ -126,16 +213,6 @@ impl Evaluator {
             sc.backend.name(),
             self.backend.kind().name()
         );
-        // offset cells can use the single-polarity fast-path graph (§Perf)
-        let offset = !sc.differential();
-        let exec = ModelExecutor::new_with_variant(
-            self.backend.as_ref(),
-            &self.art,
-            &self.data,
-            sc.n_eval,
-            sc.group,
-            offset,
-        )?;
         let pipeline = sc.pipeline();
         let mut master = Rng::new(sc.seed);
         // a perturbation-free pipeline draws no randomness: every repeat
@@ -143,15 +220,47 @@ impl Evaluator {
         // generalized to any deterministic scenario loaded from JSON)
         let repeats = if sc.perturb.is_empty() { 1 } else { sc.repeats.max(1) };
         let mut accs = Vec::with_capacity(repeats);
-        for rep in 0..repeats {
-            let mut rng = master.fork(rep as u64 + 1);
-            let model = pipeline.prepare(&self.art, &mut rng);
-            accs.push(exec.accuracy(&model)?);
+        let mut timing = ScenarioTiming::default();
+        if let Some(cache) = &self.base_cache {
+            let t = Instant::now();
+            let base = cache.get_or_build(&sc.base_key(), || {
+                let _s = trace::span("prepare/base", "prepare");
+                Ok(pipeline.prepare_base(&self.art))
+            })?;
+            timing.prepare_s += t.elapsed().as_secs_f64();
+            let mut prev: Option<ModelInstance> = None;
+            for rep in 0..repeats {
+                let mut rng = master.fork(rep as u64 + 1);
+                let t = Instant::now();
+                let inst = {
+                    let _s = trace::span("prepare/delta", "prepare");
+                    pipeline.prepare_delta(&base, &self.art, &mut rng)
+                };
+                timing.prepare_s += t.elapsed().as_secs_f64();
+                let t = Instant::now();
+                let (acc, instance) = exec.accuracy_instance(&inst, prev.as_ref())?;
+                timing.exec_s += t.elapsed().as_secs_f64();
+                accs.push(acc);
+                prev = Some(instance);
+            }
+        } else {
+            for rep in 0..repeats {
+                let mut rng = master.fork(rep as u64 + 1);
+                let t = Instant::now();
+                let model = {
+                    let _s = trace::span("prepare/full", "prepare");
+                    pipeline.prepare(&self.art, &mut rng)
+                };
+                timing.prepare_s += t.elapsed().as_secs_f64();
+                let t = Instant::now();
+                accs.push(exec.accuracy(&model)?);
+                timing.exec_s += t.elapsed().as_secs_f64();
+            }
         }
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;
         let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
             / accs.len() as f64;
-        Ok(AccResult { mean, std: var.sqrt(), repeats })
+        Ok((AccResult { mean, std: var.sqrt(), repeats }, timing))
     }
 
     /// Algorithm 1's outer loop, step-parameterized — the one search
@@ -170,12 +279,33 @@ impl Evaluator {
         max_frac: f64,
         step: f64,
     ) -> Result<(f64, AccResult)> {
+        let (frac, acc, _) = self.search_protection_timed(at, target, max_frac, step)?;
+        Ok((frac, acc))
+    }
+
+    /// [`Evaluator::search_protection`] plus the accumulated prepare/exec
+    /// wall-clock split over every step of the crossing.
+    ///
+    /// `at` must vary only the *split* across fractions (the
+    /// [`Evaluator::search_point`] contract): `(n_eval, group,
+    /// differential)` — everything the staged executor depends on — stay
+    /// constant, so the executor is built once instead of once per step.
+    pub fn search_protection_timed(
+        &self,
+        at: impl Fn(f64) -> Scenario,
+        target: f64,
+        max_frac: f64,
+        step: f64,
+    ) -> Result<(f64, AccResult, ScenarioTiming)> {
         anyhow::ensure!(step > 0.0, "search step must be positive, got {step}");
         let mut frac = self.art.pinned_weights as f64 / self.art.total_weights as f64;
+        let exec = self.executor_for(&at(frac))?;
+        let mut timing = ScenarioTiming::default();
         loop {
-            let acc = self.run_scenario(&at(frac))?;
+            let (acc, t) = self.run_scenario_with(&at(frac), &exec)?;
+            timing.accumulate(t);
             if acc.mean >= target || frac >= max_frac {
-                return Ok((frac, acc));
+                return Ok((frac, acc, timing));
             }
             frac += step;
         }

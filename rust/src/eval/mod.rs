@@ -10,5 +10,5 @@
 pub mod evaluator;
 pub mod prepare;
 
-pub use evaluator::{AccResult, Evaluator};
+pub use evaluator::{AccResult, Evaluator, ScenarioTiming};
 pub use prepare::{prepare, ExperimentConfig, Method};

@@ -12,7 +12,7 @@ use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 
 use crate::runtime::artifact::{Artifact, DatasetBlob};
-use crate::runtime::executor::PreparedModel;
+use crate::runtime::executor::{PreparedInstance, PreparedModel};
 use crate::tensor::argmax_rows;
 
 use super::{DeviceBuffer, ExecBackend, Executable, ModelInstance};
@@ -95,6 +95,26 @@ impl<'a> ModelExecutor<'a> {
     /// Upload one prepared instance and score accuracy over the staged set.
     pub fn accuracy(&self, model: &PreparedModel) -> Result<f64> {
         let instance = ModelInstance::upload(self.backend, model, self.offset_variant)?;
+        self.score(&instance)
+    }
+
+    /// Delta-upload an incremental-prepare instance (reusing `prev`'s
+    /// unchanged device buffers — see
+    /// [`ModelInstance::upload_instance`]) and score it. Returns the
+    /// uploaded instance so the caller can hand it back as `prev` on the
+    /// next repeat.
+    pub fn accuracy_instance(
+        &self,
+        inst: &PreparedInstance,
+        prev: Option<&ModelInstance>,
+    ) -> Result<(f64, ModelInstance)> {
+        let instance =
+            ModelInstance::upload_instance(self.backend, inst, self.offset_variant, prev)?;
+        let acc = self.score(&instance)?;
+        Ok((acc, instance))
+    }
+
+    fn score(&self, instance: &ModelInstance) -> Result<f64> {
         let mut hits = 0usize;
         let mut total = 0usize;
         for (xb, labels) in self.x_bufs.iter().zip(&self.labels) {

@@ -6,43 +6,115 @@
 //! This type is that loop, once: upload `wa1 [wa2] wd b lsb clip` per layer
 //! in the `model.py` positional order, remember the variation fingerprint,
 //! and assemble `[x] + weights` input lists for execution.
+//!
+//! ## Delta upload
+//!
+//! [`ModelInstance::upload_instance`] consumes the incremental-prepare
+//! product ([`PreparedInstance`], `Arc`-slotted) and, given the previous
+//! repeat's instance, re-uploads only the slots whose source tensor
+//! changed. Identity is `Arc` pointer equality: the delta prepare path
+//! aliases unchanged tensors from the cached base, and each instance holds
+//! its source `Arc`s alive, so a matching pointer can only mean the same
+//! bytes. Unchanged matrix operands keep their packed — and, for the int
+//! kernel, pre-quantized — panels instead of re-packing per repeat.
 
 use anyhow::Result;
+use std::sync::Arc;
 
-use crate::runtime::executor::PreparedModel;
+use crate::obs::registry::global;
+use crate::runtime::executor::{PreparedInstance, PreparedModel};
 use crate::tensor::Tensor;
 
 use super::{DeviceBuffer, ExecBackend, Executable};
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn eat(&mut self, v: f32) {
+        for byte in v.to_bits().to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+}
 
 /// FNV-1a over the raw weight bits — a cheap identity for one variation
 /// draw, used to verify that differently-seeded replicas really hold
 /// independent noisy instances.
 pub fn weight_fingerprint(model: &PreparedModel) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut eat = |v: f32| {
-        for byte in v.to_bits().to_le_bytes() {
-            h ^= byte as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    };
+    let mut h = Fnv::new();
     for li in &model.layers {
         for t in [&li.wa1, &li.wa2, &li.wd] {
             for &v in &t.data {
-                eat(v);
+                h.eat(v);
             }
         }
     }
-    h
+    h.0
+}
+
+/// [`weight_fingerprint`] over the `Arc`-slotted incremental-prepare
+/// product: identical traversal, so an instance and the `PreparedModel`
+/// the full pipeline would have produced fingerprint identically.
+pub fn instance_fingerprint(inst: &PreparedInstance) -> u64 {
+    let mut h = Fnv::new();
+    for li in &inst.layers {
+        for t in [&li.wa1, &li.wa2, &li.wd] {
+            for &v in &t.data {
+                h.eat(v);
+            }
+        }
+    }
+    h.0
 }
 
 /// One prepared (noisy, quantized, split) model instance resident on a
 /// backend's device. Dropping it releases the buffers; it must not outlive
 /// the backend that uploaded it.
 pub struct ModelInstance {
-    bufs: Vec<DeviceBuffer>,
+    bufs: Vec<Arc<DeviceBuffer>>,
+    /// Source tensor per slot, for delta-upload identity (`None` for slots
+    /// without a shareable source: everything uploaded via
+    /// [`ModelInstance::upload`], and the per-layer lsb/clip scalars).
+    /// Holding these `Arc`s alive is what makes pointer equality sound —
+    /// an address cannot be reused while the previous instance still owns
+    /// it.
+    srcs: Vec<Option<Arc<Tensor>>>,
     fingerprint: u64,
     offset_variant: bool,
     n_layers: usize,
+    reused: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_slot(
+    backend: &dyn ExecBackend,
+    bufs: &mut Vec<Arc<DeviceBuffer>>,
+    srcs: &mut Vec<Option<Arc<Tensor>>>,
+    reused: &mut usize,
+    prev: Option<&ModelInstance>,
+    src: &Arc<Tensor>,
+    weight: bool,
+) -> Result<()> {
+    let slot = bufs.len();
+    if let Some(p) = prev {
+        if let Some(Some(psrc)) = p.srcs.get(slot) {
+            if Arc::ptr_eq(psrc, src) {
+                bufs.push(p.bufs[slot].clone());
+                srcs.push(Some(src.clone()));
+                *reused += 1;
+                return Ok(());
+            }
+        }
+    }
+    let buf = if weight { backend.upload_weight(src)? } else { backend.upload(src)? };
+    bufs.push(Arc::new(buf));
+    srcs.push(Some(src.clone()));
+    Ok(())
 }
 
 impl ModelInstance {
@@ -60,20 +132,69 @@ impl ModelInstance {
         let fingerprint = weight_fingerprint(model);
         let mut bufs = Vec::with_capacity(model.layers.len() * 6);
         for li in &model.layers {
-            bufs.push(backend.upload_weight(&li.wa1)?);
+            bufs.push(Arc::new(backend.upload_weight(&li.wa1)?));
             if !offset_variant {
-                bufs.push(backend.upload_weight(&li.wa2)?);
+                bufs.push(Arc::new(backend.upload_weight(&li.wa2)?));
             }
-            bufs.push(backend.upload_weight(&li.wd)?);
-            bufs.push(backend.upload(&li.bias)?);
-            bufs.push(backend.upload(&Tensor::scalar(li.lsb))?);
-            bufs.push(backend.upload(&Tensor::scalar(li.clip))?);
+            bufs.push(Arc::new(backend.upload_weight(&li.wd)?));
+            bufs.push(Arc::new(backend.upload(&li.bias)?));
+            bufs.push(Arc::new(backend.upload(&Tensor::scalar(li.lsb))?));
+            bufs.push(Arc::new(backend.upload(&Tensor::scalar(li.clip))?));
         }
+        global().counter("exec_upload_full_total").inc();
+        let srcs = vec![None; bufs.len()];
         Ok(ModelInstance {
             bufs,
+            srcs,
             fingerprint,
             offset_variant,
             n_layers: model.layers.len(),
+            reused: 0,
+        })
+    }
+
+    /// Upload an incremental-prepare instance, reusing `prev`'s
+    /// device-resident buffers for every slot whose source tensor is
+    /// pointer-identical (see module docs). With `prev = None` this is a
+    /// full upload of all slots. `prev` must come from the same backend
+    /// and the same `offset_variant` compiled graph (callers hold it
+    /// across the repeat loop of one executor, which guarantees both).
+    pub fn upload_instance(
+        backend: &dyn ExecBackend,
+        inst: &PreparedInstance,
+        offset_variant: bool,
+        prev: Option<&ModelInstance>,
+    ) -> Result<ModelInstance> {
+        let fingerprint = instance_fingerprint(inst);
+        let prev = prev.filter(|p| p.offset_variant == offset_variant);
+        let per_layer = if offset_variant { 5 } else { 6 };
+        let mut bufs = Vec::with_capacity(inst.layers.len() * per_layer);
+        let mut srcs = Vec::with_capacity(inst.layers.len() * per_layer);
+        let mut reused = 0usize;
+        for li in &inst.layers {
+            push_slot(backend, &mut bufs, &mut srcs, &mut reused, prev, &li.wa1, true)?;
+            if !offset_variant {
+                push_slot(backend, &mut bufs, &mut srcs, &mut reused, prev, &li.wa2, true)?;
+            }
+            push_slot(backend, &mut bufs, &mut srcs, &mut reused, prev, &li.wd, true)?;
+            push_slot(backend, &mut bufs, &mut srcs, &mut reused, prev, &li.bias, false)?;
+            bufs.push(Arc::new(backend.upload(&Tensor::scalar(li.lsb))?));
+            srcs.push(None);
+            bufs.push(Arc::new(backend.upload(&Tensor::scalar(li.clip))?));
+            srcs.push(None);
+        }
+        if reused > 0 {
+            global().counter("exec_upload_delta_total").inc();
+        } else {
+            global().counter("exec_upload_full_total").inc();
+        }
+        Ok(ModelInstance {
+            bufs,
+            srcs,
+            fingerprint,
+            offset_variant,
+            n_layers: inst.layers.len(),
+            reused,
         })
     }
 
@@ -91,6 +212,12 @@ impl ModelInstance {
         self.n_layers
     }
 
+    /// How many device buffers this upload reused from the previous
+    /// instance (0 for a full upload).
+    pub fn reused(&self) -> usize {
+        self.reused
+    }
+
     /// Execute `exe` on one staged input batch: assembles the positional
     /// argument list `[x, wa1, (wa2,) wd, b, lsb, clip, ...]` and returns
     /// the flat logits.
@@ -102,7 +229,7 @@ impl ModelInstance {
     ) -> Result<Vec<f32>> {
         let mut inputs: Vec<&DeviceBuffer> = Vec::with_capacity(1 + self.bufs.len());
         inputs.push(x);
-        inputs.extend(self.bufs.iter());
+        inputs.extend(self.bufs.iter().map(|b| b.as_ref()));
         backend.run(exe, &inputs)
     }
 }
@@ -110,7 +237,7 @@ impl ModelInstance {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::executor::{LayerInputs, PreparedModel};
+    use crate::runtime::executor::{InstanceLayer, LayerInputs, PreparedModel};
 
     fn tiny_model(seed: f32) -> PreparedModel {
         PreparedModel {
@@ -125,6 +252,24 @@ mod tests {
         }
     }
 
+    fn tiny_instance(seed: f32) -> PreparedInstance {
+        let m = tiny_model(seed);
+        PreparedInstance {
+            layers: m
+                .layers
+                .into_iter()
+                .map(|l| InstanceLayer {
+                    wa1: Arc::new(l.wa1),
+                    wa2: Arc::new(l.wa2),
+                    wd: Arc::new(l.wd),
+                    bias: Arc::new(l.bias),
+                    lsb: l.lsb,
+                    clip: l.clip,
+                })
+                .collect(),
+        }
+    }
+
     #[test]
     fn fingerprint_tracks_weight_bits() {
         let a = weight_fingerprint(&tiny_model(0.25));
@@ -132,6 +277,15 @@ mod tests {
         let c = weight_fingerprint(&tiny_model(0.26));
         assert_eq!(a, b, "same weights, same fingerprint");
         assert_ne!(a, c, "different weights, different fingerprint");
+    }
+
+    #[test]
+    fn instance_fingerprint_matches_model_fingerprint() {
+        assert_eq!(
+            instance_fingerprint(&tiny_instance(0.25)),
+            weight_fingerprint(&tiny_model(0.25)),
+            "identical traversal over identical bytes"
+        );
     }
 
     #[test]
@@ -145,5 +299,26 @@ mod tests {
         assert_eq!(off.bufs.len(), 5, "offset graph: no wa2 operand");
         assert_eq!(off.n_layers(), 1);
         assert_eq!(full.fingerprint(), off.fingerprint());
+    }
+
+    #[test]
+    fn delta_upload_reuses_pointer_identical_slots() {
+        let backend = super::super::BackendKind::Native.create().unwrap();
+        let a = tiny_instance(0.25);
+        let first = ModelInstance::upload_instance(backend.as_ref(), &a, false, None).unwrap();
+        assert_eq!(first.reused(), 0, "no previous instance to reuse from");
+
+        // second repeat: only wa1 changes, the other slots alias `a`'s Arcs
+        let mut b = a.clone();
+        b.layers[0].wa1 = Arc::new(Tensor::new(vec![2, 1], vec![0.26, 0.5]));
+        let second =
+            ModelInstance::upload_instance(backend.as_ref(), &b, false, Some(&first)).unwrap();
+        assert_eq!(second.reused(), 3, "wa2, wd, bias slots reused");
+        assert!(
+            Arc::ptr_eq(&second.bufs[2], &first.bufs[2]),
+            "reused slots share the device buffer"
+        );
+        assert!(!Arc::ptr_eq(&second.bufs[0], &first.bufs[0]), "changed slot re-uploaded");
+        assert_ne!(second.fingerprint(), first.fingerprint());
     }
 }

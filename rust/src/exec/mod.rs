@@ -50,7 +50,7 @@ pub mod pjrt;
 
 pub use cache::{CompiledGraphCache, GraphKey};
 pub use executor::ModelExecutor;
-pub use instance::{weight_fingerprint, ModelInstance};
+pub use instance::{instance_fingerprint, weight_fingerprint, ModelInstance};
 pub use native::{
     KernelKind, KernelPath, KernelSel, NativeBackend, NativeConfig, NativeGraph, PackedMatrix,
     SimdLevel,

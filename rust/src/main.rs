@@ -36,7 +36,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use hybridac::coordinator::{run_scenario, RunReport};
+use hybridac::coordinator::{run_scenario_opts, RunReport};
 use hybridac::eval::{ExperimentConfig, Method};
 use hybridac::exec::{BackendKind, KernelKind};
 use hybridac::hwmodel::all_architectures;
@@ -55,7 +55,7 @@ const FLAGS: &[&str] = &[
     "workers", "out", "trace", "metrics-out", "listen", "min-replicas", "max-replicas",
     "scale-interval-ms", "serve-ms",
 ];
-const SWITCHES: &[&str] = &["differential", "verbose", "list"];
+const SWITCHES: &[&str] = &["differential", "verbose", "list", "no-prepare-cache"];
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), FLAGS, SWITCHES)?;
@@ -92,6 +92,8 @@ fn main() -> Result<()> {
                  \x20        (all paths bit-equal; int engages on exact i16 grids)\n\
                  observability: --trace FILE (Chrome trace_event JSON)\n\
                  \x20              --metrics-out FILE (Prometheus text snapshot)\n\
+                 \x20              --no-prepare-cache disable the shared prepared-base\n\
+                 \x20              cache (bit-identical results; debugging escape hatch)\n\
                  see README.md; real artifacts must be built first (`make artifacts`)"
             );
             Ok(())
@@ -270,7 +272,7 @@ fn scenario_cmd(args: &Args) -> Result<()> {
     if args.has("verbose") {
         println!("  spec: {}", sc.to_json().to_string());
     }
-    let rep = run_scenario(&dir, &sc, 250)?;
+    let rep = run_scenario_opts(&dir, &sc, 250, !args.has("no-prepare-cache"))?;
     print_report(&rep);
     println!(
         "  clean {}  protected {:.1}% of weights  digital frac {:.3}",
@@ -302,7 +304,7 @@ fn run(args: &Args) -> Result<()> {
                 Some(ks) => KernelKind::parse(ks)?,
                 None => KernelKind::default(),
             });
-        let rep = run_scenario(&dir, &sc, 250)?;
+        let rep = run_scenario_opts(&dir, &sc, 250, !args.has("no-prepare-cache"))?;
         print_report(&rep);
     }
     write_metrics_out(args, None)
@@ -402,7 +404,8 @@ fn run_study(mut study: Study, args: &Args) -> Result<()> {
         study.base.kernel = KernelKind::parse(ks)?;
     }
     let runner = StudyRunner::new(hybridac::artifacts_dir())
-        .with_workers(args.get_usize("workers", 0)?);
+        .with_workers(args.get_usize("workers", 0)?)
+        .with_prepare_cache(!args.has("no-prepare-cache"));
     let report = runner.run(&study)?;
     print!("{}", report.table());
     let path = match args.get("out") {
@@ -533,6 +536,7 @@ fn serve(args: &Args) -> Result<()> {
     fleet.max_wait = Duration::from_millis(args.get_usize("window-ms", 15)? as u64);
     fleet.queue_depth = args.get_usize("queue-depth", 0)?;
     fleet.base_seed = sc.seed;
+    fleet.prepare_cache = !args.has("no-prepare-cache");
     if probe_interval_ms > 0 {
         // background monitor: periodic canary probe + recycle sweep
         fleet = fleet.with_probe(

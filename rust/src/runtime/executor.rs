@@ -7,6 +7,8 @@
 //! `ModelInstance` and runs it on any [`crate::exec::ExecBackend`] — the
 //! executor itself lives there as [`crate::exec::ModelExecutor`].
 
+use std::sync::Arc;
+
 use crate::tensor::Tensor;
 
 /// Per-layer prepared inputs for one experiment instance.
@@ -24,4 +26,27 @@ pub struct LayerInputs {
 #[derive(Clone, Debug)]
 pub struct PreparedModel {
     pub layers: Vec<LayerInputs>,
+}
+
+/// Per-layer prepared inputs with shared-ownership tensors: the product of
+/// the incremental prepare path ([`crate::scenario::PreparePipeline::
+/// prepare_delta`]). Slots untouched by any perturbation alias the cached
+/// base's `Arc`s, which is what lets the delta upload recognize unchanged
+/// buffers by pointer identity and keep their packed panels.
+#[derive(Clone, Debug)]
+pub struct InstanceLayer {
+    pub wa1: Arc<Tensor>,
+    pub wa2: Arc<Tensor>,
+    pub wd: Arc<Tensor>,
+    pub bias: Arc<Tensor>,
+    pub lsb: f32,
+    pub clip: f32,
+}
+
+/// An instance whose layers share unchanged tensors with a cached base.
+/// Byte-identical in content to the [`PreparedModel`] the full pipeline
+/// would produce for the same (scenario, RNG stream).
+#[derive(Clone, Debug)]
+pub struct PreparedInstance {
+    pub layers: Vec<InstanceLayer>,
 }

@@ -12,6 +12,6 @@ pub mod executor;
 pub mod pjrt;
 
 pub use artifact::{Artifact, DatasetBlob, DatasetMeta, LayerInfo};
-pub use executor::{LayerInputs, PreparedModel};
+pub use executor::{InstanceLayer, LayerInputs, PreparedInstance, PreparedModel};
 #[cfg(feature = "pjrt")]
 pub use pjrt::Engine;

@@ -1,0 +1,169 @@
+//! [`PreparedBaseCache`]: prepare the deterministic pipeline prefix once
+//! per spec fingerprint.
+//!
+//! Monte-Carlo repeats, Algorithm-1 search steps, and study points along
+//! the sigma/seed/adc_bits axes all share one split + quantized base
+//! ([`super::PreparedBase`]) — only the perturbation delta differs per
+//! draw. The cache is `Arc`-shared the same way
+//! [`crate::exec::CompiledGraphCache`] is: one instance per `Evaluator` by
+//! default, one per `StudyRunner` spanning all its workers, one per serve
+//! fleet spanning replica spawns *and* recycles.
+//!
+//! Entries hold full model weights, so the cache is bounded: a small FIFO
+//! (capacity [`PreparedBaseCache::DEFAULT_CAPACITY`]) — eviction only ever
+//! costs a rebuild, never correctness, because the base is a pure function
+//! of its key (for one artifact directory; like
+//! [`crate::exec::GraphKey`], the key names the artifact by tag, so don't
+//! share one cache across artifact *generations*).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::obs::registry::{global, Counter};
+
+use super::pipeline::PreparedBase;
+
+/// A build-once cache over deterministic prepare prefixes, keyed by
+/// [`super::Scenario::base_key`]. Hits/misses are mirrored into the global
+/// metric registry as `prepare_base_cache_hits_total` /
+/// `prepare_base_cache_misses_total`.
+pub struct PreparedBaseCache {
+    entries: Mutex<(HashMap<String, Arc<PreparedBase>>, VecDeque<String>)>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    hits_total: Arc<Counter>,
+    misses_total: Arc<Counter>,
+}
+
+impl PreparedBaseCache {
+    /// Bases are whole quantized models; a study sweeping (frac × quant)
+    /// rarely has more than a handful of distinct prefixes live at once.
+    pub const DEFAULT_CAPACITY: usize = 32;
+
+    pub fn new() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        let reg = global();
+        PreparedBaseCache {
+            entries: Mutex::new((HashMap::new(), VecDeque::new())),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            hits_total: reg.counter("prepare_base_cache_hits_total"),
+            misses_total: reg.counter("prepare_base_cache_misses_total"),
+        }
+    }
+
+    /// Return the cached base for `key` or run `build` and cache it. The
+    /// lock is held across `build` (same rationale as
+    /// [`crate::exec::CompiledGraphCache::get_or_compile`]: two workers
+    /// racing on a cold key must not both split + quantize the model;
+    /// the build is quick relative to the repeats it amortizes). Errors
+    /// are not cached.
+    pub fn get_or_build(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<PreparedBase>,
+    ) -> Result<Arc<PreparedBase>> {
+        let mut guard = self.entries.lock().unwrap();
+        let (map, order) = &mut *guard;
+        if let Some(base) = map.get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits_total.inc();
+            return Ok(base.clone());
+        }
+        let base = Arc::new(build()?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.misses_total.inc();
+        map.insert(key.to_string(), base.clone());
+        order.push_back(key.to_string());
+        while map.len() > self.capacity {
+            if let Some(evicted) = order.pop_front() {
+                map.remove(&evicted);
+            } else {
+                break;
+            }
+        }
+        Ok(base)
+    }
+
+    /// Cache hits over this instance's lifetime.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (= bases actually built) over this instance's lifetime.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for PreparedBaseCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::PreparedBase;
+
+    fn empty_base() -> PreparedBase {
+        PreparedBase { layers: Vec::new(), differential: false }
+    }
+
+    #[test]
+    fn second_lookup_hits_and_skips_build() {
+        let cache = PreparedBaseCache::new();
+        let mut builds = 0;
+        for _ in 0..3 {
+            cache
+                .get_or_build("k", || {
+                    builds += 1;
+                    Ok(empty_base())
+                })
+                .unwrap();
+        }
+        assert_eq!(builds, 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = PreparedBaseCache::new();
+        assert!(cache.get_or_build("k", || anyhow::bail!("boom")).is_err());
+        assert_eq!(cache.len(), 0);
+        cache.get_or_build("k", || Ok(empty_base())).unwrap();
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_residency() {
+        let cache = PreparedBaseCache::with_capacity(2);
+        for key in ["a", "b", "c"] {
+            cache.get_or_build(key, || Ok(empty_base())).unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        // "a" was evicted: looking it up again rebuilds.
+        cache.get_or_build("a", || Ok(empty_base())).unwrap();
+        assert_eq!(cache.misses(), 4);
+    }
+}

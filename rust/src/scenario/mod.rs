@@ -38,14 +38,16 @@
 //! # }
 //! ```
 
+pub mod base_cache;
 pub mod pipeline;
 pub mod spec;
 pub mod stages;
 
-pub use pipeline::PreparePipeline;
+pub use base_cache::PreparedBaseCache;
+pub use pipeline::{BaseLayer, PreparePipeline, PreparedBase};
 pub use spec::{PerturbSpec, ReadoutSpec, Scenario, SplitSpec};
 pub use stages::{
     AdcReadout, AllAnalogSplitter, AnalogVariation, ChannelSplitter, ConductanceDrift,
     DigitalVariation, HybridQuantizer, IdealReadout, IwsSplitter, Perturbation, Readout,
-    SplitLayer, SplitPlan, Splitter, StuckAtFaults, WeightQuantizer,
+    SplitLayer, SplitPlan, Splitter, StuckAtFaults, Touches, WeightQuantizer,
 };

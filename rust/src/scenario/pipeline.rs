@@ -8,15 +8,79 @@
 //! split). Stage order per layer is fixed — split → quantize → perturb →
 //! readout — and perturbations consume the shared RNG in declaration
 //! order, so an instance is reproducible from (pipeline, seed) alone.
+//!
+//! ## Incremental prepare
+//!
+//! Only the perturbation stage consumes randomness; everything before it is
+//! deterministic in the spec. [`PreparePipeline::prepare_base`] runs that
+//! deterministic prefix once (split + quantize + the polarity panels of the
+//! *unperturbed* analog copy) into a [`PreparedBase`], and
+//! [`PreparePipeline::prepare_delta`] replays only the perturbations per
+//! repeat, copy-on-writing just the tensors the perturbations declare they
+//! touch ([`super::stages::Perturbation::touches`]). The pair is
+//! bit-identical to [`PreparePipeline::prepare`] — same RNG stream (only
+//! perturbations draw, in declaration order), same readout formula applied
+//! after perturbation — pinned by `tests/prepare_cache_props.rs`.
+
+use std::sync::Arc;
 
 use crate::eval::prepare::ExperimentConfig;
 use crate::runtime::artifact::Artifact;
-use crate::runtime::executor::{LayerInputs, PreparedModel};
+use crate::runtime::executor::{InstanceLayer, LayerInputs, PreparedInstance, PreparedModel};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 use super::spec::Scenario;
-use super::stages::{Perturbation, Readout, SplitLayer, Splitter, WeightQuantizer};
+use super::stages::{Perturbation, Readout, SplitLayer, Splitter, Touches, WeightQuantizer};
+
+/// Differential-cell polarity split: `wa = wa1 - wa2` with both panels
+/// non-negative; the non-differential layout keeps `wa` in the first slot
+/// and an all-zero second panel. Shared verbatim by the full and the
+/// incremental prepare paths so they stay bit-identical.
+fn polarity_split(wa: Tensor, differential: bool) -> (Tensor, Tensor) {
+    if differential {
+        let mut pos = wa.clone();
+        let mut neg = wa;
+        for v in pos.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        for v in neg.data.iter_mut() {
+            *v = (-*v).max(0.0);
+        }
+        (pos, neg)
+    } else {
+        let z = Tensor::zeros(wa.shape.clone());
+        (wa, z)
+    }
+}
+
+/// One layer of the deterministic prepare prefix: the split + quantized
+/// copies before any perturbation, plus the polarity panels of the
+/// unperturbed analog copy (reused as-is by repeats whose perturbations
+/// never touch `wa`).
+#[derive(Clone, Debug)]
+pub struct BaseLayer {
+    /// Split + quantized analog copy, pre-perturbation.
+    pub wa: Tensor,
+    /// Split + quantized digital copy, pre-perturbation.
+    pub wd: Arc<Tensor>,
+    /// Polarity panels of the unperturbed `wa`.
+    pub wa1: Arc<Tensor>,
+    pub wa2: Arc<Tensor>,
+    pub bias: Arc<Tensor>,
+    pub range_frac: f64,
+    pub noisy_zeros: bool,
+}
+
+/// The cached deterministic prefix of one pipeline run against one
+/// artifact: everything up to (not including) the perturbation stage.
+/// Keyed fleet-wide by [`Scenario::base_key`] in a
+/// [`super::PreparedBaseCache`].
+#[derive(Clone, Debug)]
+pub struct PreparedBase {
+    pub layers: Vec<BaseLayer>,
+    pub differential: bool,
+}
 
 /// A composed weight-preparation pipeline. Build one from a declarative
 /// [`Scenario`] (`scenario.pipeline()`), from an [`ExperimentConfig`]
@@ -54,20 +118,7 @@ impl PreparePipeline {
             }
             let (lsb, clip) = self.readout.params(art, li, &layer, self.differential);
             let SplitLayer { wa, wd, .. } = layer;
-            let (wa1, wa2) = if self.differential {
-                let mut pos = wa.clone();
-                let mut neg = wa;
-                for v in pos.data.iter_mut() {
-                    *v = v.max(0.0);
-                }
-                for v in neg.data.iter_mut() {
-                    *v = (-*v).max(0.0);
-                }
-                (pos, neg)
-            } else {
-                let z = Tensor::zeros(wa.shape.clone());
-                (wa, z)
-            };
+            let (wa1, wa2) = polarity_split(wa, self.differential);
             layers.push(LayerInputs {
                 wa1,
                 wa2,
@@ -78,5 +129,86 @@ impl PreparePipeline {
             });
         }
         PreparedModel { layers }
+    }
+
+    /// Run the deterministic prefix (split + quantize) once. The result
+    /// depends only on `(artifact, splitter, quantizers, differential)` —
+    /// no RNG is consumed — so it is shareable across repeats, seeds, and
+    /// any study point whose [`Scenario::base_key`] matches.
+    pub fn prepare_base(&self, art: &Artifact) -> PreparedBase {
+        let plan = self.splitter.plan(art);
+        let mut layers = Vec::with_capacity(art.weights.len());
+        for (li, w) in art.weights.iter().enumerate() {
+            let mut layer = plan.split(art, li, w);
+            for q in &self.quantizers {
+                q.quantize(art, li, &mut layer);
+            }
+            let SplitLayer { wa, wd, range_frac, noisy_zeros } = layer;
+            let (wa1, wa2) = polarity_split(wa.clone(), self.differential);
+            layers.push(BaseLayer {
+                wa,
+                wd: Arc::new(wd),
+                wa1: Arc::new(wa1),
+                wa2: Arc::new(wa2),
+                bias: Arc::new(art.biases[li].clone()),
+                range_frac,
+                noisy_zeros,
+            });
+        }
+        PreparedBase { layers, differential: self.differential }
+    }
+
+    /// Replay only the per-repeat work on a cached base: perturbations (in
+    /// declaration order, the sole consumers of `rng` — the stream is
+    /// identical to [`PreparePipeline::prepare`]'s) and the readout
+    /// parameters, copy-on-writing only the tensors the perturbations
+    /// declare they touch. Untouched slots alias the base's `Arc`s, which
+    /// the delta upload ([`crate::exec::ModelInstance::upload_instance`])
+    /// recognizes by pointer identity.
+    ///
+    /// Undeclared tensors are passed to `perturb` as empty placeholders —
+    /// see the [`Touches`] contract. Custom [`Readout`]s used with this
+    /// path must derive their parameters from `range_frac`/`noisy_zeros`
+    /// and the perturbed *declared* tensors only (both built-ins qualify).
+    pub fn prepare_delta(
+        &self,
+        base: &PreparedBase,
+        art: &Artifact,
+        rng: &mut Rng,
+    ) -> PreparedInstance {
+        let touch = self
+            .perturbations
+            .iter()
+            .fold(Touches::none(), |t, p| t.union(p.touches()));
+        let mut layers = Vec::with_capacity(base.layers.len());
+        for (li, bl) in base.layers.iter().enumerate() {
+            let mut layer = SplitLayer {
+                wa: if touch.analog { bl.wa.clone() } else { Tensor::zeros(vec![0]) },
+                wd: if touch.digital { (*bl.wd).clone() } else { Tensor::zeros(vec![0]) },
+                range_frac: bl.range_frac,
+                noisy_zeros: bl.noisy_zeros,
+            };
+            for p in &self.perturbations {
+                p.perturb(art, li, &mut layer, rng);
+            }
+            let (lsb, clip) = self.readout.params(art, li, &layer, self.differential);
+            let SplitLayer { wa, wd, .. } = layer;
+            let (wa1, wa2) = if touch.analog {
+                let (pos, neg) = polarity_split(wa, self.differential);
+                (Arc::new(pos), Arc::new(neg))
+            } else {
+                (bl.wa1.clone(), bl.wa2.clone())
+            };
+            let wd = if touch.digital { Arc::new(wd) } else { bl.wd.clone() };
+            layers.push(InstanceLayer {
+                wa1,
+                wa2,
+                wd,
+                bias: bl.bias.clone(),
+                lsb,
+                clip,
+            });
+        }
+        PreparedInstance { layers }
     }
 }

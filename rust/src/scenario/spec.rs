@@ -326,6 +326,31 @@ impl Scenario {
         }
     }
 
+    /// Fingerprint of the deterministic prepare prefix: everything that
+    /// shapes [`PreparePipeline::prepare_base`]'s output — model, split,
+    /// quantization, wordline group, differential layout. Perturbations,
+    /// readout, seed, repeats, eval knobs, and backend tuning are
+    /// deliberately absent, so sigma/seed/adc_bits-axis study points
+    /// share one [`super::PreparedBase`] cache entry (readout parameters
+    /// are recomputed per delta). Like [`crate::exec::GraphKey`], the
+    /// model is named by tag: don't share one [`super::PreparedBaseCache`]
+    /// across artifact generations of the same tag.
+    pub fn base_key(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("split".to_string(), split_to_json(&self.split));
+        m.insert(
+            "quant".to_string(),
+            match &self.quant {
+                Some(q) => quant_to_json(q),
+                None => Json::Null,
+            },
+        );
+        m.insert("group".to_string(), Json::Num(self.group as f64));
+        m.insert("differential".to_string(), Json::Bool(self.differential()));
+        Json::Obj(m).to_string()
+    }
+
     /// Lower the declarative spec to a composed trait pipeline.
     pub fn pipeline(&self) -> PreparePipeline {
         let splitter: Box<dyn Splitter> = match self.split {

@@ -65,11 +65,57 @@ pub trait WeightQuantizer {
     fn quantize(&self, art: &Artifact, li: usize, layer: &mut SplitLayer);
 }
 
+/// Which split copies a [`Perturbation`] reads or writes. The cached
+/// prepare path ([`super::PreparePipeline::prepare_delta`]) copy-on-writes
+/// only the declared tensors per repeat; undeclared tensors may be handed
+/// to `perturb` as *empty placeholders*, so a declaration must cover every
+/// tensor the impl touches in any way (read or write).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Touches {
+    /// Touches the analog copy `wa` (incl. reads like `nonzero_range`).
+    pub analog: bool,
+    /// Touches the digital copy `wd`.
+    pub digital: bool,
+}
+
+impl Touches {
+    pub fn none() -> Touches {
+        Touches { analog: false, digital: false }
+    }
+    pub fn analog() -> Touches {
+        Touches { analog: true, digital: false }
+    }
+    pub fn digital() -> Touches {
+        Touches { analog: false, digital: true }
+    }
+    pub fn both() -> Touches {
+        Touches { analog: true, digital: true }
+    }
+    pub fn union(self, other: Touches) -> Touches {
+        Touches {
+            analog: self.analog || other.analog,
+            digital: self.digital || other.digital,
+        }
+    }
+}
+
 /// Injects one device imperfection into the split copies (stage 3).
 /// Implementations must draw all randomness from `rng` so instances stay
 /// reproducible from a single scenario seed.
+///
+/// Contract for the cached prepare path: `perturb` may read/write only the
+/// tensors declared by [`Perturbation::touches`] (plus the scalar fields
+/// `range_frac`/`noisy_zeros`, which are read-only for every stage — they
+/// feed the cached readout parameters).
 pub trait Perturbation {
     fn perturb(&self, art: &Artifact, li: usize, layer: &mut SplitLayer, rng: &mut Rng);
+
+    /// Which tensors this perturbation reads or writes. The conservative
+    /// default (`both`) is always correct; declaring precisely lets the
+    /// delta path skip cloning (and re-uploading) the untouched copy.
+    fn touches(&self) -> Touches {
+        Touches::both()
+    }
 }
 
 /// Derives the per-layer ADC step/clip `(lsb, clip)` (stage 4);
@@ -190,6 +236,10 @@ impl Perturbation for AnalogVariation {
     fn perturb(&self, _art: &Artifact, _li: usize, layer: &mut SplitLayer, rng: &mut Rng) {
         self.cell.perturb(&mut layer.wa, rng, layer.noisy_zeros);
     }
+
+    fn touches(&self) -> Touches {
+        Touches::analog()
+    }
 }
 
 /// Variation on the digital co-accelerator's copy (paper: 10% relative,
@@ -208,6 +258,10 @@ impl DigitalVariation {
 impl Perturbation for DigitalVariation {
     fn perturb(&self, _art: &Artifact, _li: usize, layer: &mut SplitLayer, rng: &mut Rng) {
         self.cell.perturb(&mut layer.wd, rng, false);
+    }
+
+    fn touches(&self) -> Touches {
+        Touches::digital()
     }
 }
 
@@ -242,6 +296,10 @@ impl Perturbation for StuckAtFaults {
             }
         }
     }
+
+    fn touches(&self) -> Touches {
+        Touches::analog()
+    }
 }
 
 /// Conductance drift (PCM-style, Rasch et al. 2023): conductance decays as
@@ -270,6 +328,10 @@ impl Perturbation for ConductanceDrift {
             let nu = (self.nu + rng.normal() * self.nu_sigma).max(0.0);
             *v *= self.t_seconds.powf(-nu) as f32;
         }
+    }
+
+    fn touches(&self) -> Touches {
+        Touches::analog()
     }
 }
 

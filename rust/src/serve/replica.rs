@@ -22,7 +22,7 @@ use crate::coordinator::batcher::{serve_requests, BatchContext, InferenceRequest
 use crate::coordinator::Metrics;
 use crate::exec::BackendProvider;
 use crate::obs::trace;
-use crate::scenario::Scenario;
+use crate::scenario::{PreparedBaseCache, Scenario};
 
 use super::admission::{Gate, Rejection};
 use super::health::ReplicaHealth;
@@ -64,11 +64,15 @@ impl Replica {
     /// join). The replica re-prepares from `scenario` with `spec.seed` as
     /// its own variation seed — recycling passes the same scenario, new
     /// seed — and executes on a backend from `provider` (shared for the
-    /// native interpreter, built in-thread for PJRT).
+    /// native interpreter, built in-thread for PJRT). `base_cache`, when
+    /// set, is the router's fleet-shared deterministic-prefix cache:
+    /// replicas differ only in their perturbation draw, so spawn, recycle,
+    /// and scale-up all re-perturb on one split + quantized base.
     pub fn spawn(
         artifacts: std::path::PathBuf,
         scenario: &Scenario,
         provider: &BackendProvider,
+        base_cache: Option<Arc<PreparedBaseCache>>,
         spec: ReplicaSpec,
     ) -> Result<Replica> {
         let _spawn_span =
@@ -84,9 +88,14 @@ impl Replica {
         let worker = std::thread::Builder::new()
             .name(format!("replica-{}", spec.id))
             .spawn(move || -> Result<()> {
-                let built = provider
-                    .instantiate()
-                    .and_then(|backend| BatchContext::with_backend(&artifacts, &sc, backend));
+                let built = provider.instantiate().and_then(|backend| {
+                    BatchContext::with_backend_cached(
+                        &artifacts,
+                        &sc,
+                        backend,
+                        base_cache.as_deref(),
+                    )
+                });
                 let ctx = match built {
                     Ok(ctx) => {
                         let _ = ready_tx

@@ -36,7 +36,7 @@ use crate::exec::BackendProvider;
 use crate::obs::registry::{Registry, RegistrySnapshot};
 use crate::obs::trace;
 use crate::runtime::{Artifact, DatasetBlob, DatasetMeta};
-use crate::scenario::Scenario;
+use crate::scenario::{PreparedBaseCache, Scenario};
 use crate::util::rng::Rng;
 
 use super::admission::{Rejection, ServeError};
@@ -88,6 +88,11 @@ pub struct FleetConfig {
     /// When set (and the bounds leave room), a background autoscaler
     /// thread grows/shrinks the live replica set each interval.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Share one deterministic-prefix prepare cache across every replica
+    /// spawn *and* recycle (replicas differ only in their variation seed,
+    /// so they split + quantize once fleet-wide). `false` =
+    /// `--no-prepare-cache`; weights are bit-identical either way.
+    pub prepare_cache: bool,
 }
 
 impl FleetConfig {
@@ -102,6 +107,7 @@ impl FleetConfig {
             min_replicas: 0,
             max_replicas: 0,
             autoscale: None,
+            prepare_cache: true,
         }
     }
 
@@ -206,6 +212,11 @@ struct RouterShared {
     /// interpreter — one compile-once graph cache for the whole fleet — or
     /// per-replica for PJRT.
     backend: BackendProvider,
+    /// Fleet-shared deterministic-prefix prepare cache (like the native
+    /// backend's compile-once graph cache): every spawn, recycle, and
+    /// scale-up re-perturbs on one split + quantized base. `None` when
+    /// [`FleetConfig::prepare_cache`] is off.
+    base_cache: Option<Arc<PreparedBaseCache>>,
     fleet: FleetConfig,
     /// Resolved admission depth (the 0-sentinel replaced by 2 × batch).
     queue_depth: usize,
@@ -294,6 +305,9 @@ impl Router {
         let queue_depth = if fleet.queue_depth == 0 { 2 * art.batch } else { fleet.queue_depth };
         let per_image = DatasetMeta::load(&artifacts, &art.dataset)?.image_elems();
         let backend = BackendProvider::for_kind_with(scenario.backend, scenario.native_config())?;
+        let base_cache = fleet
+            .prepare_cache
+            .then(|| Arc::new(PreparedBaseCache::new()));
         let mut slots = Vec::with_capacity(max_replicas);
         let mut slot_gens = Vec::with_capacity(max_replicas);
         for id in 0..max_replicas {
@@ -309,6 +323,7 @@ impl Router {
                     artifacts.clone(),
                     &scenario,
                     &backend,
+                    base_cache.clone(),
                     spec,
                 )?)));
                 slot_gens.push(AtomicU64::new(1));
@@ -329,6 +344,7 @@ impl Router {
             artifacts,
             scenario,
             backend,
+            base_cache,
             fleet,
             queue_depth,
             per_image,
@@ -646,8 +662,13 @@ impl RouterShared {
                 max_wait: self.fleet.max_wait,
                 queue_depth: self.queue_depth,
             };
-            let fresh =
-                Replica::spawn(self.artifacts.clone(), &self.scenario, &self.backend, spec)?;
+            let fresh = Replica::spawn(
+                self.artifacts.clone(),
+                &self.scenario,
+                &self.backend,
+                self.base_cache.clone(),
+                spec,
+            )?;
             *self.slots[id].write().unwrap() = Some(fresh);
             self.registry.counter("serve_scale_up_total").inc();
             live[id] = true;
@@ -744,8 +765,13 @@ impl RouterShared {
                 max_wait: self.fleet.max_wait,
                 queue_depth: self.queue_depth,
             };
-            let fresh =
-                Replica::spawn(self.artifacts.clone(), &self.scenario, &self.backend, spec)?;
+            let fresh = Replica::spawn(
+                self.artifacts.clone(),
+                &self.scenario,
+                &self.backend,
+                self.base_cache.clone(),
+                spec,
+            )?;
             let swapped = {
                 let mut guard = slot.write().unwrap();
                 // under the maintenance lock the slot can't have been

@@ -52,6 +52,11 @@ pub struct PointTiming {
     pub secs: f64,
     /// Which worker thread evaluated the point.
     pub worker: usize,
+    /// Seconds of `secs` spent in weight preparation (base + deltas; the
+    /// whole pipeline when the prepare cache is off).
+    pub prepare_s: f64,
+    /// Seconds of `secs` spent in upload + graph execution.
+    pub exec_s: f64,
 }
 
 /// Results of one whole study, in stable grid order.
@@ -261,6 +266,8 @@ impl StudyReport {
                         m.insert("id".to_string(), Json::Str(t.id.clone()));
                         m.insert("secs".to_string(), Json::Num(t.secs));
                         m.insert("worker".to_string(), Json::Num(t.worker as f64));
+                        m.insert("prepare_s".to_string(), Json::Num(t.prepare_s));
+                        m.insert("exec_s".to_string(), Json::Num(t.exec_s));
                         Json::Obj(m)
                     })
                     .collect(),

@@ -26,10 +26,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::eval::Evaluator;
+use crate::eval::{Evaluator, ScenarioTiming};
 use crate::exec::{BackendKind, BackendProvider, NativeConfig};
 use crate::obs::trace;
 use crate::runtime::{Artifact, DatasetBlob};
+use crate::scenario::PreparedBaseCache;
 
 use super::grid::StudyPoint;
 use super::report::{PointResult, PointTiming, StudyReport};
@@ -40,12 +41,21 @@ use super::spec::{artifact_built, Study};
 pub struct StudyRunner {
     dir: PathBuf,
     workers: usize,
+    /// Deterministic-prefix cache shared by every worker (and the clean
+    /// anchors): sigma/seed/adc_bits-axis points split + quantize once.
+    /// `None` = `--no-prepare-cache` (results are bit-identical either
+    /// way; `tests/prepare_cache_props.rs` pins it).
+    base_cache: Option<Arc<PreparedBaseCache>>,
 }
 
 impl StudyRunner {
     /// Runner over the given artifacts directory, auto-sized worker pool.
     pub fn new(dir: impl Into<PathBuf>) -> StudyRunner {
-        StudyRunner { dir: dir.into(), workers: 0 }
+        StudyRunner {
+            dir: dir.into(),
+            workers: 0,
+            base_cache: Some(Arc::new(PreparedBaseCache::new())),
+        }
     }
 
     /// Fix the worker-thread count (0 = auto = available cores, capped at
@@ -53,6 +63,21 @@ impl StudyRunner {
     /// at any value.
     pub fn with_workers(mut self, workers: usize) -> StudyRunner {
         self.workers = workers;
+        self
+    }
+
+    /// Enable/disable the study-wide prepared-base cache (a pure
+    /// throughput knob; on by default).
+    pub fn with_prepare_cache(mut self, enabled: bool) -> StudyRunner {
+        self.base_cache =
+            if enabled { Some(Arc::new(PreparedBaseCache::new())) } else { None };
+        self
+    }
+
+    /// Share an externally owned prepared-base cache (e.g. to inspect its
+    /// hit/miss counts after the run, or to span several studies).
+    pub fn with_base_cache(mut self, cache: Arc<PreparedBaseCache>) -> StudyRunner {
+        self.base_cache = Some(cache);
         self
     }
 
@@ -164,7 +189,8 @@ impl StudyRunner {
                         let _span =
                             trace::span_dyn("study", || format!("clean-anchor {model}"));
                         let ev =
-                            Evaluator::from_parts(art.clone(), data.clone(), backend.clone());
+                            Evaluator::from_parts(art.clone(), data.clone(), backend.clone())
+                                .with_base_cache(self.base_cache.clone());
                         let res = ev
                             .clean_accuracy(study.base.n_eval)
                             .with_context(|| format!("clean accuracy of '{model}'"));
@@ -188,9 +214,10 @@ impl StudyRunner {
         // -- parallel point execution ---------------------------------------
         let n = points.len();
         let next = AtomicUsize::new(0);
-        // each slot gets (result, wall-clock seconds, worker id); timing
-        // goes to the side channel, never into the serialized report
-        let slots: Vec<Mutex<Option<(PointResult, f64, usize)>>> =
+        // each slot gets (result, wall-clock seconds, worker id, prepare/
+        // exec split); timing goes to the side channel, never into the
+        // serialized report
+        let slots: Vec<Mutex<Option<(PointResult, f64, usize, ScenarioTiming)>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
         let next_worker = AtomicUsize::new(0);
         let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
@@ -226,15 +253,20 @@ impl StudyRunner {
                                 .expect("dataset preloaded")
                                 .clone();
                             Evaluator::from_parts(art, data, backend.clone())
+                                .with_base_cache(self.base_cache.clone())
                         });
                         let point_t0 = Instant::now();
                         let span = trace::span_dyn("study", || format!("point {}", point.id));
                         let outcome = run_point(ev, point, clean[&model]);
                         drop(span);
                         match outcome {
-                            Ok(result) => {
-                                *slots[i].lock().unwrap() =
-                                    Some((result, point_t0.elapsed().as_secs_f64(), worker_id));
+                            Ok((result, split)) => {
+                                *slots[i].lock().unwrap() = Some((
+                                    result,
+                                    point_t0.elapsed().as_secs_f64(),
+                                    worker_id,
+                                    split,
+                                ));
                             }
                             Err(e) => {
                                 let mut f = failure.lock().unwrap();
@@ -254,13 +286,15 @@ impl StudyRunner {
         let mut results: Vec<PointResult> = Vec::with_capacity(n);
         let mut timing: Vec<PointTiming> = Vec::with_capacity(n);
         for slot in slots {
-            let (result, secs, worker) =
+            let (result, secs, worker, split) =
                 slot.into_inner().unwrap().expect("every point produced a result");
             timing.push(PointTiming {
                 index: result.index,
                 id: result.id.clone(),
                 secs,
                 worker,
+                prepare_s: split.prepare_s,
+                exec_s: split.exec_s,
             });
             results.push(result);
         }
@@ -285,34 +319,42 @@ impl StudyRunner {
 }
 
 /// Evaluate one grid point: a plain scenario run, or the Algorithm-1
-/// crossing for `search`-axis points.
-fn run_point(ev: &Evaluator, point: &StudyPoint, clean: f64) -> Result<PointResult> {
-    let (frac, acc, searched) = match &point.search {
+/// crossing for `search`-axis points. Returns the result plus the
+/// prepare/exec wall-clock split for the timing side channel.
+fn run_point(
+    ev: &Evaluator,
+    point: &StudyPoint,
+    clean: f64,
+) -> Result<(PointResult, ScenarioTiming)> {
+    let (frac, acc, searched, split) = match &point.search {
         Some(task) => {
             let target = clean - task.params.target_drop;
-            let (frac, acc) = ev.search_protection(
+            let (frac, acc, split) = ev.search_protection_timed(
                 |f| Evaluator::search_point(&point.scenario, task.split_at(f)),
                 target,
                 task.params.max_frac,
                 task.params.step,
             )?;
-            (frac, acc, true)
+            (frac, acc, true, split)
         }
         None => {
-            let acc = ev.run_scenario(&point.scenario)?;
-            (point.scenario.protected_frac(), acc, false)
+            let (acc, split) = ev.run_scenario_timed(&point.scenario)?;
+            (point.scenario.protected_frac(), acc, false, split)
         }
     };
-    Ok(PointResult {
-        index: point.index,
-        id: point.id.clone(),
-        model: point.scenario.model.clone(),
-        axes: point.axes.clone(),
-        mean: acc.mean,
-        std: acc.std,
-        repeats: acc.repeats,
-        clean,
-        frac,
-        searched,
-    })
+    Ok((
+        PointResult {
+            index: point.index,
+            id: point.id.clone(),
+            model: point.scenario.model.clone(),
+            axes: point.axes.clone(),
+            mean: acc.mean,
+            std: acc.std,
+            repeats: acc.repeats,
+            clean,
+            frac,
+            searched,
+        },
+        split,
+    ))
 }

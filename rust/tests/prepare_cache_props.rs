@@ -1,0 +1,161 @@
+//! Incremental-prepare properties: the cached deterministic base + the
+//! per-repeat perturbation delta must be *bit-identical* to the full
+//! pipeline — at the tensor level, at the end-to-end accuracy level with
+//! the cache forced on vs off, and with the study runner's shared cache
+//! demonstrably collapsing sigma-axis points onto one base entry.
+//!
+//! Everything here runs with no built artifacts and no xla (synthetic
+//! artifact + native backend), in both the default and the
+//! `--no-default-features` builds.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use hybridac::eval::{Evaluator, Method};
+use hybridac::exec::BackendKind;
+use hybridac::runtime::Artifact;
+use hybridac::scenario::{PerturbSpec, PreparedBaseCache, Scenario};
+use hybridac::study::{Axis, Study, StudyRunner};
+use hybridac::util::rng::Rng;
+
+/// Materialize the synthetic artifact + dataset once per test process.
+fn synthetic_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("hybridac-prepcache-{}", std::process::id()));
+        Artifact::materialize_synthetic(&dir).expect("materialize synthetic artifact");
+        dir
+    })
+    .clone()
+}
+
+/// The scenario matrix the incremental path must reproduce exactly:
+/// analog-only perturbations (paper default), differential cells,
+/// stuck-at faults + drift (extra analog stages), and a digital-only
+/// perturbation (the `wa` panels must alias the base untouched).
+fn scenarios() -> Vec<Scenario> {
+    let native = |sc: Scenario| sc.with_backend(BackendKind::Native).with_eval(32, 3);
+    let mut digital_only =
+        Scenario::paper_default("digital-noise", "synthetic", Method::Hybrid { frac: 0.16 });
+    digital_only.perturb = vec![PerturbSpec::DigitalVariation { sigma: 0.05 }];
+    vec![
+        native(Scenario::paper_default(
+            "paper-hybrid",
+            "synthetic",
+            Method::Hybrid { frac: 0.16 },
+        )),
+        native(Scenario::builtin("differential-4b", "synthetic").unwrap()),
+        native(Scenario::builtin("stuck-at", "synthetic").unwrap()),
+        native(Scenario::builtin("drift-1h", "synthetic").unwrap()),
+        native(digital_only),
+    ]
+}
+
+fn bits(t: &hybridac::tensor::Tensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn base_plus_delta_matches_full_prepare_bit_for_bit() {
+    let art = Artifact::synthetic(42);
+    for sc in scenarios() {
+        let pipeline = sc.pipeline();
+        let base = pipeline.prepare_base(&art);
+        // one shared RNG per path, forked per repeat exactly like the
+        // evaluator's loop — the delta must consume the same stream
+        let mut master_full = Rng::new(sc.seed);
+        let mut master_delta = Rng::new(sc.seed);
+        for rep in 0..3u64 {
+            let mut rng_full = master_full.fork(rep + 1);
+            let mut rng_delta = master_delta.fork(rep + 1);
+            let full = pipeline.prepare(&art, &mut rng_full);
+            let inst = pipeline.prepare_delta(&base, &art, &mut rng_delta);
+            assert_eq!(full.layers.len(), inst.layers.len(), "{}", sc.name);
+            for (li, (f, d)) in full.layers.iter().zip(&inst.layers).enumerate() {
+                let tag = format!("{} layer {li} rep {rep}", sc.name);
+                assert_eq!(bits(&f.wa1), bits(&d.wa1), "wa1 {tag}");
+                assert_eq!(bits(&f.wa2), bits(&d.wa2), "wa2 {tag}");
+                assert_eq!(bits(&f.wd), bits(&d.wd), "wd {tag}");
+                assert_eq!(bits(&f.bias), bits(&d.bias), "bias {tag}");
+                assert_eq!(f.lsb.to_bits(), d.lsb.to_bits(), "lsb {tag}");
+                assert_eq!(f.clip.to_bits(), d.clip.to_bits(), "clip {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn accuracy_is_bit_identical_cache_on_vs_off() {
+    let dir = synthetic_dir();
+    for sc in scenarios() {
+        assert!(sc.repeats >= 3, "{}: the pin needs repeats >= 3", sc.name);
+        let on = Evaluator::for_scenario(&dir, &sc).unwrap();
+        let off = Evaluator::for_scenario(&dir, &sc).unwrap().with_base_cache(None);
+        let a = on.run_scenario(&sc).unwrap();
+        let b = off.run_scenario(&sc).unwrap();
+        assert_eq!(a.repeats, b.repeats, "{}", sc.name);
+        assert_eq!(
+            a.mean.to_bits(),
+            b.mean.to_bits(),
+            "{}: cached mean {} != uncached {}",
+            sc.name,
+            a.mean,
+            b.mean
+        );
+        assert_eq!(
+            a.std.to_bits(),
+            b.std.to_bits(),
+            "{}: cached std {} != uncached {}",
+            sc.name,
+            a.std,
+            b.std
+        );
+    }
+}
+
+fn sigma_study(name: &str) -> Study {
+    Study {
+        name: name.to_string(),
+        base: Scenario::paper_default(name, "synthetic", Method::Hybrid { frac: 0.16 })
+            .with_backend(BackendKind::Native)
+            .with_eval(32, 3),
+        axes: vec![Axis::Sigma(vec![0.25, 0.5, 0.75])],
+    }
+}
+
+#[test]
+fn sigma_axis_points_share_one_base_entry() {
+    let dir = synthetic_dir();
+    let cache = Arc::new(PreparedBaseCache::new());
+    let rep = StudyRunner::new(&dir)
+        .with_workers(1)
+        .with_base_cache(cache.clone())
+        .run(&sigma_study("sigma-share"))
+        .unwrap();
+    assert_eq!(rep.points.len(), 3);
+    // two distinct bases live in the cache: the clean anchor's (no split,
+    // no quant) and the one shared by all three sigma points — sigma only
+    // changes the perturbation stage, never the base key
+    assert_eq!(cache.len(), 2, "clean anchor + one shared point base");
+    assert_eq!(cache.misses(), 2, "each distinct base builds exactly once");
+    assert_eq!(cache.hits(), 2, "the 2nd and 3rd sigma points hit the shared base");
+}
+
+#[test]
+fn study_report_is_byte_identical_cache_on_vs_off() {
+    let dir = synthetic_dir();
+    let on = StudyRunner::new(&dir)
+        .with_workers(1)
+        .run(&sigma_study("cache-on-off"))
+        .unwrap();
+    let off = StudyRunner::new(&dir)
+        .with_workers(1)
+        .with_prepare_cache(false)
+        .run(&sigma_study("cache-on-off"))
+        .unwrap();
+    assert_eq!(
+        on.to_json().to_string(),
+        off.to_json().to_string(),
+        "the prepare cache must never change a study report"
+    );
+}
