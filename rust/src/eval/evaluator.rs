@@ -222,6 +222,8 @@ impl Evaluator {
         let mut accs = Vec::with_capacity(repeats);
         let mut timing = ScenarioTiming::default();
         if let Some(cache) = &self.base_cache {
+            // tidy: allow(clock): prepare/exec wall-time split feeds the
+            // ScenarioTiming side channel only, never an accuracy artifact
             let t = Instant::now();
             let base = cache.get_or_build(&sc.base_key(), || {
                 let _s = trace::span("prepare/base", "prepare");
@@ -231,12 +233,16 @@ impl Evaluator {
             let mut prev: Option<ModelInstance> = None;
             for rep in 0..repeats {
                 let mut rng = master.fork(rep as u64 + 1);
+                // tidy: allow(clock): prepare/exec wall-time split feeds the
+                // ScenarioTiming side channel only, never an accuracy artifact
                 let t = Instant::now();
                 let inst = {
                     let _s = trace::span("prepare/delta", "prepare");
                     pipeline.prepare_delta(&base, &self.art, &mut rng)
                 };
                 timing.prepare_s += t.elapsed().as_secs_f64();
+                // tidy: allow(clock): prepare/exec wall-time split feeds the
+                // ScenarioTiming side channel only, never an accuracy artifact
                 let t = Instant::now();
                 let (acc, instance) = exec.accuracy_instance(&inst, prev.as_ref())?;
                 timing.exec_s += t.elapsed().as_secs_f64();
@@ -246,12 +252,16 @@ impl Evaluator {
         } else {
             for rep in 0..repeats {
                 let mut rng = master.fork(rep as u64 + 1);
+                // tidy: allow(clock): prepare/exec wall-time split feeds the
+                // ScenarioTiming side channel only, never an accuracy artifact
                 let t = Instant::now();
                 let model = {
                     let _s = trace::span("prepare/full", "prepare");
                     pipeline.prepare(&self.art, &mut rng)
                 };
                 timing.prepare_s += t.elapsed().as_secs_f64();
+                // tidy: allow(clock): prepare/exec wall-time split feeds the
+                // ScenarioTiming side channel only, never an accuracy artifact
                 let t = Instant::now();
                 accs.push(exec.accuracy(&model)?);
                 timing.exec_s += t.elapsed().as_secs_f64();

@@ -15,14 +15,36 @@ use super::{PackedMatrix, MR, NR};
 const _: () = assert!(NR == 8);
 
 /// `((g/lsb).round()*lsb).clamp(-clip, clip)` for 4 lanes.
+///
+/// # Safety
+/// The CPU must support neon (checked once by `SimdLevel::detect`).
 #[inline]
 #[target_feature(enable = "neon")]
-unsafe fn adc(g: float32x4_t, lsbv: float32x4_t, clipv: float32x4_t, nclipv: float32x4_t) -> float32x4_t {
-    let q = vdivq_f32(g, lsbv);
-    let q = vmulq_f32(vrndaq_f32(q), lsbv);
-    vminq_f32(clipv, vmaxq_f32(nclipv, q))
+// value-only intrinsics are safe-in-context on toolchains with
+// target_feature 1.1; the explicit block keeps older toolchains compiling
+// under deny(unsafe_op_in_unsafe_fn)
+#[allow(unused_unsafe)]
+unsafe fn adc(
+    g: float32x4_t,
+    lsbv: float32x4_t,
+    clipv: float32x4_t,
+    nclipv: float32x4_t,
+) -> float32x4_t {
+    // SAFETY: value-only NEON intrinsics; the fn's neon precondition is
+    // the only obligation, and the caller discharges it.
+    unsafe {
+        let q = vdivq_f32(g, lsbv);
+        let q = vmulq_f32(vrndaq_f32(q), lsbv);
+        vminq_f32(clipv, vmaxq_f32(nclipv, q))
+    }
 }
 
+/// One register tile: `R` activation rows against one packed panel.
+///
+/// # Safety
+/// The CPU must support neon, `panel` must hold at least `k * NR` floats,
+/// and `x` at least `(mi + R) * k` — guaranteed by `kernel_rows_f32`'s
+/// loop bounds over a `PackedMatrix` built by `pack`.
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "neon")]
 unsafe fn tile_rows_f32<const R: usize>(
@@ -38,45 +60,53 @@ unsafe fn tile_rows_f32<const R: usize>(
     group: usize,
     out: &mut [f32],
 ) {
-    let lsbv = vdupq_n_f32(lsb);
-    let clipv = vdupq_n_f32(clip);
-    let nclipv = vdupq_n_f32(-clip);
-    let zero = vdupq_n_f32(0.0);
-    let mut acc_lo = [zero; R];
-    let mut acc_hi = [zero; R];
-    let mut k0 = 0;
-    while k0 < k {
-        let k1 = (k0 + group).min(k);
-        let mut g_lo = [zero; R];
-        let mut g_hi = [zero; R];
-        for ki in k0..k1 {
-            let w_lo = vld1q_f32(panel.as_ptr().add(ki * NR));
-            let w_hi = vld1q_f32(panel.as_ptr().add(ki * NR + 4));
-            for r in 0..R {
-                let xv = vdupq_n_f32(*x.get_unchecked((mi + r) * k + ki));
-                g_lo[r] = vaddq_f32(g_lo[r], vmulq_f32(xv, w_lo));
-                g_hi[r] = vaddq_f32(g_hi[r], vmulq_f32(xv, w_hi));
+    // SAFETY: neon is the fn's own precondition. The panel loads read 4
+    // floats at ki * NR and ki * NR + 4; pack() emits k rows of NR floats
+    // per panel and ki < k, so both stay in bounds. `x.get_unchecked((mi
+    // + r) * k + ki)` is in bounds because the caller only passes mi with
+    // mi + R <= m and x.len() == m * k; the stores write 4 + 4 floats
+    // into a local [f32; NR].
+    unsafe {
+        let lsbv = vdupq_n_f32(lsb);
+        let clipv = vdupq_n_f32(clip);
+        let nclipv = vdupq_n_f32(-clip);
+        let zero = vdupq_n_f32(0.0);
+        let mut acc_lo = [zero; R];
+        let mut acc_hi = [zero; R];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + group).min(k);
+            let mut g_lo = [zero; R];
+            let mut g_hi = [zero; R];
+            for ki in k0..k1 {
+                let w_lo = vld1q_f32(panel.as_ptr().add(ki * NR));
+                let w_hi = vld1q_f32(panel.as_ptr().add(ki * NR + 4));
+                for r in 0..R {
+                    let xv = vdupq_n_f32(*x.get_unchecked((mi + r) * k + ki));
+                    g_lo[r] = vaddq_f32(g_lo[r], vmulq_f32(xv, w_lo));
+                    g_hi[r] = vaddq_f32(g_hi[r], vmulq_f32(xv, w_hi));
+                }
             }
+            if lsb > 0.0 {
+                for r in 0..R {
+                    acc_lo[r] = vaddq_f32(acc_lo[r], adc(g_lo[r], lsbv, clipv, nclipv));
+                    acc_hi[r] = vaddq_f32(acc_hi[r], adc(g_hi[r], lsbv, clipv, nclipv));
+                }
+            } else {
+                for r in 0..R {
+                    acc_lo[r] = vaddq_f32(acc_lo[r], g_lo[r]);
+                    acc_hi[r] = vaddq_f32(acc_hi[r], g_hi[r]);
+                }
+            }
+            k0 = k1;
         }
-        if lsb > 0.0 {
-            for r in 0..R {
-                acc_lo[r] = vaddq_f32(acc_lo[r], adc(g_lo[r], lsbv, clipv, nclipv));
-                acc_hi[r] = vaddq_f32(acc_hi[r], adc(g_hi[r], lsbv, clipv, nclipv));
-            }
-        } else {
-            for r in 0..R {
-                acc_lo[r] = vaddq_f32(acc_lo[r], g_lo[r]);
-                acc_hi[r] = vaddq_f32(acc_hi[r], g_hi[r]);
-            }
+        for r in 0..R {
+            let mut tmp = [0.0f32; NR];
+            vst1q_f32(tmp.as_mut_ptr(), acc_lo[r]);
+            vst1q_f32(tmp.as_mut_ptr().add(4), acc_hi[r]);
+            let base = (mi + r) * n + n0;
+            out[base..base + nw].copy_from_slice(&tmp[..nw]);
         }
-        k0 = k1;
-    }
-    for r in 0..R {
-        let mut tmp = [0.0f32; NR];
-        vst1q_f32(tmp.as_mut_ptr(), acc_lo[r]);
-        vst1q_f32(tmp.as_mut_ptr().add(4), acc_hi[r]);
-        let base = (mi + r) * n + n0;
-        out[base..base + nw].copy_from_slice(&tmp[..nw]);
     }
 }
 
@@ -105,11 +135,15 @@ pub(super) unsafe fn kernel_rows_f32(
         let panel = w.panel(p);
         let mut mi = 0;
         while mi + MR <= m {
-            tile_rows_f32::<MR>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            // SAFETY: neon is this fn's own precondition; mi + MR <= m and
+            // panel comes from the PackedMatrix, satisfying the tile's
+            // bounds contract.
+            unsafe { tile_rows_f32::<MR>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out) };
             mi += MR;
         }
         while mi < m {
-            tile_rows_f32::<1>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            // SAFETY: as above with R = 1 (mi + 1 <= m in this loop).
+            unsafe { tile_rows_f32::<1>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out) };
             mi += 1;
         }
     }

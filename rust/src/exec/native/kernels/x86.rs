@@ -30,30 +30,58 @@ use super::{PackedMatrix, MR, NR};
 const _: () = assert!(NR == 8);
 
 /// `f32::round` (ties away from zero) for 8 lanes. See module docs.
+///
+/// # Safety
+/// The CPU must support avx2 (checked once by `SimdLevel::detect`).
 #[inline]
 #[target_feature(enable = "avx2")]
+// value-only intrinsics are safe-in-context on toolchains with
+// target_feature 1.1; the explicit block keeps older toolchains compiling
+// under deny(unsafe_op_in_unsafe_fn)
+#[allow(unused_unsafe)]
 unsafe fn round_half_away(v: __m256) -> __m256 {
-    let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(v);
-    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
-    let frac = _mm256_sub_ps(v, t);
-    let afrac = _mm256_and_ps(frac, absmask);
-    let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(afrac, _mm256_set1_ps(0.5));
-    let sign = _mm256_andnot_ps(absmask, v);
-    let step = _mm256_or_ps(_mm256_set1_ps(1.0), sign); // ±1.0, v's sign
-    _mm256_add_ps(t, _mm256_and_ps(ge, step))
+    // SAFETY: value-only AVX2 intrinsics; the fn's avx2 precondition is
+    // the only obligation, and the caller discharges it.
+    unsafe {
+        let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(v);
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let frac = _mm256_sub_ps(v, t);
+        let afrac = _mm256_and_ps(frac, absmask);
+        let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(afrac, _mm256_set1_ps(0.5));
+        let sign = _mm256_andnot_ps(absmask, v);
+        let step = _mm256_or_ps(_mm256_set1_ps(1.0), sign); // ±1.0, v's sign
+        _mm256_add_ps(t, _mm256_and_ps(ge, step))
+    }
 }
 
 /// The shared ADC expression `((g/lsb).round()*lsb).clamp(-clip, clip)`.
 /// The min/max operand order makes a NaN group sum propagate exactly like
 /// scalar `f32::clamp` (x86 min/max return the second operand on NaN).
+///
+/// # Safety
+/// The CPU must support avx2 (checked once by `SimdLevel::detect`).
 #[inline]
 #[target_feature(enable = "avx2")]
+// value-only intrinsics are safe-in-context on toolchains with
+// target_feature 1.1; the explicit block keeps older toolchains compiling
+// under deny(unsafe_op_in_unsafe_fn)
+#[allow(unused_unsafe)]
 unsafe fn adc(g: __m256, lsbv: __m256, clipv: __m256, nclipv: __m256) -> __m256 {
-    let q = _mm256_div_ps(g, lsbv);
-    let q = _mm256_mul_ps(round_half_away(q), lsbv);
-    _mm256_min_ps(clipv, _mm256_max_ps(nclipv, q))
+    // SAFETY: value-only AVX2 intrinsics plus `round_half_away`, whose
+    // avx2 precondition this fn shares and passes through to its caller.
+    unsafe {
+        let q = _mm256_div_ps(g, lsbv);
+        let q = _mm256_mul_ps(round_half_away(q), lsbv);
+        _mm256_min_ps(clipv, _mm256_max_ps(nclipv, q))
+    }
 }
 
+/// One register tile: `R` activation rows against one packed panel.
+///
+/// # Safety
+/// The CPU must support avx2, `panel` must hold at least `k * NR` floats,
+/// and `x` at least `(mi + R) * k` — guaranteed by `kernel_rows_f32`'s
+/// loop bounds over a `PackedMatrix` built by `pack`.
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "avx2")]
 unsafe fn tile_rows_f32<const R: usize>(
@@ -69,37 +97,44 @@ unsafe fn tile_rows_f32<const R: usize>(
     group: usize,
     out: &mut [f32],
 ) {
-    let lsbv = _mm256_set1_ps(lsb);
-    let clipv = _mm256_set1_ps(clip);
-    let nclipv = _mm256_set1_ps(-clip);
-    let mut acc = [_mm256_setzero_ps(); R];
-    let mut k0 = 0;
-    while k0 < k {
-        let k1 = (k0 + group).min(k);
-        let mut g = [_mm256_setzero_ps(); R];
-        for ki in k0..k1 {
-            let wv = _mm256_loadu_ps(panel.as_ptr().add(ki * NR));
-            for r in 0..R {
-                let xv = _mm256_set1_ps(*x.get_unchecked((mi + r) * k + ki));
-                g[r] = _mm256_add_ps(g[r], _mm256_mul_ps(xv, wv));
+    // SAFETY: avx2 is the fn's own precondition. `panel.as_ptr().add(ki *
+    // NR)` stays in bounds because pack() emits k rows of NR floats per
+    // panel and ki < k; `x.get_unchecked((mi + r) * k + ki)` is in bounds
+    // because the caller only passes mi with mi + R <= m and x.len() ==
+    // m * k; the store writes NR floats into a local [f32; NR].
+    unsafe {
+        let lsbv = _mm256_set1_ps(lsb);
+        let clipv = _mm256_set1_ps(clip);
+        let nclipv = _mm256_set1_ps(-clip);
+        let mut acc = [_mm256_setzero_ps(); R];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + group).min(k);
+            let mut g = [_mm256_setzero_ps(); R];
+            for ki in k0..k1 {
+                let wv = _mm256_loadu_ps(panel.as_ptr().add(ki * NR));
+                for r in 0..R {
+                    let xv = _mm256_set1_ps(*x.get_unchecked((mi + r) * k + ki));
+                    g[r] = _mm256_add_ps(g[r], _mm256_mul_ps(xv, wv));
+                }
             }
+            if lsb > 0.0 {
+                for r in 0..R {
+                    acc[r] = _mm256_add_ps(acc[r], adc(g[r], lsbv, clipv, nclipv));
+                }
+            } else {
+                for r in 0..R {
+                    acc[r] = _mm256_add_ps(acc[r], g[r]);
+                }
+            }
+            k0 = k1;
         }
-        if lsb > 0.0 {
-            for r in 0..R {
-                acc[r] = _mm256_add_ps(acc[r], adc(g[r], lsbv, clipv, nclipv));
-            }
-        } else {
-            for r in 0..R {
-                acc[r] = _mm256_add_ps(acc[r], g[r]);
-            }
+        for r in 0..R {
+            let mut tmp = [0.0f32; NR];
+            _mm256_storeu_ps(tmp.as_mut_ptr(), acc[r]);
+            let base = (mi + r) * n + n0;
+            out[base..base + nw].copy_from_slice(&tmp[..nw]);
         }
-        k0 = k1;
-    }
-    for r in 0..R {
-        let mut tmp = [0.0f32; NR];
-        _mm256_storeu_ps(tmp.as_mut_ptr(), acc[r]);
-        let base = (mi + r) * n + n0;
-        out[base..base + nw].copy_from_slice(&tmp[..nw]);
     }
 }
 
@@ -127,16 +162,27 @@ pub(super) unsafe fn kernel_rows_f32(
         let panel = w.panel(p);
         let mut mi = 0;
         while mi + MR <= m {
-            tile_rows_f32::<MR>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            // SAFETY: avx2 is this fn's own precondition; mi + MR <= m and
+            // panel comes from the PackedMatrix, satisfying the tile's
+            // bounds contract.
+            unsafe { tile_rows_f32::<MR>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out) };
             mi += MR;
         }
         while mi < m {
-            tile_rows_f32::<1>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out);
+            // SAFETY: as above with R = 1 (mi + 1 <= m in this loop).
+            unsafe { tile_rows_f32::<1>(x, mi, k, panel, n, n0, nw, lsb, clip, group, out) };
             mi += 1;
         }
     }
 }
 
+/// One register tile of the integer ADC-domain path.
+///
+/// # Safety
+/// The CPU must support avx2; `panel` must hold the pair-interleaved
+/// `kp * NR` i16 panel and `qx` at least `(mi + R) * kp` i16s — both
+/// guaranteed by `kernel_rows_int` iterating a `PackedMatrix` whose
+/// `IntPanels` were built by `int_plan`.
 #[allow(clippy::too_many_arguments)]
 #[target_feature(enable = "avx2")]
 unsafe fn tile_rows_int<const R: usize>(
@@ -154,46 +200,53 @@ unsafe fn tile_rows_int<const R: usize>(
     sf: f32,
     out: &mut [f32],
 ) {
-    let lsbv = _mm256_set1_ps(lsb);
-    let clipv = _mm256_set1_ps(clip);
-    let nclipv = _mm256_set1_ps(-clip);
-    let sfv = _mm256_set1_ps(sf);
-    let mut acc = [_mm256_setzero_ps(); R];
-    let mut k0 = 0;
-    while k0 < k {
-        let k1 = (k0 + group).min(k);
-        let mut s = [_mm256_setzero_si256(); R];
-        // group boundaries are even (or the group spans all of k), so the
-        // pair walk never straddles a boundary; the odd-k tail pair reads
-        // the zero padding on both operands
-        for pi in (k0 / 2)..k1.div_ceil(2) {
-            let wv = _mm256_loadu_si256(panel.as_ptr().add(pi * 2 * NR) as *const __m256i);
-            for r in 0..R {
-                let row = (mi + r) * kp;
-                let lo = *qx.get_unchecked(row + 2 * pi) as u16 as u32;
-                let hi = *qx.get_unchecked(row + 2 * pi + 1) as u16 as u32;
-                let xb = _mm256_set1_epi32(((hi << 16) | lo) as i32);
-                s[r] = _mm256_add_epi32(s[r], _mm256_madd_epi16(wv, xb));
+    // SAFETY: avx2 is the fn's own precondition. The panel load reads 16
+    // i16s at pi * 2 * NR; int_plan pads panels to kp = k + (k & 1) pair
+    // rows, so pi < kp/2 keeps it in bounds. qx reads index (mi + r) * kp
+    // + 2*pi + 1 < (mi + R) * kp, in bounds by the caller's contract. The
+    // store writes NR floats into a local [f32; NR].
+    unsafe {
+        let lsbv = _mm256_set1_ps(lsb);
+        let clipv = _mm256_set1_ps(clip);
+        let nclipv = _mm256_set1_ps(-clip);
+        let sfv = _mm256_set1_ps(sf);
+        let mut acc = [_mm256_setzero_ps(); R];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + group).min(k);
+            let mut s = [_mm256_setzero_si256(); R];
+            // group boundaries are even (or the group spans all of k), so the
+            // pair walk never straddles a boundary; the odd-k tail pair reads
+            // the zero padding on both operands
+            for pi in (k0 / 2)..k1.div_ceil(2) {
+                let wv = _mm256_loadu_si256(panel.as_ptr().add(pi * 2 * NR) as *const __m256i);
+                for r in 0..R {
+                    let row = (mi + r) * kp;
+                    let lo = *qx.get_unchecked(row + 2 * pi) as u16 as u32;
+                    let hi = *qx.get_unchecked(row + 2 * pi + 1) as u16 as u32;
+                    let xb = _mm256_set1_epi32(((hi << 16) | lo) as i32);
+                    s[r] = _mm256_add_epi32(s[r], _mm256_madd_epi16(wv, xb));
+                }
             }
+            if lsb > 0.0 {
+                for r in 0..R {
+                    let g = _mm256_mul_ps(_mm256_cvtepi32_ps(s[r]), sfv);
+                    acc[r] = _mm256_add_ps(acc[r], adc(g, lsbv, clipv, nclipv));
+                }
+            } else {
+                for r in 0..R {
+                    let g = _mm256_mul_ps(_mm256_cvtepi32_ps(s[r]), sfv);
+                    acc[r] = _mm256_add_ps(acc[r], g);
+                }
+            }
+            k0 = k1;
         }
-        if lsb > 0.0 {
-            for r in 0..R {
-                let g = _mm256_mul_ps(_mm256_cvtepi32_ps(s[r]), sfv);
-                acc[r] = _mm256_add_ps(acc[r], adc(g, lsbv, clipv, nclipv));
-            }
-        } else {
-            for r in 0..R {
-                let g = _mm256_mul_ps(_mm256_cvtepi32_ps(s[r]), sfv);
-                acc[r] = _mm256_add_ps(acc[r], g);
-            }
+        for r in 0..R {
+            let mut tmp = [0.0f32; NR];
+            _mm256_storeu_ps(tmp.as_mut_ptr(), acc[r]);
+            let base = (mi + r) * n + n0;
+            out[base..base + nw].copy_from_slice(&tmp[..nw]);
         }
-        k0 = k1;
-    }
-    for r in 0..R {
-        let mut tmp = [0.0f32; NR];
-        _mm256_storeu_ps(tmp.as_mut_ptr(), acc[r]);
-        let base = (mi + r) * n + n0;
-        out[base..base + nw].copy_from_slice(&tmp[..nw]);
     }
 }
 
@@ -225,11 +278,19 @@ pub(super) unsafe fn kernel_rows_int(
         let sf = sfs[p];
         let mut mi = 0;
         while mi + MR <= m {
-            tile_rows_int::<MR>(qx, mi, k, kp, panel, n, n0, nw, lsb, clip, group, sf, out);
+            // SAFETY: avx2 is this fn's own precondition; mi + MR <= m and
+            // the panel/kp pair come from the IntPanels, satisfying the
+            // tile's bounds contract.
+            unsafe {
+                tile_rows_int::<MR>(qx, mi, k, kp, panel, n, n0, nw, lsb, clip, group, sf, out)
+            };
             mi += MR;
         }
         while mi < m {
-            tile_rows_int::<1>(qx, mi, k, kp, panel, n, n0, nw, lsb, clip, group, sf, out);
+            // SAFETY: as above with R = 1 (mi + 1 <= m in this loop).
+            unsafe {
+                tile_rows_int::<1>(qx, mi, k, kp, panel, n, n0, nw, lsb, clip, group, sf, out)
+            };
             mi += 1;
         }
     }

@@ -86,12 +86,18 @@
 //! `examples/` shows the public API end to end; `examples/scenario.json`
 //! is a complete experiment as data.
 
+// Kernel unsafe code must scope each unsafe operation explicitly (see the
+// `unsafe-hygiene` tidy rule in `lint/`): an `unsafe fn` body gets no
+// implicit blanket permission.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod analog;
 pub mod coordinator;
 pub mod digital;
 pub mod eval;
 pub mod exec;
 pub mod hwmodel;
+pub mod lint;
 pub mod mapping;
 pub mod net;
 pub mod noise;

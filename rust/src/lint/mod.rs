@@ -1,0 +1,308 @@
+//! In-tree tidy static analysis (`hybridac lint`).
+//!
+//! The repo's core guarantees — bit-identical kernels at any thread count,
+//! byte-identical study reports at any worker count, a serve front door
+//! that never kills a connection thread — are pinned by tests, but a test
+//! only fails after the invariant is already broken. This pass encodes the
+//! invariants as source-level rules, rustc-`tidy` style: a dependency-free
+//! comment/string-aware line scanner ([`scan`]) feeding six rules
+//! ([`rules`]), with inline suppression via
+//! `// tidy: allow(<rule>): <justification>` directives (the justification
+//! is mandatory; a bare allow is itself a violation).
+//!
+//! A directive suppresses its rule on the same line; on a comment-only
+//! line it applies to the following code line instead. Directives are
+//! only read from plain `//` comments — doc comments are rendered
+//! documentation, so a syntax example there never parses. Test code —
+//! from the first `#[cfg(test)]` to end of file, trailing test modules
+//! being the repo convention — is exempt from every rule.
+//!
+//! CLI: `cargo run -- lint [--root DIR] [--out report.json]`; exits
+//! nonzero when any unsuppressed violation remains, after writing the
+//! per-rule JSON report CI uploads as an artifact.
+
+pub mod rules;
+pub mod scan;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use rules::Ctx;
+
+/// One rule hit at one source line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    /// Crate-root-relative path, forward slashes.
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub message: String,
+    pub snippet: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Outcome of a whole-tree run.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Unsuppressed violations, in (file, line) order.
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+    /// Violations silenced by a justified `tidy: allow`.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    /// Machine-readable report: totals, per-rule counts, and every
+    /// violation with its location and snippet.
+    pub fn to_json(&self) -> Json {
+        let mut by_rule: BTreeMap<String, f64> = BTreeMap::new();
+        for v in &self.violations {
+            *by_rule.entry(v.rule.to_string()).or_insert(0.0) += 1.0;
+        }
+        let mut root = BTreeMap::new();
+        root.insert("files_scanned".to_string(), Json::Num(self.files_scanned as f64));
+        root.insert("suppressed".to_string(), Json::Num(self.suppressed as f64));
+        root.insert("total".to_string(), Json::Num(self.violations.len() as f64));
+        root.insert(
+            "by_rule".to_string(),
+            Json::Obj(by_rule.into_iter().map(|(k, n)| (k, Json::Num(n))).collect()),
+        );
+        root.insert(
+            "violations".to_string(),
+            Json::Arr(
+                self.violations
+                    .iter()
+                    .map(|v| {
+                        let mut o = BTreeMap::new();
+                        o.insert("rule".to_string(), Json::Str(v.rule.to_string()));
+                        o.insert("file".to_string(), Json::Str(v.file.clone()));
+                        o.insert("line".to_string(), Json::Num(v.line as f64));
+                        o.insert("message".to_string(), Json::Str(v.message.clone()));
+                        o.insert("snippet".to_string(), Json::Str(v.snippet.clone()));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+}
+
+/// Lint one file's text. Returns `(unsuppressed violations, suppressed
+/// count)`. `path` is the crate-root-relative path that drives rule
+/// scoping — pass paths like `"src/serve/router.rs"`.
+pub fn lint_file(path: &str, text: &str) -> (Vec<Violation>, usize) {
+    let lines = scan::tokenize(text);
+    let test_start = lines
+        .iter()
+        .position(|l| l.stripped.contains("#[cfg(test)]"))
+        .unwrap_or(lines.len());
+
+    // Per-line allowed rules: a directive covers its own line; directives
+    // on comment-only lines carry forward to the next code line.
+    let mut allows: Vec<Vec<String>> = vec![Vec::new(); lines.len()];
+    let mut violations = Vec::new();
+    let mut pending: Vec<String> = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        // doc comments are rendered documentation, not live directives —
+        // a rule-syntax example in `//!` / `///` text must never parse
+        let doc = ["///", "//!", "/*!", "/**"]
+            .iter()
+            .any(|p| l.comment.trim_start().starts_with(p));
+        let here = if doc { Vec::new() } else { scan::directives(&l.comment) };
+        for d in &here {
+            if i >= test_start {
+                // test code is exempt from every rule, the meta-rule
+                // included: nothing fires there, so nothing to justify
+                break;
+            }
+            if !rules::RULES.contains(&d.rule.as_str()) {
+                violations.push(Violation {
+                    rule: rules::ALLOW_SYNTAX,
+                    file: path.to_string(),
+                    line: i + 1,
+                    message: format!(
+                        "tidy: allow names unknown rule '{}' (known: {})",
+                        d.rule,
+                        rules::RULES.join(", ")
+                    ),
+                    snippet: l.comment.trim().chars().take(120).collect(),
+                });
+            } else if d.justification.is_empty() {
+                violations.push(Violation {
+                    rule: rules::ALLOW_SYNTAX,
+                    file: path.to_string(),
+                    line: i + 1,
+                    message: format!(
+                        "tidy: allow({}) needs a justification: `// tidy: allow({}): <why>`",
+                        d.rule, d.rule
+                    ),
+                    snippet: l.comment.trim().chars().take(120).collect(),
+                });
+            }
+        }
+        let names: Vec<String> = here.into_iter().map(|d| d.rule).collect();
+        allows[i].extend(pending.iter().cloned());
+        allows[i].extend(names.iter().cloned());
+        if l.stripped.trim().is_empty() {
+            pending.extend(names);
+        } else {
+            pending.clear();
+        }
+    }
+
+    let ctx = Ctx { path, lines: &lines, test_start };
+    let mut raw = Vec::new();
+    rules::determinism(&ctx, &mut raw);
+    rules::float_order(&ctx, &mut raw);
+    rules::panic_policy(&ctx, &mut raw);
+    rules::unsafe_hygiene(&ctx, &mut raw);
+    rules::clock(&ctx, &mut raw);
+    rules::obs_naming(&ctx, &mut raw);
+
+    let mut suppressed = 0usize;
+    for v in raw {
+        if allows[v.line - 1].iter().any(|r| r == v.rule) {
+            suppressed += 1;
+        } else {
+            violations.push(v);
+        }
+    }
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    (violations, suppressed)
+}
+
+/// Lint the crate tree under `root` (the directory holding `Cargo.toml`):
+/// every `.rs` file below `src/` and `benches/`, in sorted order.
+pub fn run(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    for dir in ["src", "benches"] {
+        collect_rs(&root.join(dir), &mut files)
+            .with_context(|| format!("scanning {}/{dir}", root.display()))?;
+    }
+    files.sort();
+    let mut report = LintReport { files_scanned: files.len(), ..LintReport::default() };
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text =
+            std::fs::read_to_string(f).with_context(|| format!("reading {}", f.display()))?;
+        let (v, s) = lint_file(&rel, &text);
+        report.violations.extend(v);
+        report.suppressed += s;
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn violations(path: &str, src: &str) -> Vec<Violation> {
+        lint_file(path, src).0
+    }
+
+    #[test]
+    fn determinism_flags_hashmap_in_report_paths_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(violations("src/study/report.rs", src).len(), 1);
+        assert_eq!(violations("benches/perf.rs", src).len(), 1);
+        // allowed elsewhere (exec caches legitimately hash)
+        assert!(violations("src/exec/cache.rs", src).is_empty());
+    }
+
+    #[test]
+    fn tokens_in_comments_and_strings_never_fire() {
+        let src = "// a HashMap here is fine\nlet s = \"HashMap\"; // and here\n";
+        assert!(violations("src/study/report.rs", src).is_empty());
+        // the real-world case: neon.rs mentions vfmaq in its module docs
+        assert!(violations("src/exec/native/kernels/neon.rs", "//! never a fused `vfmaq`\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn allow_directive_suppresses_and_counts() {
+        let src = "let m = HashMap::new(); // tidy: allow(determinism): keyed output is sorted before rendering\n";
+        let (v, suppressed) = lint_file("src/study/grid.rs", src);
+        assert!(v.is_empty());
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn comment_only_allow_covers_next_code_line() {
+        let src = "// tidy: allow(clock): timing side channel, never in reports\nlet t0 = Instant::now();\n";
+        let (v, suppressed) = lint_file("src/study/runner.rs", src);
+        assert!(v.is_empty());
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn bare_or_unknown_allow_is_a_violation() {
+        let bare = "let t = Instant::now(); // tidy: allow(clock)\n";
+        let v = violations("src/eval/evaluator.rs", bare);
+        // the unjustified directive itself, though it still suppresses
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, rules::ALLOW_SYNTAX);
+        let unknown = "let x = 1; // tidy: allow(clocks): typo\n";
+        let v = violations("src/eval/evaluator.rs", unknown);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, rules::ALLOW_SYNTAX);
+    }
+
+    #[test]
+    fn doc_comment_directive_examples_never_parse() {
+        // the lint's own module docs show the suppression syntax; a doc
+        // line must neither suppress nor trip the meta-rule
+        let src = "//! suppress with `// tidy: allow(<rule>): <why>`\nfn f() {}\n";
+        let (v, suppressed) = lint_file("src/lint/mod.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(suppressed, 0);
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { foo.unwrap(); let t = Instant::now(); }\n}\n";
+        assert!(violations("src/serve/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn report_json_counts_by_rule() {
+        let report = LintReport {
+            violations: violations("src/serve/x.rs", "a.unwrap();\nb.unwrap();\n"),
+            files_scanned: 1,
+            suppressed: 0,
+        };
+        let j = report.to_json().to_string();
+        assert!(j.contains("\"panic-policy\":2"), "{j}");
+        assert!(j.contains("\"total\":2"), "{j}");
+    }
+}

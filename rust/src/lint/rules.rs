@@ -1,0 +1,280 @@
+//! The six tidy rules. Each rule is a pure function over one file's
+//! scanned lines; scoping is by repo-relative path (forward slashes,
+//! relative to the crate root, e.g. `src/serve/router.rs`).
+//!
+//! Every rule guards an invariant an existing test suite pins end-to-end:
+//!
+//! | rule             | invariant                                           |
+//! |------------------|-----------------------------------------------------|
+//! | `determinism`    | byte-identical study reports at any worker count    |
+//! | `float-order`    | bit-identical kernels: no FMA, same f32 op order    |
+//! | `panic-policy`   | serve/net threads never die on unwrap/expect/panic  |
+//! | `unsafe-hygiene` | every kernel `unsafe` carries a SAFETY argument     |
+//! | `clock`          | wall-clock reads stay out of deterministic artifacts|
+//! | `obs-naming`     | Prometheus counters are snake_case `*_total`        |
+
+use super::scan::{has_word, Line};
+use super::Violation;
+
+pub const DETERMINISM: &str = "determinism";
+pub const FLOAT_ORDER: &str = "float-order";
+pub const PANIC_POLICY: &str = "panic-policy";
+pub const UNSAFE_HYGIENE: &str = "unsafe-hygiene";
+pub const CLOCK: &str = "clock";
+pub const OBS_NAMING: &str = "obs-naming";
+/// Meta-rule for malformed `tidy: allow` directives; not suppressible.
+pub const ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// Rules a `tidy: allow(<rule>)` directive may name.
+pub const RULES: &[&str] =
+    &[DETERMINISM, FLOAT_ORDER, PANIC_POLICY, UNSAFE_HYGIENE, CLOCK, OBS_NAMING];
+
+/// One file's scanned lines plus the rule-relevant slice boundaries.
+pub struct Ctx<'a> {
+    pub path: &'a str,
+    pub lines: &'a [Line],
+    /// Index of the first `#[cfg(test)]` line; everything from there to
+    /// EOF is test code (test modules are trailing by repo convention).
+    pub test_start: usize,
+}
+
+impl Ctx<'_> {
+    fn emit(&self, out: &mut Vec<Violation>, rule: &'static str, idx: usize, message: String) {
+        out.push(Violation {
+            rule,
+            file: self.path.to_string(),
+            line: idx + 1,
+            message,
+            snippet: self.lines[idx].code.trim().chars().take(120).collect(),
+        });
+    }
+
+    /// Non-test lines only.
+    fn code_lines(&self) -> impl Iterator<Item = (usize, &Line)> {
+        self.lines.iter().enumerate().take(self.test_start)
+    }
+}
+
+fn in_dir(path: &str, prefix: &str) -> bool {
+    path.starts_with(prefix)
+}
+
+/// (1) `determinism` — report/ID-rendering paths (study grid + report,
+/// the JSON writer, anything rendering `BENCH_*.json`) must not touch
+/// `HashMap`/`HashSet`: their iteration order is allowed to vary between
+/// runs, and the study contract is byte-identical output at any worker
+/// count.
+pub fn determinism(ctx: &Ctx, out: &mut Vec<Violation>) {
+    let scoped = in_dir(ctx.path, "src/study/")
+        || in_dir(ctx.path, "src/report")
+        || in_dir(ctx.path, "benches/")
+        || ctx.path == "src/util/json.rs";
+    if !scoped {
+        return;
+    }
+    for (i, l) in ctx.code_lines() {
+        for ty in ["HashMap", "HashSet"] {
+            if has_word(&l.stripped, ty) {
+                ctx.emit(
+                    out,
+                    DETERMINISM,
+                    i,
+                    format!(
+                        "{ty} in a report/ID-rendering path: iteration order is \
+                         scheduling-dependent; use BTreeMap/BTreeSet or sorted iteration"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// (2) `float-order` — the native backend outside `reference.rs` must not
+/// fuse or reorder float arithmetic: the exactness contract is "the same
+/// f32 ops in the same order as the scalar reference", and one FMA (which
+/// rounds once where the scalar MAC rounds twice) breaks bit equality of
+/// the scalar/simd/int kernel paths.
+pub fn float_order(ctx: &Ctx, out: &mut Vec<Violation>) {
+    if !in_dir(ctx.path, "src/exec/native/") || ctx.path.ends_with("/reference.rs") {
+        return;
+    }
+    const FUSED: &[&str] = &["mul_add", "fmadd", "fmsub", "fnmadd", "fnmsub", "vfma", "vfms"];
+    for (i, l) in ctx.code_lines() {
+        for tok in FUSED {
+            if l.stripped.contains(tok) {
+                ctx.emit(
+                    out,
+                    FLOAT_ORDER,
+                    i,
+                    format!(
+                        "`{tok}` fuses a multiply-add (one rounding, not two); the kernel \
+                         bit-equality contract requires separate mul + add in scalar order"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// (3) `panic-policy` — `net/` and `serve/` non-test code must not
+/// unwrap/expect/panic: a panic in a connection or replica thread kills it
+/// silently, and the front door's contract is typed `ServeError` responses
+/// with the connection kept alive.
+pub fn panic_policy(ctx: &Ctx, out: &mut Vec<Violation>) {
+    if !in_dir(ctx.path, "src/net/") && !in_dir(ctx.path, "src/serve/") {
+        return;
+    }
+    const PANICS: &[&str] =
+        &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+    for (i, l) in ctx.code_lines() {
+        for tok in PANICS {
+            if l.stripped.contains(tok) {
+                ctx.emit(
+                    out,
+                    PANIC_POLICY,
+                    i,
+                    format!(
+                        "`{}` can kill a connection/replica thread; return a typed \
+                         ServeError, recover (log + continue), or justify with tidy: allow",
+                        tok.trim_start_matches('.').trim_end_matches('(')
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// (4) `unsafe-hygiene` — in the SIMD kernels, every `unsafe` block or fn
+/// must carry a `SAFETY` argument in an attached comment (same line, or
+/// the contiguous comment/attribute block above, which covers
+/// `/// # Safety` doc sections), and every `#[target_feature]` fn must be
+/// declared `unsafe` (callers prove CPU support exactly once, at
+/// `SimdLevel::detect`).
+pub fn unsafe_hygiene(ctx: &Ctx, out: &mut Vec<Violation>) {
+    if !in_dir(ctx.path, "src/exec/native/kernels/") {
+        return;
+    }
+    for (i, l) in ctx.code_lines() {
+        if has_word(&l.stripped, "unsafe") && !safety_comment_attached(ctx, i) {
+            ctx.emit(
+                out,
+                UNSAFE_HYGIENE,
+                i,
+                "`unsafe` without an attached SAFETY comment (same line or the \
+                 comment/attribute block above)"
+                    .to_string(),
+            );
+        }
+        if l.stripped.contains("#[target_feature") {
+            if let Some(j) = next_fn_line(ctx, i) {
+                if !has_word(&ctx.lines[j].stripped, "unsafe") {
+                    ctx.emit(
+                        out,
+                        UNSAFE_HYGIENE,
+                        j,
+                        "#[target_feature] fn must be `unsafe fn`: its CPU-support \
+                         precondition is the caller's obligation"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Is there a `SAFETY` argument on line `i` or in the contiguous
+/// comment/attribute block directly above it?
+fn safety_comment_attached(ctx: &Ctx, i: usize) -> bool {
+    let has_safety = |l: &Line| l.comment.contains("SAFETY") || l.comment.contains("# Safety");
+    if has_safety(&ctx.lines[i]) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &ctx.lines[j];
+        let code = l.stripped.trim();
+        let attachable = code.is_empty() || code.starts_with("#[") || code.starts_with("#![");
+        if !attachable {
+            return false;
+        }
+        if has_safety(l) {
+            return true;
+        }
+    }
+    false
+}
+
+/// First line at or after `i` that declares a `fn` (skipping further
+/// attributes/comments), within a small window.
+fn next_fn_line(ctx: &Ctx, i: usize) -> Option<usize> {
+    (i..ctx.lines.len().min(i + 10)).find(|&j| has_word(&ctx.lines[j].stripped, "fn"))
+}
+
+/// (5) `clock` — wall-clock reads are confined to `obs/`, the serve/net
+/// timing paths, and the batcher's deadline loop; anywhere else a
+/// timestamp is one refactor away from leaking into a deterministic
+/// artifact (study reports and BENCH JSON are pure functions of the spec).
+pub fn clock(ctx: &Ctx, out: &mut Vec<Violation>) {
+    let exempt = in_dir(ctx.path, "src/obs/")
+        || in_dir(ctx.path, "src/serve/")
+        || in_dir(ctx.path, "src/net/")
+        || ctx.path == "src/coordinator/batcher.rs";
+    if !in_dir(ctx.path, "src/") || exempt {
+        return;
+    }
+    for (i, l) in ctx.code_lines() {
+        for tok in ["Instant::now", "SystemTime"] {
+            if has_word(&l.stripped, tok) {
+                ctx.emit(
+                    out,
+                    CLOCK,
+                    i,
+                    format!(
+                        "`{tok}` outside obs/serve/net: keep wall-clock readings in the \
+                         timing side channel (never in deterministic artifacts), or \
+                         justify with tidy: allow"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// (6) `obs-naming` — counters registered (or read back) by string literal
+/// must be snake_case ending in `_total`, matching the Prometheus counter
+/// convention the exposition endpoint promises. Gauges and histograms are
+/// deliberately out of scope (they carry unit suffixes like `_us`).
+pub fn obs_naming(ctx: &Ctx, out: &mut Vec<Violation>) {
+    if !in_dir(ctx.path, "src/") {
+        return;
+    }
+    // built via concat so this file's own code view cannot match itself
+    let pat: String = [".coun", "ter(\""].concat();
+    for (i, l) in ctx.code_lines() {
+        let mut rest = l.code.as_str();
+        while let Some(p) = rest.find(&pat) {
+            let after = &rest[p + pat.len()..];
+            let Some(q) = after.find('"') else { break };
+            let name = &after[..q];
+            if !counter_name_ok(name) {
+                ctx.emit(
+                    out,
+                    OBS_NAMING,
+                    i,
+                    format!(
+                        "counter name \"{name}\" must be snake_case ending in `_total` \
+                         (Prometheus counter convention)"
+                    ),
+                );
+            }
+            rest = &after[q..];
+        }
+    }
+}
+
+fn counter_name_ok(name: &str) -> bool {
+    name.ends_with("_total")
+        && name.starts_with(|c: char| c.is_ascii_lowercase())
+        && name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}

@@ -1,0 +1,320 @@
+//! Comment/string-aware line scanner for the in-tree tidy pass.
+//!
+//! The crate deliberately has no `syn`, so rules cannot see a real AST.
+//! Instead every source file is lowered line-by-line into three parallel
+//! views (like rustc's `tidy`):
+//!
+//! - `code` — comments removed, string literals kept verbatim (for rules
+//!   that must read literal arguments, e.g. registered counter names),
+//! - `stripped` — comments removed *and* string/char literal contents
+//!   blanked (for token rules, so a `vfmaq` mention in a doc comment or a
+//!   `"HashMap"` inside a string never fires),
+//! - `comment` — the comment text alone (where `// SAFETY:` evidence and
+//!   `// tidy: allow(...)` suppression directives live).
+//!
+//! The scanner tracks block comments (nested), normal strings (including
+//! multi-line), raw strings (`r"…"` / `r#"…"#` up to any hash depth), and
+//! distinguishes char literals from lifetimes with the usual lookahead
+//! heuristic (`'x'` / `'\n'` are literals, `'a` in `&'a str` is not).
+
+/// One source line, split into code / stripped / comment views.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Comments removed, string literals kept.
+    pub code: String,
+    /// Comments removed, string/char literal contents blanked.
+    pub stripped: String,
+    /// Comment text only (line, doc, and block comment content).
+    pub comment: String,
+}
+
+enum Mode {
+    Code,
+    /// Inside a (possibly nested) block comment; holds the nesting depth.
+    Block(u32),
+    /// Inside a normal `"…"` string literal.
+    Str,
+    /// Inside a raw string literal; holds the `#` count of its delimiter.
+    RawStr(usize),
+}
+
+/// Lower `text` into per-line views. Scanner state (block comments, open
+/// string literals) carries across lines.
+pub fn tokenize(text: &str) -> Vec<Line> {
+    let mut mode = Mode::Code;
+    let mut out = Vec::new();
+    for raw in text.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut line = Line::default();
+        let mut i = 0usize;
+        while i < chars.len() {
+            match mode {
+                Mode::Block(depth) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        line.comment.push_str("*/");
+                        i += 2;
+                        mode = if depth <= 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        line.comment.push_str("/*");
+                        i += 2;
+                        mode = Mode::Block(depth + 1);
+                    } else {
+                        line.comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if chars[i] == '\\' {
+                        line.code.push(chars[i]);
+                        if let Some(&c) = chars.get(i + 1) {
+                            line.code.push(c);
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if chars[i] == '"' {
+                        line.code.push('"');
+                        line.stripped.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        line.code.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(h) => {
+                    if chars[i] == '"' && (1..=h).all(|j| chars.get(i + j) == Some(&'#')) {
+                        line.code.push('"');
+                        line.stripped.push('"');
+                        for _ in 0..h {
+                            line.code.push('#');
+                            line.stripped.push('#');
+                        }
+                        i += 1 + h;
+                        mode = Mode::Code;
+                    } else {
+                        line.code.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = chars[i];
+                    let prev_ident = i > 0
+                        && (chars[i - 1].is_ascii_alphanumeric() || chars[i - 1] == '_');
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        for &cc in &chars[i..] {
+                            line.comment.push(cc);
+                        }
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        line.comment.push_str("/*");
+                        i += 2;
+                        mode = Mode::Block(1);
+                    } else if c == 'r' && !prev_ident && raw_str_hashes(&chars, i).is_some() {
+                        let h = raw_str_hashes(&chars, i).unwrap();
+                        for &cc in &chars[i..i + 2 + h] {
+                            line.code.push(cc);
+                            line.stripped.push(cc);
+                        }
+                        i += 2 + h; // past r, hashes, opening quote
+                        mode = Mode::RawStr(h);
+                    } else if c == '"' {
+                        line.code.push('"');
+                        line.stripped.push('"');
+                        i += 1;
+                        mode = Mode::Str;
+                    } else if c == '\'' {
+                        i = consume_quote(&chars, i, &mut line);
+                    } else {
+                        line.code.push(c);
+                        line.stripped.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(line);
+    }
+    out
+}
+
+/// At `chars[i] == 'r'`: `Some(hash_count)` if this starts a raw string
+/// literal (`r"`, `r#"`, `r##"`, ...), else `None`.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    let mut h = 0usize;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+        h += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(h)
+}
+
+/// At `chars[i] == '\''`: consume a char literal (blanked in `stripped`,
+/// kept in `code`) or a lifetime tick, returning the next index.
+fn consume_quote(chars: &[char], i: usize, line: &mut Line) -> usize {
+    let end = match chars.get(i + 1) {
+        // escaped char: '\n', '\'', '\\', '\u{41}'
+        Some('\\') => {
+            if chars.get(i + 2) == Some(&'u') {
+                // '\u{…}': find the closing quote after the brace group
+                let close = (i + 3..chars.len()).find(|&j| chars[j] == '\'');
+                close.map(|j| j + 1)
+            } else if chars.get(i + 3) == Some(&'\'') {
+                Some(i + 4)
+            } else {
+                None
+            }
+        }
+        // plain char: 'x' (a lifetime has no closing quote one char on)
+        Some(_) if chars.get(i + 2) == Some(&'\'') => Some(i + 3),
+        _ => None,
+    };
+    match end {
+        Some(e) => {
+            for &cc in &chars[i..e] {
+                line.code.push(cc);
+            }
+            line.stripped.push_str("''");
+            e
+        }
+        None => {
+            // a lifetime (or stray tick): plain code in both views
+            line.code.push('\'');
+            line.stripped.push('\'');
+            i + 1
+        }
+    }
+}
+
+/// A parsed `tidy: allow(<rule>)` suppression directive.
+#[derive(Debug, Clone)]
+pub struct Directive {
+    pub rule: String,
+    /// Text after the closing paren, separators trimmed. Empty means the
+    /// directive is missing its (mandatory) justification.
+    pub justification: String,
+}
+
+/// Extract every `tidy: allow(<rule>): <justification>` directive from a
+/// line's comment text.
+pub fn directives(comment: &str) -> Vec<Directive> {
+    const KEY: &str = "tidy: allow(";
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(p) = rest.find(KEY) {
+        let after = &rest[p + KEY.len()..];
+        match after.find(')') {
+            Some(close) => {
+                let tail = &after[close + 1..];
+                out.push(Directive {
+                    rule: after[..close].trim().to_string(),
+                    justification: tail
+                        .trim_start_matches([':', ',', '-', '—', ' ', '\t'])
+                        .trim()
+                        .to_string(),
+                });
+                rest = tail;
+            }
+            None => {
+                // unterminated directive: surface as an unknown rule
+                out.push(Directive {
+                    rule: after.trim().to_string(),
+                    justification: String::new(),
+                });
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Whole-word substring search: `word` must not be flanked by identifier
+/// characters (so `unsafe` never matches `unsafe_op_in_unsafe_fn`).
+pub fn has_word(s: &str, word: &str) -> bool {
+    let bytes = s.as_bytes();
+    let mut start = 0;
+    while let Some(p) = s[start..].find(word) {
+        let at = start + p;
+        let end = at + word.len();
+        let before_ok =
+            at == 0 || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        let after_ok =
+            end >= bytes.len() || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comments_keeps_comment_text() {
+        let l = &tokenize("let x = 1; // trailing note")[0];
+        assert_eq!(l.code.trim_end(), "let x = 1;");
+        assert_eq!(l.comment, "// trailing note");
+    }
+
+    #[test]
+    fn blanks_string_contents_in_stripped_only() {
+        let l = &tokenize(r#"let s = "HashMap::new()";"#)[0];
+        assert!(l.code.contains("HashMap"));
+        assert!(!l.stripped.contains("HashMap"));
+        assert!(l.stripped.contains(r#""""#));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let l = &tokenize(r##"let s = r#"quote " inside"#; let t = "a\"b";"##)[0];
+        assert!(!l.stripped.contains("inside"));
+        assert!(!l.stripped.contains("a\\\"b"));
+        assert!(l.stripped.contains("let t ="));
+    }
+
+    #[test]
+    fn multiline_string_state_carries() {
+        let ls = tokenize("let s = \"first\n  Instant::now second\";\nlet done = 1;");
+        assert!(!ls[1].stripped.contains("Instant::now"));
+        assert!(ls[2].stripped.contains("let done"));
+    }
+
+    #[test]
+    fn block_comments_nest_across_lines() {
+        let ls = tokenize("a /* one /* two */\n still comment */ b");
+        assert_eq!(ls[0].code.trim(), "a");
+        assert_eq!(ls[1].code.trim(), "b");
+        assert!(ls[1].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let l = &tokenize(r#"fn f<'a>(c: char) -> &'a str { if c == '"' { x } }"#)[0];
+        // the quote char literal must not open a string
+        assert!(l.stripped.contains("{ x }"));
+        assert!(l.stripped.contains("<'a>"));
+        let l = &tokenize(r"match b { b'\t' => 1, b'{' => 2 }")[0];
+        assert!(l.stripped.contains("=> 2"));
+    }
+
+    #[test]
+    fn parses_directives_with_and_without_justification() {
+        let d = directives("// tidy: allow(clock): timing side channel only");
+        assert_eq!(d[0].rule, "clock");
+        assert_eq!(d[0].justification, "timing side channel only");
+        let d = directives("// tidy: allow(determinism)");
+        assert_eq!(d[0].rule, "determinism");
+        assert!(d[0].justification.is_empty());
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("let x = unsafe {", "unsafe"));
+        assert!(!has_word("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(has_word("Instant::now()", "Instant::now"));
+    }
+}

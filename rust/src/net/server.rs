@@ -44,6 +44,7 @@ use crate::obs::registry::{self, Counter};
 use crate::obs::trace;
 use crate::serve::Router;
 use crate::util::json::Json;
+use crate::util::sync::mutex_lock;
 
 use super::wire::{
     write_frame, FrameError, FrameReader, Request, Response, KIND_BAD_FRAME, KIND_INTERNAL,
@@ -130,7 +131,7 @@ impl NetServer {
                                     });
                                 match spawned {
                                     Ok(handle) => {
-                                        let mut conns = conns.lock().unwrap();
+                                        let mut conns = mutex_lock(&conns);
                                         // reap finished threads so a
                                         // long-lived server doesn't hoard
                                         // handles
@@ -168,7 +169,7 @@ impl NetServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        let handles = std::mem::take(&mut *mutex_lock(&self.conns));
         for h in handles {
             let _ = h.join();
         }

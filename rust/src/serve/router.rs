@@ -38,6 +38,7 @@ use crate::obs::trace;
 use crate::runtime::{Artifact, DatasetBlob, DatasetMeta};
 use crate::scenario::{PreparedBaseCache, Scenario};
 use crate::util::rng::Rng;
+use crate::util::sync::{mutex_lock, read_lock, write_lock};
 
 use super::admission::{Rejection, ServeError};
 use super::autoscale::{AutoscaleConfig, AutoscalePolicy, ScaleDecision, ScaleSignals};
@@ -542,7 +543,9 @@ impl Router {
         let shared = Arc::try_unwrap(self.shared)
             .map_err(|_| anyhow::anyhow!("router still referenced"))?;
         for slot in shared.slots {
-            if let Some(replica) = slot.into_inner().unwrap() {
+            // a slot poisoned by a crashed maintenance sweep still drains
+            let replica = slot.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if let Some(replica) = replica {
                 replica.shutdown()?;
             }
         }
@@ -569,7 +572,7 @@ impl RouterShared {
         let mut closed_id = None;
         for k in 0..n {
             let id = (start + k) % n;
-            let guard = self.slots[id].read().unwrap();
+            let guard = read_lock(&self.slots[id]);
             let Some(replica) = guard.as_ref() else {
                 continue; // scaling headroom, not a refusal
             };
@@ -608,7 +611,7 @@ impl RouterShared {
     }
 
     fn active_replicas(&self) -> usize {
-        self.slots.iter().filter(|s| s.read().unwrap().is_some()).count()
+        self.slots.iter().filter(|s| read_lock(s).is_some()).count()
     }
 
     /// Sample one autoscaler tick's worth of signals from the live fleet
@@ -619,7 +622,7 @@ impl RouterShared {
         let mut probes = 0u64;
         let mut failures = 0u64;
         for slot in &self.slots {
-            let guard = slot.read().unwrap();
+            let guard = read_lock(slot);
             if let Some(replica) = guard.as_ref() {
                 active += 1;
                 depth += replica.metrics.queue_depth().max(0);
@@ -643,10 +646,10 @@ impl RouterShared {
     /// are answered before the worker joins). Serialized with recycling
     /// via the maintenance lock. Returns `(grown, drained)`.
     fn scale_to(&self, target: usize) -> Result<(usize, usize)> {
-        let _maint = self.maintenance.lock().unwrap();
+        let _maint = mutex_lock(&self.maintenance);
         let target = target.clamp(self.min_replicas, self.max_replicas);
         let mut live: Vec<bool> =
-            self.slots.iter().map(|s| s.read().unwrap().is_some()).collect();
+            self.slots.iter().map(|s| read_lock(s).is_some()).collect();
         let mut active = live.iter().filter(|&&b| b).count();
         let mut grown = 0usize;
         let mut drained = 0usize;
@@ -669,7 +672,7 @@ impl RouterShared {
                 self.base_cache.clone(),
                 spec,
             )?;
-            *self.slots[id].write().unwrap() = Some(fresh);
+            *write_lock(&self.slots[id]) = Some(fresh);
             self.registry.counter("serve_scale_up_total").inc();
             live[id] = true;
             active += 1;
@@ -680,7 +683,7 @@ impl RouterShared {
             let _span = trace::span_dyn("serve", || format!("autoscale/shrink id={id}"));
             // the write-lock guard is a temporary: the drain/join below
             // runs with the slot already released (and routing around it)
-            let old = self.slots[id].write().unwrap().take();
+            let old = write_lock(&self.slots[id]).take();
             if let Some(old) = old {
                 if let Err(e) = old.shutdown() {
                     eprintln!("fleet autoscaler: draining replica {id}: {e:#}");
@@ -704,7 +707,7 @@ impl RouterShared {
             // grab a detached ingress under a short lock, then do all the
             // (possibly blocking) submits with the lock released so live
             // traffic keeps spilling through this slot
-            let Some(handle) = slot.read().unwrap().as_ref().map(|r| r.probe_handle()) else {
+            let Some(handle) = read_lock(slot).as_ref().map(|r| r.probe_handle()) else {
                 continue;
             };
             let _span = trace::span_dyn("serve", || format!("probe/replica id={id}"));
@@ -736,14 +739,14 @@ impl RouterShared {
     fn recycle_degraded(&self) -> Result<Vec<usize>> {
         // serialized with scaling so a slot can't be drained out from
         // under a recycle (the hot routing path is untouched)
-        let _maint = self.maintenance.lock().unwrap();
+        let _maint = mutex_lock(&self.maintenance);
         let mut recycled = Vec::new();
         for (id, slot) in self.slots.iter().enumerate() {
             // verdict + generation under a short read lock; a dead worker
             // is recyclable no matter what the probe record says (it will
             // never accumulate probes to become Degraded on its own)
             let generation = {
-                let guard = slot.read().unwrap();
+                let guard = read_lock(slot);
                 let Some(replica) = guard.as_ref() else { continue };
                 let degraded =
                     replica.health.status(&self.fleet.health) == HealthStatus::Degraded;
@@ -773,15 +776,19 @@ impl RouterShared {
                 spec,
             )?;
             let swapped = {
-                let mut guard = slot.write().unwrap();
+                let mut guard = write_lock(slot);
                 // under the maintenance lock the slot can't have been
                 // swapped or drained, but keep the cheap generation check
                 // as a structural invariant
-                match guard.as_ref() {
+                match guard.take() {
                     Some(current) if current.generation == generation => {
-                        Ok(std::mem::replace(&mut *guard, Some(fresh)).expect("slot checked live"))
+                        *guard = Some(fresh);
+                        Ok(current)
                     }
-                    _ => Err(fresh),
+                    other => {
+                        *guard = other;
+                        Err(fresh)
+                    }
                 }
             };
             match swapped {
@@ -805,7 +812,7 @@ impl RouterShared {
         let mut replicas = Vec::with_capacity(self.slots.len());
         let mut total = MetricsSnapshot::default();
         for slot in &self.slots {
-            let guard = slot.read().unwrap();
+            let guard = read_lock(slot);
             let Some(replica) = guard.as_ref() else { continue };
             let snap = replica.metrics.snapshot();
             total.merge(&snap);
@@ -877,9 +884,16 @@ pub fn drive_workload(
     }
     let (mut hits, mut total) = (0, 0);
     for c in clients {
-        let (h, t) = c.join().expect("client thread panicked")?;
-        hits += h;
-        total += t;
+        match c.join() {
+            Ok(counts) => {
+                let (h, t) = counts?;
+                hits += h;
+                total += t;
+            }
+            // a panicked client loses only its own tally: callers score
+            // hits against answered, so partial counts stay meaningful
+            Err(_) => eprintln!("serve: workload client thread panicked; dropping its tally"),
+        }
     }
     Ok((hits, total))
 }

@@ -6,3 +6,4 @@ pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;

@@ -1,0 +1,70 @@
+//! Poison-tolerant lock acquisition for the serving/transport layer.
+//!
+//! `std` mutexes and rwlocks poison when a holder panics; the default
+//! `.lock().unwrap()` then propagates that panic into every *other*
+//! thread touching the lock, turning one crashed replica worker into a
+//! fleet-wide cascade. The serve/net panic policy (see the
+//! `panic-policy` tidy rule in `lint/`) is the opposite: connection,
+//! monitor, and autoscaler threads must keep running and report errors as
+//! values.
+//!
+//! These helpers recover the guard from a poisoned lock via
+//! [`PoisonError::into_inner`]. That is sound for the data they protect
+//! in this crate — replica slot rings, join-handle lists, registry maps —
+//! because every critical section leaves the structure valid at each
+//! `&mut` step (slot swaps are single assignments, vec pushes/retains
+//! keep the vec coherent); a panic can abandon an *intent*, never a
+//! half-written structure.
+
+use std::sync::{
+    Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+/// `m.lock()`, recovering the guard if a previous holder panicked.
+pub fn mutex_lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `l.read()`, recovering the guard if a previous writer panicked.
+pub fn read_lock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `l.write()`, recovering the guard if a previous holder panicked.
+pub fn write_lock<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_lock_survives_poisoning() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*mutex_lock(&m), 7);
+    }
+
+    #[test]
+    fn rwlock_guards_survive_poisoning() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(read_lock(&l).len(), 3);
+        write_lock(&l).push(4);
+        assert_eq!(read_lock(&l).len(), 4);
+    }
+}

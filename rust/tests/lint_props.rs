@@ -1,0 +1,167 @@
+//! Property fixtures for the in-tree tidy lint (`src/lint/`): every rule
+//! catches its seeded true positive, a justified `tidy: allow` suppresses
+//! it, the clean spelling passes — and the repo's own tree is clean.
+
+use std::path::Path;
+
+use hybridac::lint::{lint_file, rules, run};
+
+/// Unsuppressed violations for `src` pretending to live at `path`.
+fn violations(path: &str, src: &str) -> Vec<hybridac::lint::Violation> {
+    lint_file(path, src).0
+}
+
+/// Assert the fixture yields exactly one violation of `rule`.
+fn assert_one(path: &str, src: &str, rule: &str) {
+    let v = violations(path, src);
+    assert_eq!(v.len(), 1, "expected one {rule} violation in {path}, got {v:?}");
+    assert_eq!(v[0].rule, rule, "wrong rule in {path}: {v:?}");
+}
+
+/// Assert the fixture is clean and (if `expect_suppressed`) that the
+/// suppression was counted rather than the rule simply not firing.
+fn assert_clean(path: &str, src: &str, expect_suppressed: bool) {
+    let (v, suppressed) = lint_file(path, src);
+    assert!(v.is_empty(), "expected clean {path}, got {v:?}");
+    if expect_suppressed {
+        assert!(suppressed >= 1, "allow directive in {path} never matched a violation");
+    }
+}
+
+#[test]
+fn determinism_fixtures() {
+    let bad = "use std::collections::HashMap;\n";
+    assert_one("src/study/report.rs", bad, rules::DETERMINISM);
+    let set = "let s = std::collections::HashSet::new();\n";
+    assert_one("benches/perf.rs", set, rules::DETERMINISM);
+    let allowed =
+        "let m = HashMap::new(); // tidy: allow(determinism): keys sorted before rendering\n";
+    assert_clean("src/study/grid.rs", allowed, true);
+    let clean = "use std::collections::BTreeMap;\nlet m: BTreeMap<u32, f64> = BTreeMap::new();\n";
+    assert_clean("src/study/report.rs", clean, false);
+    // out of scope: exec caches may hash freely
+    assert_clean("src/exec/cache.rs", bad, false);
+}
+
+#[test]
+fn float_order_fixtures() {
+    let bad = "let y = a.mul_add(b, c);\n";
+    assert_one("src/exec/native/kernels/x86.rs", bad, rules::FLOAT_ORDER);
+    let fused = "let v = _mm256_fmadd_ps(a, b, c);\n";
+    assert_one("src/exec/native/plan.rs", fused, rules::FLOAT_ORDER);
+    let allowed =
+        "let y = a.mul_add(b, c); // tidy: allow(float-order): diagnostics only, never compared\n";
+    assert_clean("src/exec/native/plan.rs", allowed, true);
+    let clean = "let y = a * b + c;\n";
+    assert_clean("src/exec/native/kernels/x86.rs", clean, false);
+    // reference.rs defines the rounding contract and may use whatever it likes
+    assert_clean("src/exec/native/reference.rs", bad, false);
+    // out of scope entirely
+    assert_clean("src/analog/noise.rs", bad, false);
+}
+
+#[test]
+fn panic_policy_fixtures() {
+    assert_one("src/net/server.rs", "let v = rx.recv().unwrap();\n", rules::PANIC_POLICY);
+    assert_one("src/serve/router.rs", "let g = m.lock().expect(\"lock\");\n", rules::PANIC_POLICY);
+    assert_one("src/serve/admission.rs", "panic!(\"queue full\");\n", rules::PANIC_POLICY);
+    let allowed =
+        "// tidy: allow(panic-policy): startup-only; a bind failure must abort\nf().unwrap();\n";
+    assert_clean("src/net/server.rs", allowed, true);
+    let clean = "let v = rx.recv()?;\nlet g = mutex_lock(&m);\n";
+    assert_clean("src/net/server.rs", clean, false);
+    // out of scope: study code may unwrap
+    assert_clean("src/study/runner.rs", "let v = rx.recv().unwrap();\n", false);
+}
+
+#[test]
+fn unsafe_hygiene_fixtures() {
+    let bad = "unsafe { *p }\n";
+    assert_one("src/exec/native/kernels/x86.rs", bad, rules::UNSAFE_HYGIENE);
+    // SAFETY on the comment line directly above attaches
+    let clean = "// SAFETY: p points into the packed panel, ki < k\nunsafe { *p }\n";
+    assert_clean("src/exec/native/kernels/neon.rs", clean, false);
+    // a `/// # Safety` doc section above an unsafe fn attaches across attrs
+    let doc_fn = "/// # Safety\n/// CPU must support avx2.\n\
+                  #[target_feature(enable = \"avx2\")]\nunsafe fn adc() {}\n";
+    assert_clean("src/exec/native/kernels/x86.rs", doc_fn, false);
+    // #[target_feature] on a safe fn is a violation even with SAFETY nearby
+    let tf_safe = "// SAFETY: fine\n#[target_feature(enable = \"avx2\")]\nfn adc() {}\n";
+    assert_one("src/exec/native/kernels/x86.rs", tf_safe, rules::UNSAFE_HYGIENE);
+    let allowed = "unsafe { *p } // tidy: allow(unsafe-hygiene): fixture for the lint tests\n";
+    assert_clean("src/exec/native/kernels/x86.rs", allowed, true);
+    // out of scope: dispatch sites elsewhere are clippy's problem
+    assert_clean("src/exec/native/mod.rs", bad, false);
+}
+
+#[test]
+fn clock_fixtures() {
+    let bad = "let t0 = Instant::now();\n";
+    assert_one("src/eval/evaluator.rs", bad, rules::CLOCK);
+    assert_one("src/study/runner.rs", "let now = SystemTime::now();\n", rules::CLOCK);
+    let allowed = "// tidy: allow(clock): timing side channel, never in reports\n\
+                   let t0 = Instant::now();\n";
+    assert_clean("src/study/runner.rs", allowed, true);
+    // exempt homes for wall-clock reads
+    assert_clean("src/obs/trace.rs", bad, false);
+    assert_clean("src/serve/router.rs", bad, false);
+    assert_clean("src/net/server.rs", bad, false);
+    assert_clean("src/coordinator/batcher.rs", bad, false);
+}
+
+#[test]
+fn obs_naming_fixtures() {
+    assert_one("src/serve/metrics.rs", "let c = reg.counter(\"hits\");\n", rules::OBS_NAMING);
+    assert_one("src/net/server.rs", "reg.counter(\"NetRequests_total\");\n", rules::OBS_NAMING);
+    let allowed =
+        "let c = reg.counter(\"hits\"); // tidy: allow(obs-naming): legacy dashboard series\n";
+    assert_clean("src/serve/metrics.rs", allowed, true);
+    assert_clean("src/net/server.rs", "reg.counter(\"net_requests_total\");\n", false);
+}
+
+#[test]
+fn allow_syntax_is_policed_and_unsuppressible() {
+    // bare allow: suppresses the underlying hit but is itself a violation
+    let bare = "let t = Instant::now(); // tidy: allow(clock)\n";
+    assert_one("src/eval/evaluator.rs", bare, rules::ALLOW_SYNTAX);
+    // unknown rule name is a violation and suppresses nothing
+    let unknown = "let t = Instant::now(); // tidy: allow(clocks): typo\n";
+    let v = violations("src/eval/evaluator.rs", unknown);
+    assert_eq!(v.len(), 2, "{v:?}");
+    assert!(v.iter().any(|x| x.rule == rules::ALLOW_SYNTAX));
+    assert!(v.iter().any(|x| x.rule == rules::CLOCK));
+}
+
+#[test]
+fn test_code_is_exempt_from_every_rule() {
+    let src = "fn live() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               \x20   use std::collections::HashMap;\n\
+               \x20   fn t() { foo.unwrap(); let t = Instant::now(); unsafe { *p } }\n\
+               }\n";
+    for path in
+        ["src/study/report.rs", "src/serve/router.rs", "src/exec/native/kernels/x86.rs"]
+    {
+        assert_clean(path, src, false);
+    }
+}
+
+/// The gate itself: the repo's own tree has zero unsuppressed violations.
+#[test]
+fn whole_tree_is_clean() {
+    let report = run(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("lint run");
+    assert!(
+        report.violations.is_empty(),
+        "tidy violations in tree:\n{}",
+        report
+            .violations
+            .iter()
+            .map(|v| format!("  {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files_scanned > 40, "suspiciously few files: {}", report.files_scanned);
+    // the clock allows in eval/, study/, and main.rs must be live
+    assert!(report.suppressed >= 8, "expected >=8 suppressions, got {}", report.suppressed);
+}
